@@ -1,0 +1,54 @@
+"""Paper headline: per-expert compression ratio (9.3x on Mixtral-8x7B) and
+memory-footprint reduction (deployable in 11GB VRAM, up to 8.5x).
+
+Computed analytically from the real Mixtral-8x7B config + our HQQ storage
+format, and empirically on a small expert tensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import hqq
+
+
+def expert_bytes(cfg, *, sparsity: float, up_bits: int, group: int,
+                 scale_bytes: int = 2) -> tuple[int, int]:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    dense = 3 * d * f * 2  # fp16
+    keep = 1.0 - sparsity
+    gate_down = int(2 * d * f * keep) * 2
+    up = d * f * up_bits // 8 + 2 * (d // group) * f * scale_bytes
+    return dense, gate_down + up
+
+
+def run(csv_rows: list):
+    cfg = get_config("mixtral_8x7b")
+    for sp in (0.8, 0.9):
+        dense, comp = expert_bytes(cfg, sparsity=sp, up_bits=2, group=64)
+        csv_rows.append((f"headline/per_expert_compression@{sp:.0%}", 0.0,
+                         f"{dense / comp:.2f}x (paper: 9.3x; dense="
+                         f"{dense / 2**20:.0f}MiB comp={comp / 2**20:.1f}MiB)"))
+
+    # whole-model footprint: resident = non-expert + quantized up (for the
+    # intra predictor) + cache of `slots` compressed experts per layer
+    d, f, L, E = cfg.d_model, cfg.moe_d_ff, cfg.num_layers, cfg.num_experts
+    non_expert = (cfg.param_count() - L * E * 3 * d * f) * 2
+    up_all = L * E * (d * f * 2 // 8 + 2 * (d // 64) * f * 2)
+    _, comp = expert_bytes(cfg, sparsity=0.9, up_bits=2, group=64)
+    cache = L * 2 * int(0.1 * 2 * d * f) * 2  # 2 slots of sparse gate/down
+    total = non_expert + up_all + cache
+    full = cfg.param_count() * 2
+    csv_rows.append(("headline/vram_floe_gb", 0.0,
+                     f"{total / 2**30:.2f}GiB (paper: fits 11GB VRAM)"))
+    csv_rows.append(("headline/vram_reduction", 0.0,
+                     f"{full / total:.2f}x vs fp16-resident "
+                     f"{full / 2**30:.1f}GiB (paper: up to 8.5x)"))
+
+    # empirical packed sizes round-trip on a real tensor
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 1792)) * 0.02
+    qt = hqq.quantize(w, bits=2, group=64)
+    csv_rows.append(("headline/int2_tensor_ratio", 0.0,
+                     f"{hqq.compression_ratio(w, qt):.2f}x "
+                     f"rel_err={hqq.rel_error(w, qt):.3f}"))

@@ -1,0 +1,93 @@
+"""Paper Fig. 6 / Fig. 8: end-to-end decode TPS — FloE vs naive offloading
+vs fully-resident, and TPS vs cache budget (VRAM proxy).
+
+Latency is MODELED with paper-ratio constants (repro.core.pipeline.
+paper_scaled_models) on a trained small MoE; real jax compute still runs so
+outputs are checked for fidelity alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparsify
+from repro.core.pipeline import FloEPipeline, _unstack_layers, \
+    paper_scaled_models
+
+
+def _thresholds(cfg, params):
+    layers = _unstack_layers(params, cfg)
+    xcal = jax.random.normal(jax.random.PRNGKey(9), (128, cfg.d_model)) * 0.5
+    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
+    for li, layer in enumerate(layers):
+        if "moe" not in layer:
+            continue
+        for e in range(cfg.num_experts):
+            u = xcal @ layer["moe"]["we_up"][e]
+            thr[li, e] = float(sparsify.threshold_from_samples(
+                jnp.abs(u), cfg.floe.sparsity))
+    return thr
+
+
+def run(csv_rows: list, tokens: int = 6):
+    from benchmarks.bench_sensitivity import trained_model
+    cfg, params = trained_model()
+    thr = _thresholds(cfg, params)
+    device, link = paper_scaled_models(cfg)
+
+    results = {}
+    for mode in ("resident", "naive", "floe"):
+        pipe = FloEPipeline(params, cfg, thresholds=thr, cache_slots=4,
+                            mode=mode, device=device, link=link)
+        outs = []
+        for i in range(tokens):
+            h = jax.random.normal(jax.random.PRNGKey(100 + i),
+                                  (1, cfg.d_model), jnp.float32) * 0.3
+            out, m = pipe.decode_token(h)
+            outs.append(out)
+        results[mode] = (pipe, outs)
+        csv_rows.append((f"fig6/tps/{mode}", 0.0,
+                         f"tps={pipe.tokens_per_second():.1f}"))
+
+    tps = {m: p.tokens_per_second() for m, (p, _) in results.items()}
+    csv_rows.append(("fig6/speedup_floe_vs_naive", 0.0,
+                     f"{tps['floe'] / tps['naive']:.2f}x (paper: 48.7x vs "
+                     "DeepSpeed-MII, 2.6x vs Mixtral-Offloading)"))
+    csv_rows.append(("fig6/floe_fraction_of_resident", 0.0,
+                     f"{tps['floe'] / tps['resident']:.2%} (paper: 91%)"))
+    err = float(np.mean([
+        float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-9))
+        for a, b in zip(results["floe"][1], results["resident"][1])]))
+    csv_rows.append(("fig6/floe_output_rel_err", 0.0, f"{err:.4f}"))
+
+    # ---- Fig 6 inset: TPS vs output length (cold-cache amortization) -----
+    # paper: "with longer outputs ... TPS improves as layer-wise expert
+    # replacement overhead is amortized over longer sequences."
+    for n_out in (2, 8, 24):
+        pipe = FloEPipeline(params, cfg, thresholds=thr, cache_slots=4,
+                            mode="floe", device=device, link=link)
+        for i in range(n_out):
+            h = jax.random.normal(jax.random.PRNGKey(300 + i),
+                                  (1, cfg.d_model), jnp.float32) * 0.3
+            pipe.decode_token(h)
+        csv_rows.append((f"fig6/tps_vs_output_len/{n_out}", 0.0,
+                         f"tps={pipe.tokens_per_second():.1f}"))
+
+    # ---- Fig 8: TPS vs cache budget (slots per layer ~ VRAM) -------------
+    for slots in (1, 2, 4, 8):
+        pipe = FloEPipeline(params, cfg, thresholds=thr, cache_slots=slots,
+                            mode="floe", device=device, link=link)
+        for i in range(tokens):
+            h = jax.random.normal(jax.random.PRNGKey(200 + i),
+                                  (1, cfg.d_model), jnp.float32) * 0.3
+            pipe.decode_token(h)
+        csv_rows.append((f"fig8/tps_vs_cache/slots={slots}", 0.0,
+                         f"tps={pipe.tokens_per_second():.1f} "
+                         f"hit_rate={_hit_rate(pipe):.2f}"))
+
+
+def _hit_rate(pipe):
+    hits = sum(m.expert_hits for m in pipe.metrics)
+    miss = sum(m.expert_misses for m in pipe.metrics)
+    return hits / max(hits + miss, 1)

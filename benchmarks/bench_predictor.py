@@ -1,0 +1,108 @@
+"""Paper Fig. 4: next-layer hidden-state cosine similarity, inter-expert
+predictor recall, intra-expert predictor precision — on a trained small MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predictor, sparsify
+from repro.core.pipeline import _unstack_layers
+from repro.data import SyntheticLM, make_batches
+from repro.models import blocks as blk
+from repro.models import nn
+from repro.models import transformer as tf
+from repro.models.moe import router_topk
+
+
+def _collect_layer_inputs(cfg, params, toks):
+    """Hidden states entering each layer (the residual stream)."""
+    x = jnp.take(params["embedding"], toks, axis=0)
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    hs = []
+    layers = _unstack_layers(params, cfg)
+    for layer in layers:
+        hs.append(x.reshape(-1, d))
+        kind = "moe" if "moe" in layer else "dense"
+        x, _ = blk.block_forward(layer, kind, x, positions, cfg)
+    hs.append(x.reshape(-1, d))
+    return hs, layers
+
+
+_CACHE = {}
+
+
+def deep_trained_model(layers=6, steps=200):
+    """Obs. 3 (hidden-state similarity) is a DEPTH phenomenon — per-layer
+    updates shrink relative to the residual stream as depth grows — so the
+    predictor benchmark uses a deeper, thinner MoE than the other benches."""
+    if "m" in _CACHE:
+        return _CACHE["m"]
+    from repro.common.config import TrainConfig, reduced
+    from repro.configs import get_config
+    from repro.launch.train import train_loop
+    cfg = reduced(get_config("mixtral_8x7b"), layers=layers, d_model=96)
+    tc = TrainConfig(learning_rate=2e-3, total_steps=steps,
+                     warmup_steps=steps // 10)
+    params, _, _ = train_loop(cfg, tc, batch=8, seq=64, steps=steps,
+                              log_every=10**9)
+    _CACHE["m"] = (cfg, params)
+    return cfg, params
+
+
+def run(csv_rows: list):
+    cfg, params = deep_trained_model()
+    src = SyntheticLM(cfg.vocab_size, seed=55)
+    batch = next(make_batches(src, 8, 64, 1, seed=55))
+    toks = jnp.asarray(batch["tokens"][:, :64])
+    hs, layers = _collect_layer_inputs(cfg, params, toks)
+
+    k = cfg.num_experts_per_tok
+    sims, recalls, intra_recalls = [], [], []
+    for li in range(len(layers) - 1):
+        h_i, h_next = hs[li], hs[li + 1]
+        sims.append(float(predictor.cosine_similarity(h_i, h_next)))
+        nxt = layers[li + 1]
+        if "moe" not in nxt:
+            continue
+        hn_norm = nn.rms_norm(h_next, nxt["mlp_norm"]["scale"], cfg.norm_eps)
+        _, true_ids, _ = router_topk(hn_norm, nxt["moe"]["router"], k)
+        # inter: train a small MLP on half the trace, eval on the other half
+        t_half = h_i.shape[0] // 2
+        targets = jax.nn.one_hot(true_ids, cfg.num_experts).sum(1)
+        ip = predictor.init_inter_predictor(
+            jax.random.PRNGKey(li), cfg.d_model, cfg.num_experts, hidden=64)
+        ip = predictor.train_inter_predictor(
+            ip, h_i[:t_half], targets[:t_half], steps=200)
+        pred = predictor.inter_predict_topk(ip, h_i[t_half:], k)
+        recalls.append(float(predictor.recall_at_k(pred, true_ids[t_half:])))
+        # intra: reuse-based mask prediction for the top-used expert
+        e = int(jnp.bincount(true_ids.reshape(-1),
+                             length=cfg.num_experts).argmax())
+        w_up = nxt["moe"]["we_up"][e]
+        v_true = hn_norm @ w_up
+        t = jnp.quantile(jnp.abs(v_true), cfg.floe.sparsity)
+        true_mask = jnp.abs(v_true) >= t
+        h_i_norm = nn.rms_norm(h_i, nxt["mlp_norm"]["scale"], cfg.norm_eps)
+        pred_mask = predictor.intra_predict_mask(h_i_norm, w_up, t)
+        _, rec = predictor.mask_precision_recall(pred_mask, true_mask)
+        intra_recalls.append(float(rec))
+
+    per_layer = " ".join(f"{s:.3f}" for s in sims)
+    csv_rows.append(("fig4/next_layer_cosine_mean", 0.0,
+                     f"{np.mean(sims):.4f} deep-half={np.mean(sims[len(sims)//2:]):.4f} "
+                     f"per-layer=[{per_layer}] (paper: >0.95 on 32L Mixtral; "
+                     "similarity grows with depth — Fig. 4's layer-0 outlier "
+                     "is our every-layer regime at 6L)"))
+    if recalls:
+        csv_rows.append(("fig4/inter_predictor_recall", 0.0,
+                         f"mean={np.mean(recalls):.4f} "
+                         f"deep-half={np.mean(recalls[len(recalls)//2:]):.4f} "
+                         "(paper ~0.88 precision)"))
+    if intra_recalls:
+        csv_rows.append(("fig4/intra_predictor_recall", 0.0,
+                         f"mean={np.mean(intra_recalls):.4f} "
+                         f"deep-half={np.mean(intra_recalls[len(intra_recalls)//2:]):.4f} "
+                         "(paper ~0.95)"))

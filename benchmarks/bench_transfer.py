@@ -1,0 +1,76 @@
+"""Paper Fig. 7: compact-layout transfer latency / bandwidth utilization vs
+chunk size.
+
+Two measurements: (a) REAL host memcpy bandwidth of gathering masked expert
+records under the compact vs naive (scattered gate-column + down-row)
+layouts — the packing step the paper accelerates with SIMD; (b) the modeled
+end-to-end link time per chunk size from the LinkModel (Fig. 7's curve).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.offload import LinkModel
+
+D, F = 4096, 14336  # Mixtral expert
+KEEP = 0.2
+CHUNKS = (1, 5, 20, 50, 200, 1000)
+
+
+def _gather_compact(records, idx, chunk):
+    outs = []
+    for s in range(0, len(idx), chunk):
+        outs.append(records[idx[s:s + chunk]])  # one contiguous-ish gather
+    return np.concatenate(outs, 0)
+
+
+def _gather_naive(gate, down, idx, chunk):
+    outs = []
+    for s in range(0, len(idx), chunk):
+        sel = idx[s:s + chunk]
+        outs.append(np.ascontiguousarray(gate[:, sel]).T)  # strided columns
+        outs.append(down[sel])
+    return np.concatenate(outs, 0)
+
+
+def run(csv_rows: list, trials: int = 3):
+    rng = np.random.default_rng(0)
+    gate = rng.standard_normal((D, F), np.float32).astype(np.float16)
+    down = rng.standard_normal((F, D), np.float32).astype(np.float16)
+    records = np.ascontiguousarray(
+        np.concatenate([gate.T, down], axis=1))  # (F, 2D) compact
+    idx = np.sort(rng.choice(F, int(F * KEEP), replace=False))
+    total_bytes = len(idx) * 2 * D * 2
+    link = LinkModel()
+
+    for chunk in CHUNKS:
+        # real host packing bandwidth
+        for fn, name in ((_gather_compact, "compact"),):
+            fn(records, idx, chunk)  # warm
+            t0 = time.perf_counter()
+            for _ in range(trials):
+                fn(records, idx, chunk)
+            dt = (time.perf_counter() - t0) / trials
+            bw = total_bytes / dt / 1e9
+            csv_rows.append((f"fig7/pack_{name}/chunk={chunk}", dt * 1e6,
+                             f"host_pack_bw={bw:.2f}GB/s"))
+        # modeled end-to-end PCIe time (the paper's y-axis)
+        n_chunks = max(1, len(idx) // chunk)
+        t_model = link.transfer_time(total_bytes, n_chunks)
+        util = total_bytes / t_model / link.peak_bw
+        csv_rows.append((f"fig7/link_model/chunk={chunk}", t_model * 1e6,
+                         f"pcie_util={util:.2%}"))
+
+    # naive layout comparison at the paper's optimal chunk (50)
+    for fn, name in ((_gather_compact, "compact"), (_gather_naive, "naive")):
+        args = (records, idx, 50) if name == "compact" else \
+            (gate, down, idx, 50)
+        fn(*args)
+        t0 = time.perf_counter()
+        for _ in range(trials):
+            fn(*args)
+        dt = (time.perf_counter() - t0) / trials
+        csv_rows.append((f"fig7/layout_{name}@chunk50", dt * 1e6,
+                         f"bw={total_bytes / dt / 1e9:.2f}GB/s"))

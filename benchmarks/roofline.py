@@ -1,0 +1,126 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+
+  compute term    = flops_per_device / peak_FLOP/s          (197e12 bf16)
+  memory term     = hbm_bytes_per_device / HBM_bw           (819e9 B/s)
+  collective term = collective_bytes_per_device / link_bw   (~50e9 B/s/link)
+
+flops/hbm/collective come from the trip-weighted HLO analysis of the
+compiled partition (see launch/hlo_analysis.py).  MODEL_FLOPS is the
+analytic 6·N_active·T (train) or 2·N_active·T (inference) per device.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.common.config import SHAPES
+from repro.configs import get_config
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / devices
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / devices
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n * tokens / devices
+
+
+def load(arch: str, shape: str, mesh: str = "16x16") -> dict | None:
+    p = RESULTS / f"{arch}.{shape}.{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def terms(rec: dict) -> dict:
+    f = rec.get("flops_per_device", 0.0)
+    b = rec.get("hbm_bytes_per_device", 0.0)
+    c = rec.get("collective_bytes_per_device", 0.0)
+    t_c = f / PEAK_FLOPS
+    t_m = b / HBM_BW
+    t_x = c / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops_per_device(rec["arch"], rec["shape"],
+                                rec.get("devices", 256))
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / f if f else 0.0,
+        "bound_step_s": max(t_c, t_m, t_x),
+    }
+
+
+FIX_HINTS = {
+    "compute": "reduce replicated compute (shard attention projections / "
+               "drop remat recompute of cheap ops)",
+    "memory": "fuse softmax/score traffic (flash-attention kernel), bf16 "
+              "scores, smaller microbatch working set",
+    "collective": "drop FSDP gathers where weights fit (1D sharding), "
+                  "overlap psum with compute, reduce f32 gradient reduction "
+                  "to bf16",
+}
+
+
+def table(mesh: str = "16x16") -> list[dict]:
+    rows = []
+    for p in sorted(RESULTS.glob(f"*.{mesh}.json")):
+        rec = json.loads(p.read_text())
+        t = terms(rec)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            **{k: t[k] for k in ("compute_s", "memory_s", "collective_s",
+                                 "dominant", "useful_flops_ratio",
+                                 "bound_step_s")},
+            "temp_gb": rec.get("temp_bytes_per_device", 0) / 2**30,
+            "args_gb": rec.get("argument_bytes_per_device", 0) / 2**30,
+            "hint": FIX_HINTS[t["dominant"]],
+        })
+    return rows
+
+
+def run(csv_rows: list):
+    for r in table():
+        csv_rows.append((
+            f"roofline/{r['arch']}.{r['shape']}",
+            r["bound_step_s"] * 1e6,
+            f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+            f"collective={r['collective_s']:.3e}s dominant={r['dominant']} "
+            f"useful_flops={r['useful_flops_ratio']:.2f} "
+            f"mem/device={r['args_gb'] + r['temp_gb']:.1f}GiB"))
+
+
+def main():
+    rows = table()
+    if not rows:
+        print("no dry-run results yet — run repro.launch.sweep first")
+        return
+    hdr = (f"{'arch':<18} {'shape':<12} {'compute':>10} {'memory':>10} "
+           f"{'collect':>10} {'dominant':>10} {'useful':>7} {'mem GiB':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:<18} {r['shape']:<12} {r['compute_s']:>10.3e} "
+              f"{r['memory_s']:>10.3e} {r['collective_s']:>10.3e} "
+              f"{r['dominant']:>10} {r['useful_flops_ratio']:>7.2f} "
+              f"{r['args_gb'] + r['temp_gb']:>8.1f}")
+
+
+if __name__ == "__main__":
+    main()

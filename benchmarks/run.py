@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1  -> bench_sparse_kernel   (sparse GEMV latency vs sparsity)
+  fig3    -> bench_sensitivity     (sparsification + quantization)
+  fig4    -> bench_predictor       (similarity + dual predictors)
+  fig6/8  -> bench_e2e_decode      (end-to-end decode TPS, cache sweep)
+  fig7    -> bench_transfer        (compact layout + chunk-size curve)
+  headline-> bench_compression     (9.3x per-expert, VRAM footprint)
+  roofline-> roofline              (dry-run derived terms, if present)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_compression, bench_e2e_decode,
+                            bench_predictor, bench_sensitivity,
+                            bench_sparse_kernel, bench_transfer, roofline)
+
+    suites = [
+        ("headline", bench_compression.run),
+        ("table1", bench_sparse_kernel.run),
+        ("fig7", bench_transfer.run),
+        ("fig3", bench_sensitivity.run),
+        ("fig4", bench_predictor.run),
+        ("fig6", bench_e2e_decode.run),
+        ("roofline", roofline.run),
+    ]
+    rows: list = []
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        before = len(rows)
+        try:
+            fn(rows)
+        except Exception as e:  # keep the harness running
+            traceback.print_exc()
+            rows.append((f"{name}/ERROR", 0.0, repr(e)))
+        for r in rows[before:]:
+            print(f"{r[0]},{r[1]:.2f},{r[2]}")
+        sys.stdout.flush()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

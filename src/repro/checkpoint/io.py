@@ -1,0 +1,70 @@
+"""Pytree checkpointing: msgpack + zstd, no orbax dependency.
+
+Leaves are stored as (dtype, shape, raw bytes); the treedef is rebuilt from
+the same nested-dict structure, so any params/opt-state pytree of arrays
+round-trips.  bfloat16 is encoded via uint16 views (msgpack/numpy have no
+native bf16).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_BF16 = "bfloat16"
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16:
+        return {"d": _BF16, "s": list(arr.shape),
+                "b": arr.view(np.uint16).tobytes()}
+    return {"d": str(arr.dtype), "s": list(arr.shape), "b": arr.tobytes()}
+
+
+def _decode_leaf(rec: dict) -> np.ndarray:
+    if rec["d"] == _BF16:
+        u = np.frombuffer(rec["b"], np.uint16).reshape(rec["s"])
+        return u.view(jnp.bfloat16)
+    return np.frombuffer(rec["b"], rec["d"]).reshape(rec["s"]).copy()
+
+
+def _pack(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {"__t": "d", "v": {k: _pack(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        name = type(tree).__name__ if hasattr(tree, "_fields") else ""
+        return {"__t": tag, "n": name, "v": [_pack(v) for v in tree]}
+    return {"__t": "a", "v": _encode_leaf(tree)}
+
+
+def _unpack(rec: Any) -> Any:
+    t = rec["__t"]
+    if t == "d":
+        return {k: _unpack(v) for k, v in rec["v"].items()}
+    if t in ("l", "t"):
+        vals = [_unpack(v) for v in rec["v"]]
+        return vals if t == "l" else tuple(vals)
+    return _decode_leaf(rec["v"])
+
+
+def save_checkpoint(path: str | Path, tree: Any, *, level: int = 3) -> int:
+    """Returns bytes written."""
+    tree = jax.tree.map(np.asarray, tree)
+    raw = msgpack.packb(_pack(tree), use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=level).compress(raw)
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_bytes(comp)
+    return len(comp)
+
+
+def load_checkpoint(path: str | Path) -> Any:
+    raw = zstandard.ZstdDecompressor().decompress(Path(path).read_bytes())
+    return _unpack(msgpack.unpackb(raw, raw=False))

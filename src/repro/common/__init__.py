@@ -1,0 +1,26 @@
+from repro.common.config import (
+    FloEConfig,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    MULTI_POD,
+    SHAPES,
+    SINGLE_POD,
+    reduced,
+)
+from repro.common.sharding import logical_to_physical, shard_params_spec
+
+__all__ = [
+    "FloEConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "MULTI_POD",
+    "SHAPES",
+    "SINGLE_POD",
+    "reduced",
+    "logical_to_physical",
+    "shard_params_spec",
+]

@@ -1,0 +1,293 @@
+"""Configuration schema for the repro framework.
+
+Every architecture in ``repro.configs`` produces a :class:`ModelConfig`;
+input shapes are :class:`ShapeConfig`; distribution is :class:`MeshConfig`.
+Configs are plain frozen dataclasses so they hash, compare, and print well,
+and stay jit-static when closed over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal, Optional, Tuple
+
+ArchKind = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+BlockKind = Literal["attn", "mamba2", "zamba_shared"]
+
+
+@dataclass(frozen=True)
+class FloEConfig:
+    """Paper-technique knobs (FloE §3.2-3.4)."""
+
+    enabled: bool = False
+    # contextual sparsification of gate/down (S_t on |x W_up|), target ratio.
+    sparsity: float = 0.8
+    # ultra-low-bit quantization of the up projection.
+    up_bits: int = 2
+    # group size for HQQ quantization groups.
+    quant_group: int = 64
+    # sparsity mask granularity in channels (TPU lane-block adaptation).
+    block_size: int = 128
+    # predictors
+    inter_predictor_hidden: int = 1024  # 0 => linear predictor
+    # expert cache: number of resident expert slots per layer (serving).
+    cache_slots: int = 2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A complete architecture description."""
+
+    name: str
+    kind: ArchKind
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // num_heads
+
+    # --- attention ---
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    sliding_window: int = 0  # 0 => full attention
+    causal: bool = True  # False for encoder-only
+
+    # --- MoE ---
+    num_experts: int = 0  # 0 => dense MLP
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0  # expert hidden dim; 0 => d_ff
+    router_aux_coef: float = 0.01
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0  # N (state dim per head); 0 => no ssm
+    ssm_heads: int = 0  # number of SSD heads; 0 => derived
+    ssm_head_dim: int = 64  # P (channels per head)
+    ssm_expand: int = 2  # d_inner = expand * d_model
+    ssm_chunk: int = 128  # SSD chunk length
+    ssm_conv_width: int = 4
+
+    # --- hybrid layout (zamba2-style) ---
+    # pattern of block kinds, tiled over num_layers. () => derived from kind.
+    block_pattern: Tuple[BlockKind, ...] = ()
+    # zamba: one *shared* transformer block applied every k mamba blocks.
+    shared_attn_every: int = 0
+    # llama4-style: every `moe_every`-th block uses MoE, others dense MLP.
+    moe_every: int = 1
+
+    # --- frontends (stub carve-out) ---
+    # "none" | "audio" (frame embeddings) | "vision" (patch embeddings)
+    frontend: str = "none"
+    frontend_tokens: int = 0  # prepended embedding tokens for vlm
+
+    # --- activations / norm ---
+    mlp_activation: str = "swiglu"  # "swiglu" | "gelu"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # --- paper technique ---
+    floe: FloEConfig = field(default_factory=FloEConfig)
+
+    # --- citation ---
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if self.moe_d_ff == 0 and self.num_experts:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.kind in ("ssm", "hybrid") and self.ssm_heads == 0 and self.ssm_state:
+            d_inner = self.ssm_expand * self.d_model
+            object.__setattr__(self, "ssm_heads", d_inner // self.ssm_head_dim)
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def d_head(self) -> int:
+        return self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    def segments(self) -> Tuple[Tuple[Tuple[str, ...], int], ...]:
+        """Layer stack as (pattern, repeats) segments for scan-over-layers.
+
+        Block kinds: "dense" (attn+MLP), "moe" (attn+MoE), "mamba" (Mamba2
+        mixer), "shared" (zamba2 shared transformer block with per-invocation
+        input projection).
+        """
+        L = self.num_layers
+        if self.kind == "ssm":
+            return ((("mamba",), L),)
+        if self.kind == "hybrid" and self.shared_attn_every > 1:
+            k = self.shared_attn_every
+            per = (("mamba",) * (k - 1)) + ("shared",)
+            reps, rem = divmod(L, k)
+            segs: list = []
+            if reps:
+                segs.append((per, reps))
+            if rem:
+                segs.append((("mamba",), rem))
+            return tuple(segs)
+        if self.is_moe:
+            if self.moe_every > 1:
+                per = (("dense",) * (self.moe_every - 1)) + ("moe",)
+                reps, rem = divmod(L, self.moe_every)
+                segs = []
+                if reps:
+                    segs.append((per, reps))
+                if rem:
+                    segs.append((("dense",), rem))
+                return tuple(segs)
+            return ((("moe",), L),)
+        return ((("dense",), L),)
+
+    def pattern(self) -> Tuple[BlockKind, ...]:
+        """Resolved per-layer block kinds of length num_layers."""
+        if self.block_pattern:
+            pat = self.block_pattern
+            reps = -(-self.num_layers // len(pat))
+            return tuple((pat * reps)[: self.num_layers])
+        if self.kind == "ssm":
+            return ("mamba2",) * self.num_layers
+        return ("attn",) * self.num_layers
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        n = self.vocab_size * self.d_model  # embed
+        if not self.tie_embeddings and self.causal:
+            n += self.vocab_size * self.d_model  # lm head
+        for kind in self.pattern():
+            n += self.block_param_count(kind)
+        n += self.d_model  # final norm
+        return n
+
+    def block_param_count(self, kind: BlockKind) -> int:
+        d = self.d_model
+        if kind == "mamba2":
+            d_in = self.d_inner
+            conv_dim = d_in + 2 * self.ssm_state  # x, B, C (n_groups=1)
+            n = d * (d_in + conv_dim + self.ssm_heads)  # in_proj
+            n += self.ssm_conv_width * conv_dim + conv_dim  # conv w + b
+            n += 3 * self.ssm_heads  # A_log, D, dt_bias
+            n += d_in  # gated rmsnorm
+            n += d_in * d  # out proj
+            n += d  # pre-norm
+            return n
+        # attention part
+        hd = self.head_dim
+        n = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) + (self.num_heads * hd) * d
+        n += 2 * d  # norms
+        if kind == "zamba_shared":
+            n += d * d  # input concat-projection for shared block
+        # mlp part
+        if self.is_moe:
+            n += self.num_experts * 3 * d * self.moe_d_ff + d * self.num_experts
+        else:
+            if self.mlp_activation == "swiglu":
+                n += 3 * d * self.d_ff
+            else:
+                n += 2 * d * self.d_ff
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        n = self.param_count()
+        per_expert = 3 * self.d_model * self.moe_d_ff
+        n -= len([k for k in self.pattern() if k != "mamba2"]) * (
+            (self.num_experts - self.num_experts_per_tok) * per_expert
+        )
+        return n
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """An input-shape workload."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Training-run hyperparameters."""
+
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    max_grad_norm: float = 1.0
+    remat: bool = True
+    seed: int = 0
+
+
+def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,
+            max_experts: int = 4, vocab: int = 512) -> ModelConfig:
+    """A smoke-test-sized variant of the same architecture family."""
+    heads = max(2, min(cfg.num_heads, d_model // 64))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    num_experts = min(cfg.num_experts, max_experts)
+    updates = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=d_model // heads,
+        d_ff=d_model * 3,
+        moe_d_ff=d_model * 2 if num_experts else 0,
+        vocab_size=vocab,
+        num_experts=num_experts,
+        num_experts_per_tok=min(cfg.num_experts_per_tok, num_experts) if num_experts else 0,
+        ssm_heads=0,  # re-derived in __post_init__
+        ssm_head_dim=32,
+        ssm_state=min(cfg.ssm_state, 32) if cfg.ssm_state else 0,
+        ssm_chunk=32,
+        sliding_window=min(cfg.sliding_window, 128) if cfg.sliding_window else 0,
+        frontend_tokens=min(cfg.frontend_tokens, 16) if cfg.frontend_tokens else 0,
+        block_pattern=cfg.block_pattern,
+        name=cfg.name + "-reduced",
+    )
+    return dataclasses.replace(cfg, **updates)

@@ -1,0 +1,233 @@
+"""Logical→physical sharding rules.
+
+Parameters are annotated by *path naming convention*: the trailing dict key of
+each leaf determines its logical axes, and a config-aware rules table maps
+logical axes to mesh axes.  This mirrors the MaxText-style logical-axis-rules
+approach while keeping model code free of sharding concerns.
+
+Default physical mapping (single pod, mesh ("data", "model")):
+
+  vocab / ffn / experts / inner / ssm_heads -> "model"   (tensor parallel)
+  heads or head_dim (see below)             -> "model"
+  embed                                     -> "data"    (FSDP)
+  layers / scalars / norms                  -> replicated
+  batch                                     -> ("pod","data")
+
+Attention sharding mode is chosen per architecture:
+  * "head":     q/k/v sharded over the head axis.   Requires BOTH
+                num_heads % model == 0 and num_kv_heads % model == 0.
+  * "head_dim": q/k/v sharded over head_dim (Megatron-style contraction
+                with psum on QK^T and WO).  Used for GQA archs whose kv
+                head count is smaller than the model axis (glm4 kv=2,
+                mistral-large kv=8, ...) and for non-divisible head counts
+                (starcoder2 36H, llama4 40H, smollm 9H).
+  * "replicated": fallback when neither divides.
+
+Non-divisible vocab (hubert 504, mamba2 50280) falls back to replicated
+embedding/head — recorded by ``check_divisibility``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import MeshConfig, ModelConfig
+
+# Leaf-name -> logical axes. A leading "layers" axis (from scan-over-layers
+# stacking) is padded automatically when the leaf has extra dims.
+_LOGICAL_RULES: dict[str, Tuple[Optional[str], ...]] = {
+    # embedding / head
+    "embedding": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "pos_embedding": (None, "embed"),
+    "frontend_proj": (None, "embed"),
+    # attention, head-structured
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv", "head_dim"),
+    "wv": ("embed", "kv", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "shared_in": ("embed2", "embed"),
+    # dense swiglu / gelu mlp
+    "w_gate": ("embed", "ffn"),
+    "w_up": ("embed", "ffn"),
+    "w_down": ("ffn", "embed"),
+    "w_in": ("embed", "ffn"),
+    "w_out": ("ffn", "embed"),
+    # moe
+    "router": ("embed", "experts"),
+    "we_gate": ("experts", "embed", "ffn"),
+    "we_up": ("experts", "embed", "ffn"),
+    "we_down": ("experts", "ffn", "embed"),
+    # floe compressed buffers (packed ints + scales share the expert layout)
+    "we_up_q": ("experts", "embed", "ffn"),
+    "we_up_scale": ("experts", "groups", "ffn"),
+    "we_up_zero": ("experts", "groups", "ffn"),
+    "thresholds": ("experts",),
+    # mamba2 / ssd
+    "in_proj": ("embed", "inner"),
+    "out_proj": ("inner", "embed"),
+    "conv_w": (None, "inner"),
+    "conv_b": ("inner",),
+    "A_log": ("ssm_heads",),
+    "D": ("ssm_heads",),
+    "dt_bias": ("ssm_heads",),
+    "ssm_norm": ("inner",),
+    # norms / scalars
+    "scale": ("embed",),
+    "bias": ("embed",),
+    # inter-expert predictor (FloE §3.3.1)
+    "p_w1": ("embed", "pffn"),
+    "p_w2": ("pffn", "experts"),
+    "p_b1": ("pffn",),
+    "p_b2": ("experts",),
+}
+
+
+def attn_mode(cfg: ModelConfig, model_size: int) -> str:
+    """"head": Q heads shard over model (KV too when divisible);
+    "seq": context parallelism (query-sequence sharding) for head counts
+    that don't divide; "replicated" on trivial meshes."""
+    if model_size <= 1:
+        return "replicated"
+    if cfg.num_heads % model_size == 0:
+        return "head"
+    return "seq"
+
+
+def _physical_rules(cfg: Optional[ModelConfig],
+                    mesh_axes: Sequence[str],
+                    mesh_shape: Sequence[int]) -> dict[Any, Any]:
+    sizes = dict(zip(mesh_axes, mesh_shape))
+    model = sizes.get("model", 1)
+    data = sizes.get("data", 1)
+    multi_pod = "pod" in mesh_axes
+
+    def div(n: int, axis: str, by: int) -> Optional[str]:
+        return axis if (by > 0 and n % by == 0) else None
+
+    rules: dict[Any, Any] = {
+        "batch": ("pod", "data") if multi_pod else "data",
+        "groups": None,
+        "embed2": None,
+        "pffn": None,
+        None: None,
+    }
+    if cfg is None:
+        # generic fallback: shard nothing we cannot verify.
+        rules.update({k: None for k in
+                      ("vocab", "ffn", "experts", "inner", "ssm_heads",
+                       "heads", "head_dim", "kv", "embed")})
+        return rules
+
+    mode = attn_mode(cfg, model)
+    rules["heads"] = "model" if mode == "head" else None
+    rules["kv"] = "model" if (mode == "head" and
+                              cfg.num_kv_heads % model == 0) else None
+    rules["head_dim"] = None
+    rules["vocab"] = div(cfg.vocab_size, "model", model)
+    rules["ffn"] = div(cfg.moe_d_ff if cfg.is_moe else cfg.d_ff, "model", model)
+    if cfg.is_moe:
+        rules["experts"] = div(cfg.num_experts, "model", model)
+        # if experts shard over model, expert-ffn stays unsharded (EP not TP)
+        if rules["experts"] is not None:
+            rules["ffn"] = None
+    else:
+        rules["experts"] = None
+    rules["inner"] = div(cfg.d_inner, "model", model) if cfg.ssm_state else None
+    rules["ssm_heads"] = div(cfg.ssm_heads, "model", model) if cfg.ssm_state else None
+    rules["embed"] = div(cfg.d_model, "data", data)
+    return rules
+
+
+def logical_to_physical(logical: Sequence[Optional[str]],
+                        mesh_axes: Sequence[str],
+                        mesh_shape: Sequence[int],
+                        cfg: Optional[ModelConfig] = None) -> P:
+    rules = _physical_rules(cfg, mesh_axes, mesh_shape)
+    return P(*(rules.get(ax, None) for ax in logical))
+
+
+def _leaf_logical(path: Tuple[Any, ...], ndim: int) -> Tuple[Optional[str], ...]:
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = str(entry.key)
+            break
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            name = str(entry.name)
+            break
+    rule = _LOGICAL_RULES.get(name or "")
+    if rule is None:
+        return (None,) * ndim
+    if len(rule) == ndim:
+        return rule
+    if len(rule) < ndim:  # stacked by scan-over-layers (1-2 leading dims)
+        return (None,) * (ndim - len(rule)) + tuple(rule)
+    return (None,) * ndim
+
+
+def shard_params_spec(params: Any, mesh_axes: Sequence[str],
+                      mesh_shape: Sequence[int],
+                      cfg: Optional[ModelConfig] = None) -> Any:
+    """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs)."""
+
+    def spec(path, leaf):
+        ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+        return logical_to_physical(_leaf_logical(path, ndim),
+                                   mesh_axes, mesh_shape, cfg)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def named_sharding_tree(params: Any, mesh: Mesh,
+                        cfg: Optional[ModelConfig] = None) -> Any:
+    specs = shard_params_spec(params, mesh.axis_names, mesh.devices.shape, cfg)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh_axes: Sequence[str], extra_dims: int = 1) -> P:
+    """PartitionSpec for (batch, ...) activations."""
+    batch = ("pod", "data") if "pod" in mesh_axes else "data"
+    return P(batch, *([None] * extra_dims))
+
+
+def kv_cache_spec(cfg: ModelConfig, mesh_axes: Sequence[str],
+                  mesh_shape: Sequence[int], *, seq_sharded: bool = False) -> P:
+    """KV cache (batch, seq, kv_heads, head_dim)."""
+    sizes = dict(zip(mesh_axes, mesh_shape))
+    model = sizes.get("model", 1)
+    mode = attn_mode(cfg, model)
+    kv_ax = "model" if (mode == "head" and
+                        cfg.num_kv_heads % max(model, 1) == 0) else None
+    batch = ("pod", "data") if "pod" in mesh_axes else "data"
+    if seq_sharded:
+        # batch=1 long-context decode: shard the KV sequence over data.
+        return P(None, batch, kv_ax, None)
+    return P(batch, None, kv_ax, None)
+
+
+def check_divisibility(cfg: ModelConfig, mesh_cfg: MeshConfig) -> list[str]:
+    """Human-readable report of replication fallbacks (empty = fully sharded)."""
+    sizes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    model = sizes.get("model", 1)
+    issues = []
+    mode = attn_mode(cfg, model)
+    if mode != "head":
+        issues.append(
+            f"attention uses {mode} sharding "
+            f"(heads={cfg.num_heads}, kv={cfg.num_kv_heads} vs model={model})")
+    elif cfg.num_kv_heads % model:
+        issues.append(
+            f"kv heads {cfg.num_kv_heads} replicated over model={model} "
+            "(GQA head sharding keeps Q sharded)")
+    if cfg.vocab_size % model:
+        issues.append(f"vocab {cfg.vocab_size} replicated (not divisible by {model})")
+    ffn = cfg.moe_d_ff if cfg.is_moe else cfg.d_ff
+    if ffn and ffn % model:
+        issues.append(f"d_ff {ffn} replicated")
+    if cfg.is_moe and cfg.num_experts % model:
+        issues.append(f"experts {cfg.num_experts} not divisible by {model}")
+    return issues

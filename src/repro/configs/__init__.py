@@ -1,0 +1,47 @@
+"""Assigned architecture configs (+ the paper's own Mixtral-8x7B).
+
+Each module exposes ``CONFIG``; ``get_config(name)`` resolves by id.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.common.config import ModelConfig
+
+ARCH_IDS = [
+    "hubert_xlarge",
+    "mamba2_780m",
+    "starcoder2_7b",
+    "glm4_9b",
+    "zamba2_7b",
+    "phi35_moe",
+    "llama4_maverick",
+    "mistral_large",
+    "internvl2_76b",
+    "smollm_135m",
+    "mixtral_8x7b",
+]
+
+_ALIASES = {
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-780m": "mamba2_780m",
+    "starcoder2-7b": "starcoder2_7b",
+    "glm4-9b": "glm4_9b",
+    "zamba2-7b": "zamba2_7b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "mistral-large-123b": "mistral_large",
+    "internvl2-76b": "internvl2_76b",
+    "smollm-135m": "smollm_135m",
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {aid: get_config(aid) for aid in ARCH_IDS}

@@ -1,0 +1,19 @@
+"""GLM4-9B — dense LM, RoPE + GQA [hf:THUDM/glm-4-9b].
+
+40L d_model=4096 32H (kv=2) d_ff=13696 vocab=151552.  Pure full attention:
+long_500k decode is skipped (no sub-quadratic variant in the architecture).
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    kind="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151552,
+    rope_theta=1e4,
+    source="hf:THUDM/glm-4-9b",
+)

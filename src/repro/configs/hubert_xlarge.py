@@ -1,0 +1,24 @@
+"""HuBERT-XLarge — audio encoder backbone [arXiv:2106.07447].
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (k-means cluster units).
+Encoder-only (bidirectional), GELU FFN, learned conv frontend is a STUB:
+``input_specs`` supplies precomputed frame embeddings (B, S, 1280).
+No autoregressive decode — decode shapes are skipped (see DESIGN.md §5).
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    kind="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,
+    use_rope=False,  # hubert uses conv positional embedding (in the stub)
+    mlp_activation="gelu",
+    frontend="audio",
+    source="arXiv:2106.07447",
+)

@@ -1,0 +1,22 @@
+"""InternVL2-76B — VLM: InternViT frontend (STUB) + LLM decoder backbone
+[arXiv:2404.16821].
+
+80L d_model=8192 64H (kv=8) d_ff=28672 vocab=128256.  The vision encoder +
+projector is the carve-out stub: ``input_specs`` supplies 256 precomputed
+patch embeddings per sequence.  Full attention: long_500k skipped.
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    kind="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    frontend="vision",
+    frontend_tokens=256,
+    source="arXiv:2404.16821",
+)

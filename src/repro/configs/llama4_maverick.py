@@ -1,0 +1,26 @@
+"""Llama-4 Maverick (400B total / 17B active) — MoE 128 experts top-1,
+early fusion [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+48L d_model=5120 40H (kv=8) expert d_ff=8192 vocab=202048.  Every other
+layer is MoE (interleave step 2, like Maverick); chunked attention is
+modeled as an 8192 sliding window, which makes long_500k decode valid.
+Top-1 routing is FloE's easiest inter-expert prediction case.
+"""
+from repro.common.config import FloEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    kind="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=128,
+    num_experts_per_tok=1,
+    moe_every=2,
+    sliding_window=8192,
+    floe=FloEConfig(enabled=True, sparsity=0.8, up_bits=2),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

@@ -1,0 +1,26 @@
+"""Mamba2-780m — attention-free SSM with SSD [arXiv:2405.21060].
+
+48L d_model=1536, d_inner=3072 (expand 2), 48 SSD heads of 64 channels,
+state N=128, vocab=50280.  FloE's expert compression is INAPPLICABLE here
+(no SwiGLU MLPs) — implemented without the technique per DESIGN.md
+§Arch-applicability.
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    kind="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=1,  # unused (attention-free)
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=50280,
+    use_rope=False,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=128,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,19 @@
+"""Mistral-Large-123B — dense LM [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L d_model=12288 96H (kv=8) d_ff=28672 vocab=32768.  Pure full attention:
+long_500k decode skipped.
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    kind="dense",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32768,
+    rope_theta=1e6,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)

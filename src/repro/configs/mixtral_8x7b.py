@@ -1,0 +1,23 @@
+"""Mixtral-8x7B — the paper's evaluation model [arXiv:2401.04088].
+
+32L d_model=4096 32H (kv=8) expert d_ff=14336 vocab=32000, 8 experts top-2.
+FloE headline numbers (9.3x per-expert compression, 11GB VRAM deployment)
+are computed against this config — see benchmarks/bench_compression.py.
+"""
+from repro.common.config import FloEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    kind="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    num_experts=8,
+    num_experts_per_tok=2,
+    rope_theta=1e6,
+    floe=FloEConfig(enabled=True, sparsity=0.8, up_bits=2),
+    source="arXiv:2401.04088",
+)

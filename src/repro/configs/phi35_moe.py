@@ -1,0 +1,24 @@
+"""Phi-3.5-MoE (42B total / 6.6B active) — 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L d_model=4096 32H (kv=8) expert d_ff=6400 vocab=32064, SWA 131072.
+The paper validates FloE on Phi-3.5-MoE itself (App. D/E) — this is the
+technique's home arch alongside Mixtral.
+"""
+from repro.common.config import FloEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    kind="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    num_experts=16,
+    num_experts_per_tok=2,
+    sliding_window=131072,
+    floe=FloEConfig(enabled=True, sparsity=0.8, up_bits=2),
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)

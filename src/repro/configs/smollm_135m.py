@@ -1,0 +1,19 @@
+"""SmolLM-135M — llama-arch small dense LM [hf:HuggingFaceTB/SmolLM-135M].
+
+30L d_model=576 9H (kv=3) d_ff=1536 vocab=49152.  Full attention:
+long_500k skipped.  Also the end-to-end training example arch (~135M).
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    kind="dense",
+    num_layers=30,
+    d_model=576,
+    num_heads=9,
+    num_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)

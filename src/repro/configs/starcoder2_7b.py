@@ -1,0 +1,21 @@
+"""StarCoder2-7B — dense code LM, GQA + RoPE + 4k sliding window
+[arXiv:2402.19173].
+
+32L d_model=4608 36H (kv=4) d_ff=18432 vocab=49152.  The native sliding
+window makes long_500k decode architecturally valid (ring-buffer KV).
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    kind="dense",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49152,
+    rope_theta=1e5,
+    sliding_window=4096,
+    source="arXiv:2402.19173",
+)

@@ -1,0 +1,25 @@
+"""Zamba2-7B — hybrid Mamba2 + shared attention blocks [arXiv:2411.15242].
+
+81L d_model=3584 32H (kv=32, MHA) d_ff=14336 ssm_state=64 vocab=32000.
+Layout: every 6th block is the SHARED transformer block (one set of
+attention+MLP weights reused across its 13 invocations, each with its own
+input projection over concat(x, x_embed)); the rest are Mamba2 mixers.
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    kind="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=128,
+    shared_attn_every=6,
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,14 @@
+"""FloE core: the paper's contribution as composable JAX modules.
+
+hqq         — half-quadratic ultra-low-bit quantization (§3.2.2)
+sparsify    — contextual activation sparsification S_t (§3.2.1)
+predictor   — inter-/intra-expert sparsity predictors (§3.3)
+cache       — HBM-resident LRU expert cache
+offload     — host expert store, compact layout, link cost model (§3.4.2)
+floe_layer  — compressed expert forward (kernel-facing)
+pipeline    — the on-the-fly decode pipeline tying it together (Fig. 1c)
+"""
+from repro.core import cache, floe_layer, hqq, offload, pipeline, predictor, sparsify
+
+__all__ = ["cache", "floe_layer", "hqq", "offload", "pipeline", "predictor",
+           "sparsify"]

@@ -1,0 +1,72 @@
+"""HBM-resident expert cache with LRU replacement (FloE Fig. 1(b/c) ③).
+
+The cache is host-controlled (Python) and device-resident (jax arrays in
+fixed slots), mirroring the GPU-resident cache of the paper: predictions
+prefetch compressed expert slices into slots ahead of use; a hit serves the
+expert with zero transfer, a miss pays the (modeled + real) transfer cost.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Hashable, Optional
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    prefetch_hits: int = 0  # hits served by a prior prefetch
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class ExpertCache:
+    """Fixed-capacity LRU of (layer, expert) -> device payload."""
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._slots: "collections.OrderedDict[Hashable, Any]" = \
+            collections.OrderedDict()
+        self._prefetched: set = set()
+        self.stats = CacheStats()
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._slots
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        if key in self._slots:
+            self._slots.move_to_end(key)
+            self.stats.hits += 1
+            if key in self._prefetched:
+                self.stats.prefetch_hits += 1
+                self._prefetched.discard(key)
+            return self._slots[key]
+        self.stats.misses += 1
+        return None
+
+    def put(self, key: Hashable, value: Any, *, prefetch: bool = False) -> None:
+        if key in self._slots:
+            self._slots.move_to_end(key)
+            self._slots[key] = value
+            return
+        while len(self._slots) >= self.capacity:
+            self._slots.popitem(last=False)
+            self.stats.evictions += 1
+        self._slots[key] = value
+        if prefetch:
+            self._prefetched.add(key)
+
+    def keys(self):
+        return list(self._slots.keys())
+
+    def reset_stats(self):
+        self.stats = CacheStats()

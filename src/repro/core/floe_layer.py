@@ -1,0 +1,121 @@
+"""FloE compressed expert forward — the technique as a composable module.
+
+Two device-side execution styles:
+
+* ``floe_expert_fn(cfg)`` — an ``expert_fn`` for repro.models.moe: grouped
+  (ragged) forward where the up projection is INT2-dequantized on the fly
+  and gate/down are masked by the contextual threshold.  This is the
+  dry-run / distributed integration path (mask realized as multiplicative
+  zeroing — sparse *semantics* with dense shapes, which is what XLA can
+  shard; the Pallas kernel below realizes the actual block skipping).
+* ``sparse_expert_apply`` — single-expert decode path over gathered sparse
+  slices (what the serving engine calls after the offload engine has moved
+  only the masked records).  Shapes here ARE sparse (n_active channels).
+
+Plus helpers to compress a resident MoE layer into FloE form.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core import hqq, sparsify
+from repro.models import nn
+
+
+class FloEExpertWeights(NamedTuple):
+    """Device-resident compressed weights for one MoE layer."""
+
+    we_gate: jax.Array  # (E, D, F) bf16 (dense resident or streamed slices)
+    we_down: jax.Array  # (E, F, D)
+    up_q: hqq.QTensor  # (E, D, F) packed INT-b
+    thresholds: jax.Array  # (E,) f32
+
+
+def compress_moe_layer(moe_params: dict, thresholds, *, bits: int = 2,
+                       group: int = 64) -> FloEExpertWeights:
+    up_q = hqq.quantize_per_expert(moe_params["we_up"], bits=bits, group=group)
+    return FloEExpertWeights(moe_params["we_gate"], moe_params["we_down"],
+                             up_q, jnp.asarray(thresholds, jnp.float32))
+
+
+# ------------------------------------------------- grouped (ragged) path ---
+def _dequant_stack(up_q: hqq.QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    """(E, D, F) dequantized. XLA fuses this into the consumer matmul; on
+    TPU the Pallas quant_gemv kernel performs it in-register instead."""
+    def one(packed, scale, zero):
+        qt = hqq.QTensor(packed, scale, zero, up_q.bits, up_q.group, up_q.shape)
+        return hqq.dequantize(qt, dtype)
+    return jax.vmap(one)(up_q.packed, up_q.scale, up_q.zero)
+
+
+def floe_expert_fn(cfg: ModelConfig, weights: Optional[FloEExpertWeights] = None):
+    """Returns an expert_fn(xs, wg, wu, wd, group_sizes) for moe_forward.
+
+    When ``weights`` is given, its quantized up + thresholds override the
+    dense wu passed by the MoE layer (wg/wd still come from the caller so
+    sharding stays with the layer).
+    """
+    block = cfg.floe.block_size
+
+    def expert_fn(xs, wg, wu, wd, group_sizes):
+        if weights is not None:
+            wu_eff = _dequant_stack(weights.up_q, xs.dtype)
+            thr = weights.thresholds
+        else:
+            wu_eff = wu
+            thr = None
+        u = jax.lax.ragged_dot(xs, wu_eff, group_sizes).astype(jnp.float32)
+        if thr is not None:
+            # per-row threshold: rows belong to group g = searchsorted(cum)
+            bounds = jnp.cumsum(group_sizes)
+            row_group = jnp.searchsorted(bounds, jnp.arange(xs.shape[0]),
+                                         side="right")
+            t = thr[jnp.clip(row_group, 0, thr.shape[0] - 1)][:, None]
+        else:
+            t = jnp.quantile(jnp.abs(u), cfg.floe.sparsity, axis=-1,
+                             keepdims=True)  # calibration-free fallback
+        u = sparsify.s_t(u, t)
+        mask = (u != 0.0)
+        if block > 1 and u.shape[-1] % block == 0:
+            bu = sparsify.block_union_mask(mask, block)
+            mask = jnp.repeat(bu, block, axis=-1)  # TPU lane-block union
+        g = jax.lax.ragged_dot(xs, wg, group_sizes).astype(jnp.float32)
+        h = nn.silu(g) * u * mask
+        return jax.lax.ragged_dot(h.astype(xs.dtype), wd, group_sizes)
+
+    return expert_fn
+
+
+# ------------------------------------------- sparse single-expert decode ---
+def sparse_expert_apply(x: jax.Array, gate_cols: jax.Array,
+                        down_rows: jax.Array, v_active: jax.Array
+                        ) -> jax.Array:
+    """Decode-path expert over gathered ACTIVE channels only.
+
+    x (B, D); gate_cols (n, D) = W_gate[:, mask].T; down_rows (n, D) =
+    W_down[mask, :]; v_active (B, n) = S_t(x W_up)[mask].
+    This is Algorithm 1 with the mask already realized by the offload
+    gather — the FLOPs and bytes are the sparse ones.
+    """
+    g = nn.silu((x.astype(jnp.float32) @ gate_cols.T.astype(jnp.float32)))
+    h = g * v_active.astype(jnp.float32)
+    return (h @ down_rows.astype(jnp.float32)).astype(x.dtype)
+
+
+def up_and_mask(x: jax.Array, up_q: hqq.QTensor, t: jax.Array,
+                ) -> tuple[jax.Array, jax.Array]:
+    """v = x W_up^(q); mask = |v| >= t. x (B, D) -> v (B, F), mask (B, F)."""
+    wu = hqq.dequantize(up_q, jnp.float32)
+    v = x.astype(jnp.float32) @ wu
+    return v, jnp.abs(v) >= t
+
+
+def union_channels(mask: jax.Array, cap: Optional[int] = None) -> jax.Array:
+    """Batched decode: union of per-token masks -> channel index list."""
+    u = mask.any(axis=0)
+    idx = jnp.nonzero(u, size=cap or u.shape[-1], fill_value=-1)[0]
+    return idx[idx >= 0] if cap is None else idx

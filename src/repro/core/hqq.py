@@ -1,0 +1,149 @@
+"""Half-Quadratic Quantization (HQQ, Badri & Shaji 2023) in pure JAX.
+
+FloE §3.2.2 quantizes ONLY the up projection at ultra-low bit-width (INT2 by
+default); we implement the full bit range (8/4/3/2/1) so the quantization-
+sensitivity experiment (paper Fig. 3b / Table 7) can be reproduced.
+
+HQQ is calibration-free: per quantization group it alternately solves
+
+    min_{z, e}  || W - s·(Q(W/s + z) - z) ||_p^p      (0 < p < 1)
+
+via a half-quadratic split — an l_p shrinkage proximal step on the residual
+``e`` followed by a closed-form zero-point update.  The scale ``s`` comes
+from the group min/max and stays fixed (as in reference HQQ).
+
+Storage: sub-byte codes are bit-packed into uint8 along the group axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Group-quantized tensor.
+
+    packed: uint8 codes, shape (G, group/codes_per_byte, N) — bit-packed
+    scale:  (G, 1, N) f32
+    zero:   (G, 1, N) f32
+    bits / group / shape: static metadata (pytree aux data, vmap-safe)
+    """
+
+    packed: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int
+    group: int
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.packed, self.scale, self.zero), \
+            (self.bits, self.group, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.packed.size * self.packed.dtype.itemsize
+                + self.scale.size * self.scale.dtype.itemsize
+                + self.zero.size * self.zero.dtype.itemsize)
+
+
+def _shrink_lp(x: jax.Array, beta: float, p: float) -> jax.Array:
+    """Generalized soft-threshold for the l_p proximal operator."""
+    return jnp.sign(x) * jnp.maximum(
+        jnp.abs(x) - (1.0 / beta) * jnp.power(jnp.abs(x) + 1e-8, p - 1.0), 0.0)
+
+
+def _pack(q: jax.Array, bits: int) -> jax.Array:
+    """Pack codes (G, L, N) into uint8 along axis 1."""
+    per = 8 // bits
+    g, l, n = q.shape
+    pad = (-l) % per
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+    q = q.reshape(g, (l + pad) // per, per, n).astype(jnp.uint8)
+    shifts = jnp.arange(per, dtype=jnp.uint8) * bits
+    return jnp.sum(q << shifts[None, None, :, None], axis=2).astype(jnp.uint8)
+
+
+def _unpack(packed: jax.Array, bits: int, length: int) -> jax.Array:
+    per = 8 // bits
+    g, lp, n = packed.shape
+    shifts = jnp.arange(per, dtype=jnp.uint8) * bits
+    mask = jnp.uint8((1 << bits) - 1)
+    q = (packed[:, :, None, :] >> shifts[None, None, :, None]) & mask
+    return q.reshape(g, lp * per, n)[:, :length]
+
+
+@partial(jax.jit, static_argnames=("bits", "group", "iters", "p"))
+def quantize(w: jax.Array, bits: int = 2, group: int = 64,
+             iters: int = 20, p: float = 0.7) -> QTensor:
+    """HQQ-quantize a 2-D weight (M, N), grouping along M (input dim)."""
+    m, n = w.shape
+    assert m % group == 0, f"rows {m} not divisible by group {group}"
+    wf = w.astype(jnp.float32).reshape(m // group, group, n)
+    qmax = float(2 ** bits - 1)
+
+    wmin = wf.min(axis=1, keepdims=True)
+    wmax = wf.max(axis=1, keepdims=True)
+    scale = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+    zero = -wmin / scale
+
+    def _q(zero):
+        return jnp.clip(jnp.round(wf / scale + zero), 0.0, qmax)
+
+    beta = 10.0
+
+    def body(carry, _):
+        zero, beta = carry
+        q = _q(zero)
+        wr = scale * (q - zero)
+        e = _shrink_lp(wf - wr, beta, p)
+        zero = jnp.mean(q - (wf - e) / scale, axis=1, keepdims=True)
+        return (zero, beta * 1.05), None
+
+    (zero, _), _ = jax.lax.scan(body, (zero, beta), None, length=iters)
+    q = _q(zero).astype(jnp.uint8)
+    packed = _pack(q, bits) if bits < 8 else q
+    return QTensor(packed, scale, zero, bits, group, (m, n))
+
+
+def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    m, n = qt.shape
+    g = m // qt.group
+    if qt.bits < 8:
+        q = _unpack(qt.packed, qt.bits, qt.group)
+    else:
+        q = qt.packed
+    w = qt.scale * (q.astype(jnp.float32) - qt.zero)
+    return w.reshape(m, n).astype(dtype)
+
+
+def quantize_per_expert(w: jax.Array, bits: int = 2, group: int = 64) -> QTensor:
+    """Quantize a stacked expert weight (E, M, N) via vmap."""
+    fn = partial(quantize, bits=bits, group=group)
+    return jax.vmap(fn)(w)
+
+
+def dequantize_expert(qt: QTensor, e: int, dtype=jnp.bfloat16) -> jax.Array:
+    one = QTensor(qt.packed[e], qt.scale[e], qt.zero[e], qt.bits, qt.group,
+                  qt.shape)
+    return dequantize(one, dtype)
+
+
+def rel_error(w: jax.Array, qt: QTensor) -> float:
+    wr = dequantize(qt, jnp.float32)
+    w = w.astype(jnp.float32)
+    return float(jnp.linalg.norm(w - wr) / jnp.maximum(jnp.linalg.norm(w), 1e-8))
+
+
+def compression_ratio(w: jax.Array, qt: QTensor, dense_bytes: int = 2) -> float:
+    return (w.size * dense_bytes) / qt.nbytes

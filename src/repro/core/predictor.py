@@ -1,0 +1,119 @@
+"""Dual sparsity predictors (FloE §3.3).
+
+Both exploit Observation 3: hidden states entering consecutive MoE layers
+have >0.95 cosine similarity, so the layer-i hidden state is a usable proxy
+input for layer-(i+1)'s router and up projection.
+
+* Inter-expert (§3.3.1): a learned per-layer MLP maps h_i -> multi-hot of
+  layer-(i+1) routed experts.  Sized per layer depth (paper: 32K..2M params;
+  we expose ``hidden`` — 0 gives the single-layer/linear variant).
+* Intra-expert (§3.3.2): parameter-free — reuse layer-(i+1)'s (quantized)
+  up projection on h_i and threshold, giving the predicted channel mask.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+# ------------------------------------------------------------ inter-expert -
+def init_inter_predictor(key, d_model: int, num_experts: int,
+                         hidden: int = 0) -> dict:
+    """hidden=0 -> linear probe (the paper's shallow-layer variant)."""
+    if hidden <= 0:
+        k1, = jax.random.split(key, 1)
+        return {"p_w2": nn.dense_init(k1, (d_model, num_experts), jnp.float32),
+                "p_b2": jnp.zeros((num_experts,), jnp.float32)}
+    k1, k2 = jax.random.split(key)
+    return {
+        "p_w1": nn.dense_init(k1, (d_model, hidden), jnp.float32),
+        "p_b1": jnp.zeros((hidden,), jnp.float32),
+        "p_w2": nn.dense_init(k2, (hidden, num_experts), jnp.float32),
+        "p_b2": jnp.zeros((num_experts,), jnp.float32),
+    }
+
+
+def inter_logits(params: dict, h: jax.Array) -> jax.Array:
+    x = h.astype(jnp.float32)
+    if "p_w1" in params:
+        x = jax.nn.relu(x @ params["p_w1"] + params["p_b1"])
+    return x @ params["p_w2"] + params["p_b2"]
+
+
+def inter_predict_topk(params: dict, h: jax.Array, k: int) -> jax.Array:
+    """Predicted expert ids for the next layer. h (T, D) -> (T, k) i32."""
+    return jax.lax.top_k(inter_logits(params, h), k)[1].astype(jnp.int32)
+
+
+def _bce(logits, multi_hot):
+    z = jax.nn.log_sigmoid(logits)
+    zn = jax.nn.log_sigmoid(-logits)
+    return -jnp.mean(multi_hot * z + (1.0 - multi_hot) * zn)
+
+
+@partial(jax.jit, static_argnames=("steps", "lr"))
+def train_inter_predictor(params: dict, h: jax.Array, targets: jax.Array,
+                          steps: int = 200, lr: float = 3e-3) -> dict:
+    """Fit on a trace. h (T, D) hidden states of layer i, targets (T, E)
+    multi-hot expert selections of layer i+1. Plain Adam, full-batch."""
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, i):
+        params, m, v = carry
+        g = jax.grad(lambda p: _bce(inter_logits(p, h), targets))(params)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1
+        mhat = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8),
+            params, mhat, vhat)
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(step, (params, m, v),
+                                     jnp.arange(steps, dtype=jnp.float32))
+    return params
+
+
+def recall_at_k(pred_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
+    """Fraction of true experts covered by predictions. (T,k) vs (T,k')."""
+    hit = (pred_ids[:, :, None] == true_ids[:, None, :]).any(axis=1)
+    return jnp.mean(hit.astype(jnp.float32))
+
+
+# ------------------------------------------------------------ intra-expert -
+def intra_predict_mask(h_prev: jax.Array, w_up_next: jax.Array,
+                       t: jax.Array) -> jax.Array:
+    """Reuse-based channel-mask prediction (parameter-free).
+
+    h_prev (T, D): hidden state entering layer i; w_up_next (D, F): layer
+    i+1's up projection (dequantized INT2 in production); t: that expert's
+    calibrated threshold.  Returns predicted bool mask (T, F).
+    """
+    v = h_prev.astype(jnp.float32) @ w_up_next.astype(jnp.float32)
+    return jnp.abs(v) >= t
+
+
+def mask_precision_recall(pred: jax.Array, true: jax.Array):
+    """pred/true bool (T, F) -> (precision, recall)."""
+    pred = pred.astype(jnp.float32)
+    true = true.astype(jnp.float32)
+    tp = jnp.sum(pred * true)
+    return (tp / jnp.maximum(jnp.sum(pred), 1.0),
+            tp / jnp.maximum(jnp.sum(true), 1.0))
+
+
+def cosine_similarity(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Mean cosine similarity between rows of a and b (T, D)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    num = jnp.sum(a * b, -1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+    return jnp.mean(num / jnp.maximum(den, 1e-8))

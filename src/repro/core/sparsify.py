@@ -1,0 +1,117 @@
+"""Contextual sparsification (FloE §3.2.1).
+
+Implements the magnitude threshold function S_t (Eq. 5), offline threshold
+calibration from the empirical CDF of |activation| at a target sparsity
+(Eq. 6), and the three pruning variants compared by the paper (gate / up /
+down) plus the production forward (Eq. 11) that prunes on the up-projection
+output — the variant FloE ships because it is *predictable* and saves both
+gate and down traffic.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+def s_t(a: jax.Array, t: jax.Array) -> jax.Array:
+    """Eq. (5): zero activations with |a| < t."""
+    return jnp.where(jnp.abs(a) >= t, a, 0.0)
+
+
+def threshold_from_samples(abs_samples: jax.Array, sparsity: float) -> jax.Array:
+    """Eq. (6): t = min{t' : F(t') >= k} — the k-quantile of |a|."""
+    return jnp.quantile(abs_samples.reshape(-1).astype(jnp.float32), sparsity)
+
+
+def calibrate_expert_thresholds(up_acts: jax.Array, sparsity: float) -> jax.Array:
+    """Per-expert thresholds from sampled |x W_up|. up_acts (E, T, F)."""
+    return jax.vmap(lambda a: threshold_from_samples(jnp.abs(a), sparsity))(up_acts)
+
+
+# ------------------------------------------------- pruning-variant forwards -
+def expert_forward_dense(x, wg, wu, wd):
+    """Eq. (1) — uncompressed."""
+    g = nn.silu((x @ wg).astype(jnp.float32))
+    u = (x @ wu).astype(jnp.float32)
+    return ((g * u).astype(x.dtype)) @ wd
+
+
+def expert_forward_sparse_up(x, wg, wu, wd, t):
+    """Eq. (11) — FloE production forward: prune on |x W_up|.
+
+    Channels with |u| < t contribute nothing, so their gate columns and down
+    rows are dead: this is what the offload path never transfers and the
+    Pallas kernel never loads.
+    """
+    u = (x @ wu).astype(jnp.float32)
+    u = s_t(u, t)
+    g = nn.silu((x @ wg).astype(jnp.float32))
+    return ((g * u).astype(x.dtype)) @ wd
+
+
+def expert_forward_sparse_gate(x, wg, wu, wd, t):
+    """Ablation: prune on SiLU(x W_gate) (paper: most sensitive)."""
+    g = nn.silu((x @ wg).astype(jnp.float32))
+    g = s_t(g, t)
+    u = (x @ wu).astype(jnp.float32)
+    return ((g * u).astype(x.dtype)) @ wd
+
+
+def expert_forward_sparse_down(x, wg, wu, wd, t):
+    """Ablation: prune the W_down input (paper: least sensitive but
+    unpredictable — requires both gate and up outputs first)."""
+    g = nn.silu((x @ wg).astype(jnp.float32))
+    u = (x @ wu).astype(jnp.float32)
+    h = s_t(g * u, t)
+    return h.astype(x.dtype) @ wd
+
+
+VARIANTS: dict[str, Callable] = {
+    "up": expert_forward_sparse_up,
+    "gate": expert_forward_sparse_gate,
+    "down": expert_forward_sparse_down,
+}
+
+
+def mask_from_up(u: jax.Array, t: jax.Array) -> jax.Array:
+    """Channel activity mask (|u| >= t). u (..., F) -> bool (..., F)."""
+    return jnp.abs(u) >= t
+
+
+def block_union_mask(mask: jax.Array, block: int) -> jax.Array:
+    """TPU adaptation: per-block activity (any active lane in a 128-lane
+    block keeps the block). mask (..., F) -> (..., F/block) bool."""
+    f = mask.shape[-1]
+    assert f % block == 0
+    return mask.reshape(mask.shape[:-1] + (f // block, block)).any(-1)
+
+
+def achieved_sparsity(mask: jax.Array) -> jax.Array:
+    return 1.0 - jnp.mean(mask.astype(jnp.float32))
+
+
+# --------------------------------------------- theorem 3.1 empirical check -
+def pruning_losses(x, wg, wu, wd, sparsity: float, key=None):
+    """Monte-Carlo L_down / L_up / L_gate of Theorem 3.1 on given inputs.
+
+    Thresholds are calibrated per-variant so all three prune the SAME
+    fraction, as the theorem requires.  Returns dict of mean L2^2 errors.
+    """
+    g = nn.silu((x @ wg).astype(jnp.float32))
+    u = (x @ wu).astype(jnp.float32)
+    h = g * u
+    ref = h @ wd.astype(jnp.float32)
+
+    t_down = threshold_from_samples(jnp.abs(h), sparsity)
+    t_up = threshold_from_samples(jnp.abs(u), sparsity)
+    t_gate = threshold_from_samples(jnp.abs(g), sparsity)
+
+    l_down = jnp.mean(jnp.sum(((h - s_t(h, t_down)) @ wd.astype(jnp.float32)) ** 2, -1))
+    l_up = jnp.mean(jnp.sum(((h - g * s_t(u, t_up)) @ wd.astype(jnp.float32)) ** 2, -1))
+    l_gate = jnp.mean(jnp.sum(((h - s_t(g, t_gate) * u) @ wd.astype(jnp.float32)) ** 2, -1))
+    return {"down": l_down, "up": l_up, "gate": l_gate}

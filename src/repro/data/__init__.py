@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, TextFileLM, make_batches
+
+__all__ = ["SyntheticLM", "TextFileLM", "make_batches"]

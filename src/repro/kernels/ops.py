@@ -1,0 +1,60 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret=True`` (the default on CPU) executes the kernel bodies in
+Python for correctness; on a real TPU pass ``interpret=False``.
+
+``floe_expert_gemv`` is the end-to-end Algorithm 1: fused INT-b up GEMV →
+threshold mask → block-union → compacted block-sparse SwiGLU GEMV.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hqq import QTensor
+from repro.core import sparsify
+from repro.kernels import ref
+from repro.kernels.quant_gemv import quant_gemv
+from repro.kernels.sparse_gemv import sparse_gemv, sparse_gemv_compact
+
+ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+DEFAULT_INTERPRET = not ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret",
+                                             "compact"))
+def floe_expert_gemv(x: jax.Array, qt_up: QTensor, w_gate: jax.Array,
+                     w_down: jax.Array, threshold: jax.Array,
+                     *, block_size: int = 128,
+                     interpret: bool = DEFAULT_INTERPRET,
+                     compact: bool = True) -> jax.Array:
+    """FloE Algorithm 1 on TPU tiles.
+
+    x (B, D); qt_up packed (D, F); w_gate (D, F); w_down (F, D);
+    threshold scalar (this expert's calibrated t). Returns y (B, D).
+    """
+    v = quant_gemv(x, qt_up, block_size=block_size, interpret=interpret)
+    v = sparsify.s_t(v, threshold)
+    mask = v != 0.0
+    block_active = sparsify.block_union_mask(mask, block_size).any(axis=0)
+    kern = sparse_gemv_compact if compact else sparse_gemv
+    return kern(x, v, w_gate, w_down, block_active.astype(jnp.int32),
+                block_size=block_size, interpret=interpret)
+
+
+def floe_expert_gemv_ref(x, qt_up: QTensor, w_gate, w_down, threshold,
+                         block_size: int = 128):
+    """Pure-jnp oracle of the full fused path."""
+    v = ref.quant_gemv_ref(x, qt_up.packed, qt_up.scale, qt_up.zero,
+                           qt_up.bits, qt_up.group)
+    v = sparsify.s_t(v, threshold)
+    mask = v != 0.0
+    ba = sparsify.block_union_mask(mask, block_size).any(axis=0)
+    return ref.sparse_gemv_ref(x, v, w_gate, w_down,
+                               ba.astype(jnp.int32), block_size)
+
+
+__all__ = ["quant_gemv", "sparse_gemv", "sparse_gemv_compact",
+           "floe_expert_gemv", "floe_expert_gemv_ref", "DEFAULT_INTERPRET"]

@@ -1,0 +1,67 @@
+"""Fused INT-b dequant GEMV — the up-projection kernel (FloE §3.2.2).
+
+Computes v = x · dequant(W_up^q) where W_up is HQQ group-quantized and
+bit-packed.  Dequantization (unpack → scale·(q - zero)) happens in VMEM
+registers per tile, so HBM traffic is the PACKED bytes — the whole point of
+shipping the up projection at INT2.
+
+Tiling: grid over (F blocks); each step processes the full D (= G·group)
+contraction for one 128-wide F tile.  Packed codes arrive as
+(G, group/per, blk) uint8 tiles; scales/zeros as (G, 1, blk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hqq import QTensor
+
+
+def _kernel(x_ref, packed_ref, scale_ref, zero_ref, o_ref, *, bits: int,
+            group: int):
+    per = 8 // bits
+    codes_mask = (1 << bits) - 1
+    packed = packed_ref[...]  # (G, group/per, blk) uint8
+    g_, lp, blk = packed.shape
+    # unpack bits -> (G, group, blk). uint8 shifts keep it integer-only.
+    shifts = (jnp.arange(per, dtype=jnp.int32) * bits)
+    codes = (packed[:, :, None, :].astype(jnp.int32)
+             >> shifts[None, None, :, None]) & codes_mask
+    codes = codes.reshape(g_, lp * per, blk)[:, :group]
+    w = scale_ref[...] * (codes.astype(jnp.float32) - zero_ref[...])
+    w = w.reshape(g_ * group, blk)  # (D, blk) dequantized tile
+    x = x_ref[...].astype(jnp.float32)  # (B, D)
+    o_ref[...] = (x @ w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def quant_gemv(x: jax.Array, qt: QTensor, *, block_size: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """x (B, D) @ dequant(qt (D, F)) -> (B, F) f32."""
+    b, d = x.shape
+    m, f = qt.shape
+    assert m == d, (m, d)
+    assert f % block_size == 0
+    g = d // qt.group
+    lp = qt.packed.shape[1]
+    nblk = f // block_size
+
+    kernel = functools.partial(_kernel, bits=qt.bits, group=qt.group)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((g, lp, block_size), lambda i: (0, 0, i)),
+            pl.BlockSpec((g, 1, block_size), lambda i: (0, 0, i)),
+            pl.BlockSpec((g, 1, block_size), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, block_size), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(x, qt.packed, qt.scale.astype(jnp.float32),
+              qt.zero.astype(jnp.float32))

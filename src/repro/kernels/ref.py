@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def sparse_gemv_ref(x: jax.Array, v: jax.Array, w_gate: jax.Array,
+                    w_down: jax.Array, block_active: jax.Array,
+                    block_size: int) -> jax.Array:
+    """Oracle for the block-sparse fused SwiGLU GEMV (Algorithm 1, TPU form).
+
+    x (B, D); v (B, F) already-thresholded up output (zeros pruned);
+    w_gate (D, F); w_down (F, D); block_active (F/block,) int32.
+    Inactive blocks contribute exactly nothing.
+    """
+    b, d = x.shape
+    f = v.shape[-1]
+    mask = jnp.repeat(block_active.astype(bool), block_size)[None, :]
+    g = silu((x.astype(jnp.float32) @ w_gate.astype(jnp.float32)))
+    h = g * v.astype(jnp.float32) * mask
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def unpack_codes_ref(packed: jax.Array, bits: int, length: int) -> jax.Array:
+    """packed (G, L/per, F) uint8 -> codes (G, L, F) uint8."""
+    per = 8 // bits
+    g, lp, f = packed.shape
+    shifts = jnp.arange(per, dtype=jnp.uint8) * bits
+    mask = jnp.uint8((1 << bits) - 1)
+    q = (packed[:, :, None, :] >> shifts[None, None, :, None]) & mask
+    return q.reshape(g, lp * per, f)[:, :length]
+
+
+def quant_gemv_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                   zero: jax.Array, bits: int, group: int) -> jax.Array:
+    """Oracle for the fused INT-b dequant GEMV.
+
+    x (B, D); packed (G, group/per, F) uint8; scale/zero (G, 1, F) f32,
+    with D = G*group.  Returns x @ dequant(W) as f32 (B, F).
+    """
+    codes = unpack_codes_ref(packed, bits, group)  # (G, group, F)
+    w = scale * (codes.astype(jnp.float32) - zero)  # (G, group, F)
+    d = w.shape[0] * w.shape[1]
+    w = w.reshape(d, -1)
+    return x.astype(jnp.float32) @ w

@@ -1,0 +1,147 @@
+"""Block-sparse fused SwiGLU GEMV — Pallas TPU adaptation of FloE Alg. 1.
+
+The Triton original gathers individual gate columns / down rows by a
+per-channel mask.  TPUs cannot gather lanes from HBM, but they CAN skip
+whole VMEM tiles: we tile the intermediate dimension F into lane-aligned
+blocks (128 by default), precompute a per-block activity flag (any channel
+in the block above threshold — sparsify.block_union_mask), prefetch the
+flags as scalars, and ``@pl.when``-skip the gate/down tile compute for dead
+blocks.  Memory traffic and MXU work scale with the number of *active
+blocks*, which is the TPU-native unit of the paper's saving.
+
+Grid: one step per F-block.  Output (B, D) is accumulated across steps in
+VMEM (constant index_map), initialized at step 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(active_ref, x_ref, v_ref, wg_ref, wd_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(active_ref[i] > 0)
+    def _compute():
+        x = x_ref[...].astype(jnp.float32)  # (B, D)
+        wg = wg_ref[...].astype(jnp.float32)  # (D, blk)
+        g = x @ wg  # MXU
+        g = g * jax.nn.sigmoid(g)  # fused SiLU (VPU)
+        h = g * v_ref[...].astype(jnp.float32)  # (B, blk)
+        wd = wd_ref[...].astype(jnp.float32)  # (blk, D)
+        o_ref[...] += (h @ wd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "interpret"))
+def sparse_gemv(x: jax.Array, v: jax.Array, w_gate: jax.Array,
+                w_down: jax.Array, block_active: jax.Array,
+                *, block_size: int = 128, interpret: bool = True
+                ) -> jax.Array:
+    """y = (SiLU(x W_gate) * v) W_down computed only on active F-blocks.
+
+    x (B, D); v (B, F) thresholded up output; w_gate (D, F); w_down (F, D);
+    block_active (F/block_size,) int32 (nonzero = compute the block).
+    """
+    b, d = x.shape
+    f = v.shape[-1]
+    assert f % block_size == 0, (f, block_size)
+    nblk = f // block_size
+    assert block_active.shape == (nblk,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i, *_: (0, 0)),  # x: whole
+            pl.BlockSpec((b, block_size), lambda i, *_: (0, i)),  # v block
+            pl.BlockSpec((d, block_size), lambda i, *_: (0, i)),  # gate cols
+            pl.BlockSpec((block_size, d), lambda i, *_: (i, 0)),  # down rows
+        ],
+        out_specs=pl.BlockSpec((b, d), lambda i, *_: (0, 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(block_active.astype(jnp.int32), x, v, w_gate, w_down
+              ).astype(x.dtype)
+
+
+# --------------------------------------------------- compacted-grid variant -
+def _kernel_compact(meta_ref, x_ref, v_ref, wg_ref, wd_ref, o_ref):
+    """meta = [n_active, idx_0, idx_1, ...]; grid step i handles the i-th
+    ACTIVE block — dead blocks are never visited, so HBM→VMEM traffic for
+    gate/down tiles scales with the active count, not F."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(i < meta_ref[0])
+    def _compute():
+        x = x_ref[...].astype(jnp.float32)
+        g = x @ wg_ref[...].astype(jnp.float32)
+        g = g * jax.nn.sigmoid(g)
+        h = g * v_ref[...].astype(jnp.float32)
+        o_ref[...] += (h @ wd_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "max_blocks", "interpret"))
+def sparse_gemv_compact(x: jax.Array, v: jax.Array, w_gate: jax.Array,
+                        w_down: jax.Array, block_active: jax.Array,
+                        *, block_size: int = 128,
+                        max_blocks: int = 0, interpret: bool = True
+                        ) -> jax.Array:
+    """Like sparse_gemv but the grid enumerates only active blocks.
+
+    The index_map reads the scalar-prefetched active-block ids, so the
+    pipeline fetches gate/down tiles ONLY for active blocks — the TPU
+    equivalent of the paper's masked column loads.  ``max_blocks`` bounds
+    the grid statically (0 = F/block_size, i.e. worst case).
+    """
+    b, d = x.shape
+    f = v.shape[-1]
+    assert f % block_size == 0
+    nblk = f // block_size
+    max_blocks = max_blocks or nblk
+    assert block_active.shape == (nblk,)
+
+    flags = block_active.astype(jnp.int32)
+    n_active = jnp.sum(flags)
+    # stable compaction of active ids; tail padded with last valid id
+    order = jnp.argsort(-flags, stable=True).astype(jnp.int32)
+    safe = jnp.where(jnp.arange(nblk) < n_active, order, order[0])
+    meta = jnp.concatenate([jnp.minimum(n_active, max_blocks)[None],
+                            safe[:max_blocks]]).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(max_blocks,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i, meta: (0, 0)),
+            pl.BlockSpec((b, block_size), lambda i, meta: (0, meta[i + 1])),
+            pl.BlockSpec((d, block_size), lambda i, meta: (0, meta[i + 1])),
+            pl.BlockSpec((block_size, d), lambda i, meta: (meta[i + 1], 0)),
+        ],
+        out_specs=pl.BlockSpec((b, d), lambda i, meta: (0, 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel_compact,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(meta, x, v, w_gate, w_down).astype(x.dtype)

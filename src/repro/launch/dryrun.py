@@ -1,0 +1,307 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh without allocating anything (ShapeDtypeStruct stand-ins only).
+
+MUST set the device-count override BEFORE any other import — jax locks the
+device count on first init.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import sharding as shd
+from repro.common.config import MULTI_POD, SHAPES, SINGLE_POD, ModelConfig, \
+    ShapeConfig, TrainConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import collective_summary
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import make_dist
+from repro.models import transformer as tf
+from repro.models import nn
+from repro.optim import adamw_init, adamw_update
+
+DTYPE = jnp.bfloat16
+
+# -------------------------------------------------- applicability ----------
+SKIPS: dict[tuple[str, str], str] = {
+    ("hubert_xlarge", "decode_32k"): "encoder-only: no autoregressive decode",
+    ("hubert_xlarge", "long_500k"): "encoder-only: no autoregressive decode",
+    ("glm4_9b", "long_500k"): "pure full attention (no sub-quadratic variant)",
+    ("mistral_large", "long_500k"): "pure full attention",
+    ("internvl2_76b", "long_500k"): "pure full attention",
+    ("smollm_135m", "long_500k"): "pure full attention",
+}
+
+
+def applicable_pairs() -> list[tuple[str, str]]:
+    pairs = []
+    for aid in ARCH_IDS:
+        if aid == "mixtral_8x7b":
+            continue  # the paper's own arch; dry-run via --arch if desired
+        for sname in SHAPES:
+            if (aid, sname) not in SKIPS:
+                pairs.append((aid, sname))
+    return pairs
+
+
+# -------------------------------------------------- step builders ----------
+def _params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: tf.init_model(k, cfg, DTYPE),
+                          jax.random.PRNGKey(0))
+
+
+def _pshard(cfg, mesh):
+    axes, shape = tuple(mesh.axis_names), tuple(mesh.devices.shape)
+    spec = shd.shard_params_spec(_params_shapes(cfg), axes, shape, cfg)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shard(cfg, mesh, specs):
+    axes = tuple(mesh.axis_names)
+    return jax.tree.map(
+        lambda v: NamedSharding(mesh, shd.batch_spec(axes, v.ndim - 1)), specs)
+
+
+def lower_pair(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               remat: bool = True, microbatch: int = 0,
+               donate_state: bool = False, infer_shard: bool = False,
+               kvseq: bool = False, cap_factor: float = 2.0):
+    """Returns (lowered, meta) for one (arch, shape, mesh).
+
+    Hillclimb knobs (EXPERIMENTS.md §Perf):
+      donate_state — alias the decode state in/out (kills the cache copy)
+      infer_shard  — replicate embed over data at inference (no FSDP
+                     weight gathers per decode step)
+      kvseq        — flash-decode with KV sequence sharded over model
+      cap_factor   — MoE per-shard dispatch buffer headroom
+    """
+    dist = make_dist(mesh, batch_sharded=shape.global_batch > 1)
+    dist = dist._replace(kv_seq_shard=kvseq, capacity_factor=cap_factor)
+    if infer_shard:
+        # no-FSDP sharding: weights replicated over data, tensor-sharded
+        # over model only.  For serving this kills the per-step weight
+        # all-gathers outright; for training it is valid whenever
+        # params+opt fit model-sharded (e.g. <=10B-class archs).
+        import repro.common.sharding as _shd
+        _orig = _shd._physical_rules
+
+        def _rules(cfg_, axes_, shape_):
+            r = _orig(cfg_, axes_, shape_)
+            r["embed"] = None
+            return r
+
+        _shd._physical_rules = _rules
+        try:
+            pshard = _pshard(cfg, mesh)
+        finally:
+            _shd._physical_rules = _orig
+    else:
+        pshard = _pshard(cfg, mesh)
+    pshapes = _params_shapes(cfg)
+    axes = tuple(mesh.axis_names)
+    meta = {"mode": shape.mode}
+
+    if shape.mode == "train":
+        tc = TrainConfig(remat=remat)
+        inputs = tf.input_specs(cfg, shape, DTYPE)
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        oshard = type(oshapes)(NamedSharding(mesh, P()),
+                               jax.tree.map(lambda s: s, pshard),
+                               jax.tree.map(lambda s: s, pshard))
+
+        def step(params, opt_state, batch):
+            def loss(p, b):
+                if microbatch > 1:
+                    raise NotImplementedError
+                return tf.loss_fn(p, b, cfg, dist, remat=tc.remat)
+            if microbatch > 1:
+                def one(carry, mb):
+                    gsum, lsum = carry
+                    (l, _), g = jax.value_and_grad(
+                        lambda p: tf.loss_fn(p, mb, cfg, dist, remat=tc.remat),
+                        has_aux=True)(params)
+                    return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+                mb_batch = jax.tree.map(
+                    lambda a: a.reshape((microbatch, -1) + a.shape[1:]), batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(one, (zeros, 0.0), mb_batch)
+                grads = jax.tree.map(lambda g: g / microbatch, gsum)
+                l = lsum / microbatch
+            else:
+                (l, _), grads = jax.value_and_grad(
+                    loss, has_aux=True)(params, batch)
+            params2, opt2, _ = adamw_update(grads, opt_state, params, tc)
+            return params2, opt2, l
+
+        bshard = _batch_shard(cfg, mesh, inputs)
+        jitted = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None))
+        return jitted.lower(pshapes, oshapes, inputs), meta
+
+    if shape.mode == "prefill":
+        inputs = tf.input_specs(cfg, shape, DTYPE)
+        bshard = _batch_shard(cfg, mesh, inputs)
+        if not cfg.causal:  # encoder: plain forward
+            def step(params, batch):
+                logits, _ = tf.forward(params, batch, cfg, dist)
+                return logits
+            jitted = jax.jit(step, in_shardings=(pshard, bshard))
+            return jitted.lower(pshapes, inputs), meta
+        sshapes = jax.eval_shape(
+            lambda: tf.init_decode_state(cfg, shape.global_batch,
+                                         shape.seq_len, DTYPE))
+        sspec = tf.decode_state_spec(cfg, axes, tuple(mesh.devices.shape),
+                                     batch_sharded=True, kv_seq_shard=kvseq)
+        sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                              is_leaf=lambda x: isinstance(x, P))
+
+        def step(params, batch, state):
+            return tf.prefill(params, batch, state, cfg, dist)
+
+        jitted = jax.jit(step, in_shardings=(pshard, bshard, sshard),
+                         out_shardings=(None, sshard),
+                         donate_argnums=(2,) if donate_state else ())
+        return jitted.lower(pshapes, inputs, sshapes), meta
+
+    # decode: ONE new token against a seq_len KV cache
+    batch_sharded = shape.global_batch > 1
+    inputs = tf.input_specs(cfg, shape, DTYPE)
+    sshapes = jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, shape.global_batch,
+                                     shape.seq_len, DTYPE))
+    sspec = tf.decode_state_spec(cfg, axes, tuple(mesh.devices.shape),
+                                 batch_sharded=batch_sharded,
+                                 kv_seq_shard=kvseq)
+    sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                          is_leaf=lambda x: isinstance(x, P))
+    tshard = NamedSharding(
+        mesh, shd.batch_spec(axes, 1)) if batch_sharded else \
+        NamedSharding(mesh, P(None, None))
+
+    def serve_step(params, tokens, state):
+        return tf.decode_step(params, tokens, state, cfg, dist)
+
+    jitted = jax.jit(serve_step, in_shardings=(pshard, tshard, sshard),
+                     out_shardings=(None, sshard),
+                     donate_argnums=(2,) if donate_state else ())
+    return jitted.lower(pshapes, inputs["tokens"], sshapes), meta
+
+
+# ------------------------------------------------------------ analysis -----
+def analyze(compiled, lowered=None) -> dict:
+    from repro.launch.hlo_analysis import dot_flops_total, hbm_bytes_estimate
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    colls = collective_summary(txt)
+    out = {
+        # trip-weighted (XLA's own numbers count loop bodies once — useless
+        # under scan-over-layers; see hlo_analysis.py)
+        "flops_per_device": dot_flops_total(txt),
+        "hbm_bytes_per_device": hbm_bytes_estimate(txt),
+        "flops_per_device_raw": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device_raw": float(ca.get("bytes accessed", 0.0)),
+        "argument_bytes_per_device": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes_per_device": int(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes_per_device": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "alias_bytes_per_device": int(getattr(ma, "alias_size_in_bytes", 0)),
+        "collectives": colls,
+        "collective_bytes_per_device": sum(v["bytes"] for v in colls.values()),
+    }
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            remat: bool = True, microbatch: int = 0,
+            donate_state: bool = False, infer_shard: bool = False,
+            kvseq: bool = False, cap_factor: float = 2.0,
+            pad_heads: int = 0) -> dict:
+    cfg = get_config(arch)
+    if pad_heads:
+        # mesh-alignment experiment: pad Q heads to a multiple of the model
+        # axis (zero-extended wq/wo keep the function identical at init);
+        # switches "seq"-mode archs into head-parallel attention.
+        import dataclasses
+        cfg = dataclasses.replace(cfg, num_heads=pad_heads,
+                                  head_dim=cfg.head_dim)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    lowered, meta = lower_pair(cfg, shape, mesh, remat=remat,
+                               microbatch=microbatch,
+                               donate_state=donate_state,
+                               infer_shard=infer_shard, kvseq=kvseq,
+                               cap_factor=cap_factor)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    print(compiled.memory_analysis())
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in (ca or {}).items()
+           if k in ("flops", "bytes accessed")})
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": len(mesh.devices.flatten()),
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "divisibility_notes": shd.check_divisibility(
+            cfg, MULTI_POD if multi_pod else SINGLE_POD),
+        **meta,
+        **analyze(compiled),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--no_remat", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--donate_state", action="store_true")
+    ap.add_argument("--infer_shard", action="store_true")
+    ap.add_argument("--kvseq", action="store_true")
+    ap.add_argument("--cap_factor", type=float, default=2.0)
+    ap.add_argument("--pad_heads", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in applicable_pairs():
+            print(f"{a},{s}")
+        for (a, s), why in SKIPS.items():
+            print(f"SKIP,{a},{s},{why}")
+        return
+
+    res = run_one(args.arch, args.shape, args.multi_pod,
+                  remat=not args.no_remat, microbatch=args.microbatch,
+                  donate_state=args.donate_state,
+                  infer_shard=args.infer_shard, kvseq=args.kvseq,
+                  cap_factor=args.cap_factor, pad_heads=args.pad_heads)
+    blob = json.dumps(res, indent=1, default=float)
+    print(blob)
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(blob)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""Post-SPMD HLO analysis: collective bytes with while-loop trip weighting.
+
+``compiled.as_text()`` exposes one partition's optimized HLO.  Collectives
+inside ``while`` bodies (scan-over-layers!) appear once statically but run
+once per trip — we recover trip counts from the loop-condition constant
+(`compare(induction, constant(N)), direction=LT`) and weight bytes
+accordingly, recursing through nested loops (layer scan × attention
+query-chunk scan).
+
+Bytes metric: the RESULT shape bytes of each collective op (≈ per-device
+payload; all-gather counts the gathered size, reduce-scatter the scattered
+size).  This is the operand-size convention the roofline instructions ask
+for, applied on the receiving side.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+(?:\([^)]*\)\s*->.*)?{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMPARE_RE = re.compile(r"compare\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every tensor shape appearing in the string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    collective_bytes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    collective_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (cond, body)
+    calls: List[str] = field(default_factory=list)  # call/cond targets
+    fusion_calls: List[str] = field(default_factory=list)  # fusion bodies
+    dot_flops: float = 0.0
+    result_bytes: float = 0.0  # sum of non-trivial instruction result bytes
+    constants: List[int] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # var -> shape str
+    has_compare: bool = False
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if stripped.endswith("{") and ("(" in stripped or "ENTRY" in stripped):
+            m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if stripped.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        # collectives: "%name = SHAPE op-name(...)"
+        for op in COLLECTIVE_OPS:
+            m = re.search(rf"=\s*((?:\([^)]*\))|(?:\S+))\s+{op}(-start|-done)?\(",
+                          stripped)
+            if m:
+                if m.group(2) == "-done":
+                    break  # start/done pairs: count the start only
+                b = _shape_bytes(m.group(1))
+                cur.collective_bytes[op] += b
+                cur.collective_counts[op] += 1
+                break
+        m = _WHILE_RE.search(stripped)
+        if m and "while(" in stripped:
+            cur.whiles.append((m.group(1), m.group(2)))
+        for c in _CONST_RE.findall(stripped):
+            cur.constants.append(int(c))
+        if _COMPARE_RE.search(stripped):
+            cur.has_compare = True
+
+        # instruction shape table: "%var = TYPE[dims]{layout} op(...)"
+        mi = re.match(r"\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                      r"((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)", stripped)
+        if mi:
+            var, shape_str, opname = mi.groups()
+            cur.shapes[var] = shape_str
+            if opname == "dot":
+                cur.dot_flops += _dot_flops(stripped, cur.shapes)
+            elif opname == "fusion":
+                mc = re.search(r"calls=%?([\w\.\-]+)", stripped)
+                if mc:
+                    cur.fusion_calls.append(mc.group(1))
+            elif opname == "call":
+                mc = re.search(r"to_apply=%?([\w\.\-]+)", stripped)
+                if mc:
+                    cur.calls.append(mc.group(1))
+            elif opname == "conditional":
+                for b in re.findall(r"([\w\.\-]+)",
+                                    (re.search(r"branch_computations=\{([^}]*)\}",
+                                               stripped) or [None, ""])[1]):
+                    cur.calls.append(b)
+            if opname not in _FREE_OPS:
+                cur.result_bytes += _shape_bytes(var and mi.group(2))
+    return comps
+
+
+_FREE_OPS = frozenset({
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+})
+
+
+_DOT_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dims_of(shape_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
+    """2 · prod(result dims) · prod(lhs contracting dims)."""
+    mres = re.search(r"=\s*((?:\([^)]*\))|(?:\S+))\s+dot\(", line)
+    if not mres:
+        return 0.0
+    result = 1
+    for d in _dims_of(mres.group(1)):
+        result *= d
+    mop = _DOT_OPERANDS_RE.search(line)
+    mcd = _LHS_CDIMS_RE.search(line)
+    contract = 1
+    if mop and mcd:
+        lhs_shape = _dims_of(shapes.get(mop.group(1), ""))
+        for idx in (int(i) for i in mcd.group(1).split(",") if i):
+            if idx < len(lhs_shape):
+                contract *= lhs_shape[idx]
+    return 2.0 * result * contract
+
+
+def _trip_count(cond: Optional[Computation]) -> int:
+    """Best-effort trip count from the loop condition's compare constant."""
+    if cond is None or not cond.constants:
+        return 1
+    cands = [c for c in cond.constants if 0 < c <= 100000]
+    return max(cands) if cands else 1
+
+
+def _entry_name(comps: Dict[str, Computation]) -> str:
+    return next((n for n in comps if n.startswith("main")), None) or \
+        list(comps.keys())[-1]
+
+
+def computation_weights(comps: Dict[str, Computation],
+                        entry: Optional[str] = None) -> Dict[str, float]:
+    """Execution multiplicity per computation: while bodies × trip count,
+    fusion/call/conditional targets × 1 per call site, summed over call
+    sites (the computation graph is a DAG; iterate to fixpoint)."""
+    if not comps:
+        return {}
+    entry = entry or _entry_name(comps)
+
+    # edge list: parent -> [(child, multiplier)]
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, comp in comps.items():
+        for cond_name, body_name in comp.whiles:
+            trips = _trip_count(comps.get(cond_name))
+            edges[name].append((body_name, float(trips)))
+            edges[name].append((cond_name, float(trips) + 1.0))
+        for c in comp.calls + comp.fusion_calls:
+            if c in comps:
+                edges[name].append((c, 1.0))
+
+    # Kahn-style accumulation over the call DAG
+    indeg: Dict[str, int] = defaultdict(int)
+    for parent, outs in edges.items():
+        for child, _ in outs:
+            indeg[child] += 1
+    weights: Dict[str, float] = defaultdict(float)
+    weights[entry] = 1.0
+    queue = [n for n in comps if indeg[n] == 0]
+    seen = set()
+    while queue:
+        n = queue.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        for child, mult in edges.get(n, []):
+            weights[child] += weights[n] * mult
+            indeg[child] -= 1
+            if indeg[child] == 0:
+                queue.append(child)
+    return weights
+
+
+def collective_summary(text: str, entry: Optional[str] = None
+                       ) -> Dict[str, Dict[str, float]]:
+    """Returns {op: {"bytes": weighted_bytes, "count": weighted_count}}."""
+    comps = parse_hlo(text)
+    if not comps:
+        return {}
+    weights = computation_weights(comps, entry)
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: {"bytes": 0.0,
+                                                            "count": 0.0})
+    for name, comp in comps.items():
+        w = weights.get(name, 0.0)
+        if w <= 0:
+            continue
+        for op, b in comp.collective_bytes.items():
+            out[op]["bytes"] += w * b
+            out[op]["count"] += w * comp.collective_counts[op]
+    return dict(out)
+
+
+def total_collective_bytes(text: str) -> float:
+    return sum(v["bytes"] for v in collective_summary(text).values())
+
+
+def dot_flops_total(text: str, entry: Optional[str] = None) -> float:
+    """Trip-weighted matmul FLOPs across the module (dots only; elementwise
+    flops are negligible at model scale and loop-invisible in XLA's own
+    cost analysis anyway)."""
+    comps = parse_hlo(text)
+    weights = computation_weights(comps, entry)
+    return sum(weights.get(n, 0.0) * c.dot_flops for n, c in comps.items())
+
+
+def hbm_bytes_estimate(text: str, entry: Optional[str] = None) -> float:
+    """Trip-weighted HBM traffic estimate.
+
+    Convention: each non-fusion-internal instruction writes its result once
+    and reads its operands once; with producer-consumer pairing that is ≈ 2×
+    the weighted result bytes.  Fusion-internal instructions never touch
+    HBM, so computations reached (only) through fusion calls are excluded.
+    """
+    comps = parse_hlo(text)
+    weights = computation_weights(comps, entry)
+    fusion_children = set()
+    for c in comps.values():
+        fusion_children.update(c.fusion_calls)
+    total = 0.0
+    for name, comp in comps.items():
+        if name in fusion_children:
+            continue
+        total += weights.get(name, 0.0) * comp.result_bytes
+    return 2.0 * total

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run script
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (smoke tests, benches) sees the real single device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.common.config import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(cfg.shape, cfg.axes, axis_types=_auto(len(cfg.axes)))
+
+
+def make_local_mesh(*, model: int = 1, data: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = max(1, min(data, n // model))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_config(mesh: Mesh) -> MeshConfig:
+    return MeshConfig(tuple(mesh.devices.shape), tuple(mesh.axis_names))
+
+
+__all__ = ["make_production_mesh", "make_mesh", "make_local_mesh",
+           "mesh_config", "SINGLE_POD", "MULTI_POD"]

@@ -1,0 +1,75 @@
+"""Run the full dry-run sweep: every applicable (arch × shape) × mesh.
+
+Each pair runs in a subprocess (jax device-count lock + memory hygiene).
+Results land in results/dryrun/<arch>.<shape>.<mesh>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3]
+OUT = ROOT / "results" / "dryrun"
+
+
+def pairs():
+    from repro.launch.dryrun import applicable_pairs
+    return applicable_pairs()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--only", default="", help="substring filter arch.shape")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    todo = []
+    for multi in meshes:
+        for arch, shape in pairs():
+            tag = f"{arch}.{shape}.{'2x16x16' if multi else '16x16'}"
+            if args.only and args.only not in tag:
+                continue
+            out = OUT / f"{tag}.json"
+            if out.exists() and not args.force:
+                continue
+            todo.append((arch, shape, multi, out))
+
+    print(f"{len(todo)} dry-runs to do", flush=True)
+    failures = []
+    for i, (arch, shape, multi, out) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", str(out)]
+        if multi:
+            cmd.append("--multi_pod")
+        t0 = time.perf_counter()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**__import__("os").environ,
+                                    "PYTHONPATH": str(ROOT / "src")})
+            ok = r.returncode == 0 and out.exists()
+        except subprocess.TimeoutExpired:
+            ok, r = False, None
+        dt = time.perf_counter() - t0
+        status = "ok" if ok else "FAIL"
+        print(f"[{i + 1}/{len(todo)}] {out.stem}: {status} ({dt:.0f}s)",
+              flush=True)
+        if not ok:
+            failures.append(out.stem)
+            if r is not None:
+                (OUT / f"{out.stem}.err").write_text(
+                    (r.stdout or "")[-4000:] + "\n" + (r.stderr or "")[-8000:])
+    print(f"done; {len(failures)} failures: {failures}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Training launcher: pjit train step + host loop.
+
+Usage (CPU smoke):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --reduced --steps 50 --batch 8 --seq 128
+
+The same ``build_train_step`` is what the multi-pod dry-run lowers against
+the production mesh (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, TrainConfig, reduced as reduce_cfg
+from repro.common import sharding as shd
+from repro.models import transformer as tf
+from repro.models import nn
+from repro.models.moe import Dist
+from repro.optim import adamw_init, adamw_update
+from repro.data import SyntheticLM, make_batches
+
+
+def make_dist(mesh: Optional[Mesh], *, batch_sharded: bool = True
+              ) -> Optional[Dist]:
+    if mesh is None:
+        return None
+    axes = tuple(mesh.axis_names)
+    batch_axes = ("pod", "data") if "pod" in axes else ("data",)
+    return Dist(mesh=mesh, batch_axes=batch_axes, batch_sharded=batch_sharded)
+
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig,
+                     mesh: Optional[Mesh] = None, *,
+                     microbatch: int = 0, donate: bool = True):
+    """Returns (step_fn, in_shardings, out_shardings) — jit-ready."""
+    dist = make_dist(mesh)
+
+    def loss(params, batch):
+        return tf.loss_fn(params, batch, cfg, dist, remat=tc.remat)
+
+    def step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            # gradient accumulation over the leading batch axis
+            def one(carry, mb):
+                gsum, lsum = carry
+                (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+            mbatch = jax.tree.map(
+                lambda a: a.reshape((microbatch, -1) + a.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(one, (zeros, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            l = lsum / microbatch
+            metrics = {"loss": l}
+        else:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        params, opt_state, om = adamw_update(grads, opt_state, params, tc)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ()), None, None
+
+    axes, shape = tuple(mesh.axis_names), tuple(mesh.devices.shape)
+    pspec = shd.shard_params_spec(
+        jax.eval_shape(lambda k: tf.init_model(k, cfg), jax.random.PRNGKey(0)),
+        axes, shape, cfg)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    def batch_shardings(batch_tree):
+        return jax.tree.map(
+            lambda v: NamedSharding(mesh, shd.batch_spec(axes, v.ndim - 1)),
+            batch_tree)
+
+    step_jit = jax.jit(
+        step,
+        in_shardings=(pshard, _opt_sharding(mesh, pshard), None),
+        out_shardings=(pshard, _opt_sharding(mesh, pshard), None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return step_jit, pshard, batch_shardings
+
+
+def _opt_sharding(mesh, pshard):
+    from repro.optim.adamw import AdamWState
+    return AdamWState(NamedSharding(mesh, P()), pshard, pshard)
+
+
+def init_sharded(cfg: ModelConfig, mesh: Optional[Mesh], seed: int = 0,
+                 dtype=nn.DEFAULT_DTYPE):
+    key = jax.random.PRNGKey(seed)
+    if mesh is None:
+        params = tf.init_model(key, cfg, dtype)
+        return params, adamw_init(params)
+    axes, shape = tuple(mesh.axis_names), tuple(mesh.devices.shape)
+    pspec = shd.shard_params_spec(
+        jax.eval_shape(lambda k: tf.init_model(k, cfg, dtype), key),
+        axes, shape, cfg)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                          is_leaf=lambda x: isinstance(x, P))
+    params = jax.jit(lambda k: tf.init_model(k, cfg, dtype),
+                     out_shardings=pshard)(key)
+    opt = jax.jit(adamw_init,
+                  out_shardings=_opt_sharding(mesh, pshard))(params)
+    return params, opt
+
+
+# ----------------------------------------------------------------- loop ----
+def train_loop(cfg: ModelConfig, tc: TrainConfig, *, batch: int, seq: int,
+               steps: int, mesh: Optional[Mesh] = None, log_every: int = 10,
+               microbatch: int = 0, data_seed: int = 0, dtype=jnp.float32):
+    params, opt_state = init_sharded(cfg, mesh, tc.seed, dtype)
+    step_fn, _, _ = build_train_step(cfg, tc, mesh, microbatch=microbatch)
+    source = SyntheticLM(cfg.vocab_size, seed=data_seed)
+    history = []
+    t0 = time.perf_counter()
+    for i, hbatch in enumerate(make_batches(source, batch, seq, steps,
+                                            seed=data_seed)):
+        jbatch = {k: jnp.asarray(v) for k, v in hbatch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, jbatch)
+        if i % log_every == 0 or i == steps - 1:
+            l = float(metrics["loss"])
+            history.append((i, l))
+            dt = time.perf_counter() - t0
+            print(f"step {i:5d} loss {l:7.4f} "
+                  f"gnorm {float(metrics.get('grad_norm', 0)):8.3f} "
+                  f"({dt:6.1f}s)", flush=True)
+    return params, opt_state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--d_model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--save", default="")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg, layers=args.layers, d_model=args.d_model)
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=max(args.steps // 10, 1))
+    params, opt_state, hist = train_loop(
+        cfg, tc, batch=args.batch, seq=args.seq, steps=args.steps,
+        microbatch=args.microbatch)
+    if args.save:
+        from repro.checkpoint import save_checkpoint
+        n = save_checkpoint(args.save, params)
+        print(f"saved {n/1e6:.1f}MB -> {args.save}")
+    first, last = hist[0][1], hist[-1][1]
+    print(f"loss {first:.4f} -> {last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

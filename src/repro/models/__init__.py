@@ -1,0 +1,2 @@
+# Submodules are imported lazily by callers; transformer.py re-exports the
+# public API once the full zoo exists.

@@ -1,0 +1,401 @@
+"""Attention: GQA + RoPE + sliding window, train/prefill and cached decode.
+
+Weights are head-structured — wq (D, H, hd), wk/wv (D, KV, hd), wo (H, hd, D).
+
+Distribution (chosen per arch by repro.common.sharding.attn_mode):
+
+* "head" — Q heads shard over the ``model`` axis (Megatron layout); KV heads
+  shard too when divisible, otherwise stay replicated (GQA with few KV
+  heads).  No attention-internal collectives; WO's contraction psum is the
+  layer's only one (same as a TP MLP).
+* "seq"  — for head counts not divisible by the axis (starcoder2 36H,
+  llama4 40H, smollm 9H): context parallelism — the QUERY sequence shards
+  over ``model`` while KV stays replicated, so scores remain local.  Decode
+  (S_q = 1) falls back to replicated attention compute.
+
+Both are realized with an explicit ``jax.shard_map`` core so XLA cannot
+invent score-sized collectives (which a naive head_dim sharding does).
+
+Long sequences use query-chunked attention (scan over query blocks):
+live memory O(B·H·chunk·S_kv).  Sliding-window archs slice only the KV span
+a query chunk can see, making prefill FLOPs O(S·window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.models import nn
+
+Q_CHUNK = 512  # query block for chunked attention
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache. ``length`` counts tokens written so far."""
+
+    k: jax.Array  # (B, S_cache, KV, hd)
+    v: jax.Array  # (B, S_cache, KV, hd)
+    length: jax.Array  # () int32 — tokens seen so far (may exceed S_cache)
+
+
+def init_attn(key, cfg: ModelConfig, dtype=nn.DEFAULT_DTYPE) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    return {
+        "wq": nn.dense_init(kq, (d, h, hd), dtype, fan_in=d),
+        "wk": nn.dense_init(kk, (d, kv, hd), dtype, fan_in=d),
+        "wv": nn.dense_init(kv_, (d, kv, hd), dtype, fan_in=d),
+        "wo": nn.dense_init(ko, (h, hd, d), dtype, fan_in=h * hd),
+    }
+
+
+# ---------------------------------------------------------------- RoPE -----
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, S, H, hd), positions (B, S) -> rotated x."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- core sdpa -----
+def _scores_mask(q_pos, k_pos, window: int, causal: bool):
+    """(B, Sq, Sk) bool; True = attend."""
+    dq = q_pos[:, :, None]
+    dk = k_pos[:, None, :]
+    mask = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    if causal:
+        mask &= dk <= dq
+    if window > 0:
+        mask &= dk > dq - window
+    return mask
+
+
+def _sdpa_block(q, k, v, mask, gidx) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask (B,Sq,Sk), gidx (H,) int32
+    mapping each (local) q head to its kv head."""
+    b, sq, h, hd = q.shape
+    kf = jnp.take(k, gidx, axis=2).astype(jnp.float32)  # (B,Sk,H,hd)
+    vf = jnp.take(v, gidx, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / jnp.sqrt(hd)
+    scores = jnp.einsum("bshd,bthd->bhst", qf, kf)
+    scores = jnp.where(mask[:, None, :, :], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = probs * mask[:, None, :, :]  # fully-masked rows -> 0
+    out = jnp.einsum("bhst,bthd->bshd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, q_pos, k_pos, window: int, causal: bool, gidx,
+          q_chunk: int = 0, k_valid: Optional[jax.Array] = None
+          ) -> jax.Array:
+    """Query-chunked attention over local shards. Shapes as in _sdpa_block."""
+    q_chunk = q_chunk or Q_CHUNK
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if sq <= q_chunk:
+        mask = _scores_mask(q_pos, k_pos, window, causal)
+        if k_valid is not None:
+            mask &= k_valid[:, None, :]
+        return _sdpa_block(q, k, v, mask, gidx)
+
+    n = -(-sq // q_chunk)
+    pad = n * q_chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    # KV span a query chunk can see (sliding window -> bounded span)
+    if window > 0:
+        span = min(sk, -(-(window + q_chunk) // 128) * 128)
+    else:
+        span = sk
+
+    qc = q.reshape(b, n, q_chunk, h, hd).swapaxes(0, 1)
+    pc = q_pos.reshape(b, n, q_chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        i, (q_i, p_i) = inp
+        if span < sk:
+            end_pos = jnp.max(p_i) + 1  # last valid position in chunk
+            start = jnp.clip(end_pos - span, 0, sk - span)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+            kp_i = jax.lax.dynamic_slice_in_dim(k_pos, start, span, 1)
+        else:
+            k_i, v_i, kp_i = k, v, k_pos
+        mask = _scores_mask(p_i, kp_i, window, causal)
+        mask &= p_i[:, :, None] >= 0  # padded queries
+        out = _sdpa_block(q_i, k_i, v_i, mask, gidx)
+        return carry, out
+
+    idx = jnp.arange(n)
+    _, outs = jax.lax.scan(body, None, (idx, (qc, pc)))
+    out = outs.swapaxes(0, 1).reshape(b, n * q_chunk, h, hd)
+    return out[:, :sq]
+
+
+# ------------------------------------------------- distributed wrapper -----
+def _dist_info(cfg: ModelConfig, dist):
+    from repro.common import sharding as shd
+    mesh = dist.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    mode = shd.attn_mode(cfg, model)
+    batch = dist.batch_axes if dist.batch_sharded else None
+    return mesh, model, mode, batch
+
+
+def _sdpa_dist(q, k, v, q_pos, k_pos, cfg: ModelConfig, dist,
+               k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Dispatch to the sharded attention core."""
+    window, causal = cfg.sliding_window, cfg.causal
+    rep = cfg.num_heads // cfg.num_kv_heads
+    h = cfg.num_heads
+
+    if dist is None:
+        gidx = jnp.arange(h, dtype=jnp.int32) // rep
+        return _sdpa(q, k, v, q_pos, k_pos, window, causal, gidx,
+                     k_valid=k_valid)
+
+    mesh, model, mode, batch = _dist_info(cfg, dist)
+    if model <= 1:
+        gidx = jnp.arange(h, dtype=jnp.int32) // rep
+        return _sdpa(q, k, v, q_pos, k_pos, window, causal, gidx,
+                     k_valid=k_valid)
+
+    sq = q.shape[1]
+    kv_div = cfg.num_kv_heads % model == 0
+
+    if mode == "head":
+        h_l = h // model
+        kv_spec = "model" if kv_div else None
+
+        def body(q, k, v, q_pos, k_pos, k_valid):
+            if kv_div:
+                gidx = jnp.arange(h_l, dtype=jnp.int32) // rep
+            else:
+                s = jax.lax.axis_index("model")
+                gidx = (s * h_l + jnp.arange(h_l, dtype=jnp.int32)) // rep
+            return _sdpa(q, k, v, q_pos, k_pos, window, causal, gidx,
+                         k_valid=k_valid)
+
+        in_specs = (P(batch, None, "model", None),
+                    P(batch, None, kv_spec, None),
+                    P(batch, None, kv_spec, None),
+                    P(batch, None), P(batch, None),
+                    P(batch, None) if k_valid is not None else P())
+        out_specs = P(batch, None, "model", None)
+    elif mode == "seq" and sq > 1 and sq % model == 0:
+        def body(q, k, v, q_pos, k_pos, k_valid):
+            gidx = jnp.arange(h, dtype=jnp.int32) // rep
+            return _sdpa(q, k, v, q_pos, k_pos, window, causal, gidx,
+                         k_valid=k_valid)
+
+        in_specs = (P(batch, "model", None, None),
+                    P(batch, None, None, None),
+                    P(batch, None, None, None),
+                    P(batch, "model"), P(batch, None),
+                    P(batch, None) if k_valid is not None else P())
+        out_specs = P(batch, "model", None, None)
+    else:  # replicated attention compute (e.g. decode on "seq" archs)
+        def body(q, k, v, q_pos, k_pos, k_valid):
+            gidx = jnp.arange(h, dtype=jnp.int32) // rep
+            return _sdpa(q, k, v, q_pos, k_pos, window, causal, gidx,
+                         k_valid=k_valid)
+
+        in_specs = (P(batch, None, None, None),
+                    P(batch, None, None, None),
+                    P(batch, None, None, None),
+                    P(batch, None), P(batch, None),
+                    P(batch, None) if k_valid is not None else P())
+        out_specs = P(batch, None, None, None)
+
+    if k_valid is None:
+        k_valid = jnp.zeros((), jnp.bool_)  # placeholder, unused
+
+        def body2(q, k, v, qp, kp, _):
+            return body(q, k, v, qp, kp, None)
+    else:
+        body2 = body
+
+    return jax.shard_map(body2, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(
+        q, k, v, q_pos, k_pos, k_valid)
+
+
+# ----------------------------------------------------- public entry points -
+def _qkv(params, x, positions, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(params: dict, x: jax.Array, positions: jax.Array,
+              cfg: ModelConfig, dist=None) -> jax.Array:
+    """Full-sequence attention (train / prefill). x (B, S, D)."""
+    q, k, v = _qkv(params, x, positions, cfg)
+    out = _sdpa_dist(q, k, v, positions, positions, cfg, dist)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=nn.DEFAULT_DTYPE) -> KVCache:
+    """Cache length is min(max_len, window) — SWA archs keep a ring buffer."""
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def _flash_decode_kvseq(q, k_cache, v_cache, k_new, v_new, pos,
+                        cfg: ModelConfig, dist) -> tuple:
+    """Flash-decode with the KV cache SEQUENCE sharded over ``model``.
+
+    Each model shard owns S/model ring slots: it updates its slot if the new
+    token lands there, computes partial (unnormalized out, max, sumexp) over
+    its KV slice, and the shards combine with pmax/psum — attention memory
+    AND bandwidth scale 1/model_size, which head-replicated GQA decode
+    cannot achieve when kv_heads < model.
+    """
+    mesh, model, _, batch = _dist_info(cfg, dist)
+    b, _, h, hd = q.shape
+    s_cache = k_cache.shape[1]
+    s_l = s_cache // model
+    rep = cfg.num_heads // cfg.num_kv_heads
+    gidx = jnp.arange(h, dtype=jnp.int32) // rep
+    window = cfg.sliding_window
+
+    def body(q, k_c, v_c, k_n, v_n, pos):
+        m = jax.lax.axis_index("model")
+        slot = jnp.mod(pos, s_cache)
+        own = slot // s_l == m
+        lslot = jnp.mod(slot, s_l)
+        k_upd = jax.lax.dynamic_update_slice(
+            k_c, k_n.astype(k_c.dtype), (0, lslot, 0, 0))
+        v_upd = jax.lax.dynamic_update_slice(
+            v_c, v_n.astype(v_c.dtype), (0, lslot, 0, 0))
+        k_c = jnp.where(own, k_upd, k_c)
+        v_c = jnp.where(own, v_upd, v_c)
+
+        gslots = m * s_l + jnp.arange(s_l)
+        wraps = pos // s_cache
+        slot_pos = jnp.where(gslots <= slot, wraps * s_cache + gslots,
+                             (wraps - 1) * s_cache + gslots)
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        if window:
+            valid &= slot_pos > pos - window
+
+        kf = jnp.take(k_c, gidx, axis=2).astype(jnp.float32)  # (B,s_l,H,hd)
+        vf = jnp.take(v_c, gidx, axis=2).astype(jnp.float32)
+        qf = q[:, 0].astype(jnp.float32) / jnp.sqrt(hd)  # (B,H,hd)
+        scores = jnp.einsum("bhd,bthd->bht", qf, kf)
+        scores = jnp.where(valid[None, None, :], scores, _NEG)
+        mx = scores.max(axis=-1, keepdims=True)  # (B,H,1)
+        p = jnp.exp(scores - mx) * valid[None, None, :]
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bht,bthd->bhd", p, vf)
+
+        gmx = jax.lax.pmax(mx, "model")
+        scale = jnp.exp(mx - gmx)
+        o_tot = jax.lax.psum(o * scale, "model")
+        l_tot = jax.lax.psum(l * scale, "model")
+        out = (o_tot / jnp.maximum(l_tot, 1e-30))[:, None].astype(q.dtype)
+        return out, k_c, v_c
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch, None, None, None),
+                  P(batch, "model", None, None),
+                  P(batch, "model", None, None),
+                  P(batch, None, None, None),
+                  P(batch, None, None, None), P()),
+        out_specs=(P(batch, None, None, None),
+                   P(batch, "model", None, None),
+                   P(batch, "model", None, None)),
+        check_vma=False,
+    )(q, k_cache, v_cache, k_new, v_new, pos)
+
+
+def decode_attention(params: dict, x: jax.Array, cache: KVCache,
+                     cfg: ModelConfig, dist=None) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x (B, 1, D); returns (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    s_cache = cache.k.shape[1]
+    pos = cache.length  # scalar: position of the new token
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(params, x, positions, cfg)
+
+    if dist is not None and getattr(dist, "kv_seq_shard", False):
+        sizes = dict(zip(dist.mesh.axis_names, dist.mesh.devices.shape))
+        model = sizes.get("model", 1)
+        if model > 1 and s_cache % model == 0:
+            out, k, v = _flash_decode_kvseq(q, cache.k, cache.v, k_new,
+                                            v_new, pos, cfg, dist)
+            out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+            return out, KVCache(k, v, pos + 1)
+
+    slot = jnp.mod(pos, s_cache)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+
+    # Absolute position held by each ring slot; invalid slots masked off.
+    slots = jnp.arange(s_cache)
+    wraps = pos // s_cache
+    slot_pos = jnp.where(slots <= slot, wraps * s_cache + slots,
+                         (wraps - 1) * s_cache + slots)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.sliding_window:
+        valid &= slot_pos > pos - cfg.sliding_window
+    k_pos = jnp.broadcast_to(slot_pos[None], (b, s_cache)).astype(jnp.int32)
+    k_valid = jnp.broadcast_to(valid[None], (b, s_cache))
+
+    import dataclasses
+    cfg_nw = dataclasses.replace(cfg, sliding_window=0)  # handled via k_valid
+    out = _sdpa_dist(q, k, v, positions, k_pos, cfg_nw, dist, k_valid=k_valid)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, KVCache(k, v, pos + 1)
+
+
+def prefill_attention(params: dict, x: jax.Array, cfg: ModelConfig,
+                      cache: KVCache, dist=None) -> tuple[jax.Array, KVCache]:
+    """Prefill S tokens into an empty cache (positions 0..S-1)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q, k, v = _qkv(params, x, positions, cfg)
+    out = _sdpa_dist(q, k, v, positions, positions, cfg, dist)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+    s_cache = cache.k.shape[1]
+    if s <= s_cache:
+        kc = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                          (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                          (0, 0, 0, 0))
+    else:  # keep the trailing window, ring-aligned so slot = pos % s_cache
+        start = s - s_cache
+        ks = jax.lax.dynamic_slice_in_dim(k, start, s_cache, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, s_cache, 1)
+        roll = start % s_cache
+        kc = jnp.roll(ks, roll, axis=1).astype(cache.k.dtype)
+        vc = jnp.roll(vs, roll, axis=1).astype(cache.v.dtype)
+    return out, KVCache(kc, vc, jnp.asarray(s, jnp.int32))

@@ -1,0 +1,139 @@
+"""Transformer / SSM / hybrid blocks with train, prefill, and decode paths.
+
+Block kinds (see ModelConfig.segments):
+  "dense"  — pre-norm attention + dense MLP
+  "moe"    — pre-norm attention + MoE FFN
+  "mamba"  — pre-norm Mamba2 mixer (residual)
+  "shared" — zamba2-style shared transformer block: weights are shared
+             across invocations; each invocation has its own input
+             projection applied to concat(x, x_embed_original).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import nn
+
+
+def _norm_params():
+    return None  # placeholder, scales created inline
+
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype=nn.DEFAULT_DTYPE) -> dict:
+    d = cfg.d_model
+    if kind == "mamba":
+        k1, = jax.random.split(key, 1)
+        return {
+            "pre_norm": {"scale": jnp.zeros((d,), dtype)},
+            "mixer": mamba_lib.init_mamba2(k1, cfg, dtype),
+        }
+    ka, km, ks = jax.random.split(key, 3)
+    p = {
+        "attn_norm": {"scale": jnp.zeros((d,), dtype)},
+        "attn": attn_lib.init_attn(ka, cfg, dtype),
+        "mlp_norm": {"scale": jnp.zeros((d,), dtype)},
+    }
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe(km, cfg, dtype)
+    else:
+        p["mlp"] = mlp_lib.init_mlp(km, cfg, dtype)
+    if kind == "shared":
+        p["shared_in"] = nn.dense_init(ks, (2 * d, d), dtype, fan_in=2 * d)
+    return p
+
+
+# --------------------------------------------------------------- forward ---
+def block_forward(params: dict, kind: str, x: jax.Array,
+                  positions: jax.Array, cfg: ModelConfig,
+                  dist=None, x0: Optional[jax.Array] = None,
+                  shared_in: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h = nn.rms_norm(x, params["pre_norm"]["scale"], cfg.norm_eps)
+        return x + mamba_lib.mamba2_forward(params["mixer"], h, cfg), aux
+
+    if kind == "shared":
+        inp = jnp.concatenate([x, x0], axis=-1) @ shared_in
+    else:
+        inp = x
+    h = nn.rms_norm(inp, params["attn_norm"]["scale"], cfg.norm_eps)
+    x = x + attn_lib.attention(params["attn"], h, positions, cfg, dist)
+    h = nn.rms_norm(x, params["mlp_norm"]["scale"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_lib.moe_forward(params["moe"], h, cfg, dist)
+    else:
+        y = mlp_lib.mlp(params["mlp"], h, cfg)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------- decode ---
+def init_block_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=nn.DEFAULT_DTYPE) -> Any:
+    if kind == "mamba":
+        return mamba_lib.init_ssm_state(cfg, batch, dtype)
+    return attn_lib.init_kv_cache(cfg, batch, max_len, dtype)
+
+
+def block_decode(params: dict, kind: str, x: jax.Array, state: Any,
+                 cfg: ModelConfig, dist=None,
+                 x0: Optional[jax.Array] = None,
+                 shared_in: Optional[jax.Array] = None
+                 ) -> tuple[jax.Array, Any]:
+    if kind == "mamba":
+        h = nn.rms_norm(x, params["pre_norm"]["scale"], cfg.norm_eps)
+        y, new_state = mamba_lib.mamba2_decode(params["mixer"], h, state, cfg)
+        return x + y, new_state
+
+    if kind == "shared":
+        inp = jnp.concatenate([x, x0], axis=-1) @ shared_in
+    else:
+        inp = x
+    h = nn.rms_norm(inp, params["attn_norm"]["scale"], cfg.norm_eps)
+    a, new_state = attn_lib.decode_attention(params["attn"], h, state, cfg,
+                                             dist)
+    x = x + a
+    h = nn.rms_norm(x, params["mlp_norm"]["scale"], cfg.norm_eps)
+    if kind == "moe":
+        y, _ = moe_lib.moe_forward(params["moe"], h, cfg, dist)
+    else:
+        y = mlp_lib.mlp(params["mlp"], h, cfg)
+    return x + y, new_state
+
+
+# --------------------------------------------------------------- prefill ---
+def block_prefill(params: dict, kind: str, x: jax.Array, state: Any,
+                  cfg: ModelConfig, dist=None,
+                  x0: Optional[jax.Array] = None,
+                  shared_in: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, Any]:
+    """Forward that also fills the decode state."""
+    b, s, _ = x.shape
+    if kind == "mamba":
+        h = nn.rms_norm(x, params["pre_norm"]["scale"], cfg.norm_eps)
+        y, new_state = mamba_lib.mamba2_prefill(params["mixer"], h, state, cfg)
+        return x + y, new_state
+
+    if kind == "shared":
+        inp = jnp.concatenate([x, x0], axis=-1) @ shared_in
+    else:
+        inp = x
+    h = nn.rms_norm(inp, params["attn_norm"]["scale"], cfg.norm_eps)
+    a, new_state = attn_lib.prefill_attention(params["attn"], h, cfg, state,
+                                              dist)
+    x = x + a
+    h = nn.rms_norm(x, params["mlp_norm"]["scale"], cfg.norm_eps)
+    if kind == "moe":
+        y, _ = moe_lib.moe_forward(params["moe"], h, cfg, dist)
+    else:
+        y = mlp_lib.mlp(params["mlp"], h, cfg)
+    return x + y, new_state

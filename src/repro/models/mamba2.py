@@ -1,0 +1,223 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward for train/prefill (O(S·L) with chunk length L) and an
+O(1) recurrent decode step.  Layout: d_inner = expand·d_model split into H
+heads of P channels; B/C projections use a single group of state size N
+shared across heads (n_groups = 1).
+
+The SSD head axis shards over the ``model`` mesh axis; the inter-chunk
+recurrence is a ``lax.scan`` over chunk states (B, H, N, P), which is
+embarrassingly parallel across heads and batch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import nn
+
+
+class SSMState(NamedTuple):
+    h: jax.Array  # (B, H, N, P) recurrent state
+    conv: jax.Array  # (B, W-1, conv_dim) rolling conv input window
+    length: jax.Array  # () int32
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    assert h * p == d_in, f"ssm heads {h} * head_dim {p} != d_inner {d_in}"
+    conv_dim = d_in + 2 * n  # x, B, C all pass through the causal conv
+    return d_in, h, p, n, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=nn.DEFAULT_DTYPE) -> dict:
+    d = cfg.d_model
+    d_in, h, p, n, conv_dim = _dims(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # in_proj emits [z (d_in), xBC (conv_dim), dt (h)]
+    proj_out = d_in + conv_dim + h
+    dt_init = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(k4, (h,), jnp.float32) *
+                (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))))
+    return {
+        "in_proj": nn.dense_init(k1, (d, proj_out), dtype, fan_in=d),
+        "conv_w": nn.dense_init(k2, (cfg.ssm_conv_width, conv_dim), dtype,
+                                fan_in=cfg.ssm_conv_width),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_init,
+        "ssm_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": nn.dense_init(k5, (d_in, d), dtype, fan_in=d_in),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, h, p, n, conv_dim = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_in, d_in + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc (B, S, C), w (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    # convention: w[width-1] is the current-token tap (matches decode path)
+    for i in range(width):  # width is 4 — unrolled taps beat a conv op here
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative; B,C (B,S,N).
+    Returns y (B,S,H,P) and final state (B,H,N,P).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // l
+
+    xc = x.reshape(b, nc, l, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, l, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, l, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, l, n).astype(jnp.float32)
+
+    a = dtc * A  # (B,NC,L,H) log-decay increments (negative)
+    cum = jnp.cumsum(a, axis=2)  # inclusive
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # M[t, u] = exp(cum_t - cum_u) for u <= t (decay from u to t, inclusive of
+    # steps u+1..t) times dt_u; score = (C_t . B_u)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,L,L,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    score = jnp.einsum("bcln,bcun->bclu", Cc, Bc)  # (B,NC,L,L)
+    w = score[..., None] * decay * dtc[:, :, None, :, :]  # (B,NC,L,L,H)
+    y_intra = jnp.einsum("bcluh,bcuhp->bclhp", w, xc)
+
+    # --- chunk summary states ---
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from t to chunk end
+    sstate = jnp.einsum("bcln,bclh,bclhp->bchnp",
+                        Bc, seg * dtc, xc)  # (B,NC,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,NC,H)
+
+    # --- inter-chunk recurrence (sequential over chunks) ---
+    def step(hprev, inp):
+        sst, dec = inp  # (B,H,N,P), (B,H)
+        hnew = hprev * dec[..., None, None] + sst
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    hfinal, hprevs = jax.lax.scan(
+        step, h0, (sstate.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    hprevs = hprevs.swapaxes(0, 1)  # (B,NC,H,N,P) state entering each chunk
+
+    # --- inter-chunk contribution ---
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp",
+                         Cc, jnp.exp(cum), hprevs)
+    y = (y_intra + y_inter).reshape(b, nc * l, h, p)[:, :s]
+    return y.astype(x.dtype), hfinal
+
+
+def _forward_impl(params: dict, x: jax.Array, cfg: ModelConfig):
+    d_in, h, p, n, conv_dim = _dims(cfg)
+    b, s, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(b, s, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, hfinal = _ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32).astype(y.dtype) * \
+        params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = nn.rms_norm(y * nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                    params["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, hfinal, xbc_raw
+
+
+def mamba2_forward(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence forward. x (B, S, D) -> (B, S, D)."""
+    return _forward_impl(params, x, cfg)[0]
+
+
+def mamba2_prefill(params: dict, x: jax.Array, state: "SSMState",
+                   cfg: ModelConfig) -> tuple[jax.Array, "SSMState"]:
+    """Forward that also returns the decode state after S tokens."""
+    b, s, _ = x.shape
+    w = cfg.ssm_conv_width
+    out, hfinal, xbc_raw = _forward_impl(params, x, cfg)
+    # rolling conv window: last W-1 raw xbc inputs (zero-pad short prefills)
+    if s >= w - 1:
+        conv = xbc_raw[:, s - (w - 1):]
+    else:
+        conv = jnp.concatenate(
+            [jnp.zeros((b, w - 1 - s, xbc_raw.shape[-1]), xbc_raw.dtype),
+             xbc_raw], axis=1)
+    return out, SSMState(hfinal, conv.astype(state.conv.dtype),
+                         jnp.asarray(s, jnp.int32))
+
+
+# ------------------------------------------------------------- decoding ----
+def init_ssm_state(cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32) -> SSMState:
+    d_in, h, p, n, conv_dim = _dims(cfg)
+    return SSMState(
+        h=jnp.zeros((batch, h, n, p), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba2_decode(params: dict, x: jax.Array, state: SSMState,
+                  cfg: ModelConfig) -> tuple[jax.Array, SSMState]:
+    """One-token decode. x (B, 1, D)."""
+    d_in, h, p, n, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # conv over rolling window [conv_state ++ xbc]
+    win = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # (B,W,C)
+    w = params["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), w)
+    xbc_c = nn.silu(conv_out + params["conv_b"].astype(jnp.float32)
+                    ).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    xs, B, C = jnp.split(xbc_c, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(b, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+    decay = jnp.exp(dt * A)  # (B,H)
+    Bf = B.astype(jnp.float32)
+    hnew = state.h * decay[..., None, None] + \
+        jnp.einsum("bn,bh,bhp->bhnp", Bf, dt, xs)
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), hnew)
+    y = y + xs * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = nn.rms_norm(y * nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                    params["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    return out, SSMState(hnew, new_conv, state.length + 1)

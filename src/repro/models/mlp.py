@@ -1,0 +1,38 @@
+"""Dense MLPs: SwiGLU (llama-family) and GELU (encoder FFN)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import nn
+
+
+def init_mlp(key, cfg: ModelConfig, dtype=nn.DEFAULT_DTYPE) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_activation == "swiglu":
+        kg, ku, kd = jax.random.split(key, 3)
+        return {
+            "w_gate": nn.dense_init(kg, (d, f), dtype),
+            "w_up": nn.dense_init(ku, (d, f), dtype),
+            "w_down": nn.dense_init(kd, (f, d), dtype),
+        }
+    ki, ko = jax.random.split(key)
+    return {
+        "w_in": nn.dense_init(ki, (d, f), dtype),
+        "w_out": nn.dense_init(ko, (f, d), dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "w_gate" in params:
+        g = nn.silu(x @ params["w_gate"])
+        u = x @ params["w_up"]
+        return (g * u) @ params["w_down"]
+    h = nn.gelu(x @ params["w_in"])
+    return h @ params["w_out"]
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """Eq. (1) of the paper — the uncompressed expert forward."""
+    return (nn.silu(x @ w_gate) * (x @ w_up)) @ w_down

@@ -1,0 +1,204 @@
+"""Mixture-of-Experts layer.
+
+Dispatch is sort-based (MegaBlocks-style) built on ``jax.lax.ragged_dot``:
+tokens are argsorted by destination expert, run through grouped matmuls, and
+scattered back weighted by their gate values.  No capacity-style one-hot
+dispatch tensor is ever materialized, so FLOPs and memory scale with the
+tokens actually routed.
+
+Two execution paths:
+
+* ``_moe_local`` — single-shard oracle: all experts resident, exact.
+* ``_moe_sharded`` — expert parallelism under ``jax.shard_map``: activations
+  are replicated across the ``model`` axis (they are already sharded over
+  ``data``/``pod`` by batch), each model shard keeps ``E / model`` experts,
+  selects + sorts only the assignments that target its experts into a
+  fixed-capacity buffer, computes, scatters back, and ``psum``s over
+  ``model``.  This is the "no-all-to-all" EP layout: the only collective is
+  the same (T_local, D) psum a tensor-parallel dense MLP would need.
+
+The FloE-compressed expert forward (contextual sparsity + INT2 up) plugs in
+via ``expert_fn`` — see repro.core.floe_layer.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.models import nn
+
+
+class Dist(NamedTuple):
+    """Distribution context threaded through model code (None = local)."""
+
+    mesh: object  # jax.sharding.Mesh
+    batch_axes: tuple  # ("data",) or ("pod", "data")
+    batch_sharded: bool  # False for batch=1 decode
+    kv_seq_shard: bool = False  # flash-decode: KV cache seq over "model"
+    capacity_factor: float = 2.0  # MoE per-shard buffer headroom
+
+
+def init_moe(key, cfg: ModelConfig, dtype=nn.DEFAULT_DTYPE) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": nn.dense_init(kr, (d, e), jnp.float32),
+        "we_gate": nn.dense_init(kg, (e, d, f), dtype, fan_in=d),
+        "we_up": nn.dense_init(ku, (e, d, f), dtype, fan_in=d),
+        "we_down": nn.dense_init(kd, (e, f, d), dtype, fan_in=f),
+    }
+
+
+def router_topk(x: jax.Array, router_w: jax.Array, k: int
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x (T, D) -> (gates (T,k) f32, experts (T,k) i32, probs (T,E) f32)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    top_vals, top_idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(top_vals, axis=-1)  # Mixtral-style renorm over k
+    probs = jax.nn.softmax(logits, axis=-1)
+    return gates, top_idx.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs: jax.Array, expert_idx: jax.Array, e: int
+                      ) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    t = probs.shape[0]
+    assign = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T, k, E)
+    f = assign.sum(axis=(0, 1)) / jnp.maximum(t * expert_idx.shape[1], 1)
+    p = probs.mean(axis=0)
+    return e * jnp.sum(f * p)
+
+
+def _swiglu_grouped(xs, wg, wu, wd, group_sizes, expert_fn=None):
+    """xs (N, D) sorted by group; w* (E, D, F)/(E, F, D)."""
+    if expert_fn is not None:
+        return expert_fn(xs, wg, wu, wd, group_sizes)
+    g = jax.lax.ragged_dot(xs, wg, group_sizes)
+    u = jax.lax.ragged_dot(xs, wu, group_sizes)
+    h = (nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(xs.dtype)
+    return jax.lax.ragged_dot(h, wd, group_sizes)
+
+
+def _sort_dispatch(xf, gates, eids, num_local: int, cap: int,
+                   local_offset) -> tuple:
+    """Pack assignments targeting local experts into a (cap, D) buffer.
+
+    xf (T, D); gates/eids (T, k).  Returns (xs, group_sizes, tok_idx, scale,
+    valid) where xs is expert-sorted.
+    """
+    t, k = eids.shape
+    a = t * k
+    flat_eid = eids.reshape(a)
+    flat_gate = gates.reshape(a)
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    local_eid = flat_eid - local_offset
+    is_local = (local_eid >= 0) & (local_eid < num_local)
+    sort_key = jnp.where(is_local, local_eid, num_local)  # sentinel last
+    order = jnp.argsort(sort_key, stable=True)
+    order = order[:cap]  # assignments beyond capacity are dropped
+    sorted_eid = sort_key[order]
+    valid = sorted_eid < num_local
+    xs = jnp.take(xf, tok[order], axis=0)
+    xs = xs * valid[:, None].astype(xs.dtype)
+    # bincount with sentinel bucket; drop the sentinel
+    group_sizes = jnp.bincount(sorted_eid, length=num_local + 1)[:num_local]
+    # clip: the sentinel bucket may start before cap if few local tokens —
+    # group_sizes only counts true locals, and trailing buffer rows are zero.
+    scale = flat_gate[order] * valid
+    return xs, group_sizes.astype(jnp.int32), tok[order], scale, valid
+
+
+def _capacity(tokens: int, k: int, num_shards: int, factor: float = 2.0,
+              num_experts: int = 0) -> int:
+    cap = int(tokens * k / max(num_shards, 1) * factor)
+    cap = max(cap, 8 * k)
+    cap = min(cap, tokens * k)
+    return -(-cap // 8) * 8
+
+
+def _moe_local(params, xf, cfg: ModelConfig, expert_fn=None):
+    """All experts resident on one shard; exact (cap = T*k)."""
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    gates, eids, probs = router_topk(xf, params["router"], k)
+    t = xf.shape[0]
+    xs, group_sizes, tok_idx, scale, valid = _sort_dispatch(
+        xf, gates, eids, e, t * k, 0)
+    ys = _swiglu_grouped(xs, params["we_gate"], params["we_up"],
+                         params["we_down"], group_sizes, expert_fn)
+    out = jnp.zeros_like(xf)
+    out = out.at[tok_idx].add((ys.astype(jnp.float32)
+                               * scale[:, None]).astype(xf.dtype))
+    aux = load_balance_loss(probs, eids, e)
+    return out, aux
+
+
+def _moe_sharded_body(xf, router_w, wg, wu, wd, cfg: ModelConfig,
+                      cap: int, model_size: int, batch_ax: tuple,
+                      expert_fn=None):
+    """shard_map body. xf (T_local, D) replicated over 'model'."""
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    num_local = e // model_size
+    m = jax.lax.axis_index("model")
+    offset = m * num_local
+
+    gates, eids, probs = router_topk(xf, router_w, k)
+    xs, group_sizes, tok_idx, scale, valid = _sort_dispatch(
+        xf, gates, eids, num_local, cap, offset)
+    ys = _swiglu_grouped(xs, wg, wu, wd, group_sizes, expert_fn)
+    out = jnp.zeros_like(xf)
+    out = out.at[tok_idx].add((ys.astype(jnp.float32)
+                               * scale[:, None]).astype(xf.dtype))
+    out = jax.lax.psum(out, "model")
+    aux = load_balance_loss(probs, eids, e)  # identical on every model shard
+    if batch_ax:
+        aux = jax.lax.pmean(aux, batch_ax)
+    return out, aux
+
+
+def moe_forward(params: dict, x: jax.Array, cfg: ModelConfig,
+                dist: Optional[Dist] = None,
+                expert_fn: Optional[Callable] = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    if dist is None:
+        out, aux = _moe_local(params, x.reshape(b * s, d), cfg, expert_fn)
+        return out.reshape(b, s, d), aux
+
+    mesh = dist.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    if model_size <= 1 or cfg.num_experts % model_size:
+        out, aux = _moe_local(params, x.reshape(b * s, d), cfg, expert_fn)
+        return out.reshape(b, s, d), aux
+
+    batch_ax = dist.batch_axes if dist.batch_sharded else ()
+    n_batch_shards = 1
+    for ax in batch_ax:
+        n_batch_shards *= sizes.get(ax, 1)
+    t_local = b * s // n_batch_shards
+    cap = _capacity(t_local, cfg.num_experts_per_tok, model_size,
+                    factor=getattr(dist, "capacity_factor", 2.0))
+
+    x_spec = P(batch_ax if batch_ax else None, None, None)
+    body = partial(_moe_sharded_body, cfg=cfg, cap=cap,
+                   model_size=model_size, batch_ax=batch_ax,
+                   expert_fn=expert_fn)
+    out, aux = jax.shard_map(
+        lambda xf, rw, wg, wu, wd: body(
+            xf.reshape(-1, d), rw, wg, wu, wd),
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(P(batch_ax if batch_ax else None, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["we_gate"], params["we_up"],
+      params["we_down"])
+    # aux comes back identical on all shards
+    return out.reshape(b, s, d), aux

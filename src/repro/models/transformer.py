@@ -1,0 +1,286 @@
+"""Model assembly: embeddings → segment-scanned blocks → head.
+
+The layer stack is organized as *segments* (ModelConfig.segments()): each
+segment is a (pattern, repeats) pair scanned with ``jax.lax.scan`` over
+stacked per-repeat parameters, keeping HLO size and compile time independent
+of depth.  Heterogeneous stacks (llama4 dense/moe interleave, zamba2
+mamba×5+shared) become patterns longer than one.
+
+Zamba2 "shared" blocks keep ONE set of transformer weights per segment
+(closure-captured, not scanned) plus a per-invocation input projection that
+IS scanned — faithful to Zamba's parameter sharing.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.models import blocks as blk
+from repro.models import nn
+from repro.models.moe import Dist
+
+
+# ------------------------------------------------------------------ init ---
+def init_model(key, cfg: ModelConfig, dtype=nn.DEFAULT_DTYPE) -> dict:
+    keys = jax.random.split(key, 16)
+    params: dict = {}
+    if cfg.frontend != "audio":
+        params["embedding"] = nn.embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype)
+    segs = cfg.segments()
+    for si, (pattern, reps) in enumerate(segs):
+        seg_key = jax.random.fold_in(keys[1], si)
+        seg: dict = {}
+        for pi, kind in enumerate(pattern):
+            pos_key = jax.random.fold_in(seg_key, pi)
+            if kind == "shared":
+                # shared weights once; per-invocation input proj stacked
+                shared = blk.init_block(pos_key, "shared", cfg, dtype)
+                shared_in = shared.pop("shared_in")
+                seg["shared_block"] = shared
+                stack = {"shared_in": jnp.broadcast_to(
+                    shared_in, (reps,) + shared_in.shape).copy()}
+                seg[f"pos{pi}"] = stack
+            else:
+                def one(i, pos_key=pos_key, kind=kind):
+                    return blk.init_block(jax.random.fold_in(pos_key, i), kind, cfg, dtype)
+                stacked = jax.vmap(lambda i: one(i))(jnp.arange(reps))
+                seg[f"pos{pi}"] = stacked
+        params[f"seg{si}"] = seg
+    params["final_norm"] = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(keys[2], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+# ------------------------------------------------------------- embedding ---
+def _embed_inputs(params, batch: dict, cfg: ModelConfig):
+    """Returns x (B, S, D)."""
+    if cfg.frontend == "audio":
+        return batch["embeddings"]
+    tok = params["embedding"]
+    x = jnp.take(tok, batch["tokens"], axis=0)
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(params, x, cfg: ModelConfig):
+    x = nn.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embedding"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def _constrain(x, dist: Optional[Dist], spec: P):
+    if dist is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+
+
+# --------------------------------------------------------------- forward ---
+def _run_segments(params, x, positions, cfg: ModelConfig, dist, *,
+                  remat: bool = False):
+    """Apply all segments; returns (x, aux_total)."""
+    x0 = x  # original embeddings, for zamba shared blocks
+    aux_total = jnp.zeros((), jnp.float32)
+    bspec = P(dist.batch_axes if (dist and dist.batch_sharded) else None,
+              None, None)
+
+    for si, (pattern, reps) in enumerate(cfg.segments()):
+        seg = params[f"seg{si}"]
+        shared_block = seg.get("shared_block")
+
+        def body(carry, slice_params, pattern=pattern, shared_block=shared_block):
+            x, aux = carry
+            for pi, kind in enumerate(pattern):
+                sp = slice_params[f"pos{pi}"]
+                if kind == "shared":
+                    x, a = blk.block_forward(
+                        shared_block, "shared", x, positions, cfg, dist,
+                        x0=x0, shared_in=sp["shared_in"])
+                else:
+                    x, a = blk.block_forward(sp, kind, x, positions, cfg, dist)
+                x = _constrain(x, dist, bspec)
+                aux = aux + a
+            return (x, aux), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        stack = {k: v for k, v in seg.items() if k.startswith("pos")}
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stack)
+    return x, aux_total
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig,
+            dist: Optional[Dist] = None, *, remat: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    bspec = P(dist.batch_axes if (dist and dist.batch_sharded) else None,
+              None, None)
+    x = _constrain(x, dist, bspec)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, aux = _run_segments(params, x, positions, cfg, dist, remat=remat)
+    return _head(params, x, cfg), aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            dist: Optional[Dist] = None, *, remat: bool = False
+            ) -> tuple[jax.Array, dict]:
+    """Next-token (or masked-target) cross-entropy + router aux."""
+    logits, aux = forward(params, batch, cfg, dist, remat=remat)
+    if cfg.frontend == "audio":
+        ce = nn.softmax_cross_entropy(logits, batch["targets"])
+    else:
+        n_text = batch["tokens"].shape[1]
+        logits_text = logits[:, -n_text:]  # vlm: score only text positions
+        ce = nn.softmax_cross_entropy(logits_text[:, :-1], batch["tokens"][:, 1:])
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ---------------------------------------------------------------- decode ---
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=nn.DEFAULT_DTYPE) -> dict:
+    state: dict = {}
+    for si, (pattern, reps) in enumerate(cfg.segments()):
+        seg: dict = {}
+        for pi, kind in enumerate(pattern):
+            def one(_, kind=kind):
+                return blk.init_block_state(kind, cfg, batch, max_len, dtype)
+            seg[f"pos{pi}"] = jax.vmap(one)(jnp.arange(reps))
+        state[f"seg{si}"] = seg
+    return state
+
+
+def _run_segments_step(params, state, x, cfg: ModelConfig, dist,
+                       step_fn) -> tuple[jax.Array, dict]:
+    """Shared driver for decode (and prefill) over the segment scans.
+
+    x0 (zamba shared-block input) is the embedding sequence itself — for
+    decode that is the current token's embedding, for prefill the prompt's.
+    """
+    x0 = x
+    new_state: dict = {}
+
+    for si, (pattern, reps) in enumerate(cfg.segments()):
+        seg = params[f"seg{si}"]
+        seg_state = state[f"seg{si}"]
+        shared_block = seg.get("shared_block")
+
+        def body(x, scanned, pattern=pattern, shared_block=shared_block):
+            slice_params, slice_state = scanned
+            out_state = {}
+            for pi, kind in enumerate(pattern):
+                sp = slice_params[f"pos{pi}"]
+                st = slice_state[f"pos{pi}"]
+                if kind == "shared":
+                    x, ns = step_fn(shared_block, "shared", x, st,
+                                    x0=x0, shared_in=sp["shared_in"])
+                else:
+                    x, ns = step_fn(sp, kind, x, st)
+                out_state[f"pos{pi}"] = ns
+            return x, out_state
+
+        stack = {k: v for k, v in seg.items() if k.startswith("pos")}
+        x, new_seg_state = jax.lax.scan(body, x, (stack, seg_state))
+        new_state[f"seg{si}"] = new_seg_state
+    return x, new_state
+
+
+def decode_step(params: dict, tokens: jax.Array, state: dict,
+                cfg: ModelConfig, dist: Optional[Dist] = None
+                ) -> tuple[jax.Array, dict]:
+    """One decode step. tokens (B, 1) -> (logits (B, 1, V), new state)."""
+    batch = {"tokens": tokens}
+    x = _embed_inputs(params, batch, cfg)
+    if dist is not None:
+        x = _constrain(x, dist, P(dist.batch_axes if dist.batch_sharded
+                                  else None, None, None))
+    step = partial(_step_decode, cfg=cfg, dist=dist)
+    x, new_state = _run_segments_step(params, state, x, cfg, dist, step)
+    return _head(params, x, cfg), new_state
+
+
+def _step_decode(p, kind, x, st, cfg=None, dist=None, x0=None, shared_in=None):
+    return blk.block_decode(p, kind, x, st, cfg, dist, x0=x0,
+                            shared_in=shared_in)
+
+
+def prefill(params: dict, batch: dict, state: dict, cfg: ModelConfig,
+            dist: Optional[Dist] = None) -> tuple[jax.Array, dict]:
+    """Prefill the decode state with a prompt. Returns (logits, state)."""
+    x = _embed_inputs(params, batch, cfg)
+    step = partial(_step_prefill, cfg=cfg, dist=dist)
+    x, new_state = _run_segments_step(params, state, x, cfg, dist, step)
+    return _head(params, x[:, -1:, :], cfg), new_state
+
+
+def _step_prefill(p, kind, x, st, cfg=None, dist=None, x0=None, shared_in=None):
+    return blk.block_prefill(p, kind, x, st, cfg, dist, x0=x0,
+                             shared_in=shared_in)
+
+
+def decode_state_spec(cfg: ModelConfig, mesh_axes, mesh_shape,
+                      *, batch_sharded: bool, kv_seq_shard: bool = False
+                      ) -> dict:
+    """PartitionSpec tree mirroring init_decode_state's structure."""
+    from repro.common import sharding as shd
+    from repro.models.attention import KVCache
+    from repro.models.mamba2 import SSMState
+
+    sizes = dict(zip(mesh_axes, mesh_shape))
+    model = sizes.get("model", 1)
+    mode = shd.attn_mode(cfg, model)
+    batch = (("pod", "data") if "pod" in mesh_axes else "data") \
+        if batch_sharded else None
+    kv_ax = "model" if (mode == "head" and
+                        cfg.num_kv_heads % max(model, 1) == 0) else None
+    inner_ax = "model" if (cfg.ssm_state and cfg.d_inner % max(model, 1) == 0) else None
+    heads_ax = "model" if (cfg.ssm_state and cfg.ssm_heads % max(model, 1) == 0) else None
+
+    if kv_seq_shard and model > 1:
+        kv_spec = KVCache(P(None, batch, "model", None, None),
+                          P(None, batch, "model", None, None), P(None))
+    else:
+        kv_spec = KVCache(P(None, batch, None, kv_ax, None),
+                          P(None, batch, None, kv_ax, None), P(None))
+    ssm_spec = SSMState(P(None, batch, heads_ax, None, None),
+                        P(None, batch, None, inner_ax), P(None))
+
+    state: dict = {}
+    for si, (pattern, reps) in enumerate(cfg.segments()):
+        seg: dict = {}
+        for pi, kind in enumerate(pattern):
+            seg[f"pos{pi}"] = ssm_spec if kind == "mamba" else kv_spec
+        state[f"seg{si}"] = seg
+    return state
+
+
+# ------------------------------------------------------------ input specs --
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=nn.DEFAULT_DTYPE) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a workload."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(dtype)
+    i32 = jnp.dtype(jnp.int32)
+    if shape.mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.frontend == "audio":
+        spec = {"embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32)}
+        if shape.mode == "train":
+            spec["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        return spec
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        n_img = min(cfg.frontend_tokens, s // 2)
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s - n_img), i32),
+            "vision_embeds": jax.ShapeDtypeStruct((b, n_img, cfg.d_model), f32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}

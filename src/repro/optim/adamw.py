@@ -1,0 +1,68 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX.
+
+Optimizer state is f32 and shaped like the params, so the sharding rules
+apply to it transparently (m/v shard exactly like their parameter).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () i32
+    m: Any  # pytree like params, f32
+    v: Any  # pytree like params, f32
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def cosine_schedule(step: jax.Array, tc: TrainConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - tc.warmup_steps) /
+                    jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any,
+                 tc: TrainConfig) -> tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.max_grad_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+
+    m = jax.tree.map(lambda a, g: tc.beta1 * a + (1 - tc.beta1) * g,
+                     state.m, grads)
+    v = jax.tree.map(lambda a, g: tc.beta2 * a + (1 - tc.beta2) * g * g,
+                     state.v, grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - tc.beta1 ** t
+    bc2 = 1.0 - tc.beta2 ** t
+    lr = cosine_schedule(step, tc)
+
+    def upd(p, mi, vi):
+        mhat = mi / bc1
+        vhat = vi / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step, m, v), \
+        {"grad_norm": gnorm, "lr": lr}

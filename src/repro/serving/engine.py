@@ -1,0 +1,127 @@
+"""Batched serving engine: request queue → prefill → decode loop.
+
+Continuous-batching-lite: requests are grouped into fixed-size batches
+(padded prompts, shared KV allocation); decode steps are jitted once per
+(batch, cache_len) shape.  Sampling is greedy or temperature.
+
+The FloE-offloaded path (single-batch, latency-sensitive — the paper's
+regime) lives in repro.core.pipeline; this engine is the resident-weights
+baseline ("Mixtral-GPU" in Fig. 6) and the general serving substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.models import transformer as tf
+from repro.models.moe import Dist
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    done: bool = False
+    output: list = dataclasses.field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, *, batch_size: int = 4,
+                 max_len: int = 512, dist: Optional[Dist] = None,
+                 eos_id: int = -1, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_len = max_len
+        self.dist = dist
+        self.eos = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self._prefill = jax.jit(
+            lambda p, b, s: tf.prefill(p, b, s, cfg, dist))
+        self._decode = jax.jit(
+            lambda p, t, s: tf.decode_step(p, t, s, cfg, dist))
+        self.stats = {"tokens": 0, "steps": 0, "wall_s": 0.0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- batch ---
+    def _next_batch(self) -> list[Request]:
+        """Length-bucketed batching: a batch shares one prompt length, so
+        positions and KV contents stay exact (no pad pollution)."""
+        want = len(self.queue[0].prompt)
+        batch, rest = [], []
+        for r in self.queue:
+            if len(r.prompt) == want and len(batch) < self.batch:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        return batch
+
+    def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
+        length = len(reqs[0].prompt)
+        toks = np.zeros((self.batch, length), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i] = r.prompt  # bucketed: all equal length
+        return toks
+
+    def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
+        self.key, sub = jax.random.split(self.key)
+        greedy = jnp.argmax(logits, -1)
+        temped = jax.random.categorical(sub, logits /
+                                        jnp.maximum(temps[:, None], 1e-4))
+        return np.asarray(jnp.where(temps > 0, temped, greedy), np.int32)
+
+    # -------------------------------------------------------------- serve --
+    def run(self) -> list[Request]:
+        while self.queue:
+            reqs = self._next_batch()
+            self._serve_batch(reqs)
+            self.completed.extend(reqs)
+        return self.completed
+
+    def _serve_batch(self, reqs: list[Request]):
+        cfg = self.cfg
+        toks = self._pad_prompts(reqs)
+        n_active = len(reqs)
+        temps = np.array([r.temperature for r in reqs] +
+                         [0.0] * (self.batch - n_active), np.float32)
+        state = tf.init_decode_state(cfg, self.batch, self.max_len,
+                                     jnp.float32)
+        t0 = time.perf_counter()
+        logits, state = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)}, state)
+        cur = self._sample(logits[:, -1], temps)
+        max_new = max(r.max_new_tokens for r in reqs)
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if not r.done and len(r.output) < r.max_new_tokens:
+                    r.output.append(int(cur[i]))
+                    if cur[i] == self.eos:
+                        r.done = True
+                elif len(r.output) >= r.max_new_tokens:
+                    r.done = True
+            if all(r.done for r in reqs):
+                break
+            logits, state = self._decode(self.params,
+                                         jnp.asarray(cur[:, None]), state)
+            cur = self._sample(logits[:, 0], temps)
+            self.stats["steps"] += 1
+            self.stats["tokens"] += n_active
+        self.stats["wall_s"] += time.perf_counter() - t0
+        for r in reqs:
+            r.done = True
+
+    def tokens_per_second(self) -> float:
+        return self.stats["tokens"] / max(self.stats["wall_s"], 1e-9)

@@ -1,0 +1,5 @@
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real single device; only launch/dryrun.py forces 512.
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,112 @@
+"""Expert cache (LRU) and offload engine (compact layout + cost model)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hqq
+from repro.core.cache import ExpertCache
+from repro.core.offload import ExpertStore, LinkModel, build_expert_store
+
+
+# ----------------------------------------------------------------- cache ---
+def test_lru_eviction_order():
+    c = ExpertCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1  # refresh a
+    c.put("c", 3)  # evicts b (least recent)
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.stats.evictions == 1
+
+
+def test_cache_stats():
+    c = ExpertCache(4)
+    c.put("x", 0, prefetch=True)
+    assert c.get("x") == 0
+    assert c.get("y") is None
+    s = c.stats
+    assert s.hits == 1 and s.misses == 1 and s.prefetch_hits == 1
+    assert s.hit_rate == 0.5
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=60),
+       st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_lru_capacity_invariant(accesses, cap):
+    c = ExpertCache(cap)
+    for a in accesses:
+        if c.get(a) is None:
+            c.put(a, a)
+    assert len(c) <= cap
+    # most recent access must be resident
+    assert accesses[-1] in c
+
+
+# --------------------------------------------------------------- offload ---
+def _store(e=3, d=64, f=128):
+    rng = np.random.default_rng(0)
+    moe = {
+        "we_gate": rng.normal(size=(e, d, f)).astype(np.float32) * 0.1,
+        "we_up": rng.normal(size=(e, d, f)).astype(np.float32) * 0.1,
+        "we_down": rng.normal(size=(e, f, d)).astype(np.float32) * 0.1,
+    }
+    moe_j = {k: jnp.asarray(v) for k, v in moe.items()}
+    thr = np.full((e,), 0.5, np.float32)
+    return moe, build_expert_store(moe_j, thr, bits=2, group=64)
+
+
+def test_compact_layout_roundtrip():
+    moe, store = _store()
+    idx = np.array([3, 17, 90])
+    gate_cols, down_rows = store.fetch_sparse(1, idx)
+    np.testing.assert_allclose(np.asarray(gate_cols),
+                               moe["we_gate"][1][:, idx].T, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(down_rows),
+                               moe["we_down"][1][idx, :], atol=1e-3)
+
+
+def test_fetch_dense_layout():
+    moe, store = _store()
+    wg, wu, wd = store.fetch_dense(2)
+    np.testing.assert_allclose(np.asarray(wg), moe["we_gate"][2], atol=1e-3)
+    np.testing.assert_allclose(np.asarray(wd), moe["we_down"][2], atol=1e-3)
+    # up is INT2-dequantized: same shape, correlated
+    assert wu.shape == moe["we_up"][2].shape
+
+
+def test_transfer_accounting():
+    _, store = _store()
+    store.fetch_sparse(0, np.arange(10))
+    log = store.log
+    assert log.transfers == 1
+    assert log.bytes_moved == 10 * 2 * 64 * 2  # records are f16
+    assert log.modeled_seconds > 0
+
+
+def test_compressed_smaller_than_dense():
+    _, store = _store()
+    assert store.compressed_expert_bytes(0.2) < store.dense_expert_bytes() / 3
+
+
+# ------------------------------------------------------------ link model ---
+def test_link_chunk_tradeoff_u_shape():
+    """Few huge chunks and many tiny chunks are both worse than a middle
+    ground once packing overlap is considered (paper Fig. 7)."""
+    link = LinkModel()
+    total = 20 * 1024 * 1024
+    times = {n: link.transfer_time(total, n) for n in (1, 8, 64, 4096)}
+    assert times[4096] > times[64]  # launch-overhead-bound
+    assert times[1] > times[8] or times[1] > times[64]  # packing-bound
+
+
+def test_pinned_faster_than_pageable():
+    link = LinkModel()
+    assert link.transfer_time(1 << 20, 4, pinned=True) < \
+        link.transfer_time(1 << 20, 4, pinned=False)
+
+
+def test_effective_bw_saturates():
+    link = LinkModel()
+    bw = link.effective_bw(100 << 20, 50)
+    assert 0.5 * link.peak_bw < bw <= link.peak_bw

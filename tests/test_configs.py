@@ -1,0 +1,81 @@
+"""Assigned-architecture configs match the assignment sheet exactly."""
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config
+
+SPEC = {
+    # id: (layers, d_model, heads, kv, d_ff, vocab)
+    "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    "mamba2_780m": (48, 1536, None, None, 0, 50280),
+    "starcoder2_7b": (32, 4608, 36, 4, 18432, 49152),
+    "glm4_9b": (40, 4096, 32, 2, 13696, 151552),
+    "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+    "phi35_moe": (32, 4096, 32, 8, 6400, 32064),
+    "llama4_maverick": (48, 5120, 40, 8, 8192, 202048),
+    "mistral_large": (88, 12288, 96, 8, 28672, 32768),
+    "internvl2_76b": (80, 8192, 64, 8, 28672, 128256),
+    "smollm_135m": (30, 576, 9, 3, 1536, 49152),
+}
+
+
+@pytest.mark.parametrize("aid", list(SPEC))
+def test_exact_spec(aid):
+    c = get_config(aid)
+    layers, d, h, kv, ff, v = SPEC[aid]
+    assert c.num_layers == layers
+    assert c.d_model == d
+    if h is not None:
+        assert c.num_heads == h
+        assert c.num_kv_heads == kv
+    assert c.d_ff == ff
+    assert c.vocab_size == v
+    assert c.source, "every config must cite its source"
+
+
+def test_moe_specs():
+    phi = get_config("phi35_moe")
+    assert phi.num_experts == 16 and phi.num_experts_per_tok == 2
+    l4 = get_config("llama4_maverick")
+    assert l4.num_experts == 128 and l4.num_experts_per_tok == 1
+    mx = get_config("mixtral_8x7b")
+    assert mx.num_experts == 8 and mx.num_experts_per_tok == 2
+
+
+def test_ssm_specs():
+    m = get_config("mamba2_780m")
+    assert m.ssm_state == 128 and m.d_inner == 3072
+    z = get_config("zamba2_7b")
+    assert z.ssm_state == 64
+
+
+def test_segments_cover_all_layers():
+    for aid, cfg in all_configs().items():
+        n = sum(len(pat) * reps for pat, reps in cfg.segments())
+        assert n == cfg.num_layers, (aid, n, cfg.num_layers)
+
+
+def test_zamba_has_shared_blocks():
+    z = get_config("zamba2_7b")
+    kinds = [k for pat, reps in z.segments() for k in pat]
+    assert "shared" in kinds and "mamba" in kinds
+
+
+def test_llama4_interleave():
+    l4 = get_config("llama4_maverick")
+    (pat, reps), = [s for s in l4.segments() if "moe" in s[0]]
+    assert pat == ("dense", "moe") and reps == 24
+
+
+def test_param_counts_rough():
+    """Analytic parameter totals near the advertised sizes."""
+    approx = {
+        "mamba2_780m": 0.78e9,
+        "starcoder2_7b": 7e9,
+        "glm4_9b": 9e9,
+        "mistral_large": 123e9,
+        "smollm_135m": 135e6,
+        "phi35_moe": 42e9,
+    }
+    for aid, want in approx.items():
+        got = get_config(aid).param_count()
+        assert 0.5 * want < got < 1.7 * want, (aid, got, want)

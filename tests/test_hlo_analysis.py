@@ -1,0 +1,71 @@
+"""The trip-weighted HLO analyzer that powers the roofline terms."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (collective_summary, dot_flops_total,
+                                       hbm_bytes_estimate, parse_hlo,
+                                       _shape_bytes)
+
+SYNTH = """
+%body.1 (arg.1: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), channel_id=1, to_apply=%add.2
+}
+%cond.1 (arg.2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(7)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main.42 (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %t = (s32[], f32[8,16]) tuple(%a)
+  %wh = (s32[], f32[8,16]) while(%t), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[128]") == 256
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+
+
+def test_trip_weighted_collectives_synthetic():
+    s = collective_summary(SYNTH)
+    assert s["all-reduce"]["count"] == 7  # one op x 7 trips
+    assert s["all-reduce"]["bytes"] == 7 * 8 * 16 * 4
+
+
+def test_trip_weighted_dot_flops_synthetic():
+    # dot: 2 * (8*16) * 16 = 4096 flops x 7 trips
+    assert dot_flops_total(SYNTH) == 7 * 2 * 8 * 16 * 16
+
+
+def test_against_real_compiled_module():
+    """End-to-end: a scanned matmul must count flops x trip count."""
+    L, B, D = 5, 4, 32
+
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        return jax.lax.scan(body, x, ws)[0].sum()
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32)).compile().as_text()
+    flops = dot_flops_total(txt)
+    expect = L * 2 * B * D * D
+    assert abs(flops - expect) / expect < 0.05, (flops, expect)
+    assert hbm_bytes_estimate(txt) > L * B * D * 4  # at least the activations
+
+
+def test_single_device_module_has_no_collectives():
+    txt = jax.jit(lambda x: (x @ x).sum()).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile().as_text()
+    assert collective_summary(txt) in ({}, {k: v for k, v in ()})

@@ -1,0 +1,76 @@
+"""HQQ quantization: round-trip quality, packing, and properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hqq
+
+
+def _w(key=0, m=128, n=64, scale=0.05):
+    return jax.random.normal(jax.random.PRNGKey(key), (m, n)) * scale
+
+
+def test_error_monotone_in_bits():
+    w = _w()
+    errs = [hqq.rel_error(w, hqq.quantize(w, bits=b, group=64))
+            for b in (8, 4, 3, 2, 1)]
+    assert all(a < b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_int8_is_accurate():
+    w = _w()
+    assert hqq.rel_error(w, hqq.quantize(w, bits=8, group=64)) < 0.01
+
+
+def test_half_quadratic_beats_naive_rounding():
+    w = _w(3)
+    for bits in (2, 1):
+        opt = hqq.rel_error(w, hqq.quantize(w, bits=bits, group=64, iters=20))
+        naive = hqq.rel_error(w, hqq.quantize(w, bits=bits, group=64, iters=0))
+        assert opt <= naive + 1e-6, (bits, opt, naive)
+
+
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       g=st.sampled_from([32, 64]),
+       rows=st.sampled_from([64, 128, 192]),
+       cols=st.sampled_from([8, 128]))
+@settings(max_examples=12, deadline=None)
+def test_pack_unpack_roundtrip(bits, g, rows, cols):
+    key = jax.random.PRNGKey(rows * cols + bits)
+    codes = jax.random.randint(key, (rows // g, g, cols), 0, 2 ** bits
+                               ).astype(jnp.uint8)
+    packed = hqq._pack(codes, bits) if bits < 8 else codes
+    un = hqq._unpack(packed, bits, g) if bits < 8 else packed
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(codes))
+
+
+def test_dequant_within_one_scale_step():
+    """|W - dequant| <= scale per element (INT4, after optimization)."""
+    w = _w(5)
+    qt = hqq.quantize(w, bits=4, group=64)
+    wr = hqq.dequantize(qt, jnp.float32)
+    scale = np.repeat(np.asarray(qt.scale), 64, axis=1).reshape(w.shape)
+    assert np.all(np.abs(np.asarray(w) - np.asarray(wr)) <= scale * 1.01)
+
+
+def test_expert_stack_vmap_consistency():
+    we = jax.random.normal(jax.random.PRNGKey(1), (3, 128, 64)) * 0.05
+    qte = hqq.quantize_per_expert(we, bits=2, group=64)
+    for e in range(3):
+        ref = hqq.dequantize(hqq.quantize(we[e], bits=2, group=64), jnp.float32)
+        got = hqq.dequantize_expert(qte, e, jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+def test_compression_ratio_int2():
+    w = _w(m=256, n=256)
+    qt = hqq.quantize(w, bits=2, group=64)
+    # 2 bits + scale/zero overhead vs 16-bit dense
+    assert 4.0 < hqq.compression_ratio(w, qt) < 8.0
+
+
+def test_quantize_rejects_bad_group():
+    with pytest.raises(AssertionError):
+        hqq.quantize(_w(m=100), bits=2, group=64)

@@ -1,0 +1,135 @@
+"""Model-zoo correctness: decode==forward, SWA masks, SSD vs sequential."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig, reduced
+from repro.configs import get_config
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import transformer as tf
+
+
+def _dense_cfg(**kw):
+    base = dict(name="t", kind="dense", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("aid", ["starcoder2_7b", "mixtral_8x7b", "zamba2_7b",
+                                 "mamba2_780m", "smollm_135m"])
+def test_decode_matches_forward(aid):
+    cfg = reduced(get_config(aid))
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    logits, _ = tf.forward(params, {"tokens": toks}, cfg)
+    state = tf.init_decode_state(cfg, b, 32, jnp.float32)
+    for t in range(s):
+        lt, state = tf.decode_step(params, toks[:, t:t + 1], state, cfg)
+        np.testing.assert_allclose(np.asarray(lt[:, 0]),
+                                   np.asarray(logits[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_matches_forward():
+    cfg = reduced(get_config("glm4_9b"))
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 9
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    logits, _ = tf.forward(params, {"tokens": toks}, cfg)
+    state = tf.init_decode_state(cfg, b, 32, jnp.float32)
+    lp, state = tf.prefill(params, {"tokens": toks}, state, cfg)
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_mask_limits_attention():
+    """Token far outside the window must not influence the output."""
+    cfg = _dense_cfg(sliding_window=4, vocab_size=64)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 64)
+    logits, _ = tf.forward(params, {"tokens": toks}, cfg)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % 64)  # outside window of t=11
+    logits2, _ = tf.forward(params, {"tokens": toks2}, cfg)
+    np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                               np.asarray(logits2[:, -1]), atol=1e-5)
+
+
+def test_causality():
+    cfg = _dense_cfg()
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 128)
+    logits, _ = tf.forward(params, {"tokens": toks}, cfg)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % 128)
+    logits2, _ = tf.forward(params, {"tokens": toks2}, cfg)
+    np.testing.assert_allclose(np.asarray(logits[:, :-1]),
+                               np.asarray(logits2[:, :-1]), atol=1e-5)
+
+
+def test_encoder_is_bidirectional():
+    cfg = reduced(get_config("hubert_xlarge"))
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    emb = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    logits, _ = tf.forward(params, {"embeddings": emb}, cfg)
+    emb2 = emb.at[0, -1].add(1.0)
+    logits2, _ = tf.forward(params, {"embeddings": emb2}, cfg)
+    # changing the LAST frame changes the FIRST position's logits
+    assert float(jnp.abs(logits[:, 0] - logits2[:, 0]).max()) > 1e-6
+
+
+def test_chunked_attention_matches_unchunked():
+    cfg = _dense_cfg(num_layers=1)
+    params = attn_lib.init_attn(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 100, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(100)[None], (2, 100)).astype(jnp.int32)
+    big = attn_lib.attention(params, x, pos, cfg)
+    import repro.models.attention as A
+    old = A.Q_CHUNK
+    try:
+        A.Q_CHUNK = 32  # force chunked path
+        small = attn_lib.attention(params, x, pos, cfg)
+    finally:
+        A.Q_CHUNK = old
+    np.testing.assert_allclose(np.asarray(big), np.asarray(small),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk length must not change SSD results."""
+    cfg = ModelConfig(name="m", kind="ssm", num_layers=1, d_model=32,
+                      num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=32,
+                      ssm_state=8, ssm_head_dim=8, ssm_chunk=4)
+    params = mamba_lib.init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 19, 32))
+    y4 = mamba_lib.mamba2_forward(params, x, cfg)
+    import dataclasses
+    cfg16 = dataclasses.replace(cfg, ssm_chunk=16)
+    y16 = mamba_lib.mamba2_forward(params, x, cfg16)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y16),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rope_relative_shift():
+    """RoPE attention score depends only on relative distance."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def score(qpos, kpos):
+        qr = attn_lib.apply_rope(q, jnp.full((1, 1), qpos), 1e4)
+        kr = attn_lib.apply_rope(k, jnp.full((1, 1), kpos), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(5, 3) - score(105, 103)) < 1e-3
+
+
+def test_ring_buffer_decode_long():
+    """Decode past the window size stays finite and windowed."""
+    cfg = _dense_cfg(sliding_window=8)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    state = tf.init_decode_state(cfg, 1, 8, jnp.float32)  # cache = window
+    tok = jnp.ones((1, 1), jnp.int32)
+    for _ in range(20):  # wraps the ring twice
+        logits, state = tf.decode_step(params, tok, state, cfg)
+    assert bool(jnp.isfinite(logits).all())

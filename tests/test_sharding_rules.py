@@ -1,0 +1,74 @@
+"""Sharding rules: every config gets a consistent, divisibility-safe spec."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.common import sharding as shd
+from repro.common.config import SINGLE_POD, MULTI_POD, reduced
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as tf
+
+
+def _spec_tree(cfg, mesh_cfg):
+    shapes = jax.eval_shape(
+        lambda k: tf.init_model(k, cfg, jnp.bfloat16), jax.random.PRNGKey(0))
+    return shapes, shd.shard_params_spec(shapes, mesh_cfg.axes,
+                                         mesh_cfg.shape, cfg)
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+@pytest.mark.parametrize("mesh_cfg", [SINGLE_POD, MULTI_POD],
+                         ids=["single", "multi"])
+def test_specs_divide_shapes(aid, mesh_cfg):
+    cfg = get_config(aid)
+    sizes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    shapes, specs = _spec_tree(cfg, mesh_cfg)
+
+    def check(path, leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 10):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            assert dim % n == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        check, shapes, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("aid", ["starcoder2_7b", "llama4_maverick",
+                                 "smollm_135m"])
+def test_odd_heads_use_seq_sharding(aid):
+    cfg = get_config(aid)
+    assert shd.attn_mode(cfg, 16) == "seq"
+
+
+def test_divisible_archs_use_head_sharding():
+    for aid in ("hubert_xlarge", "zamba2_7b", "glm4_9b", "phi35_moe",
+                "mistral_large", "internvl2_76b"):
+        assert shd.attn_mode(get_config(aid), 16) == "head", aid
+
+
+def test_moe_experts_shard_over_model():
+    cfg = get_config("llama4_maverick")
+    shapes, specs = _spec_tree(cfg, SINGLE_POD)
+    # find the we_gate spec: (seg scan, experts, embed, ffn)
+    found = []
+    def visit(path, spec):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "we_gate":
+            found.append(spec)
+    jax.tree_util.tree_map_with_path(visit, specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    assert found and all("model" in [a for a in s if a] for s in found)
+
+
+def test_divisibility_report():
+    issues = shd.check_divisibility(get_config("glm4_9b"), SINGLE_POD)
+    assert any("kv heads" in i for i in issues)  # kv=2 < 16 documented
+    issues = shd.check_divisibility(get_config("mamba2_780m"), SINGLE_POD)
+    assert any("vocab" in i for i in issues)  # 50280 % 16 != 0

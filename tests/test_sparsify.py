@@ -1,0 +1,83 @@
+"""Contextual sparsification S_t: calibration, variants, theorem ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify
+
+
+@given(sparsity=st.floats(0.1, 0.95),
+       dist=st.sampled_from(["normal", "laplace", "uniform"]))
+@settings(max_examples=15, deadline=None)
+def test_threshold_achieves_target_sparsity(sparsity, dist):
+    key = jax.random.PRNGKey(int(sparsity * 1000))
+    n = 20000
+    if dist == "normal":
+        a = jax.random.normal(key, (n,))
+    elif dist == "laplace":
+        a = jax.random.laplace(key, (n,))
+    else:
+        a = jax.random.uniform(key, (n,), minval=-1, maxval=1)
+    t = sparsify.threshold_from_samples(jnp.abs(a), sparsity)
+    got = sparsify.achieved_sparsity(jnp.abs(a) >= t)
+    assert abs(float(got) - sparsity) < 0.02
+
+
+def test_s_t_zeroes_below_threshold():
+    a = jnp.array([-2.0, -0.5, 0.1, 0.9, 3.0])
+    out = sparsify.s_t(a, 1.0)
+    np.testing.assert_array_equal(np.asarray(out), [-2.0, 0.0, 0.0, 0.0, 3.0])
+
+
+def test_sparse_up_equals_dense_at_zero_threshold():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 32))
+    wg = jax.random.normal(jax.random.PRNGKey(1), (32, 64)) * 0.1
+    wu = jax.random.normal(jax.random.PRNGKey(2), (32, 64)) * 0.1
+    wd = jax.random.normal(jax.random.PRNGKey(3), (64, 32)) * 0.1
+    dense = sparsify.expert_forward_dense(x, wg, wu, wd)
+    sp = sparsify.expert_forward_sparse_up(x, wg, wu, wd, jnp.zeros(()))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(sp), atol=1e-6)
+
+
+def test_block_union_mask():
+    m = jnp.zeros((2, 256), bool).at[0, 5].set(True).at[1, 200].set(True)
+    bu = sparsify.block_union_mask(m, 128)
+    assert bu.shape == (2, 2)
+    assert bool(bu[0, 0]) and not bool(bu[0, 1])
+    assert not bool(bu[1, 0]) and bool(bu[1, 1])
+
+
+def test_pruning_loss_ordering_gaussian_exponential():
+    """Theorem 3.1 under its own assumptions: a_up ~ N(0,s), a_gate ~
+    shifted exponential (SiLU-like) => L_down <= L_up < L_gate."""
+    key = jax.random.PRNGKey(0)
+    t, f, d = 4096, 256, 64
+    k1, k2, k3 = jax.random.split(key, 3)
+    a_up = jax.random.normal(k1, (t, f))
+    a_gate = jax.random.exponential(k2, (t, f)) / 11.0 - 0.28  # paper's fit
+    wd = jax.random.normal(k3, (f, d)) / jnp.sqrt(f)
+    h = a_gate * a_up
+    for sp in (0.3, 0.5):
+        t_d = sparsify.threshold_from_samples(jnp.abs(h), sp)
+        t_u = sparsify.threshold_from_samples(jnp.abs(a_up), sp)
+        t_g = sparsify.threshold_from_samples(jnp.abs(a_gate), sp)
+        l_d = float(jnp.mean(jnp.sum(((h - sparsify.s_t(h, t_d)) @ wd) ** 2, -1)))
+        l_u = float(jnp.mean(jnp.sum(((h - a_gate * sparsify.s_t(a_up, t_u)) @ wd) ** 2, -1)))
+        l_g = float(jnp.mean(jnp.sum(((h - sparsify.s_t(a_gate, t_g) * a_up) @ wd) ** 2, -1)))
+        assert l_d <= l_u + 1e-6, (sp, l_d, l_u)
+        assert l_u < l_g, (sp, l_u, l_g)
+
+
+def test_pruning_losses_on_trained_like_weights():
+    """The helper runs end-to-end on expert weights."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (512, 64))
+    wg = jax.random.normal(jax.random.PRNGKey(2), (64, 256)) * 0.1
+    wu = jax.random.normal(jax.random.PRNGKey(3), (64, 256)) * 0.1
+    wd = jax.random.normal(jax.random.PRNGKey(4), (256, 64)) * 0.1
+    losses = sparsify.pruning_losses(x, wg, wu, wd, 0.5)
+    assert losses["down"] <= losses["up"] + 1e-6
+    assert all(np.isfinite(float(v)) for v in losses.values())

@@ -1,0 +1,88 @@
+"""Numeric validation of the paper's Appendix A (Theorem A.2 machinery).
+
+We re-derive the closed forms and check them against Monte-Carlo, then
+verify the key inequality F(eta) < G(eta, p) (Lemma A.9) on a grid — the
+analytic backbone of L_down <= L_up < L_gate.
+"""
+import math
+
+import numpy as np
+import pytest
+
+
+# --- tiny self-contained normal utilities (no scipy in this container) -----
+def phi(x):
+    return math.exp(-x * x / 2.0) / math.sqrt(2.0 * math.pi)
+
+
+def Phi(x):
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def Phi_inv(q, lo=-10.0, hi=10.0):
+    for _ in range(80):  # bisection is plenty here
+        mid = (lo + hi) / 2.0
+        if Phi(mid) < q:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2.0
+
+
+def F(eta):
+    """Lemma A.4: E[S̄_t(a)^2]/E[a^2] for a ~ N(0,1)."""
+    z = Phi_inv(1.0 - eta / 2.0)
+    return 1.0 - eta - 2.0 * z * phi(z)
+
+
+def q_eta(eta, p):
+    """Lemma A.5/A.7 threshold (normalized by c; p = lambda*c)."""
+    return math.asinh((1.0 - eta) / 2.0 * math.exp(p)) / p
+
+
+def G(eta, p):
+    """Lemma A.9 normalized truncated second moment for the shifted
+    exponential."""
+    q = q_eta(eta, p)
+    denom = 2.0 / p ** 2 - 2.0 / p + 1.0
+    t1 = math.exp(p * (q - 1.0)) * (2.0 / p ** 2 - 2.0 * q / p + q * q) / denom
+    t2 = math.exp(-p * (1.0 + q)) * (2.0 / p ** 2 + 2.0 * q / p + q * q) / denom
+    return t1 - t2
+
+
+def test_lemma_a4_matches_monte_carlo():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=2_000_000)
+    for eta in (0.1, 0.3, 0.5):
+        t = np.quantile(np.abs(a), 1.0 - eta)
+        mc = np.mean(np.where(np.abs(a) < t, a, 0.0) ** 2)
+        assert abs(mc - F(eta)) < 5e-3, (eta, mc, F(eta))
+
+
+def test_lemma_a5_matches_monte_carlo():
+    rng = np.random.default_rng(1)
+    lam, c = 11.0, 0.28  # the paper's SiLU fit (p = lam*c = 3.08)
+    p = lam * c
+    x = rng.exponential(1.0 / lam, size=2_000_000)
+    a = x - c
+    for eta in (0.1, 0.3, 0.5):
+        t = np.quantile(np.abs(a), 1.0 - eta)
+        mc = np.mean(np.where(np.abs(a) < t, a, 0.0) ** 2)
+        closed = G(eta, p) * np.mean(a ** 2)
+        # closed form uses the exact quantile; allow MC tolerance
+        assert abs(mc - closed) / max(closed, 1e-9) < 0.05, (eta, mc, closed)
+
+
+def test_lemma_a9_inequality_grid():
+    """F(eta) < G(eta, p) for p >= 2, eta in [e^-4, 0.5]."""
+    for p in (2.0, 3.08, 5.0, 10.0):
+        for eta in np.linspace(math.exp(-4), 0.5, 25):
+            assert F(eta) < G(eta, p), (p, eta, F(eta), G(eta, p))
+
+
+def test_inequality_fails_when_assumption_violated():
+    """Sanity: for small p (assumption lam*c >= 2 violated) the gap can
+    shrink — the theorem's condition is not vacuous."""
+    gaps_ok = [G(0.3, p) - F(0.3) for p in (2.0, 5.0, 10.0)]
+    gap_bad = G(0.3, 0.3) - F(0.3)
+    assert min(gaps_ok) > gap_bad
