@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig6/8  -> bench_e2e_decode      (end-to-end decode TPS, cache sweep)
   fig7    -> bench_transfer        (compact layout + chunk-size curve)
   headline-> bench_compression     (9.3x per-expert, VRAM footprint)
+  prefetch-> bench_prefetch        (runtime scheduler: overlap, stall/token)
   roofline-> roofline              (dry-run derived terms, if present)
 """
 from __future__ import annotations
@@ -24,8 +25,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_compression, bench_e2e_decode,
-                            bench_predictor, bench_sensitivity,
-                            bench_sparse_kernel, bench_transfer, roofline)
+                            bench_predictor, bench_prefetch,
+                            bench_sensitivity, bench_sparse_kernel,
+                            bench_transfer, roofline)
 
     suites = [
         ("headline", bench_compression.run),
@@ -34,6 +36,7 @@ def main() -> None:
         ("fig3", bench_sensitivity.run),
         ("fig4", bench_predictor.run),
         ("fig6", bench_e2e_decode.run),
+        ("prefetch", bench_prefetch.run),
         ("roofline", roofline.run),
     ]
     rows: list = []

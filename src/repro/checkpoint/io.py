@@ -4,6 +4,10 @@ Leaves are stored as (dtype, shape, raw bytes); the treedef is rebuilt from
 the same nested-dict structure, so any params/opt-state pytree of arrays
 round-trips.  bfloat16 is encoded via uint16 views (msgpack/numpy have no
 native bf16).
+
+`zstandard` is optional: when the wheel is absent checkpoints are written
+with a raw codec behind a small magic header, and either codec is detected
+on load (zstd frames carry their own 0xFD2FB528 magic).
 """
 from __future__ import annotations
 
@@ -14,9 +18,15 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # raw fallback codec below
+    zstandard = None
 
 _BF16 = "bfloat16"
+_RAW_MAGIC = b"CKPTRAW0"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _encode_leaf(x) -> dict:
@@ -58,7 +68,10 @@ def save_checkpoint(path: str | Path, tree: Any, *, level: int = 3) -> int:
     """Returns bytes written."""
     tree = jax.tree.map(np.asarray, tree)
     raw = msgpack.packb(_pack(tree), use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=level).compress(raw)
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=level).compress(raw)
+    else:
+        comp = _RAW_MAGIC + raw
     p = Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     p.write_bytes(comp)
@@ -66,5 +79,14 @@ def save_checkpoint(path: str | Path, tree: Any, *, level: int = 3) -> int:
 
 
 def load_checkpoint(path: str | Path) -> Any:
-    raw = zstandard.ZstdDecompressor().decompress(Path(path).read_bytes())
+    blob = Path(path).read_bytes()
+    if blob.startswith(_RAW_MAGIC):
+        raw = blob[len(_RAW_MAGIC):]
+    elif blob.startswith(_ZSTD_MAGIC):
+        if zstandard is None:
+            raise RuntimeError(
+                f"{path} is zstd-compressed but zstandard is not installed")
+        raw = zstandard.ZstdDecompressor().decompress(blob)
+    else:
+        raise ValueError(f"{path}: unrecognized checkpoint codec")
     return _unpack(msgpack.unpackb(raw, raw=False))

@@ -1,0 +1,28 @@
+"""Version compatibility shims for the jax APIs this repo leans on.
+
+The codebase targets current jax (``jax.shard_map``, ``jax.sharding.
+AxisType``); older runtimes (0.4.x) ship the same functionality under
+``jax.experimental.shard_map`` and without explicit axis types.  Routing
+every use through this module keeps model code on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.5: experimental home, and check_vma was named check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+
+def mesh_kwargs(n_axes: int) -> dict:
+    """kwargs for ``jax.make_mesh``: explicit Auto axis types when the
+    installed jax supports them, nothing otherwise."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}

@@ -17,12 +17,15 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
-    prefetch_hits: int = 0  # hits served by a prior prefetch
+    prefetch_hits: int = 0  # distinct prefetches consumed (once each)
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.evictions = self.prefetch_hits = 0
 
 
 class ExpertCache:
@@ -57,9 +60,14 @@ class ExpertCache:
         if key in self._slots:
             self._slots.move_to_end(key)
             self._slots[key] = value
+            if prefetch:  # re-prefetch of a resident key counts anew
+                self._prefetched.add(key)
             return
         while len(self._slots) >= self.capacity:
-            self._slots.popitem(last=False)
+            evicted, _ = self._slots.popitem(last=False)
+            # an evicted prefetch was never consumed; a later re-insert of
+            # the same key must not count a phantom prefetch_hit
+            self._prefetched.discard(evicted)
             self.stats.evictions += 1
         self._slots[key] = value
         if prefetch:
@@ -69,4 +77,4 @@ class ExpertCache:
         return list(self._slots.keys())
 
     def reset_stats(self):
-        self.stats = CacheStats()
+        self.stats.reset()

@@ -13,10 +13,22 @@ Host-driven layer loop for offloaded MoE decoding:
     synchronous reload; prefetched-but-missing channels are dropped
     (coverage is logged — the FloE approximation).
 
-Timing: every step charges a modeled compute time (DeviceModel) and modeled
-transfer time (LinkModel); prefetch overlaps with compute, sync reloads
-stall.  Real jax ops still run, so outputs are functionally exact given the
-prefetched weights.
+Two timing backends:
+
+* synchronous (historical): every step charges a modeled compute time
+  (DeviceModel) and modeled transfer time (LinkModel); prefetch "overlap"
+  is the end-of-token accounting identity
+  ``stall += max(0, prefetch_s - compute_s)``.
+* runtime (``use_runtime=True``): decode is driven through
+  ``repro.runtime.ExpertScheduler`` — a simulated-clock event loop where
+  prefetches occupy real (modeled) link/staging-buffer timelines, the
+  true router cancels stale speculation, and stalls are the *measured*
+  residual waits at demand time.  Cross-layer lookahead ≥ 2 and priority
+  scheduling only exist on this path (FloE §3.4 made operational).
+
+Both paths run the same jax ops on the same staged payloads, so with
+matching residency configuration (lookahead=1, LRU, ample staging
+buffers) their outputs are bitwise identical — pinned by a test.
 """
 from __future__ import annotations
 
@@ -32,6 +44,7 @@ from repro.core import floe_layer, hqq, predictor, sparsify
 from repro.core.cache import ExpertCache
 from repro.core.offload import ExpertStore, LinkModel
 from repro.models import nn
+from repro.runtime import ExpertScheduler, ResidencyManager, TransferEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +95,15 @@ class FloEPipeline:
                  link: Optional[LinkModel] = None,
                  device: Optional[DeviceModel] = None,
                  prefetch: bool = True,
-                 mode: str = "floe"):  # "floe" | "naive" | "resident"
+                 mode: str = "floe",  # "floe" | "naive" | "resident"
+                 use_runtime: bool = False,
+                 lookahead: int = 2,
+                 residency_policy: str = "lru",
+                 num_buffers: int = 2,
+                 cancel_stale: bool = True,
+                 cross_token: bool = True,
+                 batched_demand: bool = False,
+                 pinned_experts: tuple = ()):  # ((layer, expert), ...)
         self.cfg = cfg
         self.mode = mode
         self.prefetch = prefetch and mode == "floe"
@@ -119,15 +140,33 @@ class FloEPipeline:
             self.caches.append(ExpertCache(cache_slots))
         self.metrics: list[StepMetrics] = []
 
+        # ------------------------------------------- runtime scheduler ----
+        self.sched: Optional[ExpertScheduler] = None
+        self.cross_token = cross_token
+        self.batched_demand = batched_demand
+        if use_runtime and mode == "floe":
+            self.residency: list[Optional[ResidencyManager]] = []
+            for li, layer in enumerate(self.layers):
+                if "moe" not in layer:
+                    self.residency.append(None)
+                    continue
+                pins = [(li, e) for (pl, e) in pinned_experts if pl == li]
+                self.residency.append(ResidencyManager(
+                    cache_slots, policy=residency_policy, pinned=pins))
+            self.engine = TransferEngine(self.link, num_buffers=num_buffers)
+            self.sched = ExpertScheduler(
+                self.stores, self.residency, self.engine,
+                lookahead=lookahead, cancel_stale=cancel_stale)
+
     # ------------------------------------------------------------ helpers --
     def _moe_layer_indices(self):
         return [i for i, l in enumerate(self.layers) if "moe" in l]
 
     def _route(self, h: jax.Array, li: int):
         from repro.models.moe import router_topk
-        gates, eids, _ = router_topk(
+        gates, eids, probs = router_topk(
             h, self.layers[li]["moe"]["router"], self.cfg.num_experts_per_tok)
-        return np.asarray(gates), np.asarray(eids)
+        return np.asarray(gates), np.asarray(eids), np.asarray(probs)
 
     def _true_mask(self, h: jax.Array, li: int, e: int):
         w = self.up_res[li]
@@ -137,18 +176,26 @@ class FloEPipeline:
         return v, np.asarray(mask.any(axis=0))
 
     def _predict_next(self, h: jax.Array, li_next: int):
-        """(expert ids, per-expert predicted channel masks) for layer li_next."""
+        """(expert ids, predicted channel masks, confidence) for li_next.
+
+        Confidence is the prefetch priority signal: the inter-predictor's
+        per-expert sigmoid (multi-hot probability), or the reused router's
+        softmax mass, averaged over the batch."""
         if self.inter is not None and self.inter[li_next] is not None:
-            eids = np.asarray(predictor.inter_predict_topk(
-                self.inter[li_next], h, self.cfg.num_experts_per_tok))
+            logits = predictor.inter_logits(self.inter[li_next], h)
+            eids = np.asarray(jax.lax.top_k(
+                logits, self.cfg.num_experts_per_tok)[1])
+            conf_all = np.asarray(jax.nn.sigmoid(logits)).mean(axis=0)
         else:  # fallback: today's router reused (high hidden-state similarity)
-            _, eids = self._route(h, li_next)
+            _, eids, probs = self._route(h, li_next)
+            conf_all = probs.mean(axis=0)
         eids = np.unique(eids.reshape(-1))
-        masks = {}
+        masks, conf = {}, {}
         for e in eids.tolist():
             _, m = self._true_mask(h, li_next, e)  # reuse-based intra pred
             masks[e] = m
-        return eids.tolist(), masks
+            conf[e] = float(conf_all[e])
+        return eids.tolist(), masks, conf
 
     # --------------------------------------------------------- expert exec -
     def _run_expert(self, h, li, e, metrics: StepMetrics):
@@ -191,8 +238,29 @@ class FloEPipeline:
             payload = (idx, gate_cols, down_rows)
         else:
             metrics.expert_hits += 1
-        idx, gate_cols, down_rows = payload
+        y, cov, t_up, t_sparse = self._apply_payload(h, li, e, payload, v,
+                                                     need_mask)
+        metrics.compute_s += t_up + t_sparse
+        return y, cov
 
+    def _up_time(self, batch: int, li: int, e: int) -> float:
+        """Modeled time of the resident quantized up GEMV (the true-mask
+        computation) — payload-independent, so it overlaps demand DMA."""
+        cfg = self.cfg
+        w = self.up_res[li]
+        up_bytes = (w.up_q.packed[e].nbytes + w.up_q.scale[e].nbytes +
+                    w.up_q.zero[e].nbytes)
+        return self.device.matmul_time(
+            2 * batch * cfg.d_model * cfg.moe_d_ff, up_bytes)
+
+    def _apply_payload(self, h, li: int, e: int, payload, v, need_mask
+                       ) -> tuple[jax.Array, float, float, float]:
+        """FloE expert compute over a staged payload — the single code path
+        shared by the synchronous and scheduler-driven decoders (bitwise
+        parity between them rests on this).  Returns (y, coverage,
+        modeled up-GEMV seconds, modeled sparse gate/down seconds)."""
+        d, f = self.cfg.d_model, self.cfg.moe_d_ff
+        idx, gate_cols, down_rows = payload
         avail = np.zeros(f, bool)
         avail[idx] = True
         usable = need_mask & avail
@@ -203,16 +271,16 @@ class FloEPipeline:
             h, gate_cols[sel], down_rows[sel], v_active)
         # compute model: dense up GEMV + sparse gate/down GEMVs
         n_act = int(len(sel))
-        up_bytes = qt.packed.nbytes + qt.scale.nbytes + qt.zero.nbytes
-        metrics.compute_s += self.device.matmul_time(
-            2 * h.shape[0] * d * f, up_bytes)
-        metrics.compute_s += self.device.matmul_time(
+        t_up = self._up_time(h.shape[0], li, e)
+        t_sparse = self.device.matmul_time(
             4 * h.shape[0] * d * n_act, 4 * d * n_act)
-        return y, float(cov)
+        return y, float(cov), t_up, t_sparse
 
     # --------------------------------------------------------- decode step -
     def decode_token(self, h: jax.Array) -> tuple[jax.Array, StepMetrics]:
         """h (B, D): post-embedding hidden state; returns final hidden."""
+        if self.sched is not None:
+            return self._decode_token_runtime(h)
         cfg = self.cfg
         metrics = StepMetrics()
         covs = []
@@ -222,7 +290,7 @@ class FloEPipeline:
             # prefetch for the NEXT MoE layer while "computing" this one
             nxt = li + 1
             if self.prefetch and nxt in moe_layers and self.caches[nxt] is not None:
-                eids, masks = self._predict_next(h, nxt)
+                eids, masks, _ = self._predict_next(h, nxt)
                 for e in eids:
                     if (nxt, e) in self.caches[nxt]:
                         continue
@@ -244,7 +312,7 @@ class FloEPipeline:
 
             if li in moe_layers:
                 hn = nn.rms_norm(h, layer["mlp_norm"]["scale"], cfg.norm_eps)
-                gates, eids = self._route(hn, li)
+                gates, eids, _ = self._route(hn, li)
                 y = jnp.zeros_like(h, dtype=jnp.float32)
                 for slot in range(eids.shape[1]):
                     for b in range(h.shape[0]):
@@ -257,8 +325,175 @@ class FloEPipeline:
             else:
                 pass  # dense layers resident; compute time charged above
 
+        # final norm + LM head + sampling happen after the last layer
+        metrics.compute_s += self._head_time(h.shape[0])
+
         # prefetch overlaps with compute: only the excess stalls
         metrics.stall_s += max(0.0, metrics.prefetch_s - metrics.compute_s)
+        metrics.coverage = float(np.mean(covs)) if covs else 1.0
+        self.metrics.append(metrics)
+        return h, metrics
+
+    def _head_time(self, batch: int) -> float:
+        """Modeled final-norm + LM-head + sampling time per decode step."""
+        cfg = self.cfg
+        return self.device.matmul_time(
+            2 * batch * cfg.d_model * cfg.vocab_size,
+            cfg.d_model * cfg.vocab_size * 2)
+
+    # ---------------------------------------- scheduler-driven MoE exec ----
+    def speculate(self, h2d: jax.Array, li: int) -> None:
+        """Enqueue cross-layer speculative prefetches for the next
+        ``lookahead`` MoE layers from the live hidden state (B, D)."""
+        sched = self.sched
+        moe_layers = set(self._moe_layer_indices())
+        for depth in range(1, sched.lookahead + 1):
+            nxt = li + depth
+            if nxt not in moe_layers:
+                continue
+            eids, masks, conf = self._predict_next(h2d, nxt)
+            for e in eids:
+                sched.enqueue_prefetch(nxt, e, np.nonzero(masks[e])[0],
+                                       conf[e], depth)
+        sched.pump()
+
+    def speculate_cross_token(self, h_in: jax.Array) -> None:
+        """Prefetch the FIRST MoE layers for the NEXT token from this
+        token's entry state (consecutive decode steps route similarly —
+        temporal locality of expert activation); the synchronous path
+        structurally cannot do this, so those layers' cold demand-misses
+        become prefetch hits only on the runtime path."""
+        if not (self.prefetch and self.cross_token):
+            return
+        sched = self.sched
+        moe_list = self._moe_layer_indices()
+        for depth, li0 in enumerate(moe_list[:sched.lookahead], start=1):
+            eids, masks, conf = self._predict_next(h_in, li0)
+            for e in eids:
+                sched.enqueue_prefetch(li0, e, np.nonzero(masks[e])[0],
+                                       conf[e], depth)
+        sched.pump()
+
+    def _demand_issue(self, hb: jax.Array, li: int, e: int,
+                      metrics: StepMetrics) -> tuple:
+        """Phase A of a demanded expert: run the resident up GEMV (its time
+        advances the clock — the DMA it triggers overlaps later experts'
+        phase A), then issue the transfer without waiting."""
+        sched = self.sched
+        v, need_mask = self._true_mask(hb, li, e)
+        t_up = self._up_time(hb.shape[0], li, e)
+        metrics.compute_s += t_up
+        sched.advance(t_up)
+        payload, was_miss = sched.demand_async(
+            li, e, lambda m=need_mask: np.nonzero(m)[0])
+        if was_miss:
+            metrics.expert_misses += 1
+        else:
+            metrics.expert_hits += 1
+        return (hb, v, need_mask, payload, was_miss)
+
+    def _demand_finish(self, issued: tuple, li: int, e: int,
+                       metrics: StepMetrics, covs: list) -> jax.Array:
+        """Phase B: wait for the staged slice, then the sparse compute."""
+        sched = self.sched
+        hb, v, need_mask, payload, was_miss = issued
+        metrics.stall_s += sched.wait_for(li, e, was_miss=was_miss)
+        ye, cov, _, t_sparse = self._apply_payload(hb, li, e, payload, v,
+                                                   need_mask)
+        metrics.compute_s += t_sparse
+        sched.advance(t_sparse)
+        covs.append(cov)
+        return ye
+
+    def moe_apply_batched(self, hn: jax.Array, li: int, gates: np.ndarray,
+                          eids: np.ndarray, metrics: StepMetrics, covs: list
+                          ) -> jax.Array:
+        """Batched MoE through the scheduler: each distinct expert is
+        demanded ONCE with the union of its tokens' channel masks and the
+        staged slice is shared across the batch — the transfer count per
+        layer is the number of distinct routed experts, not B×k, and no
+        token silently loses channels another token fetched first.  All
+        demands are issued up front (phase A) so each expert's DMA
+        overlaps the others' compute.  This is the offloaded serving path
+        (multi-request decode); the synchronous pipeline has no
+        equivalent."""
+        y = jnp.zeros((hn.shape[0], self.cfg.d_model), jnp.float32)
+        experts = np.unique(eids.reshape(-1)).tolist()
+        issued = {}
+        for e in experts:
+            rows = np.nonzero((eids == e).any(axis=1))[0]
+            issued[e] = (rows, self._demand_issue(hn[rows], li, int(e),
+                                                  metrics))
+        for e in experts:
+            rows, ent = issued[e]
+            ye = self._demand_finish(ent, li, int(e), metrics, covs)
+            w = (np.asarray(gates) * (eids == e)).sum(axis=1)[rows]
+            y = y.at[rows].add(ye.astype(jnp.float32) * w[:, None])
+        return y
+
+    # ------------------------------------------- scheduler-driven decode ---
+    def _decode_token_runtime(self, h: jax.Array
+                              ) -> tuple[jax.Array, StepMetrics]:
+        """Decode one token through the runtime scheduler (Fig. 1(c) as an
+        event loop).  Same jax ops and staged payloads as the synchronous
+        path; stall/overlap come from enqueue/complete event times."""
+        cfg = self.cfg
+        sched = self.sched
+        metrics = StepMetrics()
+        covs = []
+        moe_layers = set(self._moe_layer_indices())
+        rec_start = len(self.engine.records)
+        h_in = h  # token-entry state: the cross-token routing proxy
+
+        for li, layer in enumerate(self.layers):
+            # cross-layer speculative prefetch (lookahead >= 1 MoE layers)
+            if self.prefetch:
+                self.speculate(h, li)
+
+            # non-expert compute (attention + norms) overlaps transfers
+            attn_flops = 2 * h.shape[0] * (
+                4 * cfg.d_model * cfg.num_heads * cfg.head_dim)
+            t_attn = self.device.matmul_time(
+                attn_flops, 4 * cfg.d_model * cfg.num_heads * cfg.head_dim * 2)
+            metrics.compute_s += t_attn
+            sched.advance(t_attn)
+
+            if li in moe_layers:
+                hn = nn.rms_norm(h, layer["mlp_norm"]["scale"], cfg.norm_eps)
+                gates, eids, _ = self._route(hn, li)
+                sched.reconcile(li, np.unique(eids.reshape(-1)).tolist())
+                if self.batched_demand:
+                    y = self.moe_apply_batched(hn, li, gates, eids,
+                                               metrics, covs)
+                else:
+                    # per-(slot, token) order mirrors the sync path (for
+                    # bitwise parity), but demands are issued up front so
+                    # each DMA overlaps the other experts' compute
+                    y = jnp.zeros_like(h, dtype=jnp.float32)
+                    order = [(slot, b) for slot in range(eids.shape[1])
+                             for b in range(h.shape[0])]
+                    issued = []
+                    for slot, b in order:
+                        e = int(eids[b, slot])
+                        issued.append(self._demand_issue(
+                            hn[b:b + 1], li, e, metrics))
+                    for (slot, b), ent in zip(order, issued):
+                        e = int(eids[b, slot])
+                        ye = self._demand_finish(ent, li, e, metrics, covs)
+                        y = y.at[b].add(ye[0].astype(jnp.float32)
+                                        * gates[b, slot])
+                h = h + y.astype(h.dtype)
+
+        self.speculate_cross_token(h_in)
+
+        # final norm + LM head + sampling: cross-token transfers overlap it
+        t_head = self._head_time(h.shape[0])
+        metrics.compute_s += t_head
+        sched.advance(t_head)
+
+        metrics.prefetch_s = sum(
+            r.duration for r in self.engine.records[rec_start:]
+            if r.kind == "prefetch")
         metrics.coverage = float(np.mean(covs)) if covs else 1.0
         self.metrics.append(metrics)
         return h, metrics

@@ -131,7 +131,10 @@ _FREE_OPS = frozenset({
 })
 
 
-_DOT_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)")
+# operand may carry an inline shape ("dot(f32[4,32]{1,0} %x, ...)") in
+# newer jax as_text output, or be bare ("dot(%x, ...)")
+_DOT_OPERANDS_RE = re.compile(
+    r"dot\(\s*(?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%?([\w\.\-]+)")
 _LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
@@ -154,7 +157,10 @@ def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
     mcd = _LHS_CDIMS_RE.search(line)
     contract = 1
     if mop and mcd:
-        lhs_shape = _dims_of(shapes.get(mop.group(1), ""))
+        if mop.group(1):  # inline operand shape
+            lhs_shape = _dims_of(mop.group(1))
+        else:
+            lhs_shape = _dims_of(shapes.get(mop.group(2), ""))
         for idx in (int(i) for i in mcd.group(1).split(",") if i):
             if idx < len(lhs_shape):
                 contract *= lhs_shape[idx]

@@ -10,21 +10,18 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro.common.compat import mesh_kwargs
 from repro.common.config import MeshConfig, MULTI_POD, SINGLE_POD
-
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **mesh_kwargs(len(axes)))
 
 
 def make_mesh(cfg: MeshConfig) -> Mesh:
-    return jax.make_mesh(cfg.shape, cfg.axes, axis_types=_auto(len(cfg.axes)))
+    return jax.make_mesh(cfg.shape, cfg.axes, **mesh_kwargs(len(cfg.axes)))
 
 
 def make_local_mesh(*, model: int = 1, data: int = 1) -> Mesh:
@@ -32,7 +29,7 @@ def make_local_mesh(*, model: int = 1, data: int = 1) -> Mesh:
     n = len(jax.devices())
     model = min(model, n)
     data = max(1, min(data, n // model))
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((data, model), ("data", "model"), **mesh_kwargs(2))
 
 
 def mesh_config(mesh: Mesh) -> MeshConfig:

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
 from repro.common.config import ModelConfig
 from repro.models import nn
 
@@ -232,7 +233,7 @@ def _sdpa_dist(q, k, v, q_pos, k_pos, cfg: ModelConfig, dist,
     else:
         body2 = body
 
-    return jax.shard_map(body2, mesh=mesh, in_specs=in_specs,
+    return shard_map(body2, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_vma=False)(
         q, k, v, q_pos, k_pos, k_valid)
 
@@ -320,7 +321,7 @@ def _flash_decode_kvseq(q, k_cache, v_cache, k_new, v_new, pos,
         out = (o_tot / jnp.maximum(l_tot, 1e-30))[:, None].astype(q.dtype)
         return out, k_c, v_c
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(batch, None, None, None),
                   P(batch, "model", None, None),

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
 from repro.common.config import ModelConfig
 from repro.models import nn
 
@@ -190,7 +191,7 @@ def moe_forward(params: dict, x: jax.Array, cfg: ModelConfig,
     body = partial(_moe_sharded_body, cfg=cfg, cap=cap,
                    model_size=model_size, batch_ax=batch_ax,
                    expert_fn=expert_fn)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         lambda xf, rw, wg, wu, wd: body(
             xf.reshape(-1, d), rw, wg, wu, wd),
         mesh=mesh,

@@ -1,0 +1,27 @@
+"""repro.runtime — asynchronous expert-transfer runtime.
+
+The layer between compression (``repro.core``) and serving
+(``repro.serving``): an event-driven scheduler that owns all host→device
+expert movement and residency, so that transfer genuinely overlaps
+compute (FloE Fig. 1(c)) instead of being an accounting afterthought.
+
+    predictor ──confidence──▶ ExpertScheduler ──issue──▶ TransferEngine
+                                    │                        │
+                              reconcile/demand          double-buffered
+                                    ▼                     link timeline
+                             ResidencyManager ◀──staged payloads──┘
+
+See ROADMAP.md §runtime for the architecture notes.
+"""
+from repro.runtime.residency import (Entry, ResidencyManager, ResidencyStats,
+                                     POLICIES)
+from repro.runtime.scheduler import (ExpertScheduler, PrefetchRequest,
+                                     SchedulerStats)
+from repro.runtime.transfer import (TransferEngine, TransferRecord,
+                                    coalesce_runs)
+
+__all__ = [
+    "Entry", "ResidencyManager", "ResidencyStats", "POLICIES",
+    "ExpertScheduler", "PrefetchRequest", "SchedulerStats",
+    "TransferEngine", "TransferRecord", "coalesce_runs",
+]

@@ -1,0 +1,159 @@
+"""Expert residency manager — which compressed experts live in HBM.
+
+Generalizes ``repro.core.cache.ExpertCache`` (FloE Fig. 1(b/c) ③) into the
+runtime's device-memory authority: a fixed number of slots per MoE layer
+holds staged expert slices, a pluggable eviction policy decides victims,
+and *pinned* keys (e.g. a shared expert, or the layer-0 working set that is
+demanded before any prefetch window exists) are never evicted.
+
+Entries carry a ``ready_t`` timestamp from the transfer engine: the payload
+is functionally staged at insertion (the jax arrays exist), but on the
+modeled timeline it only becomes usable at ``ready_t`` — a demand arriving
+earlier pays the residual wait as stall (scheduler's job, see
+``runtime.scheduler``).
+
+Policies:
+
+* ``lru``  — least-recently-used, byte-for-byte the ``ExpertCache`` order
+             (the equivalence is pinned by a test).
+* ``lfu``  — least-frequently-used with LRU tie-break; favors hot experts
+             under skewed routing (Zipfian expert popularity).
+* ``weighted`` — predictor-weighted: victim minimizes
+             ``score + use_count``, where score is the prefetch confidence
+             the scheduler attached at insertion; low-confidence
+             speculation is evicted before confirmed-hot experts.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, Hashable, Iterable, Optional
+
+POLICIES = ("lru", "lfu", "weighted")
+
+
+@dataclasses.dataclass
+class ResidencyStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    insertions: int = 0
+    prefetch_hits: int = 0  # first consumption of a prefetched entry
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+        self.insertions = self.prefetch_hits = 0
+
+
+@dataclasses.dataclass
+class Entry:
+    payload: Any
+    ready_t: float = 0.0  # modeled time the transfer completes
+    score: float = 0.0  # predictor confidence at insertion
+    prefetch: bool = False  # True until first consumption
+    origin_prefetch: bool = False  # staged by prediction (never cleared)
+    uses: int = 0
+
+
+class ResidencyManager:
+    """Fixed-capacity map of (layer, expert) -> staged payload."""
+
+    def __init__(self, capacity: int, *, policy: str = "lru",
+                 pinned: Iterable[Hashable] = ()):
+        assert capacity >= 1
+        if policy not in POLICIES:
+            raise ValueError(f"unknown residency policy {policy!r}; "
+                             f"choose from {POLICIES}")
+        self.capacity = capacity
+        self.policy = policy
+        self.pinned = set(pinned)
+        # insertion/recency order is tracked by the OrderedDict itself
+        self._slots: "collections.OrderedDict[Hashable, Entry]" = \
+            collections.OrderedDict()
+        self.stats = ResidencyStats()
+
+    # ------------------------------------------------------------- lookup --
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._slots
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def keys(self):
+        return list(self._slots.keys())
+
+    def peek(self, key: Hashable) -> Optional[Entry]:
+        """Entry without touching stats or recency (scheduler internals)."""
+        return self._slots.get(key)
+
+    def get(self, key: Hashable) -> Optional[Entry]:
+        """Consume-path lookup: updates recency, use counts, and stats."""
+        ent = self._slots.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return None
+        self._slots.move_to_end(key)
+        ent.uses += 1
+        self.stats.hits += 1
+        if ent.prefetch:
+            self.stats.prefetch_hits += 1
+            ent.prefetch = False  # count once per distinct prefetch
+        return ent
+
+    # ------------------------------------------------------------- insert --
+    def put(self, key: Hashable, payload: Any, *, ready_t: float = 0.0,
+            score: float = 0.0, prefetch: bool = False) -> None:
+        if key in self._slots:
+            ent = self._slots[key]
+            ent.payload = payload
+            ent.ready_t = min(ent.ready_t, ready_t)
+            ent.score = max(ent.score, score)
+            ent.origin_prefetch = ent.origin_prefetch or prefetch
+            self._slots.move_to_end(key)
+            return
+        while len(self._slots) >= self.capacity:
+            victim = self._victim()
+            if victim is None:  # everything pinned: grow past capacity
+                break
+            del self._slots[victim]
+            self.stats.evictions += 1
+        self._slots[key] = Entry(payload, ready_t=ready_t, score=score,
+                                 prefetch=prefetch, origin_prefetch=prefetch)
+        self.stats.insertions += 1
+
+    def drop(self, key: Hashable) -> bool:
+        """Remove without counting an eviction (prefetch cancellation)."""
+        if key in self._slots:
+            del self._slots[key]
+            return True
+        return False
+
+    def pin(self, key: Hashable) -> None:
+        self.pinned.add(key)
+
+    def unpin(self, key: Hashable) -> None:
+        self.pinned.discard(key)
+
+    # ------------------------------------------------------------ policy ---
+    def _victim(self) -> Optional[Hashable]:
+        evictable = [k for k in self._slots if k not in self.pinned]
+        if not evictable:
+            return None
+        if self.policy == "lru":
+            return evictable[0]  # OrderedDict front = least recent
+        if self.policy == "lfu":
+            # min uses; ties broken by recency order (front = older)
+            return min(evictable, key=lambda k: (self._slots[k].uses,
+                                                 list(self._slots).index(k)))
+        # weighted: confirmed-hot (uses) and confident prefetches survive
+        return min(evictable,
+                   key=lambda k: (self._slots[k].score + self._slots[k].uses,
+                                  list(self._slots).index(k)))
+
+    def reset_stats(self) -> None:
+        self.stats.reset()

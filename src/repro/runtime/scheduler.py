@@ -1,0 +1,285 @@
+"""Event-driven expert-transfer scheduler (FloE Fig. 1(c), §3.4).
+
+The scheduler is the runtime's control plane: it owns a simulated clock,
+a confidence-ordered prefetch queue, the transfer engine's staging
+buffers, and per-layer residency.  Both the single-stream FloE decode
+pipeline (``repro.core.pipeline``) and the batched serving engine
+(``repro.serving.engine``) drive their expert movement through it.
+
+Event model — overlap is *computed*, never hand-wired:
+
+  * ``advance(dt)`` — compute progressed by ``dt`` modeled seconds; the
+    clock moves and completed transfers retire.  Transfer time that
+    elapses under ``advance`` is hidden (overlapped) by construction.
+  * ``enqueue_prefetch`` / ``pump`` — speculative requests enter a
+    priority queue (predictor confidence, demoted geometrically per
+    lookahead layer) and are issued to the transfer engine whenever a
+    staging buffer is free.
+  * ``demand(...)`` — the true router needs an expert NOW.  Resident and
+    ready: free.  Resident but still in flight: stall for the residual
+    ``complete_t - clock``.  Queued but never issued: promoted to the
+    head of the link with its *predicted* channels.  Absent: a
+    synchronous demand fetch with the true channels.  Every stalled
+    second is accounted against the token being decoded.
+  * ``reconcile(layer, true_experts)`` — the true router has spoken:
+    queued prefetches for that layer it disagrees with are cancelled
+    (they never touch the link), in-flight ones are demoted in telemetry
+    (their bytes were already committed to the DMA queue).
+
+Cross-layer speculation: ``lookahead`` ≥ 2 layers are predicted each step;
+deeper layers enter the queue at ``confidence × depth_discount^(depth-1)``
+so near-term transfers win the link when bandwidth is scarce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, Hashable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.offload import ExpertStore
+from repro.runtime.residency import Entry, ResidencyManager
+from repro.runtime.transfer import TransferEngine
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    prefetch_enqueued: int = 0
+    prefetch_issued: int = 0
+    prefetch_cancelled: int = 0  # dropped from the queue before the link
+    prefetch_demoted: int = 0  # stale but already on the link
+    prefetch_promoted: int = 0  # demanded while still queued
+    demand_fetches: int = 0
+    demand_hits: int = 0  # demanded; a PREFETCH had staged it, zero wait
+    residual_waits: int = 0  # demanded; a prefetch staged it, still in flight
+    demand_reuse: int = 0  # demanded; an earlier DEMAND had staged it
+    stall_s: float = 0.0
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, type(getattr(self, f.name))())
+
+
+@dataclasses.dataclass
+class PrefetchRequest:
+    layer: int
+    expert: int
+    channel_idx: np.ndarray
+    priority: float
+    depth: int  # 1 = next layer, 2 = layer after, ...
+
+
+class ExpertScheduler:
+    """Priority prefetch + demand servicing over a simulated clock."""
+
+    def __init__(self, stores: Sequence[Optional[ExpertStore]],
+                 residency: Sequence[Optional[ResidencyManager]],
+                 engine: TransferEngine, *,
+                 lookahead: int = 2,
+                 depth_discount: float = 0.5,
+                 cancel_stale: bool = True):
+        assert lookahead >= 1
+        self.stores = list(stores)
+        self.residency = list(residency)
+        self.engine = engine
+        self.lookahead = lookahead
+        self.depth_discount = depth_discount
+        self.cancel_stale = cancel_stale
+        self.clock = 0.0
+        self.stats = SchedulerStats()
+        self._queue: List[tuple] = []  # (-priority, seq, PrefetchRequest)
+        self._queued: Dict[Hashable, PrefetchRequest] = {}
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------ helpers --
+    @staticmethod
+    def key(layer: int, expert: int) -> Hashable:
+        return (layer, expert)
+
+    def _res(self, layer: int) -> ResidencyManager:
+        r = self.residency[layer]
+        assert r is not None, f"layer {layer} has no residency manager"
+        return r
+
+    # -------------------------------------------------------------- clock --
+    def advance(self, dt: float) -> None:
+        """Compute ran for ``dt`` modeled seconds; transfers overlap it."""
+        self.clock += dt
+        self.engine.poll(self.clock)
+        self.pump()
+
+    # ----------------------------------------------------------- prefetch --
+    def enqueue_prefetch(self, layer: int, expert: int,
+                         channel_idx: np.ndarray, confidence: float,
+                         depth: int = 1) -> None:
+        k = self.key(layer, expert)
+        if k in self.engine.inflight:
+            return
+        if self.residency[layer] is not None and k in self._res(layer):
+            return
+        prio = float(confidence) * self.depth_discount ** max(depth - 1, 0)
+        if k in self._queued:
+            # fresher prediction for a still-queued request: promote its
+            # priority (stale heap entry is lazily invalidated); a weaker
+            # re-prediction leaves the earlier one in place
+            if prio <= self._queued[k].priority:
+                return
+            req = PrefetchRequest(layer, expert, np.asarray(channel_idx),
+                                  prio, depth)
+            heapq.heappush(self._queue, (-prio, next(self._seq), req))
+            self._queued[k] = req
+            return
+        req = PrefetchRequest(layer, expert, np.asarray(channel_idx),
+                              prio, depth)
+        heapq.heappush(self._queue, (-prio, next(self._seq), req))
+        self._queued[k] = req
+        self.stats.prefetch_enqueued += 1
+
+    def pump(self) -> None:
+        """Issue queued prefetches while a staging buffer is free."""
+        while self._queue and self.engine.has_capacity(self.clock):
+            _, _, req = heapq.heappop(self._queue)
+            k = self.key(req.layer, req.expert)
+            if self._queued.get(k) is not req:  # cancelled or promoted
+                continue
+            del self._queued[k]
+            self._issue(req)
+
+    def _issue(self, req: PrefetchRequest) -> Entry:
+        k = self.key(req.layer, req.expert)
+        payload, rec = self.engine.issue(
+            self.stores[req.layer], k, req.expert, req.channel_idx,
+            self.clock, kind="prefetch")
+        res = self._res(req.layer)
+        res.put(k, payload, ready_t=rec.complete_t, score=req.priority,
+                prefetch=True)
+        self.stats.prefetch_issued += 1
+        return res.peek(k)
+
+    def reconcile(self, layer: int, true_experts: Sequence[int]) -> int:
+        """True router decided: drop stale speculation for this layer.
+
+        Returns the number of cancelled (never-issued) prefetches."""
+        if not self.cancel_stale:
+            return 0
+        truth = set(int(e) for e in true_experts)
+        cancelled = 0
+        for k, req in list(self._queued.items()):
+            if req.layer == layer and req.expert not in truth:
+                del self._queued[k]  # heap entry lazily invalidated
+                cancelled += 1
+                self.stats.prefetch_cancelled += 1
+        for k, rec in self.engine.inflight.items():
+            lay, e = k
+            if lay == layer and e not in truth and rec.kind == "prefetch":
+                if self.engine.demote(k):
+                    self.stats.prefetch_demoted += 1
+        self.pump()
+        return cancelled
+
+    # ------------------------------------------------------------- demand --
+    def demand_async(self, layer: int, expert: int,
+                     channel_idx_fn: Callable[[], np.ndarray]) -> tuple:
+        """Locate or issue the transfer for a demanded expert WITHOUT
+        waiting — the caller overlaps other experts' compute with the
+        in-flight DMA and calls ``wait_for`` when the payload is needed.
+
+        ``channel_idx_fn`` lazily produces the true channel index set —
+        only evaluated on a miss (hits reuse the staged slice).  Returns
+        (payload, was_miss)."""
+        k = self.key(layer, expert)
+        res = self._res(layer)
+        if k not in res and k in self._queued:
+            # promoted: the queued prediction is demanded NOW — issue its
+            # predicted channels at demand priority (head of the link,
+            # preempting speculative traffic), not at the backlog's tail
+            req = self._queued.pop(k)
+            payload, rec = self.engine.issue(
+                self.stores[layer], k, req.expert, req.channel_idx,
+                self.clock, kind="demand")
+            res.put(k, payload, ready_t=rec.complete_t, score=req.priority,
+                    prefetch=True)
+            self.stats.prefetch_issued += 1
+            self.stats.prefetch_promoted += 1
+        ent = res.get(k)
+        if ent is not None:
+            return ent.payload, False
+        idx = np.asarray(channel_idx_fn())
+        payload, rec = self.engine.issue(self.stores[layer], k, expert, idx,
+                                         self.clock, kind="demand")
+        res.put(k, payload, ready_t=rec.complete_t)
+        res.peek(k).uses += 1  # consumed on arrival (miss already counted)
+        self.stats.demand_fetches += 1
+        return payload, True
+
+    def wait_for(self, layer: int, expert: int, *,
+                 was_miss: bool = False) -> float:
+        """Block (on the modeled clock) until the expert's transfer has
+        completed; returns the stalled seconds."""
+        k = self.key(layer, expert)
+        ent = self._res(layer).peek(k)
+        rec = self.engine.inflight.get(k)
+        if rec is not None:  # live record: demand preemption may have
+            ready = rec.complete_t  # pushed its start back
+        else:
+            ready = ent.ready_t if ent is not None else self.clock
+        stall = max(0.0, ready - self.clock)
+        if not was_miss:
+            # only prediction-staged entries count toward prefetch recall;
+            # a repeat demand served by an earlier demand fetch is plain
+            # cache reuse
+            if ent is not None and ent.origin_prefetch:
+                if stall > 0.0:
+                    self.stats.residual_waits += 1
+                else:
+                    self.stats.demand_hits += 1
+            else:
+                self.stats.demand_reuse += 1
+        if stall > 0.0:
+            self.clock = ready
+            self.engine.poll(self.clock)
+        self.stats.stall_s += stall
+        self.pump()
+        return stall
+
+    def demand(self, layer: int, expert: int,
+               channel_idx_fn: Callable[[], np.ndarray]) -> tuple:
+        """Blocking demand: (payload, stall_s).  Equivalent to
+        ``demand_async`` immediately followed by ``wait_for``."""
+        payload, was_miss = self.demand_async(layer, expert, channel_idx_fn)
+        stall = self.wait_for(layer, expert, was_miss=was_miss)
+        return payload, stall
+
+    # ---------------------------------------------------------- telemetry --
+    def overlap_efficiency(self) -> float:
+        """Fraction of link busy time hidden under compute."""
+        busy = self.engine.busy_seconds()
+        if busy <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.stats.stall_s / busy)
+
+    def prefetch_precision(self) -> float:
+        """Issued prefetches that were actually consumed."""
+        issued = self.stats.prefetch_issued
+        if issued == 0:
+            return 1.0
+        consumed = sum(r.stats.prefetch_hits for r in self.residency
+                       if r is not None)
+        return min(1.0, consumed / issued)
+
+    def prefetch_recall(self) -> float:
+        """Demand events a prediction had staged, over all demand events
+        (demand-fetch reuse across the batch is cache locality, not
+        prediction — it counts against recall, not for it)."""
+        served = self.stats.demand_hits + self.stats.residual_waits
+        total = (served + self.stats.demand_fetches +
+                 self.stats.demand_reuse)
+        return served / total if total else 1.0
+
+    def reset_stats(self) -> None:
+        self.stats.reset()
+        for r in self.residency:
+            if r is not None:
+                r.reset_stats()

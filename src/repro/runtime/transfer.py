@@ -1,0 +1,218 @@
+"""Double-buffered expert-transfer staging engine (FloE §3.4.2, Fig. 5/7).
+
+Owns every host→device movement the runtime performs.  Functionally each
+``issue`` gathers the requested compact records through
+``ExpertStore.fetch_sparse`` (real ``jax.device_put``); on the *modeled*
+timeline the transfer occupies
+
+  * one of ``num_buffers`` pinned staging buffers (double buffering: while
+    buffer A is on the link, buffer B is being packed for the next
+    transfer; a third concurrent request must wait for a buffer), and
+  * the single host→device link, serially (one PCIe/DMA engine).
+
+so ``start = max(enqueue, link_free, earliest_buffer_free)`` and
+``complete = start + LinkModel.transfer_time(bytes, chunks)``.  Overlap
+with compute falls out of these event times — the scheduler advances a
+simulated clock during compute and only waits (stalls) when a demanded
+transfer has not completed yet.
+
+Chunk coalescing: the compact layout (gate column i ‖ down row i as one
+record) makes *adjacent* masked channels contiguous in host memory, so a
+run of adjacent records needs one DMA descriptor and no packing.  For each
+transfer we compare the pack-then-send chunking (``ceil(n/chunk)`` chunks
++ packing pass) against direct per-run descriptors and model whichever is
+cheaper — scattered masks pack, clustered masks go direct (Fig. 5's
+chunk-doubling generalized).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.offload import ExpertStore, LinkModel
+
+
+def coalesce_runs(channel_idx: np.ndarray) -> List[Tuple[int, int]]:
+    """Sorted channel indices -> maximal (start, length) adjacent runs."""
+    idx = np.asarray(channel_idx)
+    if idx.size == 0:
+        return []
+    splits = np.nonzero(np.diff(idx) != 1)[0] + 1
+    runs = []
+    for part in np.split(idx, splits):
+        runs.append((int(part[0]), int(part.size)))
+    return runs
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    """Per-transfer telemetry (modeled timeline + strategy)."""
+
+    key: Hashable
+    kind: str  # "prefetch" | "demand"
+    nbytes: int
+    chunks: int
+    strategy: str  # "packed" | "direct"
+    enqueue_t: float
+    start_t: float
+    complete_t: float
+    demoted: bool = False  # stale prefetch the router disagreed with
+
+    @property
+    def duration(self) -> float:
+        return self.complete_t - self.start_t
+
+
+class TransferEngine:
+    """Staging-buffer + link timeline over one or more ``ExpertStore``s."""
+
+    def __init__(self, link: Optional[LinkModel] = None, *,
+                 num_buffers: int = 2, chunk_channels: int = 50):
+        assert num_buffers >= 1
+        self.link = link or LinkModel()
+        self.num_buffers = num_buffers
+        self.chunk_channels = max(1, chunk_channels)
+        self._buffer_free = [0.0] * num_buffers
+        self._link_free = 0.0
+        self.inflight: Dict[Hashable, TransferRecord] = {}
+        self.records: List[TransferRecord] = []
+
+    # ------------------------------------------------------------ timeline -
+    def active_count(self, now: float) -> int:
+        """Transfers whose modeled completion is still in the future."""
+        return sum(1 for r in self.inflight.values() if r.complete_t > now)
+
+    def has_capacity(self, now: float) -> bool:
+        return self.active_count(now) < self.num_buffers
+
+    def poll(self, now: float) -> List[TransferRecord]:
+        """Retire transfers completed by ``now`` (frees their buffers)."""
+        done = [k for k, r in self.inflight.items() if r.complete_t <= now]
+        out = [self.inflight.pop(k) for k in done]
+        return out
+
+    def _chunking(self, channel_idx: np.ndarray, nbytes: int
+                  ) -> Tuple[int, str, float]:
+        """(chunks, strategy, duration) minimizing modeled transfer time."""
+        n = len(channel_idx)
+        packed_chunks = max(1, -(-n // self.chunk_channels))
+        t_packed = self.link.transfer_time(nbytes, packed_chunks, pinned=True)
+        runs = coalesce_runs(channel_idx)
+        direct_chunks = sum(max(1, -(-ln // self.chunk_channels))
+                            for _, ln in runs) or 1
+        t_direct = (direct_chunks * self.link.launch_us * 1e-6 +
+                    nbytes / self.link.peak_bw)  # no packing pass
+        if t_direct <= t_packed:
+            return direct_chunks, "direct", t_direct
+        return packed_chunks, "packed", t_packed
+
+    # --------------------------------------------------------------- issue -
+    def issue(self, store: ExpertStore, key: Hashable, expert: int,
+              channel_idx: np.ndarray, now: float, *,
+              kind: str = "prefetch") -> Tuple[tuple, TransferRecord]:
+        """Stage a sparse expert slice; returns (payload, record).
+
+        payload matches the synchronous pipeline's cache payload exactly:
+        ``(channel_idx, gate_cols, down_rows)`` with device-resident
+        arrays, so scheduler-driven decode is bitwise-identical to the
+        synchronous path.
+        """
+        idx = np.asarray(channel_idx)
+        nbytes = int(len(idx) * 2 * store.d_model *
+                     store.records.dtype.itemsize)
+        chunks, strategy, duration = self._chunking(idx, nbytes)
+        # real movement (host gather + device_put) happens here
+        gate_cols, down_rows = store.fetch_sparse(
+            expert, idx, chunk_channels=self.chunk_channels)
+        payload = (idx, gate_cols, down_rows)
+        if kind == "demand":
+            # demand preempts speculative traffic: it enters the link right
+            # after the chunk currently in transit; queued prefetches are
+            # pushed back behind it (they keep their buffers)
+            start, complete = self._preempt_schedule(now, duration)
+        else:
+            b = int(np.argmin(self._buffer_free))
+            start = max(now, self._link_free, self._buffer_free[b])
+            complete = start + duration
+            self._link_free = complete
+            self._buffer_free[b] = complete
+        rec = TransferRecord(key=key, kind=kind, nbytes=nbytes, chunks=chunks,
+                             strategy=strategy, enqueue_t=now, start_t=start,
+                             complete_t=complete)
+        self.inflight[key] = rec
+        self.records.append(rec)
+        return payload, rec
+
+    def _preempt_schedule(self, now: float, duration: float
+                          ) -> Tuple[float, float]:
+        """Link slot for a demand transfer.  Demands are FIFO among
+        themselves (non-preemptible); speculative traffic is preemptible
+        at *chunk* granularity: the demand waits for any in-flight
+        demands, then only for the chunk of the prefetch currently in
+        transit — that prefetch's remaining chunks resume after the
+        demand, and every not-yet-started prefetch queues behind it.
+        The demand path stages through its own bounce buffer, so
+        staging-buffer occupancy does not gate it."""
+        active = [r for r in self.inflight.values() if r.complete_t > now]
+        # serial link, demands first: enter after every in-flight demand
+        start = max([now] + [r.complete_t for r in active
+                             if r.kind == "demand"])
+        # at most one prefetch physically occupies the link at `start`
+        on_link = [r for r in active if r.kind != "demand"
+                   and r.start_t <= start < r.complete_t]
+        if on_link:
+            r = min(on_link, key=lambda r: r.start_t)
+            chunk_len = r.duration / max(r.chunks, 1)
+            remaining = r.complete_t - start
+            wait = min(remaining, chunk_len)
+            start += wait
+            if wait < remaining:  # preempted: its tail resumes after us
+                r.complete_t += duration
+        complete = start + duration
+        pending = sorted((r for r in active
+                          if r.start_t > now and r.kind != "demand"),
+                         key=lambda r: r.start_t)
+        t = max([complete] + [r.complete_t for r in on_link])
+        for r in pending:
+            d = r.duration
+            r.start_t = max(t, r.enqueue_t)
+            r.complete_t = r.start_t + d
+            t = r.complete_t
+        self._link_free = max(t, complete)
+        comps = sorted((r.complete_t for r in active), reverse=True)
+        comps = comps[: self.num_buffers]
+        self._buffer_free = sorted(comps) + \
+            [now] * (self.num_buffers - len(comps))
+        return start, complete
+
+    def demote(self, key: Hashable) -> bool:
+        """Mark an in-flight prefetch stale (router disagreed).  The bytes
+        still move (the DMA was already scheduled); telemetry records the
+        waste so prefetch precision reflects it."""
+        rec = self.inflight.get(key)
+        if rec is not None and not rec.demoted:
+            rec.demoted = True
+            return True
+        return False
+
+    # ----------------------------------------------------------- telemetry -
+    def busy_seconds(self) -> float:
+        return sum(r.duration for r in self.records)
+
+    def wasted_bytes(self) -> int:
+        return sum(r.nbytes for r in self.records if r.demoted)
+
+    def summary(self) -> dict:
+        n = len(self.records)
+        return {
+            "transfers": n,
+            "bytes": sum(r.nbytes for r in self.records),
+            "busy_s": self.busy_seconds(),
+            "demoted": sum(1 for r in self.records if r.demoted),
+            "wasted_bytes": self.wasted_bytes(),
+            "direct_fraction":
+                (sum(1 for r in self.records if r.strategy == "direct") / n)
+                if n else 0.0,
+        }

@@ -4,9 +4,18 @@ Continuous-batching-lite: requests are grouped into fixed-size batches
 (padded prompts, shared KV allocation); decode steps are jitted once per
 (batch, cache_len) shape.  Sampling is greedy or temperature.
 
-The FloE-offloaded path (single-batch, latency-sensitive — the paper's
-regime) lives in repro.core.pipeline; this engine is the resident-weights
-baseline ("Mixtral-GPU" in Fig. 6) and the general serving substrate.
+Two decode paths:
+
+* resident (default) — all weights on device, whole-model jitted decode
+  ("Mixtral-GPU" in FloE Fig. 6), the general serving substrate.
+* offloaded (``offload_thresholds=...``) — expert weights live in host
+  DRAM and move through ``repro.runtime``'s ExpertScheduler: a host
+  layer loop runs real attention + KV cache per layer and serves every
+  MoE FFN via batched scheduler demands, so one staged expert slice is
+  shared by every request in the batch that routed to it, and
+  speculative prefetch (cross-layer + cross-token) overlaps the batch's
+  attention/head compute.  Prefill stays on the resident path (compute-
+  bound; the offloaded regime is decode, FloE §3.1).
 """
 from __future__ import annotations
 
@@ -19,6 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import blocks as blk
+from repro.models import mlp as mlp_lib
+from repro.models import nn
 from repro.models import transformer as tf
 from repro.models.moe import Dist
 
@@ -36,7 +49,9 @@ class Request:
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int = 4,
                  max_len: int = 512, dist: Optional[Dist] = None,
-                 eos_id: int = -1, seed: int = 0):
+                 eos_id: int = -1, seed: int = 0,
+                 offload_thresholds: Optional[np.ndarray] = None,
+                 offload_opts: Optional[dict] = None):
         self.params = params
         self.cfg = cfg
         self.batch = batch_size
@@ -50,7 +65,25 @@ class ServingEngine:
             lambda p, b, s: tf.prefill(p, b, s, cfg, dist))
         self._decode = jax.jit(
             lambda p, t, s: tf.decode_step(p, t, s, cfg, dist))
-        self.stats = {"tokens": 0, "steps": 0, "wall_s": 0.0}
+        self.stats = {"tokens": 0, "steps": 0, "wall_s": 0.0,
+                      "stall_s": 0.0, "compute_s": 0.0}
+
+        # ------------------------------------------- offloaded MoE mode ---
+        self.floe = None
+        if offload_thresholds is not None:
+            if not cfg.num_experts:
+                raise ValueError("offloaded mode needs an MoE model")
+            for pattern, _ in cfg.segments():
+                bad = [k for k in pattern if k not in ("dense", "moe")]
+                if bad:
+                    raise ValueError(
+                        f"offloaded serving supports dense/moe stacks, "
+                        f"found {bad}")
+            from repro.core.pipeline import FloEPipeline
+            opts = dict(use_runtime=True, batched_demand=True)
+            opts.update(offload_opts or {})
+            self.floe = FloEPipeline(params, cfg,
+                                     thresholds=offload_thresholds, **opts)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -92,6 +125,8 @@ class ServingEngine:
         return self.completed
 
     def _serve_batch(self, reqs: list[Request]):
+        if self.floe is not None:
+            return self._serve_batch_offloaded(reqs)
         cfg = self.cfg
         toks = self._pad_prompts(reqs)
         n_active = len(reqs)
@@ -123,5 +158,107 @@ class ServingEngine:
         for r in reqs:
             r.done = True
 
+    # ------------------------------------------------- offloaded decode ---
+    def _serve_batch_offloaded(self, reqs: list[Request]):
+        """Host-driven layer loop: real attention + KV caches per layer,
+        MoE FFNs through the runtime scheduler with batch-shared expert
+        slices.  Batch width is the number of live requests (padding rows
+        would trigger spurious expert fetches)."""
+        from repro.core.pipeline import StepMetrics
+        cfg = self.cfg
+        floe = self.floe
+        n = len(reqs)
+        toks = self._pad_prompts(reqs)[:n]
+        temps = np.array([r.temperature for r in reqs], np.float32)
+        states = [blk.init_block_state(
+            "moe" if "moe" in layer else "dense", cfg, n, self.max_len,
+            jnp.float32) for layer in floe.layers]
+
+        t0 = time.perf_counter()
+        # prefill on the resident path (per-layer host loop fills KV)
+        x = tf._embed_inputs(self.params, {"tokens": jnp.asarray(toks)}, cfg)
+        for li, layer in enumerate(floe.layers):
+            kind = "moe" if "moe" in layer else "dense"
+            x, states[li] = blk.block_prefill(layer, kind, x, states[li],
+                                              cfg, None)
+        logits = tf._head(self.params, x[:, -1:, :], cfg)
+        cur = self._sample(logits[:, -1], temps)
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if not r.done and len(r.output) < r.max_new_tokens:
+                    r.output.append(int(cur[i]))
+                    if cur[i] == self.eos:
+                        r.done = True
+                elif len(r.output) >= r.max_new_tokens:
+                    r.done = True
+            if all(r.done for r in reqs):
+                break
+            metrics = StepMetrics()
+            x = tf._embed_inputs(self.params,
+                                 {"tokens": jnp.asarray(cur[:, None])}, cfg)
+            x = self._decode_offloaded_step(x, states, metrics)
+            logits = tf._head(self.params, x, cfg)
+            cur = self._sample(logits[:, 0], temps)
+            floe.metrics.append(metrics)
+            self.stats["steps"] += 1
+            self.stats["tokens"] += n
+            self.stats["stall_s"] += metrics.stall_s
+            self.stats["compute_s"] += metrics.compute_s
+        self.stats["wall_s"] += time.perf_counter() - t0
+        for r in reqs:
+            r.done = True
+
+    def _decode_offloaded_step(self, x: jax.Array, states: list,
+                               metrics) -> jax.Array:
+        """One decode step over (B, 1, D) through the runtime scheduler."""
+        cfg = self.cfg
+        floe = self.floe
+        sched = floe.sched
+        moe_layers = set(floe._moe_layer_indices())
+        h = x
+        h_in = h[:, 0, :]
+        covs: list = []
+
+        for li, layer in enumerate(floe.layers):
+            # cross-layer speculative prefetch from the live hidden state
+            if floe.prefetch:
+                floe.speculate(h[:, 0, :], li)
+
+            # real attention with this layer's KV cache
+            hn = nn.rms_norm(h, layer["attn_norm"]["scale"], cfg.norm_eps)
+            a, states[li] = attn_lib.decode_attention(
+                layer["attn"], hn, states[li], cfg, None)
+            h = h + a
+            t_attn = floe.device.matmul_time(
+                2 * h.shape[0] * 4 * cfg.d_model * cfg.num_heads *
+                cfg.head_dim,
+                4 * cfg.d_model * cfg.num_heads * cfg.head_dim * 2)
+            metrics.compute_s += t_attn
+            sched.advance(t_attn)
+
+            hn = nn.rms_norm(h, layer["mlp_norm"]["scale"], cfg.norm_eps)
+            if li in moe_layers:
+                hn2 = hn[:, 0, :]
+                gates, eids, _ = floe._route(hn2, li)
+                sched.reconcile(li, np.unique(eids.reshape(-1)).tolist())
+                y = floe.moe_apply_batched(hn2, li, gates, eids, metrics,
+                                           covs)
+                h = h + y[:, None, :].astype(h.dtype)
+            else:
+                h = h + mlp_lib.mlp(layer["mlp"], hn, cfg)
+
+        # cross-token speculation overlaps the LM head + sampling
+        floe.speculate_cross_token(h_in)
+        t_head = floe._head_time(h.shape[0])
+        metrics.compute_s += t_head
+        sched.advance(t_head)
+        metrics.coverage = float(np.mean(covs)) if covs else 1.0
+        return h
+
     def tokens_per_second(self) -> float:
         return self.stats["tokens"] / max(self.stats["wall_s"], 1e-9)
+
+    def modeled_stall_per_token(self) -> float:
+        return self.stats["stall_s"] / max(self.stats["tokens"], 1)

@@ -3,3 +3,7 @@
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -19,8 +19,11 @@ from repro.configs import get_config
 from repro.models import moe, transformer as tf
 from repro.launch.train import make_dist
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+if hasattr(jax.sharding, "AxisType"):  # jax >= 0.5
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+else:
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
 dist = moe.Dist(mesh=mesh, batch_axes=("data",), batch_sharded=True)
 
 # --- sharded MoE == local oracle (fwd + grads) ---
