@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig7    -> bench_transfer        (compact layout + chunk-size curve)
   headline-> bench_compression     (9.3x per-expert, VRAM footprint)
   prefetch-> bench_prefetch        (runtime scheduler: overlap, stall/token)
+  serving -> bench_serving         (SLO attainment: controller vs static,
+                                    trained-predictor prefetch recall)
   roofline-> roofline              (dry-run derived terms, if present)
 """
 from __future__ import annotations
@@ -26,8 +28,8 @@ def main() -> None:
 
     from benchmarks import (bench_compression, bench_e2e_decode,
                             bench_predictor, bench_prefetch,
-                            bench_sensitivity, bench_sparse_kernel,
-                            bench_transfer, roofline)
+                            bench_sensitivity, bench_serving,
+                            bench_sparse_kernel, bench_transfer, roofline)
 
     suites = [
         ("headline", bench_compression.run),
@@ -37,6 +39,7 @@ def main() -> None:
         ("fig4", bench_predictor.run),
         ("fig6", bench_e2e_decode.run),
         ("prefetch", bench_prefetch.run),
+        ("serving", bench_serving.run),
         ("roofline", roofline.run),
     ]
     rows: list = []

@@ -75,6 +75,9 @@ def paper_scaled_models(cfg: ModelConfig) -> tuple[DeviceModel, LinkModel]:
     return device, link
 
 
+_UNSET = object()  # "use the pipeline's own predictor" sentinel
+
+
 @dataclasses.dataclass
 class StepMetrics:
     compute_s: float = 0.0
@@ -103,6 +106,7 @@ class FloEPipeline:
                  cancel_stale: bool = True,
                  cross_token: bool = True,
                  batched_demand: bool = False,
+                 inter_residual: bool = False,
                  pinned_experts: tuple = ()):  # ((layer, expert), ...)
         self.cfg = cfg
         self.mode = mode
@@ -110,6 +114,12 @@ class FloEPipeline:
         self.link = link or LinkModel()
         self.device = device or DeviceModel()
         self.inter = inter_predictors
+        # inter_residual: trained predictors are residual corrections over
+        # the reuse (router-on-proxy) logits — see predictor.py.  Either a
+        # bool (all layers) or a SET of layer indices, so online-trained
+        # residual probes can coexist with user-supplied standalone ones.
+        self.inter_residual = inter_residual
+        self.last_pred: dict = {}  # layer -> (eids, conf) of depth-1 preds
         self.layers = _unstack_layers(params, cfg)
         self.embedding = params["embedding"]
         self.final_norm = params["final_norm"]
@@ -175,20 +185,42 @@ class FloEPipeline:
         v, mask = floe_layer.up_and_mask(h, qt, w.thresholds[e])
         return v, np.asarray(mask.any(axis=0))
 
-    def _predict_next(self, h: jax.Array, li_next: int):
+    def _predict_next(self, h: jax.Array, li_next: int,
+                      probe=_UNSET, residual: bool = False):
         """(expert ids, predicted channel masks, confidence) for li_next.
 
-        Confidence is the prefetch priority signal: the inter-predictor's
-        per-expert sigmoid (multi-hot probability), or the reused router's
-        softmax mass, averaged over the batch."""
-        if self.inter is not None and self.inter[li_next] is not None:
-            logits = predictor.inter_logits(self.inter[li_next], h)
+        Confidence is the prefetch priority signal: the predictor logits'
+        softmax mass, or the reused router's softmax mass, averaged over
+        the batch.  By default the pipeline's own per-layer predictor is
+        used (residual per ``inter_residual``); an explicit ``probe``
+        (possibly None → pure reuse fallback) lets callers with their own
+        predictor banks — the serving controller's cross-token bank —
+        share this exact code path."""
+        if probe is _UNSET:
+            probe = self.inter[li_next] if self.inter is not None else None
+            ir = self.inter_residual
+            residual = (li_next in ir if isinstance(ir, (set, frozenset))
+                        else bool(ir))
+        if probe is not None:
+            if residual:
+                base = (h.astype(jnp.float32) @
+                        self.layers[li_next]["moe"]["router"].astype(
+                            jnp.float32))
+                logits = predictor.residual_inter_logits(probe, h, base)
+            else:
+                logits = predictor.inter_logits(probe, h)
             eids = np.asarray(jax.lax.top_k(
                 logits, self.cfg.num_experts_per_tok)[1])
-            conf_all = np.asarray(jax.nn.sigmoid(logits)).mean(axis=0)
+            # softmax mass, not per-expert sigmoid: the priority queue
+            # needs DIVERSE relative confidences (saturated sigmoids make
+            # every prefetch rank equal), and it matches the fallback's
+            # semantics so calibration treats both sources alike
+            conf_all = np.asarray(jax.nn.softmax(logits, axis=-1)).mean(
+                axis=0)
         else:  # fallback: today's router reused (high hidden-state similarity)
             _, eids, probs = self._route(h, li_next)
             conf_all = probs.mean(axis=0)
+        self._last_row_eids = eids  # (B, k) pre-union, for per-row grading
         eids = np.unique(eids.reshape(-1))
         masks, conf = {}, {}
         for e in eids.tolist():
@@ -352,6 +384,9 @@ class FloEPipeline:
             if nxt not in moe_layers:
                 continue
             eids, masks, conf = self._predict_next(h2d, nxt)
+            if depth == 1:  # graded against truth at reconcile time
+                self.last_pred[nxt] = (list(eids), dict(conf),
+                                       np.asarray(self._last_row_eids))
             for e in eids:
                 sched.enqueue_prefetch(nxt, e, np.nonzero(masks[e])[0],
                                        conf[e], depth)

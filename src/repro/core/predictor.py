@@ -45,6 +45,26 @@ def inter_logits(params: dict, h: jax.Array) -> jax.Array:
     return x @ params["p_w2"] + params["p_b2"]
 
 
+def residual_inter_logits(params: dict, h: jax.Array,
+                          base_logits: jax.Array) -> jax.Array:
+    """Trained correction on top of router-reuse logits.
+
+    Online serving trains the inter-predictor as a *residual* over the
+    reuse fallback (today's router applied to the proxy hidden state):
+    ``logits = base + probe(h)``.  Initialized near zero the probe starts
+    at exactly the fallback's quality and can only move toward the
+    observed routing it is trained on — the trained path dominates the
+    fallback once enough tokens have been seen."""
+    return base_logits.astype(jnp.float32) + inter_logits(params, h)
+
+
+def multi_hot(expert_ids, num_experts: int) -> jax.Array:
+    """(T, k) int expert ids -> (T, E) float32 multi-hot targets."""
+    eids = jnp.asarray(expert_ids)
+    oh = jax.nn.one_hot(eids, num_experts, dtype=jnp.float32)
+    return jnp.clip(oh.sum(axis=-2), 0.0, 1.0)
+
+
 def inter_predict_topk(params: dict, h: jax.Array, k: int) -> jax.Array:
     """Predicted expert ids for the next layer. h (T, D) -> (T, k) i32."""
     return jax.lax.top_k(inter_logits(params, h), k)[1].astype(jnp.int32)
@@ -57,16 +77,15 @@ def _bce(logits, multi_hot):
 
 
 @partial(jax.jit, static_argnames=("steps", "lr"))
-def train_inter_predictor(params: dict, h: jax.Array, targets: jax.Array,
-                          steps: int = 200, lr: float = 3e-3) -> dict:
-    """Fit on a trace. h (T, D) hidden states of layer i, targets (T, E)
-    multi-hot expert selections of layer i+1. Plain Adam, full-batch."""
+def _train_inter(params: dict, h: jax.Array, targets: jax.Array,
+                 base: jax.Array, steps: int, lr: float) -> dict:
     m = jax.tree.map(jnp.zeros_like, params)
     v = jax.tree.map(jnp.zeros_like, params)
 
     def step(carry, i):
         params, m, v = carry
-        g = jax.grad(lambda p: _bce(inter_logits(p, h), targets))(params)
+        g = jax.grad(lambda p: _bce(base + inter_logits(p, h), targets))(
+            params)
         m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
         v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
         t = i + 1
@@ -80,6 +99,67 @@ def train_inter_predictor(params: dict, h: jax.Array, targets: jax.Array,
     (params, _, _), _ = jax.lax.scan(step, (params, m, v),
                                      jnp.arange(steps, dtype=jnp.float32))
     return params
+
+
+def train_inter_predictor(params: dict, h: jax.Array, targets: jax.Array,
+                          steps: int = 200, lr: float = 3e-3,
+                          base_logits=None) -> dict:
+    """Fit on a trace. h (T, D) hidden states of layer i, targets (T, E)
+    multi-hot expert selections of layer i+1. Plain Adam, full-batch.
+
+    With ``base_logits`` (T, E) the probe is trained as a residual on top
+    of those fixed logits (see ``residual_inter_logits``)."""
+    if base_logits is None:
+        base = jnp.zeros(targets.shape, jnp.float32)
+    else:
+        base = jnp.asarray(base_logits, jnp.float32)
+    return _train_inter(params, h, targets, base, steps, lr)
+
+
+class ConfidenceCalibrator:
+    """Running calibration of predictor confidence against realized hits.
+
+    ``update`` consumes (confidence, hit) pairs from reconciliation time —
+    did the true router select the expert whose prefetch this confidence
+    justified?  ``scale`` is the ratio of realized precision to mean
+    claimed confidence (EMA-smoothed); applying it makes an overconfident
+    predictor's speculation sort honestly against demand traffic and makes
+    the ``weighted`` residency policy evict by real, not claimed, value.
+    The instance is callable so it can plug directly into
+    ``ExpertScheduler.calibrate``.
+    """
+
+    def __init__(self, beta: float = 0.98, floor: float = 0.05):
+        self.beta = beta
+        self.floor = floor
+        self._conf = 0.0  # EMA of claimed confidence
+        self._hit = 0.0  # EMA of realized outcome
+        self._weight = 0.0  # EMA normalizer (debiasing)
+        self.samples = 0
+
+    def update(self, confidence: float, hit: bool) -> None:
+        b = self.beta
+        self._conf = b * self._conf + (1.0 - b) * float(confidence)
+        self._hit = b * self._hit + (1.0 - b) * (1.0 if hit else 0.0)
+        self._weight = b * self._weight + (1.0 - b)
+        self.samples += 1
+
+    @property
+    def precision(self) -> float:
+        return self._hit / self._weight if self._weight > 0 else 1.0
+
+    @property
+    def scale(self) -> float:
+        """Capped at 1.0: calibration only ever DEMOTES speculation whose
+        claimed confidence exceeds its realized precision — boosting an
+        underconfident predictor would let speculative traffic outrank
+        the depth discount without evidence about ordering."""
+        if self._weight <= 0 or self._conf <= 0:
+            return 1.0
+        return min(1.0, max(self.floor, self._hit / self._conf))
+
+    def __call__(self, confidence: float) -> float:
+        return float(min(1.0, max(0.0, confidence * self.scale)))
 
 
 def recall_at_k(pred_ids: jax.Array, true_ids: jax.Array) -> jax.Array:

@@ -4,10 +4,14 @@
         --reduced --mode floe --requests 8 --max_new 16
 
 Modes:
-  resident — all weights on device, batched engine (repro.serving)
-  naive    — whole-expert fp16 offload per miss (baseline)
-  floe     — the paper's pipeline: hybrid compression + dual predictors +
-             prefetch (repro.core.pipeline)
+  resident   — all weights on device, batched engine (repro.serving)
+  naive      — whole-expert fp16 offload per miss (baseline)
+  floe       — the paper's pipeline: hybrid compression + dual predictors +
+               prefetch (repro.core.pipeline)
+  floe-serve — SLO-aware continuous-batching controller over the runtime
+               scheduler (repro.serving.controller): Poisson arrivals with
+               per-request SLOs, online-trained inter-predictor, per-request
+               TTFT/TPOT + SLO attainment report
 """
 from __future__ import annotations
 
@@ -25,7 +29,8 @@ from repro.models import transformer as tf
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
-    ap.add_argument("--mode", choices=["resident", "naive", "floe"],
+    ap.add_argument("--mode",
+                    choices=["resident", "naive", "floe", "floe-serve"],
                     default="floe")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--layers", type=int, default=4)
@@ -35,6 +40,13 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max_new", type=int, default=16)
     ap.add_argument("--cache_slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2,
+                    help="floe-serve: concurrent batch slots")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="floe-serve: mean arrivals per modeled second")
+    ap.add_argument("--slo_ms", type=float, default=3000.0,
+                    help="floe-serve: per-request latency SLO")
+    ap.add_argument("--policy", choices=["slo", "static"], default="slo")
     ap.add_argument("--ckpt", default="", help="load params instead of init")
     args = ap.parse_args()
 
@@ -84,6 +96,43 @@ def main():
             thr[li, e] = float(sparsify.threshold_from_samples(
                 jnp.abs(u), cfg.floe.sparsity))
     device, link = paper_scaled_models(cfg)
+
+    if args.mode == "floe-serve":
+        from repro.serving import ServingController, SLORequest
+        ctl = ServingController(
+            params, cfg, thresholds=thr, slots=args.slots, max_len=256,
+            policy=args.policy, online_train=True, train_every_tokens=16,
+            train_window=64, min_train_rows=32, train_steps=40,
+            offload_opts=dict(device=device, link=link,
+                              cache_slots=args.cache_slots))
+        rng = np.random.default_rng(0)
+        t = 0.0
+        for i in range(args.requests):
+            t += float(rng.exponential(1.0 / max(args.rate, 1e-6)))
+            ctl.submit(SLORequest(
+                i, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=args.max_new, slo_ms=args.slo_ms,
+                arrival_t=t))
+        ctl.run()
+        rep = ctl.report()
+        for r in sorted(ctl.completed, key=lambda r: r.uid):
+            print(f"req {r.uid}: ttft={1e3 * r.ttft:7.1f}ms "
+                  f"tpot={1e3 * (r.tpot or 0.0):6.1f}ms "
+                  f"deadline={'MET' if r.attained else 'MISSED'} "
+                  f"preempted={r.preemptions}")
+        for r in ctl.rejected:
+            print(f"req {r.uid}: REJECTED (SLO infeasible at admission)")
+        print(f"policy={rep['policy']}  slo_attainment={rep['slo_attainment']:.0%}"
+              f"  tokens/s={rep['tokens_per_s']:.1f} (modeled, busy-time)")
+        print(f"preemptions={rep['preemptions']}  rejected={rep['rejected']}"
+              f"  swaps={rep['swaps_in']}/{rep['swaps_out']}"
+              f"  topups={rep['demand_topups']}")
+        print(f"prefetch recall={rep['prefetch_recall']:.2f} "
+              f"precision={rep['prefetch_precision']:.2f}  "
+              f"train_rounds={rep['train_rounds']}  "
+              f"calibration={rep['calibration_scale']:.2f}")
+        return
+
     pipe = FloEPipeline(params, cfg, thresholds=thr,
                         cache_slots=args.cache_slots, mode=args.mode,
                         device=device, link=link)

@@ -54,9 +54,15 @@ class ResidencyStats:
 class Entry:
     payload: Any
     ready_t: float = 0.0  # modeled time the transfer completes
-    score: float = 0.0  # predictor confidence at insertion
+    score: float = 0.0  # predictor confidence at insertion (calibrated)
+    raw_score: float = 0.0  # pre-calibration confidence: rescoring under a
+    #                         NEW calibration scale starts from this, so
+    #                         scales never compound across rescore calls
     prefetch: bool = False  # True until first consumption
     origin_prefetch: bool = False  # staged by prediction (never cleared)
+    predicted: bool = False  # a LIVE prediction re-named this entry since
+    #                          its last consumption (recall credit even
+    #                          when the bytes never had to move again)
     uses: int = 0
 
 
@@ -107,12 +113,16 @@ class ResidencyManager:
 
     # ------------------------------------------------------------- insert --
     def put(self, key: Hashable, payload: Any, *, ready_t: float = 0.0,
-            score: float = 0.0, prefetch: bool = False) -> None:
+            score: float = 0.0, prefetch: bool = False,
+            raw_score: Optional[float] = None) -> None:
+        if raw_score is None:
+            raw_score = score
         if key in self._slots:
             ent = self._slots[key]
             ent.payload = payload
             ent.ready_t = min(ent.ready_t, ready_t)
             ent.score = max(ent.score, score)
+            ent.raw_score = max(ent.raw_score, raw_score)
             ent.origin_prefetch = ent.origin_prefetch or prefetch
             self._slots.move_to_end(key)
             return
@@ -123,7 +133,8 @@ class ResidencyManager:
             del self._slots[victim]
             self.stats.evictions += 1
         self._slots[key] = Entry(payload, ready_t=ready_t, score=score,
-                                 prefetch=prefetch, origin_prefetch=prefetch)
+                                 raw_score=raw_score, prefetch=prefetch,
+                                 origin_prefetch=prefetch)
         self.stats.insertions += 1
 
     def drop(self, key: Hashable) -> bool:
@@ -132,6 +143,19 @@ class ResidencyManager:
             del self._slots[key]
             return True
         return False
+
+    def rescore(self, key: Hashable, score: float) -> bool:
+        """Replace an entry's predictor score in place (no recency touch).
+
+        The serving controller calls this when its confidence calibration
+        shifts, so the ``weighted`` eviction policy ranks already-staged
+        speculation by the *current* calibrated confidence rather than the
+        confidence at insertion time."""
+        ent = self._slots.get(key)
+        if ent is None:
+            return False
+        ent.score = float(score)
+        return True
 
     def pin(self, key: Hashable) -> None:
         self.pinned.add(key)

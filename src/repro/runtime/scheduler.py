@@ -37,6 +37,7 @@ import heapq
 import itertools
 from typing import Callable, Dict, Hashable, List, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.offload import ExpertStore
@@ -55,6 +56,8 @@ class SchedulerStats:
     demand_hits: int = 0  # demanded; a PREFETCH had staged it, zero wait
     residual_waits: int = 0  # demanded; a prefetch staged it, still in flight
     demand_reuse: int = 0  # demanded; an earlier DEMAND had staged it
+    demand_topups: int = 0  # staged slice lacked channels; delta fetched
+    topup_channels: int = 0  # channels moved by top-up fetches
     stall_s: float = 0.0
 
     def reset(self) -> None:
@@ -67,8 +70,9 @@ class PrefetchRequest:
     layer: int
     expert: int
     channel_idx: np.ndarray
-    priority: float
+    priority: float  # calibrated confidence x depth discount
     depth: int  # 1 = next layer, 2 = layer after, ...
+    raw_priority: float = 0.0  # pre-calibration confidence x discount
 
 
 class ExpertScheduler:
@@ -79,7 +83,8 @@ class ExpertScheduler:
                  engine: TransferEngine, *,
                  lookahead: int = 2,
                  depth_discount: float = 0.5,
-                 cancel_stale: bool = True):
+                 cancel_stale: bool = True,
+                 calibrate: Optional[Callable[[float], float]] = None):
         assert lookahead >= 1
         self.stores = list(stores)
         self.residency = list(residency)
@@ -87,10 +92,19 @@ class ExpertScheduler:
         self.lookahead = lookahead
         self.depth_discount = depth_discount
         self.cancel_stale = cancel_stale
+        # Optional confidence calibration (trained-predictor control plane):
+        # maps a raw predictor confidence to a calibrated one before it is
+        # used as a prefetch priority / residency score.  The serving
+        # controller installs a running precision-based calibrator here.
+        self.calibrate = calibrate
         self.clock = 0.0
         self.stats = SchedulerStats()
         self._queue: List[tuple] = []  # (-priority, seq, PrefetchRequest)
         self._queued: Dict[Hashable, PrefetchRequest] = {}
+        # pending top-up completion per key: consulted by wait_for even if
+        # the residency entry was evicted between demand_union and the wait
+        # (the top-up's inflight record is under its own compound key)
+        self._topup_ready: Dict[Hashable, float] = {}
         self._seq = itertools.count()
 
     # ------------------------------------------------------------ helpers --
@@ -115,11 +129,21 @@ class ExpertScheduler:
                          channel_idx: np.ndarray, confidence: float,
                          depth: int = 1) -> None:
         k = self.key(layer, expert)
-        if k in self.engine.inflight:
+        if (k in self.engine.inflight or
+                (self.residency[layer] is not None and k in self._res(layer))):
+            # already staged / in flight: no new transfer, but the live
+            # prediction still covers an upcoming demand — mark the entry
+            # so a hit credits prediction recall, not cache locality
+            ent = (self._res(layer).peek(k)
+                   if self.residency[layer] is not None else None)
+            if ent is not None:
+                ent.predicted = True
             return
-        if self.residency[layer] is not None and k in self._res(layer):
-            return
-        prio = float(confidence) * self.depth_discount ** max(depth - 1, 0)
+        discount = self.depth_discount ** max(depth - 1, 0)
+        raw_prio = float(confidence) * discount
+        if self.calibrate is not None:
+            confidence = self.calibrate(float(confidence))
+        prio = float(confidence) * discount
         if k in self._queued:
             # fresher prediction for a still-queued request: promote its
             # priority (stale heap entry is lazily invalidated); a weaker
@@ -127,12 +151,12 @@ class ExpertScheduler:
             if prio <= self._queued[k].priority:
                 return
             req = PrefetchRequest(layer, expert, np.asarray(channel_idx),
-                                  prio, depth)
+                                  prio, depth, raw_prio)
             heapq.heappush(self._queue, (-prio, next(self._seq), req))
             self._queued[k] = req
             return
         req = PrefetchRequest(layer, expert, np.asarray(channel_idx),
-                              prio, depth)
+                              prio, depth, raw_prio)
         heapq.heappush(self._queue, (-prio, next(self._seq), req))
         self._queued[k] = req
         self.stats.prefetch_enqueued += 1
@@ -154,7 +178,7 @@ class ExpertScheduler:
             self.clock, kind="prefetch")
         res = self._res(req.layer)
         res.put(k, payload, ready_t=rec.complete_t, score=req.priority,
-                prefetch=True)
+                raw_score=req.raw_priority, prefetch=True)
         self.stats.prefetch_issued += 1
         return res.peek(k)
 
@@ -172,14 +196,46 @@ class ExpertScheduler:
                 cancelled += 1
                 self.stats.prefetch_cancelled += 1
         for k, rec in self.engine.inflight.items():
-            lay, e = k
-            if lay == layer and e not in truth and rec.kind == "prefetch":
+            if rec.kind != "prefetch":
+                continue  # demand / top-up traffic (compound keys) is
+            lay, e = k  # never speculative, so never demoted
+            if lay == layer and e not in truth:
                 if self.engine.demote(k):
                     self.stats.prefetch_demoted += 1
         self.pump()
         return cancelled
 
     # ------------------------------------------------------------- demand --
+    def _promote_queued(self, layer: int, k: Hashable,
+                        extra_idx: Optional[np.ndarray] = None) -> None:
+        """A queued prediction is demanded NOW — issue its predicted
+        channels (plus ``extra_idx`` true channels, if given) at demand
+        priority: head of the link, preempting speculative traffic, not
+        at the backlog's tail."""
+        req = self._queued.pop(k)
+        idx = (req.channel_idx if extra_idx is None
+               else np.union1d(req.channel_idx, extra_idx))
+        payload, rec = self.engine.issue(
+            self.stores[layer], k, req.expert, idx, self.clock,
+            kind="demand")
+        self._res(layer).put(k, payload, ready_t=rec.complete_t,
+                             score=req.priority,
+                             raw_score=req.raw_priority, prefetch=True)
+        self.stats.prefetch_issued += 1
+        self.stats.prefetch_promoted += 1
+
+    def _demand_fetch(self, layer: int, k: Hashable, expert: int,
+                      idx: np.ndarray) -> tuple:
+        """Cold miss: synchronous demand fetch of the true channels."""
+        payload, rec = self.engine.issue(self.stores[layer], k, expert,
+                                         np.asarray(idx), self.clock,
+                                         kind="demand")
+        res = self._res(layer)
+        res.put(k, payload, ready_t=rec.complete_t)
+        res.peek(k).uses += 1  # consumed on arrival (miss already counted)
+        self.stats.demand_fetches += 1
+        return payload
+
     def demand_async(self, layer: int, expert: int,
                      channel_idx_fn: Callable[[], np.ndarray]) -> tuple:
         """Locate or issue the transfer for a demanded expert WITHOUT
@@ -192,27 +248,12 @@ class ExpertScheduler:
         k = self.key(layer, expert)
         res = self._res(layer)
         if k not in res and k in self._queued:
-            # promoted: the queued prediction is demanded NOW — issue its
-            # predicted channels at demand priority (head of the link,
-            # preempting speculative traffic), not at the backlog's tail
-            req = self._queued.pop(k)
-            payload, rec = self.engine.issue(
-                self.stores[layer], k, req.expert, req.channel_idx,
-                self.clock, kind="demand")
-            res.put(k, payload, ready_t=rec.complete_t, score=req.priority,
-                    prefetch=True)
-            self.stats.prefetch_issued += 1
-            self.stats.prefetch_promoted += 1
+            self._promote_queued(layer, k)
         ent = res.get(k)
         if ent is not None:
             return ent.payload, False
-        idx = np.asarray(channel_idx_fn())
-        payload, rec = self.engine.issue(self.stores[layer], k, expert, idx,
-                                         self.clock, kind="demand")
-        res.put(k, payload, ready_t=rec.complete_t)
-        res.peek(k).uses += 1  # consumed on arrival (miss already counted)
-        self.stats.demand_fetches += 1
-        return payload, True
+        return self._demand_fetch(layer, k, expert,
+                                  channel_idx_fn()), True
 
     def wait_for(self, layer: int, expert: int, *,
                  was_miss: bool = False) -> float:
@@ -223,20 +264,28 @@ class ExpertScheduler:
         rec = self.engine.inflight.get(k)
         if rec is not None:  # live record: demand preemption may have
             ready = rec.complete_t  # pushed its start back
+            if ent is not None:  # a top-up may complete even later
+                ready = max(ready, ent.ready_t)
         else:
             ready = ent.ready_t if ent is not None else self.clock
+        topup = self._topup_ready.pop(k, None)
+        if topup is not None:  # survives eviction of the entry itself
+            ready = max(ready, topup)
         stall = max(0.0, ready - self.clock)
         if not was_miss:
-            # only prediction-staged entries count toward prefetch recall;
-            # a repeat demand served by an earlier demand fetch is plain
-            # cache reuse
-            if ent is not None and ent.origin_prefetch:
+            # prediction-covered demands count toward prefetch recall:
+            # either a prediction STAGED the entry (origin_prefetch) or a
+            # live prediction re-named an already-staged one (predicted).
+            # A repeat demand nothing predicted is plain cache reuse.
+            if ent is not None and (ent.origin_prefetch or ent.predicted):
                 if stall > 0.0:
                     self.stats.residual_waits += 1
                 else:
                     self.stats.demand_hits += 1
             else:
                 self.stats.demand_reuse += 1
+        if ent is not None:
+            ent.predicted = False  # consume the prediction mark
         if stall > 0.0:
             self.clock = ready
             self.engine.poll(self.clock)
@@ -251,6 +300,56 @@ class ExpertScheduler:
         payload, was_miss = self.demand_async(layer, expert, channel_idx_fn)
         stall = self.wait_for(layer, expert, was_miss=was_miss)
         return payload, stall
+
+    def demand_union(self, layer: int, expert: int,
+                     need_idx: np.ndarray) -> tuple:
+        """Coverage-guaranteeing demand for a *union* channel set.
+
+        The serving controller demands each routed expert once per layer
+        with the union of its tokens' true channel masks.  Unlike
+        ``demand_async`` — which reuses whatever slice happens to be staged
+        and silently drops channels the stale slice lacks — this path
+        compares the staged channel set against ``need_idx`` and issues a
+        *delta* top-up fetch for only the missing channels, merging the
+        payloads.  The returned slice therefore always covers ``need_idx``:
+        per-request outputs become independent of cache history and batch
+        composition (the bitwise swap-in conformance guarantee), and
+        coverage loss can only come from prediction, never staleness.
+
+        Returns (payload, was_miss) like ``demand_async``; call
+        ``wait_for`` afterwards (top-up completion times are folded into
+        the entry's ``ready_t``).
+        """
+        k = self.key(layer, expert)
+        res = self._res(layer)
+        need_idx = np.asarray(need_idx)
+        if k not in res and k in self._queued:
+            # queued prediction demanded NOW: fetch the union of its
+            # predicted channels and the truth at demand priority
+            self._promote_queued(layer, k, extra_idx=need_idx)
+        ent = res.get(k)
+        if ent is None:
+            return self._demand_fetch(layer, k, expert, need_idx), True
+        staged_idx = ent.payload[0]
+        missing = np.setdiff1d(need_idx, staged_idx)
+        if missing.size == 0:
+            return ent.payload, False
+        # partial hit: top up the staged slice with the missing channels
+        (m_idx, m_gate, m_down), rec = self.engine.issue(
+            self.stores[layer], (k, "topup", next(self._seq)), expert,
+            missing, self.clock, kind="demand")
+        merged_idx = np.concatenate([staged_idx, m_idx])
+        order = np.argsort(merged_idx, kind="stable")
+        _, s_gate, s_down = ent.payload
+        merged_gate = jnp.concatenate([s_gate, m_gate], axis=0)[order]
+        merged_down = jnp.concatenate([s_down, m_down], axis=0)[order]
+        ent.payload = (merged_idx[order], merged_gate, merged_down)
+        ent.ready_t = max(ent.ready_t, rec.complete_t)
+        self._topup_ready[k] = max(self._topup_ready.get(k, 0.0),
+                                   rec.complete_t)
+        self.stats.demand_topups += 1
+        self.stats.topup_channels += int(missing.size)
+        return ent.payload, False
 
     # ---------------------------------------------------------- telemetry --
     def overlap_efficiency(self) -> float:
@@ -270,9 +369,10 @@ class ExpertScheduler:
         return min(1.0, consumed / issued)
 
     def prefetch_recall(self) -> float:
-        """Demand events a prediction had staged, over all demand events
-        (demand-fetch reuse across the batch is cache locality, not
-        prediction — it counts against recall, not for it)."""
+        """Demand events a prediction covered (staged by prediction, or
+        already staged AND re-named by a live prediction), over all demand
+        events.  Unpredicted demand-fetch reuse is cache locality — it
+        counts against recall, not for it."""
         served = self.stats.demand_hits + self.stats.residual_waits
         total = (served + self.stats.demand_fetches +
                  self.stats.demand_reuse)

@@ -1,3 +1,6 @@
+from repro.serving.controller import (ServingController, SLORequest,
+                                      UnionDemandTracker)
 from repro.serving.engine import Request, ServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "ServingController", "SLORequest",
+           "UnionDemandTracker"]

@@ -1,0 +1,895 @@
+"""SLO-aware continuous-batching serving controller (the control plane).
+
+The step from "decode loop" to "serving system": requests arrive on the
+runtime's simulated clock with a per-request latency SLO, and a controller
+decides — between decode steps — who runs, who waits, who is preempted,
+and who is rejected outright:
+
+  request queue ──admission (EDF, SLO-feasibility)──▶ batch slots
+        ▲                                               │ decode step
+        │ preempt (deadline pressure)                   ▼
+        └────────────── swap-out ◀──────────── finished / preempted
+
+Design points:
+
+* **Continuous batching** — every request owns its per-layer decode state
+  (KV caches, batch dim 1), so the running set can change between any two
+  decode steps without touching anyone else's state.  Attention runs
+  per-request on private caches; routing / expert compute are row-wise;
+  expert *transfers* are shared batch-wide through union-channel demands
+  (``ExpertScheduler.demand_union``), whose top-up fetches guarantee
+  coverage — a request's outputs are bitwise identical whether it decodes
+  solo or is swapped mid-stream into a busy batch (pinned by test).
+
+* **SLO admission** — deadline = arrival_t + slo_ms on the modeled clock.
+  Per-step latency is estimated from the scheduler's measured telemetry
+  (clock deltas = compute + observed stall), and a request that cannot
+  meet its deadline even if admitted immediately is rejected instead of
+  poisoning the batch.  Deadline pressure can preempt the running request
+  with the slackest deadline (bounded per request to avoid thrash).
+
+* **Trained-predictor-driven residency** — the inter-expert predictor is
+  trained *online* from the routing the controller observes (residual on
+  the router-reuse fallback, so it starts at fallback quality and only
+  improves), and a running ``ConfidenceCalibrator`` rescales predictor
+  confidence by realized precision before it becomes a prefetch priority
+  or a ``weighted``-policy residency score.
+
+* **Incremental union demand masks** — per-request speculative expert
+  demands are tracked as channel *counters* (``UnionDemandTracker``);
+  swap-in/out adds/removes only that request's contribution instead of
+  rebuilding every union mask from scratch (incremental == from-scratch
+  is pinned by test).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.core import floe_layer, hqq, predictor
+from repro.core.pipeline import FloEPipeline, StepMetrics
+from repro.models import attention as attn_lib
+from repro.models import blocks as blk
+from repro.models import mlp as mlp_lib
+from repro.models import nn
+from repro.models import transformer as tf
+
+
+# ---------------------------------------------------------------- request --
+@dataclasses.dataclass
+class SLORequest:
+    """A serving request with an arrival time and a latency SLO, all on the
+    runtime's modeled clock (seconds)."""
+
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    slo_ms: float = 1000.0
+    arrival_t: float = 0.0
+    temperature: float = 0.0
+
+    # lifecycle (filled by the controller)
+    admitted_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    rejected: bool = False
+    preemptions: int = 0
+    done: bool = False
+    output: list = dataclasses.field(default_factory=list)
+
+    # private decode state (per-layer KV caches, batch dim 1)
+    states: Optional[list] = dataclasses.field(default=None, repr=False)
+    cur: Optional[int] = None  # next input token id
+    # previous token's entry hidden state — the cross-token prediction
+    # proxy, kept per request so training pairs match the usage
+    prev_entry: Optional[np.ndarray] = dataclasses.field(default=None,
+                                                         repr=False)
+
+    @property
+    def deadline_t(self) -> float:
+        return self.arrival_t + self.slo_ms * 1e-3
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish_t is None or self.first_token_t is None:
+            return None
+        n = max(len(self.output) - 1, 1)
+        return (self.finish_t - self.first_token_t) / n
+
+    @property
+    def attained(self) -> bool:
+        return (not self.rejected and self.finish_t is not None
+                and self.finish_t <= self.deadline_t + 1e-12)
+
+
+# ----------------------------------------------------- union-mask tracker --
+class UnionDemandTracker:
+    """Incrementally-maintained union of per-request channel demand masks.
+
+    Per (layer, expert) key a channel *counter* array records how many
+    live requests demand each channel.  Adding or removing one request
+    touches only that request's contribution — the union mask
+    (``counts > 0``) never has to be rebuilt by re-predicting the whole
+    batch at a swap boundary.  ``rebuild()`` recomputes every union from
+    the stored contributions from scratch; incremental == rebuild is the
+    conformance property pinned by tests.
+    """
+
+    def __init__(self, num_channels: int):
+        self.num_channels = num_channels
+        self._counts: Dict[Hashable, np.ndarray] = {}
+        self._conf: Dict[Hashable, Dict[int, Tuple[float, int]]] = {}
+        self._contrib: Dict[int, Dict[Hashable, np.ndarray]] = {}
+
+    def set_contribution(self, rid: int,
+                         masks: Dict[Hashable, np.ndarray],
+                         conf: Dict[Hashable, Tuple[float, int]]) -> None:
+        """Replace request ``rid``'s demand contribution (delta-applied)."""
+        self.remove(rid)
+        self._contrib[rid] = {}
+        for key, mask in masks.items():
+            mask = np.asarray(mask, bool)
+            assert mask.shape == (self.num_channels,)
+            cnt = self._counts.get(key)
+            if cnt is None:
+                cnt = np.zeros(self.num_channels, np.int32)
+                self._counts[key] = cnt
+            cnt += mask
+            self._contrib[rid][key] = mask
+            self._conf.setdefault(key, {})[rid] = conf[key]
+
+    def remove(self, rid: int) -> None:
+        for key, mask in self._contrib.pop(rid, {}).items():
+            self._counts[key] -= mask
+            self._conf[key].pop(rid, None)
+            if not self._conf[key]:  # last contributor gone
+                del self._counts[key]
+                del self._conf[key]
+
+    def keys(self) -> List[Hashable]:
+        return list(self._counts.keys())
+
+    def union(self, key: Hashable) -> np.ndarray:
+        return self._counts[key] > 0
+
+    def confidence(self, key: Hashable) -> Tuple[float, int]:
+        """(max confidence, min depth) over contributing requests."""
+        entries = self._conf[key].values()
+        return (max(c for c, _ in entries), min(d for _, d in entries))
+
+    def rebuild(self) -> Dict[Hashable, np.ndarray]:
+        """From-scratch recompute of all union masks (reference path)."""
+        out: Dict[Hashable, np.ndarray] = {}
+        for contrib in self._contrib.values():
+            for key, mask in contrib.items():
+                if key in out:
+                    out[key] = out[key] | mask
+                else:
+                    out[key] = mask.copy()
+        return out
+
+
+# ------------------------------------------------------------- controller --
+class ServingController:
+    """Continuous-batching request controller over the runtime scheduler.
+
+    ``policy`` selects the control plane:
+
+    * ``"slo"``    — continuous batching: EDF admission with SLO-
+                     feasibility rejection, swap-in/out between decode
+                     steps, deadline-pressure preemption.
+    * ``"static"`` — the baseline the benches compare against: fixed
+                     batches run to completion in arrival order (exactly
+                     the old one-batch-at-a-time serve loop), same decode
+                     machinery and timing model.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *,
+                 thresholds: np.ndarray,
+                 slots: int = 4,
+                 max_len: int = 256,
+                 policy: str = "slo",
+                 eos_id: int = -1,
+                 seed: int = 0,
+                 online_train: bool = True,
+                 train_every_tokens: int = 16,
+                 train_window: int = 256,
+                 train_steps: int = 60,
+                 predictor_hidden: int = 0,
+                 min_train_rows: int = 64,
+                 max_preemptions: int = 2,
+                 cross_token: bool = True,
+                 offload_opts: Optional[dict] = None):
+        if policy not in ("slo", "static"):
+            raise ValueError(f"unknown policy {policy!r}")
+        if slots < 1:
+            raise ValueError(f"need at least one batch slot, got {slots}")
+        if not cfg.num_experts:
+            raise ValueError("the serving controller needs an MoE model")
+        for pattern, _ in cfg.segments():
+            bad = [k for k in pattern if k not in ("dense", "moe")]
+            if bad:
+                raise ValueError(
+                    f"controller supports dense/moe stacks, found {bad}")
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.policy = policy
+        self.eos = eos_id
+        self.cross_token = cross_token
+        self.max_preemptions = max_preemptions
+        self._key = jax.random.PRNGKey(seed)
+
+        opts = dict(use_runtime=True, batched_demand=True, cross_token=False)
+        opts.update(offload_opts or {})
+        self.pipe = FloEPipeline(params, cfg, thresholds=thresholds, **opts)
+        assert self.pipe.sched is not None, "controller requires use_runtime"
+        self.sched = self.pipe.sched
+        self._moe_layers = set(self.pipe._moe_layer_indices())
+        # layers reached by cross-token speculation (trained on
+        # prev-token-entry pairs in addition to same-token pairs)
+        self._first_moe = set(
+            self.pipe._moe_layer_indices()[:self.sched.lookahead])
+
+        # ---- trained-predictor control plane -----------------------------
+        self.online_train = online_train
+        self.train_every_tokens = train_every_tokens
+        self.train_window = train_window
+        self.train_steps = train_steps
+        self.predictor_hidden = predictor_hidden
+        self.min_train_rows = min_train_rows
+        self.calibrator = predictor.ConfidenceCalibrator()
+        self.sched.calibrate = self.calibrator
+        if online_train:
+            if self.pipe.inter is None:
+                self.pipe.inter = [None] * len(self.pipe.layers)
+            # normalize the residual flag to a per-layer set so online
+            # residual probes can coexist with user-supplied standalone
+            # predictors (their layers keep their own residual setting)
+            ir = self.pipe.inter_residual
+            if not isinstance(ir, set):
+                ir = (set(range(len(self.pipe.layers))) if ir else set())
+                self.pipe.inter_residual = ir
+            self._user_residual = set(ir)
+            self._user_inter = list(self.pipe.inter)
+        # two probe banks for two input distributions: _bank_xl serves
+        # cross-LAYER speculation (same-token proxy, one layer earlier)
+        # and is projected into pipe.inter per adoption; inter_ct serves
+        # cross-TOKEN speculation (previous token's entry state).  Mixing
+        # them in one probe degrades both usages.
+        self._bank_xl: Dict[int, dict] = {}
+        self.inter_ct: Dict[int, dict] = {}
+        self._train_buf: Dict[int, list] = {}  # layer -> [(h, base, tgt)]
+        self._train_buf_ct: Dict[int, list] = {}
+        self._tokens_since_train = 0
+        self.train_rounds = 0
+
+        # ---- request books -----------------------------------------------
+        self.pending: List[SLORequest] = []  # submitted, not yet arrived
+        self.queue: List[SLORequest] = []  # arrived, waiting for a slot
+        self.running: List[SLORequest] = []
+        self.completed: List[SLORequest] = []
+        self.rejected: List[SLORequest] = []
+        self.tracker = UnionDemandTracker(cfg.moe_d_ff)
+
+        # ---- telemetry ---------------------------------------------------
+        self.est_tpot: Optional[float] = None  # EMA of measured step time
+        self._ema_beta = 0.7
+        self.stats = {"steps": 0, "tokens": 0, "preemptions": 0,
+                      "rejections": 0, "swaps_in": 0, "swaps_out": 0,
+                      "busy_s": 0.0, "idle_s": 0.0}
+        # prediction recall graded against the true router at reconcile
+        # time: xl = cross-layer depth-1, ct = cross-token.  This measures
+        # the PREFETCHER (what fraction of needed experts it named),
+        # independent of cache-capacity effects on staging.
+        self.pred_stats = {"xl_hit": 0, "xl_true": 0,
+                           "ct_hit": 0, "ct_true": 0}
+        self.metrics: List[StepMetrics] = []
+
+    # ------------------------------------------------------------ intake ---
+    def submit(self, req: SLORequest) -> None:
+        req.prompt = np.asarray(req.prompt, np.int32)
+        self.pending.append(req)
+        self.pending.sort(key=lambda r: (r.arrival_t, r.uid))
+
+    def _ingest(self, now: float) -> None:
+        while self.pending and self.pending[0].arrival_t <= now + 1e-12:
+            self.queue.append(self.pending.pop(0))
+
+    # --------------------------------------------------------- estimation --
+    def _est_step(self) -> Optional[float]:
+        return self.est_tpot
+
+    def _est_prefill(self, req: SLORequest) -> float:
+        """Modeled resident prefill seconds for this prompt."""
+        if req.states is not None:  # resuming a preempted request
+            return 0.0
+        return self._prefill_time(len(req.prompt))
+
+    def _prefill_time(self, s: int) -> float:
+        cfg, dev = self.cfg, self.pipe.device
+        t = 0.0
+        ah = 4 * cfg.d_model * cfg.num_heads * cfg.head_dim
+        for li in range(len(self.pipe.layers)):
+            t += dev.matmul_time(2 * s * ah, ah * 2)
+            if li in self._moe_layers:
+                f = cfg.moe_d_ff
+                k = cfg.num_experts_per_tok
+                t += dev.matmul_time(6 * s * k * cfg.d_model * f,
+                                     6 * cfg.d_model * f)
+            else:
+                t += dev.matmul_time(6 * s * cfg.d_model * cfg.d_ff,
+                                     6 * cfg.d_model * cfg.d_ff)
+        return t + self.pipe._head_time(1)
+
+    def _feasible(self, req: SLORequest, now: float) -> bool:
+        """Can this request still meet its SLO if admitted right now?"""
+        est = self._est_step()
+        if est is None:  # no telemetry yet: optimistic bootstrap
+            return True
+        remaining = max(req.max_new_tokens - len(req.output), 0)
+        finish = now + self._est_prefill(req) + remaining * est
+        return finish <= req.deadline_t + 1e-12
+
+    # ---------------------------------------------------------- admission --
+    def _retire(self, now: float) -> None:
+        if self.policy == "static":
+            if self.running and all(r.done for r in self.running):
+                for r in self.running:
+                    self.tracker.remove(r.uid)
+                    self.stats["swaps_out"] += 1
+                self.completed.extend(self.running)
+                self.running = []
+            return
+        still = []
+        for r in self.running:
+            if r.done:
+                self.tracker.remove(r.uid)
+                self.completed.append(r)
+                self.stats["swaps_out"] += 1
+            else:
+                still.append(r)
+        self.running = still
+
+    def _admit(self, req: SLORequest, now: float) -> None:
+        if req.states is None:
+            self._prefill(req)
+        req.admitted_t = now if req.admitted_t is None else req.admitted_t
+        self.running.append(req)
+        self.stats["swaps_in"] += 1
+        if self.cross_token and self.pipe.prefetch:
+            h = np.asarray(tf._embed_inputs(
+                self.params,
+                {"tokens": jnp.asarray([[req.cur]], jnp.int32)},
+                self.cfg))[:, 0, :]
+            self._track_request(req, h)
+            self._enqueue_tracked()
+
+    def _admission(self, now: float) -> None:
+        if self.policy == "static":
+            if not self.running:
+                while self.queue and len(self.running) < self.slots:
+                    self._admit(self.queue.pop(0), self.sched.clock)
+            return
+        # EDF order; drop requests that can no longer meet their SLO
+        self.queue.sort(key=lambda r: (r.deadline_t, r.uid))
+        keep = []
+        for r in self.queue:
+            if not self._feasible(r, now):
+                r.rejected = True
+                self.rejected.append(r)
+                self.stats["rejections"] += 1
+                self.tracker.remove(r.uid)
+            else:
+                keep.append(r)
+        self.queue = keep
+        while self.queue and len(self.running) < self.slots:
+            self._admit(self.queue.pop(0), self.sched.clock)
+        self._maybe_preempt(now)
+
+    def _maybe_preempt(self, now: float) -> None:
+        """Deadline pressure: if the most-urgent waiting request would
+        miss its SLO before a slot frees naturally, swap out the running
+        request with the slackest (latest) deadline."""
+        est = self._est_step()
+        if (est is None or not self.queue or
+                len(self.running) < self.slots or not self.running):
+            return
+        urgent = self.queue[0]  # EDF head
+        free_in = est * min(r.max_new_tokens - len(r.output)
+                            for r in self.running)
+        remaining = max(urgent.max_new_tokens - len(urgent.output), 0)
+        misses_waiting = (now + free_in + self._est_prefill(urgent) +
+                          remaining * est > urgent.deadline_t)
+        if not misses_waiting or not self._feasible(urgent, now):
+            return
+        victim = max(self.running, key=lambda r: (r.deadline_t, r.uid))
+        if (victim.deadline_t <= urgent.deadline_t or
+                victim.preemptions >= self.max_preemptions):
+            return
+        self.running.remove(victim)
+        self.tracker.remove(victim.uid)
+        victim.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.stats["swaps_out"] += 1
+        self.queue.insert(0, victim)
+        self.queue.sort(key=lambda r: (r.deadline_t, r.uid))
+        self._admit(urgent, self.sched.clock)
+        self.queue.remove(urgent)
+
+    # ------------------------------------------------------------ prefill --
+    def _prefill(self, req: SLORequest) -> None:
+        """Resident-path prefill on private (batch 1) states; the modeled
+        prefill time advances the clock, so in-flight prefetches overlap
+        it like any other compute."""
+        cfg = self.cfg
+        req.states = [blk.init_block_state(
+            "moe" if "moe" in layer else "dense", cfg, 1, self.max_len,
+            jnp.float32) for layer in self.pipe.layers]
+        x = tf._embed_inputs(self.params,
+                             {"tokens": jnp.asarray(req.prompt[None])}, cfg)
+        for li, layer in enumerate(self.pipe.layers):
+            kind = "moe" if "moe" in layer else "dense"
+            x, req.states[li] = blk.block_prefill(layer, kind, x,
+                                                  req.states[li], cfg, None)
+        logits = tf._head(self.params, x[:, -1:, :], cfg)
+        t_pre = self._prefill_time(len(req.prompt))
+        self.sched.advance(t_pre)
+        self.stats["busy_s"] += t_pre
+        tok = self._sample_one(req, np.asarray(logits)[0, -1])
+        req.cur = tok
+        req.output.append(tok)
+        req.first_token_t = self.sched.clock
+        if tok == self.eos or len(req.output) >= req.max_new_tokens:
+            self._finish(req)
+
+    def _finish(self, req: SLORequest) -> None:
+        req.done = True
+        req.finish_t = self.sched.clock
+
+    # ------------------------------------------------------------ sampling -
+    def _sample_one(self, req: SLORequest, logits: np.ndarray) -> int:
+        """Per-request sampling, keyed by (uid, position) so the value is
+        independent of batch composition."""
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits))
+        key = jax.random.fold_in(jax.random.fold_in(self._key, req.uid),
+                                 len(req.output))
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits) / max(req.temperature, 1e-4)))
+
+    # --------------------------------------------------------- decode step -
+    def _decode_step(self) -> None:
+        pipe, sched, cfg = self.pipe, self.sched, self.cfg
+        reqs = self.running
+        n = len(reqs)
+        metrics = StepMetrics()
+        t0 = sched.clock
+        cur = np.array([r.cur for r in reqs], np.int32)
+        h = tf._embed_inputs(self.params,
+                             {"tokens": jnp.asarray(cur[:, None])}, cfg)
+        h_entry = np.asarray(h[:, 0, :])
+        prev_entries = [r.prev_entry for r in reqs]
+        h_tops: Dict[int, jax.Array] = {}
+        covs: list = []
+
+        for li, layer in enumerate(pipe.layers):
+            h2d = h[:, 0, :]
+            h_tops[li] = h2d
+            if pipe.prefetch:
+                pipe.speculate(h2d, li)
+
+            hn = nn.rms_norm(h, layer["attn_norm"]["scale"], cfg.norm_eps)
+            outs = []
+            for i, r in enumerate(reqs):
+                a, r.states[li] = attn_lib.decode_attention(
+                    layer["attn"], hn[i:i + 1], r.states[li], cfg, None)
+                outs.append(a)
+            h = h + jnp.concatenate(outs, axis=0)
+            t_attn = pipe.device.matmul_time(
+                2 * n * 4 * cfg.d_model * cfg.num_heads * cfg.head_dim,
+                4 * cfg.d_model * cfg.num_heads * cfg.head_dim * 2)
+            metrics.compute_s += t_attn
+            sched.advance(t_attn)
+
+            hn = nn.rms_norm(h, layer["mlp_norm"]["scale"], cfg.norm_eps)
+            if li in self._moe_layers:
+                hn2 = hn[:, 0, :]
+                gates, eids, _ = pipe._route(hn2, li)
+                truth = np.unique(eids.reshape(-1)).tolist()
+                if li in self._first_moe:
+                    # grade cross-token predictions (tracked contributions
+                    # are from the previous step / admission — exactly
+                    # this token's cross-token prediction)
+                    for i, r in enumerate(reqs):
+                        contrib = self.tracker._contrib.get(r.uid, {})
+                        pred_e = {e for (l, e) in contrib if l == li}
+                        tset = set(int(x) for x in eids[i])
+                        self.pred_stats["ct_true"] += len(tset)
+                        self.pred_stats["ct_hit"] += len(tset & pred_e)
+                self._grade_and_buffer(li, h_tops, eids, truth,
+                                       prev_entries)
+                sched.reconcile(li, truth)
+                y = self._moe_apply_union(hn2, li, gates, eids, metrics,
+                                          covs)
+                h = h + y[:, None, :].astype(h.dtype)
+            else:
+                h = h + mlp_lib.mlp(layer["mlp"], hn, cfg)
+
+        self._cross_token_speculate(reqs, h_entry)
+        t_head = pipe._head_time(n)
+        metrics.compute_s += t_head
+        sched.advance(t_head)
+        logits = np.asarray(tf._head(self.params, h, cfg))[:, 0]
+
+        now = sched.clock
+        live = 0
+        for i, r in enumerate(reqs):
+            r.prev_entry = h_entry[i]
+            tok = self._sample_one(r, logits[i])
+            r.cur = tok
+            if r.done:
+                continue  # static policy: finished rows ride along
+            live += 1
+            r.output.append(tok)
+            if tok == self.eos or len(r.output) >= r.max_new_tokens:
+                self._finish(r)
+
+        metrics.coverage = float(np.mean(covs)) if covs else 1.0
+        self.metrics.append(metrics)
+        pipe.metrics.append(metrics)
+        dt = now - t0
+        self.stats["steps"] += 1
+        self.stats["tokens"] += live
+        self.stats["busy_s"] += dt
+        self.est_tpot = (dt if self.est_tpot is None else
+                         self._ema_beta * self.est_tpot +
+                         (1 - self._ema_beta) * dt)
+        self._tokens_since_train += live
+        if (self.online_train and
+                self._tokens_since_train >= self.train_every_tokens):
+            self._train_predictors()
+
+    # ----------------------------------------- union-mask expert execution -
+    def _moe_apply_union(self, hn2: jax.Array, li: int, gates: np.ndarray,
+                         eids: np.ndarray, metrics: StepMetrics,
+                         covs: list) -> jax.Array:
+        """Each distinct routed expert is demanded ONCE with the union of
+        its tokens' true channel masks (top-up fetches guarantee the
+        staged slice covers the union); each token then computes with
+        exactly its OWN mask's channels, so a request's expert output
+        never depends on its batch neighbors — only the *transfer* is
+        shared.  Demands issue up front (phase A) so each DMA overlaps
+        the other experts' up-GEMV compute."""
+        pipe, sched, cfg = self.pipe, self.sched, self.cfg
+        d = cfg.d_model
+        y = jnp.zeros((hn2.shape[0], d), jnp.float32)
+        experts = np.unique(eids.reshape(-1)).tolist()
+        gates = np.asarray(gates)
+        issued = {}
+        for e in experts:
+            rows = np.nonzero((eids == e).any(axis=1))[0]
+            hb = hn2[rows]
+            w = pipe.up_res[li]
+            qt = hqq.QTensor(w.up_q.packed[e], w.up_q.scale[e],
+                             w.up_q.zero[e], w.up_q.bits, w.up_q.group,
+                             w.up_q.shape)
+            v, row_mask = floe_layer.up_and_mask(hb, qt, w.thresholds[e])
+            row_mask = np.asarray(row_mask)
+            t_up = pipe._up_time(hb.shape[0], li, e)
+            metrics.compute_s += t_up
+            sched.advance(t_up)
+            union_idx = np.nonzero(row_mask.any(axis=0))[0]
+            payload, was_miss = sched.demand_union(li, int(e), union_idx)
+            if was_miss:
+                metrics.expert_misses += 1
+            else:
+                metrics.expert_hits += 1
+            issued[e] = (rows, v, row_mask, payload, was_miss)
+        for e in experts:
+            rows, v, row_mask, payload, was_miss = issued[e]
+            metrics.stall_s += sched.wait_for(li, int(e), was_miss=was_miss)
+            idx, gate_cols, down_rows = payload
+            n_act = 0
+            for j, b in enumerate(rows.tolist()):
+                own = np.nonzero(row_mask[j])[0]
+                sel = np.searchsorted(idx, own)
+                # demand_union's contract (property-tested): the staged
+                # slice covers the union of row masks, so coverage is 1.0
+                # by construction — channels can only be lost to
+                # prediction, never to cache staleness.  Fail loudly if
+                # that ever breaks; a silent filter would corrupt outputs.
+                assert sel.size == 0 or (int(sel[-1]) < idx.size and
+                                         np.array_equal(idx[sel], own)), \
+                    "demand_union contract violated: staged slice " \
+                    "misses needed channels"
+                covs.append(1.0)
+                ye = floe_layer.sparse_expert_apply(
+                    hn2[b:b + 1], gate_cols[sel], down_rows[sel],
+                    v[j:j + 1, own])
+                wgt = (gates * (eids == e)).sum(axis=1)[b]
+                y = y.at[b].add(ye[0].astype(jnp.float32) * float(wgt))
+                n_act += int(own.size)
+            t_sparse = pipe.device.matmul_time(4 * d * n_act, 4 * d * n_act)
+            metrics.compute_s += t_sparse
+            sched.advance(t_sparse)
+        return y
+
+    # -------------------------------------------- cross-token speculation --
+    def _predict_ct(self, h: jax.Array, li0: int):
+        """Cross-token prediction: the trained cross-token probe (residual
+        over router reuse) when one exists, else the pure reuse fallback
+        (never the cross-layer probe — wrong input distribution)."""
+        return self.pipe._predict_next(h, li0,
+                                       probe=self.inter_ct.get(li0),
+                                       residual=True)
+
+    def _track_request(self, req: SLORequest, h_entry_row: np.ndarray
+                       ) -> None:
+        """Recompute this request's speculative demand contribution from
+        its token-entry state (the cross-token routing proxy)."""
+        pipe, sched = self.pipe, self.sched
+        moe_list = pipe._moe_layer_indices()
+        masks: Dict[Hashable, np.ndarray] = {}
+        conf: Dict[Hashable, Tuple[float, int]] = {}
+        for depth, li0 in enumerate(moe_list[:sched.lookahead], start=1):
+            eids, pmasks, pconf = self._predict_ct(
+                jnp.asarray(h_entry_row), li0)
+            for e in eids:
+                masks[(li0, e)] = pmasks[e]
+                conf[(li0, e)] = (pconf[e], depth)
+        self.tracker.set_contribution(req.uid, masks, conf)
+
+    def _enqueue_tracked(self) -> None:
+        sched = self.sched
+        for key in self.tracker.keys():
+            li, e = key
+            mask = self.tracker.union(key)
+            c, depth = self.tracker.confidence(key)
+            sched.enqueue_prefetch(li, e, np.nonzero(mask)[0], c, depth)
+        sched.pump()
+
+    def _cross_token_speculate(self, reqs: List[SLORequest],
+                               h_entry: np.ndarray) -> None:
+        if not (self.pipe.prefetch and self.cross_token):
+            return
+        for i, r in enumerate(reqs):
+            self._track_request(r, h_entry[i:i + 1])
+        self._enqueue_tracked()
+
+    # ----------------------------------------------- predictor train loop --
+    def _grade_and_buffer(self, li: int, h_tops: Dict[int, jax.Array],
+                          eids: np.ndarray, truth: list,
+                          prev_entries: list) -> None:
+        """Feed the calibrator with graded depth-1 predictions and buffer
+        (proxy hidden, reuse logits, multi-hot truth) training rows.
+
+        Two pair distributions, matching the two prediction usages:
+
+        * same-token — proxy is the hidden state one layer earlier (the
+          cross-layer depth-1 speculation input); the probe learns the
+          residual of one block's transform on the router.
+        * cross-token — proxy is the *previous* token's entry state (the
+          cross-token speculation input for the first MoE layers).  The
+          reuse fallback structurally cannot close this gap: its base is
+          a different token's routing.  The probe learns temporal expert
+          persistence on top of it — this is where trained beats reuse.
+        """
+        pred = self.pipe.last_pred.pop(li, None)
+        if pred is not None:
+            p_eids, p_conf, row_pred = pred
+            tset = set(truth)
+            for e in p_eids:
+                self.calibrator.update(p_conf[e], e in tset)
+            # per-row recall: a prediction's job is to name each token's
+            # experts (union coverage conflates it with batch diversity)
+            if row_pred.shape[0] == eids.shape[0]:
+                for i in range(eids.shape[0]):
+                    tr = set(int(x) for x in eids[i])
+                    self.pred_stats["xl_true"] += len(tr)
+                    self.pred_stats["xl_hit"] += \
+                        len(tr & set(int(x) for x in row_pred[i]))
+        if not self.online_train:
+            return
+        router = np.asarray(self.pipe.layers[li]["moe"]["router"],
+                            np.float32)
+        tgt = np.asarray(predictor.multi_hot(eids, self.cfg.num_experts))
+        if li >= 1:
+            proxy = np.asarray(h_tops[li - 1])
+            base = proxy.astype(np.float32) @ router
+            self._train_buf.setdefault(li, []).append((proxy, base, tgt))
+        if li in self._first_moe:
+            rows = [i for i, p in enumerate(prev_entries) if p is not None]
+            if rows:
+                proxy = np.stack([prev_entries[i] for i in rows])
+                base = proxy.astype(np.float32) @ router
+                self._train_buf_ct.setdefault(li, []).append(
+                    (proxy, base, tgt[rows]))
+
+    @staticmethod
+    def _recall_at_k(logits: np.ndarray, tgt: np.ndarray, k: int) -> float:
+        """Mean |top-k(logits) ∩ true| / |true| over rows."""
+        pred = np.argsort(-logits, axis=1)[:, :k]
+        hits = np.take_along_axis(tgt, pred, axis=1) > 0
+        denom = np.maximum(tgt.sum(axis=1), 1.0)
+        return float((hits.sum(axis=1) / denom).mean())
+
+    def _fit_bank(self, bufs: Dict[int, list], bank: dict) -> bool:
+        """Train one probe bank from its buffered (proxy, base, target)
+        rows; ``bank`` maps layer -> probe params (updated in place).
+
+        Adoption is VALIDATION-GATED: the freshly trained probe must beat
+        both the router-reuse base and the currently adopted probe on a
+        held-out slice of the freshest rows, otherwise the layer keeps
+        what it has.  A trained predictor only ever replaces the fallback
+        by *measured* payoff, so the trained path dominates reuse by
+        construction (up to holdout noise)."""
+        k = self.cfg.num_experts_per_tok
+        trained = False
+        for li, buf in bufs.items():
+            rows = sum(b[0].shape[0] for b in buf)
+            if rows < self.min_train_rows:
+                continue
+            h0 = np.concatenate([b[0] for b in buf])[-self.train_window:]
+            base0 = np.concatenate([b[1] for b in buf])[-self.train_window:]
+            tgt0 = np.concatenate([b[2] for b in buf])[-self.train_window:]
+            # bound the buffer even if this round ends up skipped below
+            bufs[li] = [(h0, base0, tgt0)]
+            n_hold = max(h0.shape[0] // 4, 4)
+            h_tr, h_ho = h0[:-n_hold], h0[-n_hold:]
+            b_tr, b_ho = base0[:-n_hold], base0[-n_hold:]
+            t_tr, t_ho = tgt0[:-n_hold], tgt0[-n_hold:]
+            if h_tr.shape[0] < 4:
+                continue
+            # tile partial windows up to a fixed shape: full-batch Adam is
+            # invariant to sample duplication and jit traces exactly once
+            reps = -(-self.train_window // h_tr.shape[0])
+            h = np.tile(h_tr, (reps, 1))[:self.train_window]
+            base = np.tile(b_tr, (reps, 1))[:self.train_window]
+            tgt = np.tile(t_tr, (reps, 1))[:self.train_window]
+            params = bank.get(li)
+            if params is None:
+                self._key, sub = jax.random.split(self._key)
+                params = predictor.init_inter_predictor(
+                    sub, self.cfg.d_model, self.cfg.num_experts,
+                    hidden=self.predictor_hidden)
+            new = predictor.train_inter_predictor(
+                params, jnp.asarray(h), jnp.asarray(tgt),
+                steps=self.train_steps, base_logits=jnp.asarray(base))
+
+            def probe_recall(p):
+                lg = np.asarray(predictor.residual_inter_logits(
+                    p, jnp.asarray(h_ho), jnp.asarray(b_ho)))
+                return self._recall_at_k(lg, t_ho, k)
+
+            r_base = self._recall_at_k(b_ho, t_ho, k)
+            r_new = probe_recall(new)
+            r_old = probe_recall(bank[li]) if li in bank else -1.0
+            if r_new > max(r_base, r_old):  # strict: ties keep fallback
+                bank[li] = new
+                trained = True
+            elif r_old < r_base:
+                bank.pop(li, None)  # adopted probe went stale: fall back
+            # keep a sliding window of the freshest (untiled) rows
+            bufs[li] = [(h0[-self.train_window // 2:],
+                         base0[-self.train_window // 2:],
+                         tgt0[-self.train_window // 2:])]
+        return trained
+
+    def _train_predictors(self) -> None:
+        self._tokens_since_train = 0
+        t_xl = self._fit_bank(self._train_buf, self._bank_xl)
+        t_ct = self._fit_bank(self._train_buf_ct, self.inter_ct)
+        # project the cross-layer bank into the pipeline: adopted layers
+        # get the residual probe; everything else reverts to whatever the
+        # user supplied (standalone predictors keep their own residual
+        # setting — the flag is per-layer, never global)
+        for li in range(len(self.pipe.inter)):
+            if li in self._bank_xl:
+                self.pipe.inter[li] = self._bank_xl[li]
+                self.pipe.inter_residual.add(li)
+            else:
+                self.pipe.inter[li] = self._user_inter[li]
+                if li in self._user_residual:
+                    self.pipe.inter_residual.add(li)
+                else:
+                    self.pipe.inter_residual.discard(li)
+        trained = t_xl or t_ct
+        if trained:
+            self.train_rounds += 1
+            # re-rank already-staged speculation under the new calibration
+            # (from the RAW score each time — scales must not compound)
+            scale = self.calibrator.scale
+            for res in self.pipe.residency:
+                if res is None:
+                    continue
+                for key in res.keys():
+                    ent = res.peek(key)
+                    if ent is not None and ent.prefetch:
+                        res.rescore(key, min(1.0, ent.raw_score * scale))
+
+    # -------------------------------------------------------------- loop ---
+    def step(self) -> bool:
+        """One control cycle; returns False when there is nothing left."""
+        now = self.sched.clock
+        self._ingest(now)
+        self._retire(now)
+        self._admission(now)
+        if not self.running:
+            if self.pending:  # idle: jump to the next arrival
+                dt = max(self.pending[0].arrival_t - self.sched.clock, 0.0)
+                self.stats["idle_s"] += dt
+                self.sched.advance(dt + 1e-12)
+                return True
+            return bool(self.queue)
+        self._decode_step()
+        return True
+
+    def run(self) -> List[SLORequest]:
+        while self.step():
+            pass
+        self._retire(self.sched.clock)
+        return self.completed
+
+    # ----------------------------------------------------------- reporting -
+    def tokens_per_second(self) -> float:
+        """Decode throughput over BUSY modeled time — queue-wait and idle
+        gaps between arrivals are excluded (see ServingEngine fix)."""
+        return self.stats["tokens"] / max(self.stats["busy_s"], 1e-12)
+
+    def prediction_recall(self) -> float:
+        """Fraction of true routed experts the prefetcher's predictions
+        named (cross-layer + cross-token), graded at reconcile time."""
+        hit = self.pred_stats["xl_hit"] + self.pred_stats["ct_hit"]
+        true = self.pred_stats["xl_true"] + self.pred_stats["ct_true"]
+        return hit / true if true else 1.0
+
+    def reset_pred_stats(self) -> None:
+        for k in self.pred_stats:
+            self.pred_stats[k] = 0
+
+    def slo_attainment(self) -> float:
+        total = (len(self.completed) + len(self.rejected) +
+                 len(self.queue) + len(self.running) + len(self.pending))
+        if total == 0:
+            return 1.0
+        return sum(r.attained for r in self.completed) / total
+
+    def report(self) -> dict:
+        done = self.completed
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        return {
+            "policy": self.policy,
+            "completed": len(done),
+            "rejected": len(self.rejected),
+            "preemptions": self.stats["preemptions"],
+            "swaps_in": self.stats["swaps_in"],
+            "swaps_out": self.stats["swaps_out"],
+            "slo_attainment": self.slo_attainment(),
+            "ttft_ms_mean": 1e3 * float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_ms_p99": 1e3 * float(np.percentile(ttfts, 99))
+            if ttfts else 0.0,
+            "tpot_ms_mean": 1e3 * float(np.mean(tpots)) if tpots else 0.0,
+            "tokens": self.stats["tokens"],
+            "tokens_per_s": self.tokens_per_second(),
+            "busy_s": self.stats["busy_s"],
+            "prefetch_recall": self.sched.prefetch_recall(),
+            "prefetch_precision": self.sched.prefetch_precision(),
+            "prediction_recall": self.prediction_recall(),
+            "demand_topups": self.sched.stats.demand_topups,
+            "train_rounds": self.train_rounds,
+            "calibration_scale": self.calibrator.scale,
+        }

@@ -1,9 +1,21 @@
 # NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
 # benches must see the real single device; only launch/dryrun.py forces 512.
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
 
+# Heavy end-to-end modules (minutes of decode / training per module).
+# Everything still runs under the ROADMAP tier-1 command — the marker only
+# enables `-m "not slow"` for a quick dev loop.
+_SLOW_MODULES = {
+    "test_controller", "test_pipeline", "test_runtime", "test_serving",
+    "test_smoke_archs", "test_system", "test_train_ckpt",
+}
 
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running test")
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        item.add_marker(pytest.mark.tier1)
+        if item.module.__name__.rpartition(".")[2] in _SLOW_MODULES:
+            item.add_marker(pytest.mark.slow)

@@ -1,0 +1,353 @@
+"""Serving controller conformance: SLO admission/rejection, mid-stream
+swap-in bitwise parity, incremental union masks, union-demand coverage,
+and online-predictor behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import reduced
+from repro.configs import get_config
+from repro.core import predictor, sparsify
+from repro.core.pipeline import _unstack_layers, paper_scaled_models
+from repro.models import transformer as tf
+from repro.serving import ServingController, SLORequest, UnionDemandTracker
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral_8x7b"), layers=2, d_model=64)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    layers = _unstack_layers(params, cfg)
+    xcal = jax.random.normal(jax.random.PRNGKey(9), (64, cfg.d_model)) * 0.5
+    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
+    for li, layer in enumerate(layers):
+        if "moe" not in layer:
+            continue
+        for e in range(cfg.num_experts):
+            u = xcal @ layer["moe"]["we_up"][e]
+            thr[li, e] = float(sparsify.threshold_from_samples(
+                jnp.abs(u), cfg.floe.sparsity))
+    device, link = paper_scaled_models(cfg)
+    return cfg, params, thr, device, link
+
+
+def _make(setup, **kw):
+    cfg, params, thr, device, link = setup
+    opts = dict(slots=2, max_len=64, policy="slo", online_train=False,
+                offload_opts=dict(device=device, link=link, cache_slots=4))
+    opts.update(kw)
+    return ServingController(params, cfg, thresholds=thr, **opts)
+
+
+def _req(uid, cfg, seed, max_new=4, slo_ms=1e6, arrival_t=0.0, temp=0.0):
+    rng = np.random.default_rng(seed)
+    return SLORequest(uid, rng.integers(0, cfg.vocab_size, 5).astype(
+        np.int32), max_new_tokens=max_new, slo_ms=slo_ms,
+        arrival_t=arrival_t, temperature=temp)
+
+
+# ------------------------------------------------------------- admission ---
+def test_generous_slo_admitted_and_attained(setup):
+    cfg = setup[0]
+    ctl = _make(setup)
+    ctl.submit(_req(0, cfg, 1, slo_ms=1e7))
+    done = ctl.run()
+    assert len(done) == 1 and done[0].attained
+    assert not ctl.rejected
+    assert done[0].ttft is not None and done[0].ttft > 0
+    assert len(done[0].output) == 4
+
+
+def test_infeasible_slo_rejected_after_telemetry(setup):
+    """Once step telemetry exists, a request whose deadline cannot be met
+    even if admitted immediately is rejected, not queued to die."""
+    cfg = setup[0]
+    ctl = _make(setup)
+    ctl.submit(_req(0, cfg, 1, max_new=6, slo_ms=1e7, arrival_t=0.0))
+    # arrives mid-decode with a deadline already in the past
+    ctl.submit(_req(1, cfg, 2, max_new=6, slo_ms=1e-3, arrival_t=0.05))
+    done = ctl.run()
+    assert [r.uid for r in done] == [0]
+    assert len(ctl.rejected) == 1 and ctl.rejected[0].uid == 1
+    assert ctl.stats["rejections"] == 1
+    assert ctl.slo_attainment() == 0.5  # rejected counts against
+
+
+def test_no_rejection_before_any_telemetry(setup):
+    """The very first request bootstraps optimistically (no estimate yet
+    to reject on), even with a hopeless SLO."""
+    cfg = setup[0]
+    ctl = _make(setup)
+    ctl.submit(_req(0, cfg, 1, max_new=2, slo_ms=1e-6))
+    done = ctl.run()
+    assert len(done) == 1 and not ctl.rejected
+    assert not done[0].attained  # ...it still misses the deadline
+
+
+def test_slo_attainment_denominator_counts_everyone(setup):
+    cfg = setup[0]
+    ctl = _make(setup)
+    assert ctl.slo_attainment() == 1.0  # vacuous
+    ctl.submit(_req(0, cfg, 1, slo_ms=1e7))
+    ctl.submit(_req(1, cfg, 2, slo_ms=1e7, arrival_t=0.01))
+    ctl.run()
+    assert ctl.slo_attainment() == 1.0
+
+
+# ---------------------------------------------------- continuous batching --
+def test_swap_in_mid_stream_bitwise_vs_solo(setup):
+    """A request that joins a busy batch mid-stream must produce exactly
+    the tokens it would produce decoding alone: expert transfers are
+    shared, expert COMPUTE is per-row with own masks, and union-demand
+    top-ups guarantee coverage regardless of cache history."""
+    cfg = setup[0]
+    batch = _make(setup)
+    batch.submit(_req(0, cfg, 3, max_new=8))
+    batch.submit(_req(1, cfg, 4, max_new=4, arrival_t=0.4))
+    done = {r.uid: r.output for r in batch.run()}
+    assert batch.stats["swaps_in"] == 2
+
+    for uid, seed, mn in ((0, 3, 8), (1, 4, 4)):
+        solo = _make(setup)
+        solo.submit(_req(uid, cfg, seed, max_new=mn))
+        assert solo.run()[0].output == done[uid], uid
+
+
+def test_swap_in_bitwise_with_temperature(setup):
+    """Per-request keyed sampling keeps stochastic decoding independent
+    of batch composition too."""
+    cfg = setup[0]
+    batch = _make(setup)
+    batch.submit(_req(0, cfg, 5, max_new=6, temp=0.9))
+    batch.submit(_req(1, cfg, 6, max_new=3, temp=0.9, arrival_t=0.3))
+    done = {r.uid: r.output for r in batch.run()}
+    solo = _make(setup)
+    solo.submit(_req(1, cfg, 6, max_new=3, temp=0.9))
+    assert solo.run()[0].output == done[1]
+
+
+def test_finished_request_frees_slot_for_queued(setup):
+    """slots=2, 3 requests: the third must start before the longest
+    finishes (continuous batching), not after the whole batch."""
+    cfg = setup[0]
+    ctl = _make(setup)
+    ctl.submit(_req(0, cfg, 7, max_new=8))
+    ctl.submit(_req(1, cfg, 8, max_new=2, arrival_t=0.01))
+    ctl.submit(_req(2, cfg, 9, max_new=2, arrival_t=0.02))
+    done = {r.uid: r for r in ctl.run()}
+    assert len(done) == 3
+    assert done[2].first_token_t < done[0].finish_t
+    assert ctl.stats["swaps_in"] == 3
+
+
+def test_static_policy_runs_batch_to_completion(setup):
+    """The baseline: a queued request waits for the WHOLE running batch
+    even when a batch mate finished long ago."""
+    cfg = setup[0]
+    ctl = _make(setup, policy="static")
+    ctl.submit(_req(0, cfg, 7, max_new=8))
+    ctl.submit(_req(1, cfg, 8, max_new=2, arrival_t=0.01))
+    ctl.submit(_req(2, cfg, 9, max_new=2, arrival_t=0.02))
+    done = {r.uid: r for r in ctl.run()}
+    assert len(done) == 3
+    assert done[2].first_token_t > done[0].finish_t  # waited for batch
+    assert ctl.stats["preemptions"] == 0 and not ctl.rejected
+
+
+def test_preemption_under_deadline_pressure(setup):
+    """slots=1: a tight-deadline arrival preempts the slack running
+    request; the victim resumes and still matches its solo output."""
+    cfg = setup[0]
+    ctl = _make(setup, slots=1, max_preemptions=2)
+    ctl.submit(_req(0, cfg, 3, max_new=10, slo_ms=1e7))
+    # feasible-if-admitted-now, infeasible-if-it-waits deadline
+    tight = _req(1, cfg, 4, max_new=2, slo_ms=250.0, arrival_t=0.2)
+    ctl.submit(tight)
+    done = {r.uid: r for r in ctl.run()}
+    assert ctl.stats["preemptions"] >= 1
+    assert done[0].preemptions >= 1
+    assert done[1].attained
+
+    solo = _make(setup, slots=1)
+    solo.submit(_req(0, cfg, 3, max_new=10, slo_ms=1e7))
+    assert solo.run()[0].output == done[0].output  # resume is exact
+
+
+# ----------------------------------------------------- incremental unions --
+def test_incremental_union_mask_matches_scratch_recompute():
+    rng = np.random.default_rng(0)
+    tr = UnionDemandTracker(32)
+    for step in range(120):
+        rid = int(rng.integers(0, 6))
+        if rng.random() < 0.3:
+            tr.remove(rid)
+        else:
+            masks = {(int(rng.integers(0, 3)), int(rng.integers(0, 8))):
+                     rng.random(32) < 0.3
+                     for _ in range(int(rng.integers(1, 4)))}
+            conf = {k: (float(rng.random()), int(rng.integers(1, 3)))
+                    for k in masks}
+            tr.set_contribution(rid, masks, conf)
+        ref = tr.rebuild()
+        assert set(tr.keys()) == set(ref.keys())
+        for key in tr.keys():
+            np.testing.assert_array_equal(tr.union(key), ref[key])
+
+
+def test_tracker_zero_mask_contribution_lifecycle():
+    """A contributor whose mask is all-False must still hold the key
+    alive and be removable without corrupting the counters."""
+    tr = UnionDemandTracker(4)
+    tr.set_contribution(1, {(0, 0): np.zeros(4, bool)}, {(0, 0): (0.1, 1)})
+    tr.set_contribution(2, {(0, 0): np.ones(4, bool)}, {(0, 0): (0.2, 1)})
+    tr.remove(2)  # counts hit zero while rid 1 still contributes
+    assert (0, 0) in tr.keys()
+    tr.remove(1)
+    assert tr.keys() == []
+
+
+def test_tracker_swap_out_only_removes_own_contribution():
+    tr = UnionDemandTracker(4)
+    a = np.array([True, False, True, False])
+    b = np.array([False, False, True, True])
+    tr.set_contribution(1, {(0, 5): a}, {(0, 5): (0.9, 1)})
+    tr.set_contribution(2, {(0, 5): b}, {(0, 5): (0.4, 2)})
+    np.testing.assert_array_equal(tr.union((0, 5)), a | b)
+    tr.remove(1)
+    np.testing.assert_array_equal(tr.union((0, 5)), b)
+    assert tr.confidence((0, 5)) == (0.4, 2)
+
+
+# ------------------------------------------------------- online predictor --
+def test_online_predictor_monotonically_improves_recall():
+    """Synthetic router: truth is top-k of a fixed linear map the reuse
+    base knows only noisily.  Online rounds of residual training must
+    improve held-out recall monotonically (within tolerance) and end
+    strictly above the fallback."""
+    rng = np.random.default_rng(0)
+    d, e, k = 32, 8, 2
+    w_true = rng.normal(size=(d, e)).astype(np.float32)
+    w_base = (0.55 * w_true +
+              0.8 * rng.normal(size=(d, e)).astype(np.float32))
+
+    def batch(n, seed):
+        r = np.random.default_rng(seed)
+        h = r.normal(size=(n, d)).astype(np.float32)
+        logits = h @ w_true
+        tgt = np.zeros((n, e), np.float32)
+        top = np.argsort(-logits, axis=1)[:, :k]
+        np.put_along_axis(tgt, top, 1.0, axis=1)
+        return h, h @ w_base, tgt
+
+    h_ev, b_ev, t_ev = batch(256, 999)
+    rec = ServingController._recall_at_k
+    r_fallback = rec(b_ev, t_ev, k)
+
+    probe = predictor.init_inter_predictor(jax.random.PRNGKey(0), d, e)
+    recalls = []
+    for rnd in range(4):
+        h, b, t = batch(128, rnd)
+        probe = predictor.train_inter_predictor(
+            probe, jnp.asarray(h), jnp.asarray(t), steps=150,
+            base_logits=jnp.asarray(b))
+        lg = np.asarray(predictor.residual_inter_logits(
+            probe, jnp.asarray(h_ev), jnp.asarray(b_ev)))
+        recalls.append(rec(lg, t_ev, k))
+    for a, b2 in zip(recalls, recalls[1:]):
+        assert b2 >= a - 0.02, recalls  # monotone within tolerance
+    assert recalls[-1] > r_fallback + 0.05, (recalls, r_fallback)
+
+
+def test_gated_adoption_rejects_useless_probe(setup):
+    """When the reuse base is already perfect on the buffered rows, the
+    validation gate must keep the fallback (no probe adopted)."""
+    ctl = _make(setup, online_train=True, min_train_rows=16,
+                train_window=32, train_steps=30)
+    rng = np.random.default_rng(1)
+    d, e = ctl.cfg.d_model, ctl.cfg.num_experts
+    h = rng.normal(size=(48, d)).astype(np.float32)
+    logits = rng.normal(size=(48, e)).astype(np.float32) * 5
+    tgt = np.zeros((48, e), np.float32)
+    top = np.argsort(-logits, axis=1)[:, :2]
+    np.put_along_axis(tgt, top, 1.0, axis=1)
+    ctl._train_buf_ct[0] = [(h, logits, tgt)]  # base IS the truth
+    ctl._fit_bank(ctl._train_buf_ct, ctl.inter_ct)
+    assert 0 not in ctl.inter_ct
+
+
+def test_gated_adoption_accepts_useful_probe(setup):
+    """When the base is noise and the mapping is learnable, the probe
+    must clear the gate and be adopted."""
+    ctl = _make(setup, online_train=True, min_train_rows=16,
+                train_window=64, train_steps=400)
+    rng = np.random.default_rng(2)
+    d, e = ctl.cfg.d_model, ctl.cfg.num_experts
+    w = rng.normal(size=(d, e)).astype(np.float32)
+    h = rng.normal(size=(96, d)).astype(np.float32)
+    truth_logits = h @ w
+    tgt = np.zeros((96, e), np.float32)
+    top = np.argsort(-truth_logits, axis=1)[:, :2]
+    np.put_along_axis(tgt, top, 1.0, axis=1)
+    base = np.zeros_like(truth_logits)  # uninformative fallback
+    ctl._train_buf_ct[0] = [(h, base, tgt)]
+    ctl._fit_bank(ctl._train_buf_ct, ctl.inter_ct)
+    assert 0 in ctl.inter_ct
+
+
+def test_calibrator_demotes_overconfident_predictor():
+    c = predictor.ConfidenceCalibrator()
+    for _ in range(200):
+        c.update(0.9, False)
+        c.update(0.9, True)  # realized precision 0.5, claimed 0.9
+    assert 0.4 < c.scale < 0.7
+    assert c(0.9) < 0.9  # demoted
+    assert c(0.0) == 0.0
+
+
+def test_calibrator_never_boosts_past_claimed():
+    c = predictor.ConfidenceCalibrator()
+    for _ in range(50):
+        c.update(0.1, True)  # underconfident: realized 1.0, claimed 0.1
+    assert c.scale == 1.0  # capped: demotion-only
+    assert c(0.4) == pytest.approx(0.4)
+
+
+def test_multi_hot_and_residual_logits():
+    mh = np.asarray(predictor.multi_hot(np.array([[0, 2], [2, 2]]), 4))
+    np.testing.assert_array_equal(mh, [[1, 0, 1, 0], [0, 0, 1, 0]])
+    probe = predictor.init_inter_predictor(jax.random.PRNGKey(0), 8, 4)
+    h = jnp.ones((3, 8))
+    base = jnp.ones((3, 4)) * 2.0
+    np.testing.assert_allclose(
+        np.asarray(predictor.residual_inter_logits(probe, h, base)),
+        2.0 + np.asarray(predictor.inter_logits(probe, h)), rtol=1e-6)
+
+
+# --------------------------------------------------------- union demands ---
+def test_union_demand_coverage_means_full_coverage_metrics(setup):
+    """Top-up fetches guarantee coverage 1.0 on every decode step — the
+    FloE approximation can only lose channels to prediction, never to
+    cache staleness."""
+    cfg = setup[0]
+    ctl = _make(setup, offload_opts=dict(device=setup[3], link=setup[4],
+                                         cache_slots=2))
+    ctl.submit(_req(0, cfg, 10, max_new=5))
+    ctl.submit(_req(1, cfg, 11, max_new=5, arrival_t=0.01))
+    ctl.run()
+    assert ctl.metrics, "no decode steps recorded"
+    assert all(m.coverage == 1.0 for m in ctl.metrics)
+
+
+def test_report_contains_control_plane_fields(setup):
+    cfg = setup[0]
+    ctl = _make(setup)
+    ctl.submit(_req(0, cfg, 1, max_new=3))
+    ctl.run()
+    rep = ctl.report()
+    for key in ("slo_attainment", "ttft_ms_mean", "tpot_ms_mean",
+                "preemptions", "tokens_per_s", "prefetch_recall",
+                "prediction_recall", "demand_topups", "train_rounds"):
+        assert key in rep, key
+    assert rep["completed"] == 1
+    assert rep["tokens_per_s"] > 0

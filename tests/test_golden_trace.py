@@ -1,0 +1,124 @@
+"""Golden-trace regression pin for the runtime scheduler.
+
+One fixed-seed scenario — prefetches at mixed confidence/depth, clock
+advances, demand fetches, reconcile cancellation/demotion, union demands
+with top-ups — is serialized event-for-event (every transfer record's
+timing, sizing, and strategy, plus the final stats) and compared against
+``tests/data/golden_trace.json``.
+
+A timing refactor that shifts ANY event must regenerate the file
+deliberately (run with ``GOLDEN_REGEN=1``) and justify the diff in
+review, instead of drifting silently.
+"""
+import json
+import os
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import LinkModel, build_expert_store
+from repro.runtime import ExpertScheduler, ResidencyManager, TransferEngine
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_trace.json"
+_ROUND = 12  # decimal places: arithmetic is deterministic, repr is not
+
+
+def _scenario():
+    rng = np.random.default_rng(1234)
+    e, d, f = 6, 16, 32
+    moe = {
+        "we_gate": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_up": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_down": jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32) * 0.1,
+    }
+    store = build_expert_store(moe, np.full((e,), 0.5, np.float32),
+                               bits=2, group=16)
+    res = [ResidencyManager(3, policy="weighted")]
+    eng = TransferEngine(LinkModel(), num_buffers=2, chunk_channels=8)
+    sched = ExpertScheduler([store], res, eng, lookahead=2,
+                            depth_discount=0.5)
+
+    # mixed-confidence speculation, one deep
+    sched.enqueue_prefetch(0, 0, np.arange(12), 0.9, depth=1)
+    sched.enqueue_prefetch(0, 1, np.arange(4, 20), 0.4, depth=1)
+    sched.enqueue_prefetch(0, 2, np.arange(8), 0.8, depth=3)
+    sched.pump()
+    sched.advance(2e-4)
+
+    # a straggler prediction that never reaches the link...
+    sched.enqueue_prefetch(0, 4, np.arange(24), 0.3, depth=2)
+    # ...true router: cancels queued 4, keeps 0/1; demand 3 (cold miss)
+    sched.reconcile(0, [0, 1, 3])
+    payload, miss = sched.demand_async(0, 3, lambda: np.arange(0, 32, 3))
+    sched.wait_for(0, 3, was_miss=miss)
+
+    # union demands: full hit on 0, top-up on 1, promoted-then-demand
+    (idx0, _, _), m0 = sched.demand_union(0, 0, np.arange(6))
+    sched.wait_for(0, 0, was_miss=m0)
+    (idx1, _, _), m1 = sched.demand_union(0, 1, np.arange(0, 24))
+    sched.wait_for(0, 1, was_miss=m1)
+    sched.advance(5e-4)
+
+    # second round: re-speculate, demote in flight
+    sched.enqueue_prefetch(0, 2, np.arange(16), 0.7, depth=1)
+    sched.pump()
+    sched.reconcile(0, [0])
+    sched.advance(1.0)
+    return sched, eng
+
+
+def _trace():
+    sched, eng = _scenario()
+    events = []
+    for r in eng.records:
+        events.append({
+            "key": repr(r.key),
+            "kind": r.kind,
+            "nbytes": r.nbytes,
+            "chunks": r.chunks,
+            "strategy": r.strategy,
+            "enqueue_t": round(r.enqueue_t, _ROUND),
+            "start_t": round(r.start_t, _ROUND),
+            "complete_t": round(r.complete_t, _ROUND),
+            "demoted": r.demoted,
+        })
+    s = sched.stats
+    stats = {k: (round(v, _ROUND) if isinstance(v, float) else v)
+             for k, v in vars(s).items()}
+    return {"events": events, "stats": stats,
+            "clock": round(sched.clock, _ROUND)}
+
+
+def test_golden_trace_event_for_event():
+    got = _trace()
+    if os.environ.get("GOLDEN_REGEN") or not GOLDEN.exists():
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(got, indent=1) + "\n")
+    want = json.loads(GOLDEN.read_text())
+    assert len(got["events"]) == len(want["events"]), \
+        "transfer count changed — regenerate deliberately (GOLDEN_REGEN=1)"
+    for i, (g, w) in enumerate(zip(got["events"], want["events"])):
+        assert g == w, (f"event {i} drifted:\n got {g}\nwant {w}\n"
+                        f"(GOLDEN_REGEN=1 to accept)")
+    assert got["stats"] == want["stats"]
+    assert got["clock"] == want["clock"]
+
+
+def test_golden_trace_is_deterministic():
+    """The scenario itself must be bit-stable run-to-run, otherwise the
+    golden pin would flake rather than catch drift."""
+    assert _trace() == _trace()
+
+
+def test_golden_trace_covers_new_paths():
+    """The pinned scenario must exercise cancellation, demotion, top-up,
+    and demand traffic — so drift in any of those paths trips the pin."""
+    sched, eng = _scenario()
+    s = sched.stats
+    assert s.prefetch_cancelled >= 1
+    assert s.prefetch_demoted >= 1
+    assert s.demand_topups >= 1
+    assert s.demand_fetches >= 1
+    assert any(r.kind == "demand" for r in eng.records)
+    assert any(r.demoted for r in eng.records)

@@ -1,0 +1,302 @@
+"""Property-based conformance suite for the runtime (scheduler, transfer
+engine, residency) — random demand/prefetch traces must uphold the
+runtime's core invariants:
+
+  * a transfer never completes before it was issued (and never starts
+    before it was enqueued),
+  * residency never exceeds its capacity (pins can only hold it AT
+    capacity, never grow it past the pinned count),
+  * demand preemption never starves speculative traffic — every issued
+    transfer still completes,
+  * a pinned expert can never be evicted,
+  * ``demand_union`` always returns a slice covering the requested
+    channels (sorted, unique),
+  * the scheduler clock is monotone and demand accounting is conserved.
+
+Runs under real ``hypothesis`` when installed; otherwise the
+deterministic grid fallback in ``tests/_hypothesis_compat.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.offload import LinkModel, build_expert_store
+from repro.runtime import ExpertScheduler, ResidencyManager, TransferEngine
+
+from tests._hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+
+def _store(e=4, d=16, f=32, seed=0):
+    rng = np.random.default_rng(seed)
+    moe = {
+        "we_gate": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_up": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_down": jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32) * 0.1,
+    }
+    thr = np.full((e,), 0.5, np.float32)
+    return build_expert_store(moe, thr, bits=2, group=16)
+
+
+def _sched(store, *, slots=3, num_buffers=2, policy="lru", pinned=()):
+    res = [ResidencyManager(slots, policy=policy, pinned=pinned)]
+    eng = TransferEngine(LinkModel(), num_buffers=num_buffers,
+                         chunk_channels=8)
+    sched = ExpertScheduler([store], res, eng, lookahead=2)
+    return sched, res[0], eng
+
+
+def _drive(sched, store, seed, n_ops=40):
+    """Random but reproducible op trace over the scheduler."""
+    rng = np.random.default_rng(seed)
+    f = store.d_ff
+    for _ in range(n_ops):
+        op = rng.integers(0, 5)
+        e = int(rng.integers(0, store.num_experts))
+        idx = np.sort(rng.choice(f, size=int(rng.integers(1, f // 2)),
+                                 replace=False))
+        if op == 0:
+            sched.enqueue_prefetch(0, e, idx, float(rng.random()),
+                                   depth=int(rng.integers(1, 3)))
+        elif op == 1:
+            sched.pump()
+        elif op == 2:
+            sched.advance(float(rng.random()) * 1e-3)
+        elif op == 3:
+            payload, miss = sched.demand_async(0, e, lambda i=idx: i)
+            sched.wait_for(0, e, was_miss=miss)
+        else:
+            truth = rng.choice(store.num_experts,
+                               size=int(rng.integers(1, 3)), replace=False)
+            sched.reconcile(0, truth.tolist())
+
+
+# ---------------------------------------------------------- transfer time --
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_transfer_never_completes_before_issue(seed):
+    store = _store(seed=1)
+    sched, _, eng = _sched(store)
+    _drive(sched, store, seed)
+    for rec in eng.records:
+        assert rec.start_t >= rec.enqueue_t - 1e-12, rec
+        assert rec.complete_t >= rec.start_t - 1e-12, rec
+        assert rec.complete_t > rec.enqueue_t - 1e-12, rec
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_scheduler_clock_monotone(seed):
+    store = _store(seed=2)
+    sched, _, _ = _sched(store)
+    rng = np.random.default_rng(seed)
+    last = sched.clock
+    for _ in range(30):
+        _drive(sched, store, int(rng.integers(0, 10 ** 9)), n_ops=1)
+        assert sched.clock >= last - 1e-15
+        last = sched.clock
+    assert sched.stats.stall_s >= 0.0
+
+
+# ----------------------------------------------------------- no starvation -
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n_demands=st.integers(min_value=1, max_value=6))
+def test_demand_preemption_never_starves(seed, n_demands):
+    """Speculative transfers pushed back by demand preemption still
+    complete: after enough clock, nothing stays in flight forever."""
+    store = _store(seed=3)
+    sched, res, eng = _sched(store, slots=store.num_experts,
+                             num_buffers=4)
+    rng = np.random.default_rng(seed)
+    f = store.d_ff
+    for e in range(store.num_experts):
+        sched.enqueue_prefetch(0, e, np.arange(f // 2), 0.5 + 0.1 * e)
+    sched.pump()
+    for _ in range(n_demands):
+        e = int(rng.integers(0, store.num_experts))
+        idx = np.arange(int(rng.integers(1, f)))
+        payload, miss = sched.demand_async(0, e, lambda i=idx: i)
+        sched.wait_for(0, e, was_miss=miss)
+    sched.advance(1e6)  # plenty of modeled time
+    assert eng.active_count(sched.clock) == 0
+    assert not eng.inflight
+    for rec in eng.records:
+        assert np.isfinite(rec.complete_t)
+        assert rec.complete_t >= rec.start_t - 1e-12
+
+
+# ---------------------------------------------------------- residency caps -
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       capacity=st.integers(min_value=1, max_value=5))
+def test_residency_never_exceeds_capacity(seed, capacity):
+    rng = np.random.default_rng(seed)
+    for policy in ("lru", "lfu", "weighted"):
+        r = ResidencyManager(capacity, policy=policy)
+        for _ in range(60):
+            key = int(rng.integers(0, 10))
+            if rng.random() < 0.6:
+                r.put(key, key, score=float(rng.random()),
+                      prefetch=bool(rng.integers(0, 2)))
+            else:
+                r.get(key)
+            assert len(r) <= capacity
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_residency_with_pins_bounded_by_pinned_count(seed):
+    """Pins can push residency past capacity only by the pinned entries
+    themselves plus the single unpinned insert that found every victim
+    candidate pinned — never unboundedly."""
+    rng = np.random.default_rng(seed)
+    pinned = list(range(4))
+    r = ResidencyManager(2, policy="lru", pinned=pinned)
+    for _ in range(40):
+        key = int(rng.integers(0, 8))
+        r.put(key, key)
+        n_pinned = sum(k in r.pinned for k in r.keys())
+        assert len(r) <= max(2, n_pinned + 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       capacity=st.integers(min_value=1, max_value=4))
+def test_pinned_expert_eviction_impossible(seed, capacity):
+    rng = np.random.default_rng(seed)
+    for policy in ("lru", "lfu", "weighted"):
+        r = ResidencyManager(capacity, policy=policy, pinned=["keep"])
+        r.put("keep", 0)
+        for _ in range(50):
+            op = rng.integers(0, 3)
+            key = int(rng.integers(0, 12))
+            if op == 0:
+                r.put(key, key, score=float(rng.random()))
+            elif op == 1:
+                r.get(key)
+            else:
+                r.get("keep")
+            assert "keep" in r, policy
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_scheduler_trace_respects_residency_capacity(seed):
+    store = _store(seed=4)
+    sched, res, _ = _sched(store, slots=2)
+    _drive(sched, store, seed, n_ops=50)
+    assert len(res) <= 2
+
+
+# ------------------------------------------------------------ demand_union -
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_demand_union_always_covers_need(seed):
+    """After any history, a union demand's payload covers the requested
+    channels with a sorted unique index set."""
+    store = _store(seed=5)
+    sched, res, _ = _sched(store, slots=store.num_experts)
+    rng = np.random.default_rng(seed)
+    f = store.d_ff
+    _drive(sched, store, seed, n_ops=15)
+    for _ in range(8):
+        e = int(rng.integers(0, store.num_experts))
+        need = np.sort(rng.choice(f, size=int(rng.integers(1, f)),
+                                  replace=False))
+        (idx, gate, down), miss = sched.demand_union(0, e, need)
+        sched.wait_for(0, e, was_miss=miss)
+        assert np.all(np.isin(need, idx))
+        assert np.all(np.diff(idx) > 0)  # sorted, unique
+        assert gate.shape[0] == idx.shape[0] == down.shape[0]
+
+
+def test_reconcile_with_inflight_topup_does_not_crash():
+    """Regression: top-up transfers live under compound inflight keys
+    ((layer, expert), 'topup', seq); reconcile must not try to unpack
+    them as (layer, expert) while one is still on the link."""
+    store = _store(seed=7)
+    sched, _, eng = _sched(store, slots=store.num_experts)
+    payload, miss = sched.demand_async(0, 0, lambda: np.arange(4))
+    sched.wait_for(0, 0, was_miss=miss)
+    (idx, _, _), m = sched.demand_union(0, 0, np.arange(12))  # top-up
+    assert any(isinstance(k, tuple) and len(k) == 3
+               for k in eng.inflight), "scenario must leave a top-up live"
+    cancelled = sched.reconcile(0, [0])  # must not raise
+    assert cancelled == 0
+    sched.wait_for(0, 0, was_miss=m)
+    assert np.all(np.isin(np.arange(12), idx))
+
+
+# ------------------------------------------------------ stats conservation -
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_demand_accounting_conserved(seed):
+    """Every waited demand lands in exactly one bucket."""
+    store = _store(seed=6)
+    sched, _, _ = _sched(store, slots=store.num_experts)
+    rng = np.random.default_rng(seed)
+    f = store.d_ff
+    n_waits = 0
+    for _ in range(25):
+        if rng.random() < 0.5:
+            e = int(rng.integers(0, store.num_experts))
+            sched.enqueue_prefetch(0, e, np.arange(f // 4),
+                                   float(rng.random()))
+            sched.pump()
+        else:
+            e = int(rng.integers(0, store.num_experts))
+            idx = np.arange(int(rng.integers(1, f)))
+            payload, miss = sched.demand_async(0, e, lambda i=idx: i)
+            sched.wait_for(0, e, was_miss=miss)
+            n_waits += 1
+        sched.advance(float(rng.random()) * 1e-3)
+    s = sched.stats
+    assert (s.demand_hits + s.residual_waits + s.demand_reuse +
+            s.demand_fetches) == n_waits
+    assert 0.0 <= sched.prefetch_recall() <= 1.0
+    assert 0.0 <= sched.prefetch_precision() <= 1.0
+
+
+# --------------------------------------------- incremental union tracker ---
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n_ops=st.integers(min_value=1, max_value=60))
+def test_union_tracker_incremental_matches_rebuild(seed, n_ops):
+    from repro.serving import UnionDemandTracker
+    rng = np.random.default_rng(seed)
+    f = 16
+    tr = UnionDemandTracker(f)
+    for _ in range(n_ops):
+        rid = int(rng.integers(0, 5))
+        if rng.random() < 0.25:
+            tr.remove(rid)
+        else:
+            masks, conf = {}, {}
+            for _ in range(int(rng.integers(0, 4))):
+                key = (int(rng.integers(0, 2)), int(rng.integers(0, 4)))
+                masks[key] = rng.random(f) < rng.random()
+                conf[key] = (float(rng.random()), int(rng.integers(1, 3)))
+            tr.set_contribution(rid, masks, conf)
+        ref = tr.rebuild()
+        assert set(tr.keys()) == set(ref.keys())
+        for key in tr.keys():
+            np.testing.assert_array_equal(tr.union(key), ref[key])
+
+
+def test_union_tracker_counts_are_exact():
+    """Counters equal the number of contributing requests per channel."""
+    from repro.serving import UnionDemandTracker
+    tr = UnionDemandTracker(4)
+    m = np.array([True, True, False, False])
+    tr.set_contribution(1, {(0, 0): m}, {(0, 0): (0.5, 1)})
+    tr.set_contribution(2, {(0, 0): np.array([True, False, True, False])},
+                        {(0, 0): (0.9, 2)})
+    np.testing.assert_array_equal(tr._counts[(0, 0)],
+                                  np.array([2, 1, 1, 0]))
+    assert tr.confidence((0, 0)) == (0.9, 1)
+    tr.remove(1)
+    np.testing.assert_array_equal(tr.union((0, 0)),
+                                  np.array([True, False, True, False]))
+    tr.remove(2)
+    assert tr.keys() == []

@@ -62,6 +62,35 @@ def test_length_bucketing(model):
     assert eng.tokens_per_second() > 0
 
 
+def test_tokens_per_second_definition_excludes_queue_wait():
+    """Pin the corrected throughput definition: the offloaded path divides
+    by modeled SERVICE time (compute + stall) only — queue-wait /
+    admission delay must not deflate the figure.  The resident path keeps
+    wall-clock (its wall time is the service time)."""
+    eng = ServingEngine.__new__(ServingEngine)  # no model needed
+    eng.stats = {"tokens": 100, "steps": 0, "wall_s": 50.0,
+                 "stall_s": 2.0, "compute_s": 3.0, "queue_wait_s": 45.0}
+    eng.floe = None
+    assert eng.tokens_per_second() == pytest.approx(100 / 50.0)
+    eng.floe = object()  # offloaded mode marker
+    assert eng.tokens_per_second() == pytest.approx(100 / 5.0)
+    assert eng.modeled_stall_per_token() == pytest.approx(0.02)
+
+
+def test_queue_wait_accounted_separately(model):
+    """More requests than batch slots: later batches' admission delay
+    lands in queue_wait_s, not in the throughput denominator."""
+    cfg, params = model
+    rng = np.random.default_rng(4)
+    eng = ServingEngine(params, cfg, batch_size=1, max_len=64)
+    for i in range(3):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 8).astype(
+            np.int32), max_new_tokens=2))
+    eng.run()
+    assert eng.stats["queue_wait_s"] > 0.0  # batches 2/3 waited
+    assert eng.tokens_per_second() > 0
+
+
 def test_greedy_matches_forward_argmax(model):
     """First generated token == argmax of the forward pass at the last
     prompt position."""
