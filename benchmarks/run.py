@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and, per suite, writes a
+machine-readable ``BENCH_<suite>.json`` at the repo root (suite name,
+rows, timestamp, elapsed seconds) so the perf trajectory is tracked
+across PRs.
 
   table1  -> bench_sparse_kernel   (sparse GEMV latency vs sparsity)
   fig3    -> bench_sensitivity     (sparsification + quantization)
@@ -11,23 +14,50 @@ Prints ``name,us_per_call,derived`` CSV rows.
   prefetch-> bench_prefetch        (runtime scheduler: overlap, stall/token)
   serving -> bench_serving         (SLO attainment: controller vs static,
                                     trained-predictor prefetch recall)
+  memory  -> bench_memory          (tiered store: footprint vs stall/token
+                                    across VRAM budgets, progressive
+                                    precision, disk-tier pressure)
   roofline-> roofline              (dry-run derived terms, if present)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def write_suite_json(name: str, rows: list, timestamp: str,
+                     elapsed_s: float) -> Path:
+    out = {
+        "suite": name,
+        "timestamp": timestamp,
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": [{"name": r[0], "us_per_call": float(r[1]),
+                  "derived": str(r[2])} for r in rows],
+    }
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(out, indent=1) + "\n")
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--timestamp",
+                    default=time.strftime("%Y-%m-%dT%H:%M:%S"),
+                    help="stamp recorded in BENCH_<suite>.json (e.g. a "
+                         "commit date, for cross-PR perf tracking)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<suite>.json files")
     args = ap.parse_args()
 
     from benchmarks import (bench_compression, bench_e2e_decode,
-                            bench_predictor, bench_prefetch,
+                            bench_memory, bench_predictor, bench_prefetch,
                             bench_sensitivity, bench_serving,
                             bench_sparse_kernel, bench_transfer, roofline)
 
@@ -40,6 +70,7 @@ def main() -> None:
         ("fig6", bench_e2e_decode.run),
         ("prefetch", bench_prefetch.run),
         ("serving", bench_serving.run),
+        ("memory", bench_memory.run),
         ("roofline", roofline.run),
     ]
     rows: list = []
@@ -57,8 +88,10 @@ def main() -> None:
         for r in rows[before:]:
             print(f"{r[0]},{r[1]:.2f},{r[2]}")
         sys.stdout.flush()
-        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
-              file=sys.stderr)
+        elapsed = time.perf_counter() - t0
+        if not args.no_json:
+            write_suite_json(name, rows[before:], args.timestamp, elapsed)
+        print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

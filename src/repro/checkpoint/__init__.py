@@ -1,3 +1,5 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.io import (ShardReader, ShardWriter, load_checkpoint,
+                                 save_checkpoint, save_sharded)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "ShardReader",
+           "ShardWriter", "save_sharded"]

@@ -5,14 +5,29 @@ the same nested-dict structure, so any params/opt-state pytree of arrays
 round-trips.  bfloat16 is encoded via uint16 views (msgpack/numpy have no
 native bf16).
 
+Registered pytree *nodes* (dataclasses exposing ``tree_flatten`` /
+``tree_unflatten``, e.g. ``repro.core.hqq.QTensor``) also round-trip: the
+node is stored as its class path + packed aux data + packed children and
+rebuilt via ``tree_unflatten`` on load, so sub-byte packed codes and frozen
+static metadata survive a checkpoint.
+
 `zstandard` is optional: when the wheel is absent checkpoints are written
 with a raw codec behind a small magic header, and either codec is detected
 on load (zstd frames carry their own 0xFD2FB528 magic).
+
+Sharded layout (``ShardWriter`` / ``ShardReader``): one ``data.bin`` of
+independently-encoded records plus a small ``index.msgpack`` of
+``key -> (offset, length)``.  Opening a reader touches ONLY the index;
+``load(key)`` seeks and decodes one record — a single expert's weights
+load without deserializing the rest of the checkpoint (the disk tier of
+``repro.store`` is built on this).
 """
 from __future__ import annotations
 
+import dataclasses
+import importlib
 from pathlib import Path
-from typing import Any
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +59,40 @@ def _decode_leaf(rec: dict) -> np.ndarray:
     return np.frombuffer(rec["b"], rec["d"]).reshape(rec["s"]).copy()
 
 
+def _pack_aux(v: Any) -> Any:
+    """Static (non-array) aux data of a pytree node: scalars + nested
+    tuples/lists only — kept in native msgpack types so e.g. a QTensor's
+    ``shape`` comes back as the same tuple of python ints."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return {"k": "s", "v": v}
+    if isinstance(v, (list, tuple)):
+        tag = "l" if isinstance(v, list) else "t"
+        return {"k": tag, "v": [_pack_aux(x) for x in v]}
+    raise TypeError(f"unsupported pytree-node aux value: {type(v)}")
+
+
+def _unpack_aux(rec: Any) -> Any:
+    if rec["k"] == "s":
+        return rec["v"]
+    vals = [_unpack_aux(x) for x in rec["v"]]
+    return vals if rec["k"] == "l" else tuple(vals)
+
+
+def _is_node(tree: Any) -> bool:
+    """A registered-pytree dataclass node (QTensor-style)."""
+    return (dataclasses.is_dataclass(tree) and hasattr(tree, "tree_flatten")
+            and hasattr(type(tree), "tree_unflatten"))
+
+
 def _pack(tree: Any) -> Any:
     if isinstance(tree, dict):
         return {"__t": "d", "v": {k: _pack(v) for k, v in tree.items()}}
+    if _is_node(tree):
+        children, aux = tree.tree_flatten()
+        cls = type(tree)
+        return {"__t": "n", "c": f"{cls.__module__}:{cls.__qualname__}",
+                "x": _pack_aux(tuple(aux)),
+                "v": [_pack(c) for c in children]}
     if isinstance(tree, (list, tuple)):
         tag = "l" if isinstance(tree, list) else "t"
         name = type(tree).__name__ if hasattr(tree, "_fields") else ""
@@ -58,6 +104,13 @@ def _unpack(rec: Any) -> Any:
     t = rec["__t"]
     if t == "d":
         return {k: _unpack(v) for k, v in rec["v"].items()}
+    if t == "n":
+        mod, _, qual = rec["c"].partition(":")
+        cls: Any = importlib.import_module(mod)
+        for part in qual.split("."):
+            cls = getattr(cls, part)
+        children = [_unpack(v) for v in rec["v"]]
+        return cls.tree_unflatten(_unpack_aux(rec["x"]), children)
     if t in ("l", "t"):
         vals = [_unpack(v) for v in rec["v"]]
         return vals if t == "l" else tuple(vals)
@@ -66,20 +119,22 @@ def _unpack(rec: Any) -> Any:
 
 def save_checkpoint(path: str | Path, tree: Any, *, level: int = 3) -> int:
     """Returns bytes written."""
-    tree = jax.tree.map(np.asarray, tree)
-    raw = msgpack.packb(_pack(tree), use_bin_type=True)
-    if zstandard is not None:
-        comp = zstandard.ZstdCompressor(level=level).compress(raw)
-    else:
-        comp = _RAW_MAGIC + raw
+    comp = _encode_record(tree, level)
     p = Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     p.write_bytes(comp)
     return len(comp)
 
 
-def load_checkpoint(path: str | Path) -> Any:
-    blob = Path(path).read_bytes()
+def _encode_record(tree: Any, level: int) -> bytes:
+    tree = jax.tree.map(np.asarray, tree)
+    raw = msgpack.packb(_pack(tree), use_bin_type=True)
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(raw)
+    return _RAW_MAGIC + raw
+
+
+def _decode_record(blob: bytes, path) -> Any:
     if blob.startswith(_RAW_MAGIC):
         raw = blob[len(_RAW_MAGIC):]
     elif blob.startswith(_ZSTD_MAGIC):
@@ -90,3 +145,92 @@ def load_checkpoint(path: str | Path) -> Any:
     else:
         raise ValueError(f"{path}: unrecognized checkpoint codec")
     return _unpack(msgpack.unpackb(raw, raw=False))
+
+
+_INDEX_FILE = "index.msgpack"
+_DATA_FILE = "data.bin"
+
+
+class ShardWriter:
+    """Append-only sharded checkpoint: per-key records + an offset index."""
+
+    def __init__(self, dirpath: str | Path, *, level: int = 3):
+        self.dir = Path(dirpath)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.level = level
+        self._index: dict[str, list[int]] = {}
+        self._data = open(self.dir / _DATA_FILE, "wb")
+        self._offset = 0
+
+    def add(self, key: str, tree: Any) -> int:
+        """Encode one record; returns its stored byte size."""
+        assert key not in self._index, f"duplicate shard key {key!r}"
+        blob = _encode_record(tree, self.level)
+        self._data.write(blob)
+        self._index[key] = [self._offset, len(blob)]
+        self._offset += len(blob)
+        return len(blob)
+
+    def close(self) -> int:
+        """Flush data + index; returns total bytes on disk."""
+        self._data.close()
+        idx = msgpack.packb({"records": self._index}, use_bin_type=True)
+        (self.dir / _INDEX_FILE).write_bytes(idx)
+        return self._offset + len(idx)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class ShardReader:
+    """Lazy sharded-checkpoint reader: opening touches only the index;
+    each ``load`` seeks to one record and decodes it alone."""
+
+    def __init__(self, dirpath: str | Path):
+        self.dir = Path(dirpath)
+        idx = msgpack.unpackb((self.dir / _INDEX_FILE).read_bytes(),
+                              raw=False)
+        self._index: dict[str, list] = idx["records"]
+        # one long-lived handle: per-record loads seek, not reopen
+        self._data = open(self.dir / _DATA_FILE, "rb")
+        # telemetry: proves single-record loads don't touch the full file
+        self.records_decoded = 0
+        self.bytes_read = 0
+
+    def keys(self) -> Iterable[str]:
+        return list(self._index.keys())
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._index
+
+    def nbytes(self, key: str) -> int:
+        """Stored (on-disk) size of one record."""
+        return self._index[key][1]
+
+    def load(self, key: str) -> Any:
+        off, length = self._index[key]
+        self._data.seek(off)
+        blob = self._data.read(length)
+        self.records_decoded += 1
+        self.bytes_read += length
+        return _decode_record(blob, self.dir / _DATA_FILE)
+
+    def close(self) -> None:
+        self._data.close()
+
+
+def save_sharded(dirpath: str | Path, records: dict, *,
+                 level: int = 3) -> int:
+    """Write ``{key: tree}`` as a sharded checkpoint; returns total bytes
+    on disk (data + index)."""
+    w = ShardWriter(dirpath, level=level)
+    for k, tree in records.items():
+        w.add(k, tree)
+    return w.close()
+
+
+def load_checkpoint(path: str | Path) -> Any:
+    return _decode_record(Path(path).read_bytes(), path)

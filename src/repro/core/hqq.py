@@ -29,9 +29,13 @@ class QTensor:
     """Group-quantized tensor.
 
     packed: uint8 codes, shape (G, group/codes_per_byte, N) — bit-packed
-    scale:  (G, 1, N) f32
-    zero:   (G, 1, N) f32
+    scale:  (G, 1, N) f16 (stored; dequantization upcasts to f32)
+    zero:   (G, 1, N) f16
     bits / group / shape: static metadata (pytree aux data, vmap-safe)
+
+    Storing scale/zero at fp16 halves the group-metadata footprint, which
+    dominates ``nbytes`` at small group sizes; the quantization solve and
+    every dequantize still run in f32.
     """
 
     packed: jax.Array
@@ -111,9 +115,16 @@ def quantize(w: jax.Array, bits: int = 2, group: int = 64,
         return (zero, beta * 1.05), None
 
     (zero, _), _ = jax.lax.scan(body, (zero, beta), None, length=iters)
-    q = _q(zero).astype(jnp.uint8)
+    # round metadata to its fp16 storage format FIRST, then solve the final
+    # codes against the rounded values so dequantization sees no mismatch
+    # (floor keeps a degenerate all-equal group's scale from flushing to 0)
+    scale16 = jnp.maximum(scale, 6.2e-5).astype(jnp.float16)
+    zero16 = jnp.clip(zero, -6e4, 6e4).astype(jnp.float16)
+    q = jnp.clip(jnp.round(wf / scale16.astype(jnp.float32)
+                           + zero16.astype(jnp.float32)),
+                 0.0, qmax).astype(jnp.uint8)
     packed = _pack(q, bits) if bits < 8 else q
-    return QTensor(packed, scale, zero, bits, group, (m, n))
+    return QTensor(packed, scale16, zero16, bits, group, (m, n))
 
 
 def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
@@ -123,7 +134,8 @@ def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
         q = _unpack(qt.packed, qt.bits, qt.group)
     else:
         q = qt.packed
-    w = qt.scale * (q.astype(jnp.float32) - qt.zero)
+    w = qt.scale.astype(jnp.float32) * \
+        (q.astype(jnp.float32) - qt.zero.astype(jnp.float32))
     return w.reshape(m, n).astype(dtype)
 
 

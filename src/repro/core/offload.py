@@ -63,6 +63,18 @@ class TransferLog:
     wall_seconds: float = 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class FetchInfo:
+    """Tier metadata for one staged fetch, consumed by the transfer
+    engine's timeline: ``nbytes`` crosses the host→device link;
+    ``disk_s`` is the modeled disk→host prefill that pipelines with it
+    (0.0 for a host-tier hit or a flat in-host store)."""
+
+    nbytes: int
+    disk_s: float = 0.0
+    precision: str = "full"
+
+
 class ExpertStore:
     """Host (DRAM) store of compressed experts in compact layout.
 
@@ -97,6 +109,35 @@ class ExpertStore:
         up = self.up_q.packed[0].nbytes + self.up_q.scale[0].nbytes + \
             self.up_q.zero[0].nbytes
         return rec + up
+
+    def slice_nbytes(self, channel_idx, precision: str = "full") -> int:
+        """Link bytes for a staged slice of these channel records."""
+        return int(len(channel_idx) * 2 * self.d_model *
+                   self.records.dtype.itemsize)
+
+    # ------------------------------------------------------------- tiers ---
+    # The flat in-host store is the degenerate one-tier case of the tiered
+    # store (repro.store.tiered): everything is "host resident", nothing is
+    # format-restricted, and no fetch ever touches a disk stage.  The
+    # runtime talks to stores only through this interface.
+    def available_channels(self, e: int):
+        """Channels the store can stage for expert e; None = all."""
+        return None
+
+    def progressive_available(self, e: int) -> bool:
+        """Whether expert e supports draft-then-refine demand fetches."""
+        return False
+
+    def fetch_slice(self, e: int, channel_idx: np.ndarray, *,
+                    chunk_channels: int = 50, precision: str = "full"
+                    ) -> tuple[np.ndarray, jax.Array, jax.Array, FetchInfo]:
+        """(served_idx, gate_cols, down_rows, FetchInfo) — the tier-aware
+        fetch the transfer engine drives.  The flat store serves every
+        requested channel at full precision with no disk stage."""
+        idx = np.asarray(channel_idx)
+        gate_cols, down_rows = self.fetch_sparse(
+            e, idx, chunk_channels=chunk_channels)
+        return idx, gate_cols, down_rows, FetchInfo(self.slice_nbytes(idx))
 
     # --------------------------------------------------------- transfers ---
     def fetch_up(self, e: int) -> hqq.QTensor:

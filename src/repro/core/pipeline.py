@@ -107,7 +107,10 @@ class FloEPipeline:
                  cross_token: bool = True,
                  batched_demand: bool = False,
                  inter_residual: bool = False,
-                 pinned_experts: tuple = ()):  # ((layer, expert), ...)
+                 pinned_experts: tuple = (),  # ((layer, expert), ...)
+                 store_plan=None,  # repro.store.StorePlan (tiered store)
+                 store_dir=None,  # disk-tier shard dir (tmp dir if None)
+                 store_freqs=None):  # (L, E) activation freqs (host warm)
         self.cfg = cfg
         self.mode = mode
         self.prefetch = prefetch and mode == "floe"
@@ -126,28 +129,60 @@ class FloEPipeline:
         self.lm_head = params.get("lm_head")
         self.cfg = cfg
 
+        # ----------------------------------- tiered store (VRAM planner) --
+        # A StorePlan routes every expert through repro.store: per-expert
+        # formats, a disk/host tier stack behind the stores, and a slab
+        # arena backing residency.  Requires the runtime scheduler (the
+        # synchronous path has no tier-aware timeline).
+        self.store_plan = store_plan
+        self.host_tier = None
+        self.device_pool = None
+        if store_plan is not None:
+            assert use_runtime and mode == "floe", \
+                "store_plan requires use_runtime=True and mode='floe'"
+            cache_slots = store_plan.slots_per_layer
+            pinned_experts = tuple(store_plan.pinned)
+
         # per-layer host stores + resident quantized up + caches
         self.stores: list[Optional[ExpertStore]] = []
         self.up_res: list = []
         self.caches: list = []
-        for li, layer in enumerate(self.layers):
-            if "moe" not in layer:
-                self.stores.append(None)
-                self.up_res.append(None)
-                self.caches.append(None)
-                continue
-            moe_p = layer["moe"]
-            thr = thresholds[li]
-            if mode == "resident":
-                self.stores.append(None)
-            else:
-                from repro.core.offload import build_expert_store
-                self.stores.append(build_expert_store(
+        if store_plan is not None:
+            import tempfile
+
+            from repro.store import DevicePool, build_layer_stores
+            if store_dir is None:
+                store_dir = tempfile.mkdtemp(prefix="floe-store-")
+            self.stores, self.host_tier = build_layer_stores(
+                self.layers, thresholds, store_plan, store_dir,
+                link=self.link, quant_group=cfg.floe.quant_group,
+                freqs=store_freqs)
+            self.device_pool = DevicePool(store_plan.slab_bytes,
+                                          store_plan.num_slabs)
+            for li, layer in enumerate(self.layers):
+                self.up_res.append(None)  # per-expert up lives in the store
+                self.caches.append(ExpertCache(cache_slots)
+                                   if "moe" in layer else None)
+        else:
+            for li, layer in enumerate(self.layers):
+                if "moe" not in layer:
+                    self.stores.append(None)
+                    self.up_res.append(None)
+                    self.caches.append(None)
+                    continue
+                moe_p = layer["moe"]
+                thr = thresholds[li]
+                if mode == "resident":
+                    self.stores.append(None)
+                else:
+                    from repro.core.offload import build_expert_store
+                    self.stores.append(build_expert_store(
+                        moe_p, thr, bits=cfg.floe.up_bits,
+                        group=cfg.floe.quant_group, link=self.link))
+                self.up_res.append(floe_layer.compress_moe_layer(
                     moe_p, thr, bits=cfg.floe.up_bits,
-                    group=cfg.floe.quant_group, link=self.link))
-            self.up_res.append(floe_layer.compress_moe_layer(
-                moe_p, thr, bits=cfg.floe.up_bits, group=cfg.floe.quant_group))
-            self.caches.append(ExpertCache(cache_slots))
+                    group=cfg.floe.quant_group))
+                self.caches.append(ExpertCache(cache_slots))
         self.metrics: list[StepMetrics] = []
 
         # ------------------------------------------- runtime scheduler ----
@@ -161,16 +196,40 @@ class FloEPipeline:
                     self.residency.append(None)
                     continue
                 pins = [(li, e) for (pl, e) in pinned_experts if pl == li]
+                cap = cache_slots + (len(pins) if store_plan is not None
+                                     else 0)
                 self.residency.append(ResidencyManager(
-                    cache_slots, policy=residency_policy, pinned=pins))
+                    cap, policy=residency_policy, pinned=pins,
+                    pool=self.device_pool))
             self.engine = TransferEngine(self.link, num_buffers=num_buffers)
             self.sched = ExpertScheduler(
                 self.stores, self.residency, self.engine,
-                lookahead=lookahead, cancel_stale=cancel_stale)
+                lookahead=lookahead, cancel_stale=cancel_stale,
+                progressive=(store_plan.progressive
+                             if store_plan is not None else True))
+            if store_plan is not None:
+                self._stage_pinned()
 
     # ------------------------------------------------------------ helpers --
     def _moe_layer_indices(self):
         return [i for i, l in enumerate(self.layers) if "moe" in l]
+
+    def _stage_pinned(self) -> None:
+        """Stage every planner-pinned expert at t=0 in its full format.
+        Their slab spans come out of the arena (the planner budgeted
+        them) and the entries are never evicted; the staging traffic is
+        planning-time, so the transfer logs are reset afterwards."""
+        for (li, e) in self.store_plan.pinned:
+            store = self.stores[li]
+            served, gate, down, _ = store.fetch_slice(
+                e, store.available_channels(e)
+                if store.available_channels(e) is not None
+                else np.arange(store.d_ff))
+            self.residency[li].put(self.sched.key(li, e),
+                                   (served, gate, down), ready_t=0.0)
+        for s in self.stores:
+            if s is not None:
+                s.reset_log()
 
     def _route(self, h: jax.Array, li: int):
         from repro.models.moe import router_topk
@@ -178,12 +237,23 @@ class FloEPipeline:
             h, self.layers[li]["moe"]["router"], self.cfg.num_experts_per_tok)
         return np.asarray(gates), np.asarray(eids), np.asarray(probs)
 
-    def _true_mask(self, h: jax.Array, li: int, e: int):
+    def _up_mask_rows(self, h: jax.Array, li: int, e: int):
+        """v = h W_up^(q) + PER-ROW activation mask (B, F) — from the
+        tiered store's per-expert-format up projection when one backs
+        this layer, else the layer-wide resident quantized up."""
+        store = self.stores[li]
+        if store is not None and hasattr(store, "true_mask"):
+            v, mask = store.true_mask(h, e)
+            return v, np.asarray(mask)
         w = self.up_res[li]
         qt = hqq.QTensor(w.up_q.packed[e], w.up_q.scale[e], w.up_q.zero[e],
                          w.up_q.bits, w.up_q.group, w.up_q.shape)
         v, mask = floe_layer.up_and_mask(h, qt, w.thresholds[e])
-        return v, np.asarray(mask.any(axis=0))
+        return v, np.asarray(mask)
+
+    def _true_mask(self, h: jax.Array, li: int, e: int):
+        v, mask = self._up_mask_rows(h, li, e)
+        return v, mask.any(axis=0)
 
     def _predict_next(self, h: jax.Array, li_next: int,
                       probe=_UNSET, residual: bool = False):
@@ -276,12 +346,18 @@ class FloEPipeline:
         return y, cov
 
     def _up_time(self, batch: int, li: int, e: int) -> float:
-        """Modeled time of the resident quantized up GEMV (the true-mask
-        computation) — payload-independent, so it overlaps demand DMA."""
+        """Modeled time of the resident up GEMV (the true-mask
+        computation) — payload-independent, so it overlaps demand DMA.
+        Bytes follow the expert's resident format (tiered store) or the
+        layer-wide quantized up."""
         cfg = self.cfg
-        w = self.up_res[li]
-        up_bytes = (w.up_q.packed[e].nbytes + w.up_q.scale[e].nbytes +
-                    w.up_q.zero[e].nbytes)
+        store = self.stores[li]
+        if store is not None and hasattr(store, "up_nbytes"):
+            up_bytes = store.up_nbytes(e)
+        else:
+            w = self.up_res[li]
+            up_bytes = (w.up_q.packed[e].nbytes + w.up_q.scale[e].nbytes +
+                        w.up_q.zero[e].nbytes)
         return self.device.matmul_time(
             2 * batch * cfg.d_model * cfg.moe_d_ff, up_bytes)
 
@@ -433,6 +509,14 @@ class FloEPipeline:
         sched = self.sched
         hb, v, need_mask, payload, was_miss = issued
         metrics.stall_s += sched.wait_for(li, e, was_miss=was_miss)
+        # the staged slice may have been upgraded (progressive refine) or
+        # grown (top-up) while we waited — compute on the freshest copy
+        # (same channel set only: an evicted-and-refetched entry keeps the
+        # original payload, preserving sync-path parity)
+        cur = sched.staged_payload(li, e)
+        if cur is not None and cur is not payload and \
+                np.array_equal(np.asarray(cur[0]), np.asarray(payload[0])):
+            payload = cur
         ye, cov, _, t_sparse = self._apply_payload(hb, li, e, payload, v,
                                                    need_mask)
         metrics.compute_s += t_sparse

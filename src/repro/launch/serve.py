@@ -12,6 +12,12 @@ Modes:
                scheduler (repro.serving.controller): Poisson arrivals with
                per-request SLOs, online-trained inter-predictor, per-request
                TTFT/TPOT + SLO attainment report
+
+``--vram-gb B`` (floe / floe-serve) turns on the tiered parameter store:
+activation frequencies are measured, ``repro.store.plan_store`` solves
+per-expert formats / pinned set / residency pool for the budget, and the
+decode runs through the disk/host/device tier stack (runtime scheduler,
+progressive-precision demand fetches).  ``--host-gb`` bounds the host tier.
 """
 from __future__ import annotations
 
@@ -48,6 +54,15 @@ def main():
                     help="floe-serve: per-request latency SLO")
     ap.add_argument("--policy", choices=["slo", "static"], default="slo")
     ap.add_argument("--ckpt", default="", help="load params instead of init")
+    ap.add_argument("--vram-gb", dest="vram_gb", type=float, default=0.0,
+                    help="device memory budget; >0 enables the tiered "
+                         "store + VRAM planner (floe / floe-serve)")
+    ap.add_argument("--host-gb", dest="host_gb", type=float, default=4.0,
+                    help="host (pinned DRAM) tier budget")
+    ap.add_argument("--store-dir", default="",
+                    help="disk-tier shard directory (tmp dir if empty)")
+    ap.add_argument("--no-progressive", action="store_true",
+                    help="disable progressive-precision demand fetches")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -97,6 +112,26 @@ def main():
                 jnp.abs(u), cfg.floe.sparsity))
     device, link = paper_scaled_models(cfg)
 
+    # ---- tiered store: plan formats/pins/pool for the VRAM budget --------
+    store_opts: dict = {}
+    if args.vram_gb > 0:
+        from repro.store import (dense_residency_bytes, measure_frequencies,
+                                 plan_store)
+        freqs = measure_frequencies(layers, cfg)
+        plan = plan_store(cfg, freqs, vram_gb=args.vram_gb,
+                          host_gb=args.host_gb,
+                          progressive=not args.no_progressive)
+        dense_gb = dense_residency_bytes(cfg) / 2 ** 30
+        print(f"store plan: {plan.summary()}")
+        print(f"  dense-resident would need {dense_gb:.3f}GiB; budget "
+              f"{args.vram_gb:.3f}GiB "
+              f"({args.vram_gb / dense_gb:.2f}x dense)")
+        for part, nbytes in plan.breakdown.items():
+            print(f"  {part:>16}: {nbytes / 2 ** 20:8.2f}MiB")
+        store_opts = dict(store_plan=plan, store_freqs=freqs,
+                          store_dir=args.store_dir or None,
+                          use_runtime=True)
+
     if args.mode == "floe-serve":
         from repro.serving import ServingController, SLORequest
         ctl = ServingController(
@@ -104,7 +139,7 @@ def main():
             policy=args.policy, online_train=True, train_every_tokens=16,
             train_window=64, min_train_rows=32, train_steps=40,
             offload_opts=dict(device=device, link=link,
-                              cache_slots=args.cache_slots))
+                              cache_slots=args.cache_slots, **store_opts))
         rng = np.random.default_rng(0)
         t = 0.0
         for i in range(args.requests):
@@ -133,9 +168,11 @@ def main():
               f"calibration={rep['calibration_scale']:.2f}")
         return
 
+    if store_opts and args.mode != "floe":
+        raise SystemExit("--vram-gb requires --mode floe or floe-serve")
     pipe = FloEPipeline(params, cfg, thresholds=thr,
                         cache_slots=args.cache_slots, mode=args.mode,
-                        device=device, link=link)
+                        device=device, link=link, **store_opts)
     for i in range(args.max_new):
         h = jax.random.normal(jax.random.PRNGKey(100 + i),
                               (1, cfg.d_model), jnp.float32) * 0.3
@@ -143,6 +180,16 @@ def main():
     stalls = sum(x.stall_s for x in pipe.metrics)
     print(f"mode={args.mode}: {pipe.tokens_per_second():.1f} tok/s (modeled)"
           f"  coverage={m.coverage:.2f}  total_stall={stalls * 1e3:.2f}ms")
+    if store_opts:
+        s = pipe.sched.stats
+        pipe.device_pool.check_invariants()
+        print(f"store: demand_fetches={s.demand_fetches} "
+              f"drafts={s.draft_fetches} refined={s.refines_applied} "
+              f"topups={s.demand_topups} "
+              f"host_hit_rate={pipe.host_tier.stats.hit_rate:.2f} "
+              f"disk_reads={pipe.host_tier.disk.stats.reads} "
+              f"pool_free={pipe.device_pool.free_slabs}/"
+              f"{pipe.device_pool.num_slabs}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,12 @@ Policies:
              ``score + use_count``, where score is the prefetch confidence
              the scheduler attached at insertion; low-confidence
              speculation is evicted before confirmed-hot experts.
+
+Backing memory: with a ``repro.store.DevicePool`` attached, every staged
+payload borrows a span of fixed-size slabs from the shared VRAM arena on
+insertion and returns it on eviction/drop — the arena never grows, so
+residency churn cannot fragment device memory.  Inserting into a full
+arena evicts (policy order) until the span fits.
 """
 from __future__ import annotations
 
@@ -30,6 +36,13 @@ import dataclasses
 from typing import Any, Dict, Hashable, Iterable, Optional
 
 POLICIES = ("lru", "lfu", "weighted")
+
+
+def payload_nbytes(payload: Any) -> int:
+    """Device bytes of a staged payload (tuple/list of arrays)."""
+    if isinstance(payload, (tuple, list)):
+        return int(sum(int(getattr(a, "nbytes", 0)) for a in payload))
+    return int(getattr(payload, "nbytes", 0))
 
 
 @dataclasses.dataclass
@@ -64,13 +77,16 @@ class Entry:
     #                          its last consumption (recall credit even
     #                          when the bytes never had to move again)
     uses: int = 0
+    slab: Any = None  # SlabSpan backing this payload (DevicePool attached)
+    refine: Any = None  # (full payload, ready_t) of an in-flight
+    #                     progressive-precision upgrade, else None
 
 
 class ResidencyManager:
     """Fixed-capacity map of (layer, expert) -> staged payload."""
 
     def __init__(self, capacity: int, *, policy: str = "lru",
-                 pinned: Iterable[Hashable] = ()):
+                 pinned: Iterable[Hashable] = (), pool=None):
         assert capacity >= 1
         if policy not in POLICIES:
             raise ValueError(f"unknown residency policy {policy!r}; "
@@ -78,6 +94,7 @@ class ResidencyManager:
         self.capacity = capacity
         self.policy = policy
         self.pinned = set(pinned)
+        self.pool = pool  # optional repro.store.DevicePool (shared arena)
         # insertion/recency order is tracked by the OrderedDict itself
         self._slots: "collections.OrderedDict[Hashable, Entry]" = \
             collections.OrderedDict()
@@ -111,6 +128,38 @@ class ResidencyManager:
             ent.prefetch = False  # count once per distinct prefetch
         return ent
 
+    # -------------------------------------------------------------- arena --
+    def _evict(self, victim: Hashable) -> None:
+        ent = self._slots.pop(victim)
+        if self.pool is not None:
+            self.pool.free(ent.slab)
+        self.stats.evictions += 1
+
+    def _pool_alloc(self, key: Hashable, nbytes: int):
+        """A slab span for this payload, evicting (policy order) while the
+        arena is full.  Falls back to an overflow span when everything
+        left is pinned — the arena itself never grows."""
+        span = self.pool.try_alloc(nbytes, owner=key)
+        while span is None:
+            victim = self._victim(exclude=key)
+            if victim is None:
+                return self.pool.alloc_overflow(nbytes, owner=key)
+            self._evict(victim)
+            span = self.pool.try_alloc(nbytes, owner=key)
+        return span
+
+    def update_payload(self, key: Hashable, payload: Any) -> bool:
+        """Swap an entry's payload in place (top-up merge / progressive
+        refine), resizing its slab span to the new byte count."""
+        ent = self._slots.get(key)
+        if ent is None:
+            return False
+        ent.payload = payload
+        if self.pool is not None:
+            self.pool.free(ent.slab)
+            ent.slab = self._pool_alloc(key, payload_nbytes(payload))
+        return True
+
     # ------------------------------------------------------------- insert --
     def put(self, key: Hashable, payload: Any, *, ready_t: float = 0.0,
             score: float = 0.0, prefetch: bool = False,
@@ -124,23 +173,30 @@ class ResidencyManager:
             ent.score = max(ent.score, score)
             ent.raw_score = max(ent.raw_score, raw_score)
             ent.origin_prefetch = ent.origin_prefetch or prefetch
+            if self.pool is not None:
+                self.pool.free(ent.slab)
+                ent.slab = self._pool_alloc(key, payload_nbytes(payload))
             self._slots.move_to_end(key)
             return
         while len(self._slots) >= self.capacity:
             victim = self._victim()
             if victim is None:  # everything pinned: grow past capacity
                 break
-            del self._slots[victim]
-            self.stats.evictions += 1
-        self._slots[key] = Entry(payload, ready_t=ready_t, score=score,
-                                 raw_score=raw_score, prefetch=prefetch,
-                                 origin_prefetch=prefetch)
+            self._evict(victim)
+        ent = Entry(payload, ready_t=ready_t, score=score,
+                    raw_score=raw_score, prefetch=prefetch,
+                    origin_prefetch=prefetch)
+        self._slots[key] = ent
+        if self.pool is not None:
+            ent.slab = self._pool_alloc(key, payload_nbytes(payload))
         self.stats.insertions += 1
 
     def drop(self, key: Hashable) -> bool:
         """Remove without counting an eviction (prefetch cancellation)."""
         if key in self._slots:
-            del self._slots[key]
+            ent = self._slots.pop(key)
+            if self.pool is not None:
+                self.pool.free(ent.slab)
             return True
         return False
 
@@ -164,8 +220,10 @@ class ResidencyManager:
         self.pinned.discard(key)
 
     # ------------------------------------------------------------ policy ---
-    def _victim(self) -> Optional[Hashable]:
-        evictable = [k for k in self._slots if k not in self.pinned]
+    def _victim(self, exclude: Optional[Hashable] = None
+                ) -> Optional[Hashable]:
+        evictable = [k for k in self._slots
+                     if k not in self.pinned and k != exclude]
         if not evictable:
             return None
         if self.policy == "lru":

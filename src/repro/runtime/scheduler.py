@@ -58,6 +58,10 @@ class SchedulerStats:
     demand_reuse: int = 0  # demanded; an earlier DEMAND had staged it
     demand_topups: int = 0  # staged slice lacked channels; delta fetched
     topup_channels: int = 0  # channels moved by top-up fetches
+    draft_fetches: int = 0  # progressive demands served from the INT8 draft
+    draft_served: int = 0  # consumptions that computed on a draft payload
+    refines_applied: int = 0  # background full-precision upgrades landed
+    refines_dropped: int = 0  # refine stale (slice changed under it)
     stall_s: float = 0.0
 
     def reset(self) -> None:
@@ -84,6 +88,7 @@ class ExpertScheduler:
                  lookahead: int = 2,
                  depth_discount: float = 0.5,
                  cancel_stale: bool = True,
+                 progressive: bool = True,
                  calibrate: Optional[Callable[[float], float]] = None):
         assert lookahead >= 1
         self.stores = list(stores)
@@ -92,6 +97,11 @@ class ExpertScheduler:
         self.lookahead = lookahead
         self.depth_discount = depth_discount
         self.cancel_stale = cancel_stale
+        # progressive precision: a demand miss on a progressive-format
+        # expert stages the INT8 draft first (half the critical-path
+        # bytes) and refines to full fp16 in the background.  Only takes
+        # effect for stores whose format opts in (tiered store).
+        self.progressive = progressive
         # Optional confidence calibration (trained-predictor control plane):
         # maps a raw predictor confidence to a calibrated one before it is
         # used as a prefetch priority / residency score.  The serving
@@ -226,14 +236,28 @@ class ExpertScheduler:
 
     def _demand_fetch(self, layer: int, k: Hashable, expert: int,
                       idx: np.ndarray) -> tuple:
-        """Cold miss: synchronous demand fetch of the true channels."""
-        payload, rec = self.engine.issue(self.stores[layer], k, expert,
-                                         np.asarray(idx), self.clock,
-                                         kind="demand")
+        """Cold miss: synchronous demand fetch of the true channels.
+
+        Progressive-format experts stage the INT8 draft on the demand
+        path (half the bytes → half the stall) and a background refine
+        transfer upgrades the entry to full precision; ``wait_for``
+        applies the upgrade once its modeled completion has passed."""
+        store = self.stores[layer]
+        prog = self.progressive and store.progressive_available(expert)
+        payload, rec = self.engine.issue(
+            store, k, expert, np.asarray(idx), self.clock, kind="demand",
+            precision="draft" if prog else "full")
         res = self._res(layer)
         res.put(k, payload, ready_t=rec.complete_t)
-        res.peek(k).uses += 1  # consumed on arrival (miss already counted)
+        ent = res.peek(k)
+        ent.uses += 1  # consumed on arrival (miss already counted)
         self.stats.demand_fetches += 1
+        if prog and len(payload[0]):
+            full, frec = self.engine.issue(
+                store, (k, "refine", next(self._seq)), expert,
+                np.asarray(payload[0]), self.clock, kind="refine")
+            ent.refine = (full, frec.complete_t)
+            self.stats.draft_fetches += 1
         return payload
 
     def demand_async(self, layer: int, expert: int,
@@ -290,8 +314,36 @@ class ExpertScheduler:
             self.clock = ready
             self.engine.poll(self.clock)
         self.stats.stall_s += stall
+        self._apply_refine(layer, k)
         self.pump()
         return stall
+
+    def _apply_refine(self, layer: int, k: Hashable) -> None:
+        """Land a completed background precision upgrade; a refine whose
+        slice no longer matches the entry (top-up grew it) is stale and
+        dropped.  Serving from the draft is counted while the refine is
+        still in flight."""
+        ent = self._res(layer).peek(k)
+        if ent is None or ent.refine is None:
+            return
+        full, ready_t = ent.refine
+        if not np.array_equal(np.asarray(full[0]),
+                              np.asarray(ent.payload[0])):
+            ent.refine = None
+            self.stats.refines_dropped += 1
+            return
+        if ready_t <= self.clock + 1e-12:
+            self._res(layer).update_payload(k, full)
+            ent.refine = None
+            self.stats.refines_applied += 1
+        else:
+            self.stats.draft_served += 1
+
+    def staged_payload(self, layer: int, expert: int) -> Optional[tuple]:
+        """The CURRENT staged payload (post-refine / post-top-up); callers
+        re-read it after ``wait_for`` so compute uses the freshest slice."""
+        ent = self._res(layer).peek(self.key(layer, expert))
+        return None if ent is None else ent.payload
 
     def demand(self, layer: int, expert: int,
                channel_idx_fn: Callable[[], np.ndarray]) -> tuple:
@@ -319,10 +371,19 @@ class ExpertScheduler:
         Returns (payload, was_miss) like ``demand_async``; call
         ``wait_for`` afterwards (top-up completion times are folded into
         the entry's ``ready_t``).
+
+        With a tiered store the coverage guarantee is relative to the
+        expert's SERVABLE channels (its format's kept set): channels
+        outside it are a format/quality decision, not staleness, so the
+        union is clipped before the delta is computed (otherwise every
+        step would re-issue an unservable top-up).
         """
         k = self.key(layer, expert)
         res = self._res(layer)
         need_idx = np.asarray(need_idx)
+        avail = self.stores[layer].available_channels(expert)
+        if avail is not None:
+            need_idx = np.intersect1d(need_idx, avail)
         if k not in res and k in self._queued:
             # queued prediction demanded NOW: fetch the union of its
             # predicted channels and the truth at demand priority
@@ -343,7 +404,10 @@ class ExpertScheduler:
         _, s_gate, s_down = ent.payload
         merged_gate = jnp.concatenate([s_gate, m_gate], axis=0)[order]
         merged_down = jnp.concatenate([s_down, m_down], axis=0)[order]
-        ent.payload = (merged_idx[order], merged_gate, merged_down)
+        res.update_payload(k, (merged_idx[order], merged_gate, merged_down))
+        if ent.refine is not None:  # slice grew: the in-flight refine no
+            ent.refine = None  # longer matches it
+            self.stats.refines_dropped += 1
         ent.ready_t = max(ent.ready_t, rec.complete_t)
         self._topup_ready[k] = max(self._topup_ready.get(k, 0.0),
                                    rec.complete_t)

@@ -23,6 +23,15 @@ transfer we compare the pack-then-send chunking (``ceil(n/chunk)`` chunks
 + packing pass) against direct per-run descriptors and model whichever is
 cheaper — scattered masks pack, clustered masks go direct (Fig. 5's
 chunk-doubling generalized).
+
+Tier awareness: a store fetch may include a disk→host stage
+(``FetchInfo.disk_s`` from the tiered store).  The disk read prefills the
+pinned host record chunk by chunk WHILE earlier chunks stage host→device,
+so the modeled duration is the classic two-stage pipeline
+
+    t = disk/c + (c-1)·max(disk, h2d)/c + h2d/c
+
+rather than the serial sum — distinct bandwidths, one clock.
 """
 from __future__ import annotations
 
@@ -51,7 +60,7 @@ class TransferRecord:
     """Per-transfer telemetry (modeled timeline + strategy)."""
 
     key: Hashable
-    kind: str  # "prefetch" | "demand"
+    kind: str  # "prefetch" | "demand" | "refine"
     nbytes: int
     chunks: int
     strategy: str  # "packed" | "direct"
@@ -59,6 +68,8 @@ class TransferRecord:
     start_t: float
     complete_t: float
     demoted: bool = False  # stale prefetch the router disagreed with
+    disk_s: float = 0.0  # disk→host stage pipelined into the duration
+    precision: str = "full"  # "full" | "draft" (progressive first pass)
 
     @property
     def duration(self) -> float:
@@ -108,25 +119,38 @@ class TransferEngine:
             return direct_chunks, "direct", t_direct
         return packed_chunks, "packed", t_packed
 
+    @staticmethod
+    def _pipelined(disk_s: float, h2d_s: float, chunks: int) -> float:
+        """Two-stage pipeline at chunk granularity: disk→host prefill of
+        chunk i overlaps host→device staging of chunk i-1."""
+        c = max(chunks, 1)
+        return disk_s / c + (c - 1) * max(disk_s, h2d_s) / c + h2d_s / c
+
     # --------------------------------------------------------------- issue -
     def issue(self, store: ExpertStore, key: Hashable, expert: int,
               channel_idx: np.ndarray, now: float, *,
-              kind: str = "prefetch") -> Tuple[tuple, TransferRecord]:
+              kind: str = "prefetch", precision: str = "full"
+              ) -> Tuple[tuple, TransferRecord]:
         """Stage a sparse expert slice; returns (payload, record).
 
         payload matches the synchronous pipeline's cache payload exactly:
         ``(channel_idx, gate_cols, down_rows)`` with device-resident
         arrays, so scheduler-driven decode is bitwise-identical to the
-        synchronous path.
+        synchronous path.  A tiered store may serve a SUBSET of the
+        requested channels (its format's kept set) and report a disk→host
+        stage; a ``precision="draft"`` fetch stages the INT8 draft copy
+        (about half the link bytes) for progressive refinement.
         """
         idx = np.asarray(channel_idx)
-        nbytes = int(len(idx) * 2 * store.d_model *
-                     store.records.dtype.itemsize)
-        chunks, strategy, duration = self._chunking(idx, nbytes)
         # real movement (host gather + device_put) happens here
-        gate_cols, down_rows = store.fetch_sparse(
-            expert, idx, chunk_channels=self.chunk_channels)
-        payload = (idx, gate_cols, down_rows)
+        served, gate_cols, down_rows, info = store.fetch_slice(
+            expert, idx, chunk_channels=self.chunk_channels,
+            precision=precision)
+        nbytes = info.nbytes
+        chunks, strategy, duration = self._chunking(served, nbytes)
+        if info.disk_s > 0.0:
+            duration = self._pipelined(info.disk_s, duration, chunks)
+        payload = (served, gate_cols, down_rows)
         if kind == "demand":
             # demand preempts speculative traffic: it enters the link right
             # after the chunk currently in transit; queued prefetches are
@@ -140,7 +164,8 @@ class TransferEngine:
             self._buffer_free[b] = complete
         rec = TransferRecord(key=key, kind=kind, nbytes=nbytes, chunks=chunks,
                              strategy=strategy, enqueue_t=now, start_t=start,
-                             complete_t=complete)
+                             complete_t=complete, disk_s=info.disk_s,
+                             precision=info.precision)
         self.inflight[key] = rec
         self.records.append(rec)
         return payload, rec
@@ -212,6 +237,10 @@ class TransferEngine:
             "busy_s": self.busy_seconds(),
             "demoted": sum(1 for r in self.records if r.demoted),
             "wasted_bytes": self.wasted_bytes(),
+            "disk_s": sum(r.disk_s for r in self.records),
+            "draft_transfers":
+                sum(1 for r in self.records if r.precision == "draft"),
+            "refines": sum(1 for r in self.records if r.kind == "refine"),
             "direct_fraction":
                 (sum(1 for r in self.records if r.strategy == "direct") / n)
                 if n else 0.0,

@@ -51,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
-from repro.core import floe_layer, hqq, predictor
+from repro.core import floe_layer, predictor
 from repro.core.pipeline import FloEPipeline, StepMetrics
 from repro.models import attention as attn_lib
 from repro.models import blocks as blk
@@ -582,40 +582,54 @@ class ServingController:
         for e in experts:
             rows = np.nonzero((eids == e).any(axis=1))[0]
             hb = hn2[rows]
-            w = pipe.up_res[li]
-            qt = hqq.QTensor(w.up_q.packed[e], w.up_q.scale[e],
-                             w.up_q.zero[e], w.up_q.bits, w.up_q.group,
-                             w.up_q.shape)
-            v, row_mask = floe_layer.up_and_mask(hb, qt, w.thresholds[e])
-            row_mask = np.asarray(row_mask)
+            v, row_mask = pipe._up_mask_rows(hb, li, int(e))
+            # a tiered store can only stage its format's kept channels —
+            # clip the demand to the servable set (the rest is the
+            # planner's footprint/quality knob, logged as coverage)
+            avail = pipe.stores[li].available_channels(int(e))
+            if avail is not None:
+                am = np.zeros(row_mask.shape[1], bool)
+                am[avail] = True
+                served_mask = row_mask & am[None, :]
+            else:
+                served_mask = row_mask
             t_up = pipe._up_time(hb.shape[0], li, e)
             metrics.compute_s += t_up
             sched.advance(t_up)
-            union_idx = np.nonzero(row_mask.any(axis=0))[0]
+            union_idx = np.nonzero(served_mask.any(axis=0))[0]
             payload, was_miss = sched.demand_union(li, int(e), union_idx)
             if was_miss:
                 metrics.expert_misses += 1
             else:
                 metrics.expert_hits += 1
-            issued[e] = (rows, v, row_mask, payload, was_miss)
+            issued[e] = (rows, v, row_mask, served_mask, payload, was_miss)
         for e in experts:
-            rows, v, row_mask, payload, was_miss = issued[e]
+            rows, v, row_mask, served_mask, payload, was_miss = issued[e]
             metrics.stall_s += sched.wait_for(li, int(e), was_miss=was_miss)
+            # pick up an applied progressive refine (same slice, full
+            # precision); an evicted entry keeps the original payload
+            cur = sched.staged_payload(li, int(e))
+            if cur is not None and np.array_equal(np.asarray(cur[0]),
+                                                  np.asarray(payload[0])):
+                payload = cur
             idx, gate_cols, down_rows = payload
             n_act = 0
             for j, b in enumerate(rows.tolist()):
-                own = np.nonzero(row_mask[j])[0]
+                own = np.nonzero(served_mask[j])[0]
                 sel = np.searchsorted(idx, own)
                 # demand_union's contract (property-tested): the staged
-                # slice covers the union of row masks, so coverage is 1.0
-                # by construction — channels can only be lost to
-                # prediction, never to cache staleness.  Fail loudly if
-                # that ever breaks; a silent filter would corrupt outputs.
+                # slice covers the union of SERVABLE row masks, so
+                # coverage over that set is 1.0 by construction —
+                # channels can only be lost to the planner's format
+                # choice, never to cache staleness.  Fail loudly if that
+                # ever breaks; a silent filter would corrupt outputs.
                 assert sel.size == 0 or (int(sel[-1]) < idx.size and
                                          np.array_equal(idx[sel], own)), \
                     "demand_union contract violated: staged slice " \
                     "misses needed channels"
-                covs.append(1.0)
+                covs.append(float(own.size) /
+                            max(int(np.count_nonzero(row_mask[j])), 1)
+                            if row_mask[j].any() else 1.0)
                 ye = floe_layer.sparse_expert_apply(
                     hn2[b:b + 1], gate_cols[sel], down_rows[sel],
                     v[j:j + 1, own])
@@ -890,6 +904,8 @@ class ServingController:
             "prefetch_precision": self.sched.prefetch_precision(),
             "prediction_recall": self.prediction_recall(),
             "demand_topups": self.sched.stats.demand_topups,
+            "draft_fetches": self.sched.stats.draft_fetches,
+            "refines_applied": self.sched.stats.refines_applied,
             "train_rounds": self.train_rounds,
             "calibration_scale": self.calibrator.scale,
         }

@@ -1,0 +1,35 @@
+"""repro.store — tiered compressed expert parameter store.
+
+The memory hierarchy the runtime schedules against (FloE's footprint
+results made structural):
+
+    DiskTier (sharded ckpt, lazy index)
+        │ disk→host prefill (pipelined with staging)
+    HostTier (byte-budget LRU, pinned-memory records + INT8 drafts)
+        │ host→device link (TransferEngine timeline)
+    DevicePool (fixed slab arena) ◀── ResidencyManager slots
+
+``formats`` assigns each expert a storage format (up-projection precision ×
+gate/down keep-ratio × progressive draft), ``planner.plan_store`` solves
+formats / pinned set / pool size for a ``--vram-gb`` budget from measured
+activation frequencies, and ``tiered.TieredExpertStore`` serves the runtime
+through the same interface as the flat in-host store.
+
+See ROADMAP.md §store for the architecture notes.
+"""
+from repro.store.formats import (FORMATS, LADDER, ExpertFormat, get_format,
+                                 register_format)
+from repro.store.planner import (PlanError, StorePlan, dense_residency_bytes,
+                                 floor_bytes, measure_frequencies,
+                                 non_expert_bytes, plan_store)
+from repro.store.tiered import TieredExpertStore, build_layer_stores
+from repro.store.tiers import (DevicePool, DiskModel, DiskTier, HostTier,
+                               SlabSpan, tier_key)
+
+__all__ = [
+    "ExpertFormat", "FORMATS", "LADDER", "get_format", "register_format",
+    "StorePlan", "PlanError", "plan_store", "measure_frequencies",
+    "non_expert_bytes", "dense_residency_bytes", "floor_bytes",
+    "DiskTier", "DiskModel", "HostTier", "DevicePool", "SlabSpan",
+    "tier_key", "TieredExpertStore", "build_layer_stores",
+]

@@ -1,0 +1,121 @@
+"""Per-expert storage formats and their byte accounting.
+
+FloE stores every expert the same way (INT2 up + one keep-ratio for
+gate/down).  The tiered store generalizes this into a *format registry*
+(MoBiLE's big/little experts, arXiv:2510.12357): hot experts ride a richer
+format than cold ones, chosen by the VRAM planner from measured activation
+frequencies.
+
+A format fixes, per expert:
+
+  * ``up_bits``   — the device-RESIDENT up projection precision (the intra
+    predictor input).  16 = dense fp16; 4/2 = HQQ-packed.
+  * ``keep_ratio``— the fraction of gate/down channel records materialized
+    in the host tier (ranked by ‖W_up[:, c]‖, the same statistic the
+    contextual mask thresholds).  Channels outside the kept set can never
+    be staged — the footprint/quality knob (coverage is logged).
+  * ``progressive`` — demand fetches are served from an INT8 *draft* copy
+    of the records immediately (≈half the bytes on the demand-critical
+    path) and refined to full fp16 by a background transfer.
+
+Draft records are symmetric per-channel INT8: codes (n, 2D) int8 plus one
+f16 scale per channel record.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertFormat:
+    name: str
+    up_bits: int  # 16 (dense fp16) | 8 | 4 | 2 (HQQ-packed)
+    keep_ratio: float  # fraction of gate/down records in the host tier
+    progressive: bool = False  # draft-then-refine demand fetches
+
+    def __post_init__(self):
+        assert self.up_bits in (16, 8, 4, 2), self.up_bits
+        assert 0.0 < self.keep_ratio <= 1.0, self.keep_ratio
+
+
+# Richest to leanest.  fp16 is the pinned/hot format (full records, dense
+# up); int2 is the paper's cold default (FloE §3.2 with sparsity 0.8).
+FORMATS: Dict[str, ExpertFormat] = {
+    "fp16": ExpertFormat("fp16", 16, 1.0, progressive=True),
+    "int4": ExpertFormat("int4", 4, 0.5, progressive=True),
+    "int2": ExpertFormat("int2", 2, 0.3, progressive=True),
+}
+#: upgrade path the planner walks with spare VRAM (lean -> rich)
+LADDER: Tuple[str, ...] = ("int2", "int4", "fp16")
+
+
+def get_format(name: str) -> ExpertFormat:
+    try:
+        return FORMATS[name]
+    except KeyError:
+        raise KeyError(f"unknown expert format {name!r}; "
+                       f"registered: {sorted(FORMATS)}") from None
+
+
+def register_format(fmt: ExpertFormat) -> None:
+    FORMATS[fmt.name] = fmt
+
+
+# ------------------------------------------------------------- accounting --
+def up_bytes(d_model: int, d_ff: int, bits: int, group: int = 64,
+             meta_bytes: int = 2) -> int:
+    """Device-resident up-projection bytes at a given precision."""
+    if bits == 16:
+        return d_model * d_ff * 2
+    packed = d_model * d_ff * bits // 8
+    meta = 2 * (d_model // group) * d_ff * meta_bytes  # f16 scale + zero
+    return packed + meta
+
+
+def kept_channels(d_ff: int, keep_ratio: float) -> int:
+    return max(1, int(round(d_ff * keep_ratio)))
+
+
+def record_bytes(d_model: int, d_ff: int, keep_ratio: float) -> int:
+    """Host fp16 compact records (gate col ‖ down row) for the kept set."""
+    return kept_channels(d_ff, keep_ratio) * 2 * d_model * 2
+
+
+def draft_bytes(d_model: int, d_ff: int, keep_ratio: float) -> int:
+    """INT8 draft copy: codes + one f16 scale per kept channel record."""
+    n = kept_channels(d_ff, keep_ratio)
+    return n * 2 * d_model + n * 2
+
+
+def slice_bytes(d_model: int, n_channels: int, precision: str = "full") -> int:
+    """Bytes moved for a staged slice of ``n_channels`` records."""
+    if precision == "draft":
+        return n_channels * 2 * d_model + n_channels * 2
+    return n_channels * 2 * d_model * 2
+
+
+def host_bytes(fmt: ExpertFormat, d_model: int, d_ff: int) -> int:
+    """Host-tier bytes for one expert in this format."""
+    n = record_bytes(d_model, d_ff, fmt.keep_ratio)
+    if fmt.progressive:
+        n += draft_bytes(d_model, d_ff, fmt.keep_ratio)
+    return n
+
+
+def expert_vram_bytes(fmt: ExpertFormat, d_model: int, d_ff: int,
+                      group: int = 64) -> int:
+    """Device-resident bytes for one expert in this format (its up proj)."""
+    return up_bytes(d_model, d_ff, fmt.up_bits, group)
+
+
+def rank_channels_by_upnorm(we_up: np.ndarray) -> np.ndarray:
+    """Channel importance for the static keep set: ‖W_up[:, c]‖₂.
+
+    The contextual mask keeps channels with large |x·W_up[:, c]|, so the
+    column norm is the input-independent upper-bound proxy — the same
+    statistic FloE's calibration thresholds."""
+    return np.argsort(-np.linalg.norm(np.asarray(we_up, np.float32),
+                                      axis=0), kind="stable")

@@ -1,0 +1,251 @@
+"""VRAM-budget planner: solve formats / pinned set / pool size for a budget.
+
+Given ``--vram-gb`` (and host GB) plus measured per-(layer, expert)
+activation frequencies, decide:
+
+  * the per-expert storage format (rich formats for hot experts),
+  * the pinned always-resident set (hottest experts, staged full-format at
+    t=0 and never evicted),
+  * the residency-pool size (slots per MoE layer and the slab arena that
+    backs them),
+
+such that the modeled device footprint — non-expert weights + per-expert
+resident up projections + the slab arena — fits the budget.  This is the
+paper's footprint/quality knob made end-to-end: every GiB the budget grants
+is spent, in priority order, on the resources that cut demand stall the
+most.
+
+The solver is deterministic and greedy, spending in stall-first order
+(pinning removes a hot expert's transfers entirely; format upgrades buy
+*quality* — coverage — at slightly higher per-fetch bytes):
+
+  1. feasibility floor: every expert in the leanest format, one residency
+     slot per MoE layer, nothing pinned.  Below this, raise ``PlanError``.
+  2. grow residency slots to k+1 (every routed expert of a step plus one).
+  3. pin the hottest experts (their staged slices live permanently in
+     arena slabs; the richest ladder format).
+  4. upgrade experts one format-ladder rung at a time, hottest first.
+  5. spend any remainder on more residency slots.
+
+``ladder`` restricts the format choices (e.g. ``("int2",)`` holds quality
+constant so a budget sweep isolates the footprint↔stall curve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.store import formats as F
+
+
+class PlanError(ValueError):
+    """The budget cannot hold even the leanest feasible configuration."""
+
+
+@dataclasses.dataclass
+class StorePlan:
+    """The planner's decision, consumed by the tiered store + pipeline."""
+
+    vram_budget: int  # bytes
+    host_budget: int  # bytes
+    formats: Dict[Tuple[int, int], str]  # (layer, expert) -> format name
+    pinned: List[Tuple[int, int]]
+    slots_per_layer: int
+    slab_bytes: int
+    num_slabs: int  # total arena (shared across layers)
+    breakdown: Dict[str, int]  # bytes per component
+    progressive: bool = True
+
+    def format_for(self, layer: int, expert: int) -> F.ExpertFormat:
+        return F.get_format(self.formats[(layer, expert)])
+
+    def footprint_bytes(self) -> int:
+        return sum(self.breakdown.values())
+
+    def summary(self) -> str:
+        counts: Dict[str, int] = {}
+        for name in self.formats.values():
+            counts[name] = counts.get(name, 0) + 1
+        parts = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+        gib = self.footprint_bytes() / 2 ** 30
+        return (f"footprint={gib:.3f}GiB/"
+                f"{self.vram_budget / 2 ** 30:.3f}GiB "
+                f"slots/layer={self.slots_per_layer} "
+                f"pinned={len(self.pinned)} slabs={self.num_slabs} "
+                f"formats[{parts}]")
+
+
+def measure_frequencies(layers: Sequence[dict], cfg: ModelConfig, *,
+                        samples: int = 128, seed: int = 9,
+                        scale: float = 0.5) -> np.ndarray:
+    """(L, E) expert activation frequencies from routing calibration states
+    through each MoE layer's router (the same proxy distribution the
+    threshold calibration uses)."""
+    import jax
+    from repro.models.moe import router_topk
+
+    freqs = np.zeros((len(layers), cfg.num_experts), np.float64)
+    h = jax.random.normal(jax.random.PRNGKey(seed),
+                          (samples, cfg.d_model)) * scale
+    for li, layer in enumerate(layers):
+        if "moe" not in layer:
+            continue
+        _, eids, _ = router_topk(h, layer["moe"]["router"],
+                                 cfg.num_experts_per_tok)
+        ids, counts = np.unique(np.asarray(eids).reshape(-1),
+                                return_counts=True)
+        freqs[li, ids] = counts
+        freqs[li] /= max(freqs[li].sum(), 1.0)
+    return freqs
+
+
+def _moe_layers(cfg: ModelConfig) -> List[int]:
+    out, li = [], 0
+    for pattern, reps in cfg.segments():
+        for _ in range(reps):
+            for kind in pattern:
+                if kind == "moe":
+                    out.append(li)
+                li += 1
+    return out
+
+
+def non_expert_bytes(cfg: ModelConfig, dense_bytes: int = 2) -> int:
+    """Device-resident non-expert weights (attention, norms, router,
+    embeddings, head) at fp16."""
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    n_moe = len(_moe_layers(cfg))
+    return (cfg.param_count() - n_moe * cfg.num_experts * per_expert) \
+        * dense_bytes
+
+
+def dense_residency_bytes(cfg: ModelConfig, dense_bytes: int = 2) -> int:
+    """Footprint of keeping EVERY weight resident at fp16 — the budget
+    ceiling the planner exists to undercut."""
+    return cfg.param_count() * dense_bytes
+
+
+def floor_bytes(cfg: ModelConfig,
+                ladder: Optional[Tuple[str, ...]] = None) -> int:
+    """Footprint of the leanest feasible plan (everything in the leanest
+    ladder format, one residency slot per MoE layer, no pins) — budgets
+    below this raise :class:`PlanError`."""
+    ladder = ladder or F.LADDER
+    moe = _moe_layers(cfg)
+    lean = F.get_format(ladder[0])
+    up = len(moe) * cfg.num_experts * F.expert_vram_bytes(
+        lean, cfg.d_model, cfg.moe_d_ff, cfg.floe.quant_group)
+    return non_expert_bytes(cfg) + up + len(moe) * default_slab_bytes(cfg)
+
+
+def default_slab_bytes(cfg: ModelConfig) -> int:
+    """One slab holds a typical staged slice: a union channel mask at the
+    calibrated sparsity (~(1-sparsity)·1.75 of d_ff) of fp16 records.
+    Bigger slices take a span of slabs."""
+    keep = min(1.0, (1.0 - cfg.floe.sparsity) * 1.75)
+    return F.slice_bytes(cfg.d_model, F.kept_channels(cfg.moe_d_ff, keep))
+
+
+def plan_store(cfg: ModelConfig, freqs: np.ndarray, *,
+               vram_gb: float, host_gb: float = 8.0,
+               max_slots: Optional[int] = None,
+               max_pinned: Optional[int] = None,
+               ladder: Optional[Tuple[str, ...]] = None,
+               progressive: bool = True) -> StorePlan:
+    """Solve the tiered-store configuration for a VRAM budget (GiB)."""
+    budget = int(vram_gb * 2 ** 30)
+    host_budget = int(host_gb * 2 ** 30)
+    d, f = cfg.d_model, cfg.moe_d_ff
+    group = cfg.floe.quant_group
+    moe = _moe_layers(cfg)
+    E = cfg.num_experts
+    assert moe and E, "plan_store needs an MoE model"
+    freqs = np.asarray(freqs)
+    assert freqs.shape == (cfg.num_layers, E), freqs.shape
+    if ladder is None:
+        ladder = F.LADDER
+
+    slab = default_slab_bytes(cfg)
+    # slabs a pinned expert's permanently-staged slice occupies
+    pin_fmt = F.get_format(ladder[-1])
+    pin_span = -(-F.slice_bytes(
+        d, F.kept_channels(f, pin_fmt.keep_ratio)) // slab)
+    base = non_expert_bytes(cfg)
+    if max_slots is None:
+        max_slots = E
+
+    fmt: Dict[Tuple[int, int], str] = {(li, e): ladder[0]
+                                       for li in moe for e in range(E)}
+    pinned: List[Tuple[int, int]] = []
+    slots = 1
+
+    def up_cost() -> int:
+        return sum(F.expert_vram_bytes(F.get_format(n), d, f, group)
+                   for n in fmt.values())
+
+    def arena_slabs(n_slots: int) -> int:
+        return len(moe) * n_slots + len(pinned) * pin_span
+
+    def total(n_slots: int) -> int:
+        return base + up_cost() + arena_slabs(n_slots) * slab
+
+    if total(1) > budget:
+        raise PlanError(
+            f"vram budget {budget / 2 ** 30:.2f}GiB cannot hold the leanest "
+            f"store configuration ({total(1) / 2 ** 30:.2f}GiB: "
+            f"non-expert {base / 2 ** 30:.2f} + {ladder[0]} up "
+            f"{up_cost() / 2 ** 30:.2f} + 1-slot arena)")
+
+    # hottest experts first, across all layers
+    order = sorted(((li, e) for li in moe for e in range(E)),
+                   key=lambda k: (-freqs[k[0], k[1]], k[0], k[1]))
+
+    # 2. slots to cover one decode step's routed experts (+1 lookahead)
+    target = min(max(2, cfg.num_experts_per_tok + 1), max_slots)
+    while slots < target and total(slots + 1) <= budget:
+        slots += 1
+
+    # 3. pin the hottest experts: the strongest stall reducer (a pinned
+    # expert never transfers again), bounded so cold-expert capacity
+    # remains for the quality upgrades below
+    pin_cap = len(moe) * max(1, E // 2)
+    if max_pinned is not None:
+        pin_cap = min(pin_cap, max_pinned)
+    for k in order:
+        if len(pinned) >= pin_cap:
+            break
+        prev = fmt[k]
+        fmt[k] = pin_fmt.name  # pinned experts ride the richest format
+        pinned.append(k)
+        if total(slots) > budget:
+            pinned.pop()
+            fmt[k] = prev
+            break
+
+    # 4. per-expert upgrades (quality/coverage), one rung per pass,
+    # hottest first
+    for rung in range(1, len(ladder)):
+        for k in order:
+            if fmt[k] != ladder[rung - 1] or k in pinned:
+                continue
+            fmt[k] = ladder[rung]
+            if total(slots) > budget:
+                fmt[k] = ladder[rung - 1]
+                break  # colder experts cost the same or more: stop the pass
+
+    # 5. remainder -> more residency slots
+    while slots < max_slots and total(slots + 1) <= budget:
+        slots += 1
+
+    plan = StorePlan(
+        vram_budget=budget, host_budget=host_budget, formats=fmt,
+        pinned=pinned, slots_per_layer=slots, slab_bytes=slab,
+        num_slabs=arena_slabs(slots),
+        breakdown={"non_expert": base, "resident_up": up_cost(),
+                   "residency_arena": arena_slabs(slots) * slab},
+        progressive=progressive)
+    assert plan.footprint_bytes() <= budget
+    return plan

@@ -1,0 +1,242 @@
+"""``TieredExpertStore`` — the flat host store rewired over the tier stack.
+
+Per MoE layer the store holds, per expert and per its *planned format*
+(``repro.store.planner.StorePlan``):
+
+  * device-resident up projection at the format's precision (fp16 dense or
+    HQQ-packed INT4/INT2) — the intra-predictor input, never offloaded;
+  * a host record of the kept gate/down channels (compact fp16 layout,
+    ranked by ‖W_up[:, c]‖) plus, for progressive formats, an INT8 draft
+    copy — living in the capacity-bounded ``HostTier``;
+  * the authoritative copy of every host record in the ``DiskTier``
+    (per-expert sharded checkpoint, lazy index).
+
+``fetch_slice`` is the runtime's entry point: it intersects the request
+with the format's kept set, pulls the record through host (possibly
+paying a modeled disk→host read that the transfer engine pipelines with
+host→device staging), and stages either the full fp16 slice or the INT8
+draft.  The flat ``core.offload.ExpertStore`` remains the degenerate
+one-tier case behind the same interface.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hqq
+from repro.core.offload import ExpertStore, FetchInfo, LinkModel, TransferLog
+from repro.store import formats as F
+from repro.store.planner import StorePlan
+from repro.store.tiers import (DiskModel, DiskTier, HostTier, record_nbytes,
+                               tier_key)
+
+
+def _draft_encode(rec: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-record symmetric INT8: (codes int8 (n, 2D), scale f16 (n, 1))."""
+    rec32 = rec.astype(np.float32)
+    scale = np.maximum(np.abs(rec32).max(axis=1, keepdims=True), 1e-8) / 127.0
+    codes = np.clip(np.round(rec32 / scale), -127, 127).astype(np.int8)
+    return codes, scale.astype(np.float16)
+
+
+def _draft_decode(codes: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return (codes.astype(np.float32) *
+            scale.astype(np.float32)).astype(np.float16)
+
+
+class TieredExpertStore(ExpertStore):
+    """One MoE layer's experts behind the disk/host/device tier stack."""
+
+    def __init__(self, moe_params: dict, thresholds: np.ndarray, *,
+                 plan: StorePlan, layer: int, host: HostTier,
+                 link: Optional[LinkModel] = None,
+                 quant_group: int = 64,
+                 shard_writer=None):
+        we_gate = np.asarray(moe_params["we_gate"], np.float16)
+        we_down = np.asarray(moe_params["we_down"], np.float16)
+        e, d, f = we_gate.shape
+        self.num_experts, self.d_model, self.d_ff = e, d, f
+        self.layer = layer
+        self.plan = plan
+        self.host = host
+        self.thresholds = np.asarray(thresholds)
+        self.link = link or LinkModel()
+        self.log = TransferLog()
+
+        # ---- per-expert format, kept channel set, disk records -----------
+        self.fmts: List[F.ExpertFormat] = [plan.format_for(layer, i)
+                                           for i in range(e)]
+        self._kept: List[np.ndarray] = []
+        for i in range(e):
+            fmt = self.fmts[i]
+            rank = F.rank_channels_by_upnorm(moe_params["we_up"][i])
+            kept = np.sort(rank[:F.kept_channels(f, fmt.keep_ratio)])
+            self._kept.append(kept.astype(np.int32))
+            rec = np.concatenate([we_gate[i].T[kept], we_down[i][kept]],
+                                 axis=-1)  # (n_keep, 2D) compact layout
+            record = {"chan_idx": self._kept[i],
+                      "records": np.ascontiguousarray(rec)}
+            if fmt.progressive:
+                codes, scale = _draft_encode(rec)
+                record["draft"] = codes
+                record["draft_scale"] = scale
+            if shard_writer is not None:
+                shard_writer.add(tier_key(layer, i), record)
+            else:  # no disk tier: records live host-side unconditionally
+                self.host.admit(tier_key(layer, i), record,
+                                record_nbytes(record))
+
+        # ---- device-resident up projections at per-expert precision ------
+        up = np.asarray(moe_params["we_up"], np.float32)
+        self._up: List = [None] * e
+        by_bits: Dict[int, List[int]] = {}
+        for i, fmt in enumerate(self.fmts):
+            by_bits.setdefault(fmt.up_bits, []).append(i)
+        for bits, idxs in by_bits.items():
+            if bits == 16:
+                for i in idxs:
+                    self._up[i] = jnp.asarray(up[i], jnp.float16)
+            else:
+                qt = hqq.quantize_per_expert(jnp.asarray(up[idxs]),
+                                             bits=bits, group=quant_group)
+                for j, i in enumerate(idxs):
+                    self._up[i] = hqq.QTensor(
+                        qt.packed[j], qt.scale[j], qt.zero[j], qt.bits,
+                        qt.group, qt.shape)
+
+    # -------------------------------------------------------------- sizes --
+    @property
+    def records(self):  # the flat array does not exist in the tiered store
+        raise AttributeError(
+            "TieredExpertStore holds no flat records array; use "
+            "fetch_slice/slice_nbytes")
+
+    def slice_nbytes(self, channel_idx, precision: str = "full") -> int:
+        return F.slice_bytes(self.d_model, len(channel_idx), precision)
+
+    def up_nbytes(self, e: int) -> int:
+        u = self._up[e]
+        if isinstance(u, hqq.QTensor):
+            return u.nbytes
+        return int(u.size * u.dtype.itemsize)
+
+    def host_bytes(self, e: int) -> int:
+        return F.host_bytes(self.fmts[e], self.d_model, self.d_ff)
+
+    def compressed_expert_bytes(self, keep_ratio: float) -> int:
+        rec = F.record_bytes(self.d_model, self.d_ff, keep_ratio)
+        return rec + self.up_nbytes(0)
+
+    # -------------------------------------------------------------- tiers --
+    def available_channels(self, e: int) -> Optional[np.ndarray]:
+        if self.fmts[e].keep_ratio >= 1.0:
+            return None
+        return self._kept[e]
+
+    def progressive_available(self, e: int) -> bool:
+        return self.plan.progressive and self.fmts[e].progressive
+
+    # ------------------------------------------------------------ fetches --
+    def fetch_slice(self, e: int, channel_idx: np.ndarray, *,
+                    chunk_channels: int = 50, precision: str = "full"
+                    ) -> tuple[np.ndarray, jax.Array, jax.Array, FetchInfo]:
+        import time
+
+        idx = np.asarray(channel_idx)
+        kept = self._kept[e]
+        served = idx if self.fmts[e].keep_ratio >= 1.0 else \
+            np.intersect1d(idx, kept)
+        record, disk_s = self.host.fetch(tier_key(self.layer, e))
+        pos = np.searchsorted(record["chan_idx"], served)
+        if precision == "draft" and "draft" in record:
+            rec = _draft_decode(record["draft"][pos],
+                                record["draft_scale"][pos])
+        else:
+            precision = "full"
+            rec = record["records"][pos]
+        nbytes = self.slice_nbytes(served, precision)
+        chunks = max(1, -(-len(served) // max(chunk_channels, 1)))
+        t0 = time.perf_counter()
+        dev = jax.device_put(np.ascontiguousarray(rec))
+        jax.block_until_ready(dev)
+        self._account(nbytes, chunks, time.perf_counter() - t0)
+        gate_cols = dev[:, :self.d_model]
+        down_rows = dev[:, self.d_model:]
+        return served, gate_cols, down_rows, FetchInfo(nbytes, disk_s,
+                                                       precision)
+
+    def fetch_sparse(self, e: int, channel_idx: np.ndarray,
+                     chunk_channels: int = 50) -> tuple[jax.Array, jax.Array]:
+        _, gate_cols, down_rows, _ = self.fetch_slice(
+            e, channel_idx, chunk_channels=chunk_channels)
+        return gate_cols, down_rows
+
+    def fetch_up(self, e: int) -> hqq.QTensor:
+        u = self._up[e]
+        assert isinstance(u, hqq.QTensor), \
+            "fetch_up on an fp16-format expert; use true_mask"
+        return u
+
+    def fetch_dense(self, e: int):
+        raise NotImplementedError(
+            "the tiered store has no dense-offload baseline path")
+
+    # -------------------------------------------------- intra-mask compute -
+    def true_mask(self, h: jax.Array, e: int
+                  ) -> tuple[jax.Array, np.ndarray]:
+        """v = h W_up at the expert's resident precision; per-row mask
+        |v| >= threshold.  Returns (v (B, F) f32, mask (B, F) bool)."""
+        u = self._up[e]
+        if isinstance(u, hqq.QTensor):
+            wu = hqq.dequantize(u, jnp.float32)
+        else:
+            wu = u.astype(jnp.float32)
+        v = h.astype(jnp.float32) @ wu
+        return v, np.asarray(jnp.abs(v) >= self.thresholds[e])
+
+
+def build_layer_stores(layers: Sequence[dict], thresholds: np.ndarray,
+                       plan: StorePlan, store_dir, *,
+                       link: Optional[LinkModel] = None,
+                       disk_model: Optional[DiskModel] = None,
+                       quant_group: int = 64,
+                       freqs: Optional[np.ndarray] = None
+                       ) -> Tuple[List[Optional[TieredExpertStore]], HostTier]:
+    """Build every MoE layer's tiered store over ONE shared disk shard +
+    host tier, then warm the host tier hottest-first under its budget."""
+    from repro.checkpoint.io import ShardWriter
+
+    host = HostTier(plan.host_budget)
+    writer = ShardWriter(store_dir)
+    stores: List[Optional[TieredExpertStore]] = []
+    for li, layer in enumerate(layers):
+        if "moe" not in layer:
+            stores.append(None)
+            continue
+        stores.append(TieredExpertStore(
+            layer["moe"], thresholds[li], plan=plan, layer=li, host=host,
+            link=link, quant_group=quant_group, shard_writer=writer))
+    writer.close()
+    host.disk = DiskTier(store_dir, model=disk_model)
+
+    # hottest experts become host-resident first
+    ranked: List[Tuple[float, int, int]] = []
+    for li, store in enumerate(stores):
+        if store is None:
+            continue
+        for e in range(store.num_experts):
+            f = float(freqs[li, e]) if freqs is not None else 0.0
+            ranked.append((-f, li, e))
+    for _, li, e in sorted(ranked):
+        store = stores[li]
+        key = tier_key(li, e)
+        if key in host:
+            continue
+        if host.bytes_in_use + store.host_bytes(e) > host.capacity_bytes:
+            break
+        rec, _ = host.disk.load(key)
+        host.admit(key, rec, record_nbytes(rec))
+    return stores, host

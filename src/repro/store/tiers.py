@@ -1,0 +1,272 @@
+"""The three tiers of the expert parameter store.
+
+    DiskTier   — sharded checkpoint (checkpoint.io.ShardReader): one record
+                 per expert, lazy offset index, modeled NVMe latency.
+    HostTier   — capacity-bounded LRU of per-expert host records (compact
+                 fp16 gate/down + INT8 draft) in pinned memory; misses
+                 refill from disk.
+    DevicePool — slab/arena allocator for the VRAM residency pool: staged
+                 slices borrow fixed-size slabs and return them on
+                 eviction, so the arena NEVER grows (zero external
+                 fragmentation by construction; internal slack is
+                 telemetry).
+
+The residency-decoupling direction of FluxMoE (arXiv:2604.02715): where an
+expert's bytes live (disk / host / device) is decided by capacity planning,
+not by the checkpoint layout.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Tuple
+
+from repro.checkpoint.io import ShardReader, ShardWriter
+
+
+def tier_key(layer: int, expert: int) -> str:
+    return f"L{layer}.E{expert}"
+
+
+def record_nbytes(record: dict) -> int:
+    """Decoded (in-host) bytes of one expert record — what the pinned
+    host budget actually holds, as opposed to the compressed on-disk
+    size."""
+    return int(sum(getattr(v, "nbytes", 0) for v in record.values()))
+
+
+# ------------------------------------------------------------------- disk --
+@dataclasses.dataclass(frozen=True)
+class DiskModel:
+    """NVMe-like read model (paper setup: consumer SSD under PCIe 4.0)."""
+
+    read_bw: float = 3.5e9  # bytes/s sequential
+    seek_us: float = 80.0  # per-read latency (queue + firmware)
+
+    def read_time(self, nbytes: int, reads: int = 1) -> float:
+        if nbytes == 0:
+            return 0.0
+        return max(reads, 1) * self.seek_us * 1e-6 + nbytes / self.read_bw
+
+
+@dataclasses.dataclass
+class DiskStats:
+    reads: int = 0
+    bytes_read: int = 0
+    modeled_seconds: float = 0.0
+
+
+class DiskTier:
+    """Per-expert sharded checkpoint + modeled read latency."""
+
+    def __init__(self, dirpath, *, model: Optional[DiskModel] = None):
+        self.reader = ShardReader(dirpath)
+        self.model = model or DiskModel()
+        self.stats = DiskStats()
+
+    @classmethod
+    def build(cls, dirpath, records: Dict[str, dict], *,
+              model: Optional[DiskModel] = None, level: int = 3
+              ) -> "DiskTier":
+        with ShardWriter(dirpath, level=level) as w:
+            for k, tree in records.items():
+                w.add(k, tree)
+        return cls(dirpath, model=model)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.reader
+
+    def nbytes(self, key: str) -> int:
+        return self.reader.nbytes(key)
+
+    def load(self, key: str) -> Tuple[dict, float]:
+        """One expert record + its modeled read seconds (lazy: only this
+        record's bytes are read and decoded)."""
+        rec = self.reader.load(key)
+        n = self.reader.nbytes(key)
+        t = self.model.read_time(n)
+        self.stats.reads += 1
+        self.stats.bytes_read += n
+        self.stats.modeled_seconds += t
+        return rec, t
+
+
+# ------------------------------------------------------------------- host --
+@dataclasses.dataclass
+class HostStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class HostTier:
+    """Byte-capacity-bounded LRU of host expert records (pinned memory).
+
+    A miss pulls the record from the disk tier (returning the modeled disk
+    seconds so the transfer engine can pipeline disk→host with host→device
+    staging) and admits it, evicting least-recently-used records until the
+    byte budget holds again."""
+
+    def __init__(self, capacity_bytes: int, disk: Optional[DiskTier] = None):
+        assert capacity_bytes > 0
+        self.capacity_bytes = capacity_bytes
+        self.disk = disk
+        self._records: "collections.OrderedDict[str, dict]" = \
+            collections.OrderedDict()
+        self._nbytes: Dict[str, int] = {}
+        self.bytes_in_use = 0
+        self.stats = HostStats()
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._records
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def _evict_to_fit(self, incoming: int) -> None:
+        while (self._records
+               and self.bytes_in_use + incoming > self.capacity_bytes):
+            k, _ = self._records.popitem(last=False)
+            self.bytes_in_use -= self._nbytes.pop(k)
+            self.stats.evictions += 1
+
+    def admit(self, key: str, record: dict, nbytes: int) -> None:
+        if key in self._records:
+            self._records.move_to_end(key)
+            return
+        self._evict_to_fit(nbytes)
+        self._records[key] = record
+        self._nbytes[key] = nbytes
+        self.bytes_in_use += nbytes
+
+    def fetch(self, key: str) -> Tuple[dict, float]:
+        """(record, modeled disk seconds) — 0.0 on a host hit."""
+        rec = self._records.get(key)
+        if rec is not None:
+            self._records.move_to_end(key)
+            self.stats.hits += 1
+            return rec, 0.0
+        self.stats.misses += 1
+        assert self.disk is not None and key in self.disk, \
+            f"{key} in neither host nor disk tier"
+        rec, disk_s = self.disk.load(key)
+        self.admit(key, rec, record_nbytes(rec))
+        return rec, disk_s
+
+
+# ----------------------------------------------------------------- device --
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    failures: int = 0  # alloc requests the arena could not satisfy
+    overflow_allocs: int = 0  # emergency slabs outside the arena
+    high_water_slabs: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabSpan:
+    """A staged slice's claim on the pool: one or more whole slabs."""
+
+    slabs: Tuple[int, ...]
+    nbytes: int  # payload bytes actually used
+
+
+class DevicePool:
+    """Fixed-arena slab allocator for the VRAM residency pool.
+
+    The arena is ``num_slabs`` slabs of ``slab_bytes`` each, carved once at
+    plan time.  Every allocation takes whole slabs from the free list and
+    every free returns them, so external fragmentation cannot accumulate:
+    ``arena_bytes`` is constant for the lifetime of the pool and
+    ``free + used == num_slabs`` is a class invariant.  Oversized slices
+    take a *span* of (interchangeable, not necessarily adjacent) slabs.
+
+    If the arena is exhausted the caller is expected to evict; emergency
+    overflow slabs (ids >= num_slabs) are handed out as a last resort and
+    DISCARDED on free — they never join the arena, so the steady-state
+    footprint still cannot grow.
+    """
+
+    def __init__(self, slab_bytes: int, num_slabs: int):
+        assert slab_bytes > 0 and num_slabs >= 1
+        self.slab_bytes = slab_bytes
+        self.num_slabs = num_slabs
+        self._free: List[int] = list(range(num_slabs))
+        self._used: Dict[int, Hashable] = {}  # slab id -> owner tag
+        self._overflow_next = num_slabs
+        self.stats = PoolStats()
+
+    # ---------------------------------------------------------- accounting -
+    @property
+    def arena_bytes(self) -> int:
+        return self.slab_bytes * self.num_slabs
+
+    @property
+    def free_slabs(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_slabs(self) -> int:
+        return len([s for s in self._used if s < self.num_slabs])
+
+    def slabs_needed(self, nbytes: int) -> int:
+        return max(1, -(-nbytes // self.slab_bytes))
+
+    def fragmentation_bytes(self, spans) -> int:
+        """Internal slack across live spans (telemetry only)."""
+        return sum(len(s.slabs) * self.slab_bytes - s.nbytes for s in spans)
+
+    # ------------------------------------------------------------- alloc ---
+    def try_alloc(self, nbytes: int, owner: Hashable = None
+                  ) -> Optional[SlabSpan]:
+        """A span of whole slabs, or None if the arena can't satisfy it
+        (caller should evict and retry)."""
+        k = self.slabs_needed(nbytes)
+        if k > len(self._free):
+            self.stats.failures += 1
+            return None
+        ids = tuple(self._free[:k])
+        del self._free[:k]
+        for s in ids:
+            self._used[s] = owner
+        self.stats.allocs += 1
+        self.stats.high_water_slabs = max(self.stats.high_water_slabs,
+                                          len(self._used))
+        return SlabSpan(ids, nbytes)
+
+    def alloc_overflow(self, nbytes: int, owner: Hashable = None) -> SlabSpan:
+        """Emergency allocation outside the arena (e.g. everything pinned).
+        Overflow slabs are discarded on free — the arena never inherits
+        them."""
+        k = self.slabs_needed(nbytes)
+        ids = tuple(range(self._overflow_next, self._overflow_next + k))
+        self._overflow_next += k
+        for s in ids:
+            self._used[s] = owner
+        self.stats.allocs += 1
+        self.stats.overflow_allocs += 1
+        return SlabSpan(ids, nbytes)
+
+    def free(self, span: Optional[SlabSpan]) -> None:
+        if span is None:
+            return
+        for s in span.slabs:
+            assert s in self._used, f"double free of slab {s}"
+            del self._used[s]
+            if s < self.num_slabs:  # arena slab: recycle
+                self._free.append(s)
+            # overflow slab: discarded — the arena does not grow
+        self.stats.frees += 1
+
+    def check_invariants(self) -> None:
+        arena_used = [s for s in self._used if s < self.num_slabs]
+        assert len(self._free) + len(arena_used) == self.num_slabs, \
+            (len(self._free), len(arena_used), self.num_slabs)
+        assert len(set(self._free)) == len(self._free), "free-list dup"
+        assert not (set(self._free) & set(arena_used)), "slab both states"

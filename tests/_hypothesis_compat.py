@@ -7,7 +7,8 @@ over a fixed grid of representative samples drawn from the declared
 strategies, so tier-1 stays green with reduced (but nonzero) coverage.
 
 Only the strategy combinators this repo actually uses are implemented:
-``sampled_from``, ``floats``, ``integers``, ``lists``.
+``sampled_from``, ``floats``, ``integers``, ``booleans``, ``tuples``,
+``lists``.
 """
 from __future__ import annotations
 
@@ -45,6 +46,15 @@ except ImportError:
             mid = (min_value + max_value) // 2
             vals = [min_value, mid, max_value]
             return _Strategy(sorted(set(vals)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def tuples(*elems):
+            combos = itertools.product(*(e.samples or [0] for e in elems))
+            return _Strategy(list(itertools.islice(combos, 8)))
 
         @staticmethod
         def lists(elem, min_size=0, max_size=10, **_):

@@ -10,7 +10,7 @@ jax.config.update("jax_enable_x64", False)
 # enables `-m "not slow"` for a quick dev loop.
 _SLOW_MODULES = {
     "test_controller", "test_pipeline", "test_runtime", "test_serving",
-    "test_smoke_archs", "test_system", "test_train_ckpt",
+    "test_smoke_archs", "test_store_e2e", "test_system", "test_train_ckpt",
 }
 
 

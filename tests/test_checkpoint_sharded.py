@@ -1,0 +1,101 @@
+"""Checkpoint extensions: QTensor pytree-node round-trip + sharded layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (ShardReader, ShardWriter, load_checkpoint,
+                              save_checkpoint, save_sharded)
+from repro.core import hqq
+
+
+def _qt(key=0, m=128, n=64, bits=2):
+    w = jax.random.normal(jax.random.PRNGKey(key), (m, n)) * 0.05
+    return w, hqq.quantize(w, bits=bits, group=64)
+
+
+# ------------------------------------------------- QTensor pytree nodes ----
+def test_qtensor_roundtrip_flat_checkpoint(tmp_path):
+    w, qt = _qt()
+    p = tmp_path / "qt.ckpt"
+    assert save_checkpoint(p, {"up_q": qt}) > 0
+    back = load_checkpoint(p)["up_q"]
+    assert isinstance(back, hqq.QTensor)
+    # sub-byte packed codes survive bit-exactly
+    np.testing.assert_array_equal(np.asarray(qt.packed), back.packed)
+    np.testing.assert_array_equal(np.asarray(qt.scale), back.scale)
+    assert back.scale.dtype == np.float16
+    # frozen-dataclass aux data keeps python types (ints + tuple shape)
+    assert back.bits == 2 and back.group == 64
+    assert back.shape == (128, 64) and isinstance(back.shape, tuple)
+    assert isinstance(back.shape[0], int)
+    # dequantization equivalence
+    np.testing.assert_array_equal(
+        np.asarray(hqq.dequantize(qt, jnp.float32)),
+        np.asarray(hqq.dequantize(back, jnp.float32)))
+
+
+def test_qtensor_nested_in_params_tree(tmp_path):
+    _, qt = _qt(1)
+    tree = {"layer0": {"moe": {"up_q": qt,
+                               "router": np.ones((4, 2), np.float32)},
+                       "names": ("a", 3)},
+            "stack": [qt, {"t": np.arange(3)}]}
+    p = tmp_path / "nested.ckpt"
+    save_checkpoint(p, tree)
+    back = load_checkpoint(p)
+    assert isinstance(back["layer0"]["moe"]["up_q"], hqq.QTensor)
+    assert isinstance(back["stack"][0], hqq.QTensor)
+    np.testing.assert_array_equal(np.asarray(qt.zero),
+                                  back["stack"][0].zero)
+    np.testing.assert_array_equal(back["stack"][1]["t"], np.arange(3))
+
+
+def test_qtensor_per_expert_stack_roundtrip(tmp_path):
+    """The shape actually checkpointed: vmapped (E, ...) QTensor stacks."""
+    we = jax.random.normal(jax.random.PRNGKey(2), (3, 128, 64)) * 0.05
+    qte = hqq.quantize_per_expert(we, bits=4, group=64)
+    p = tmp_path / "stack.ckpt"
+    save_checkpoint(p, {"up_q": qte})
+    back = load_checkpoint(p)["up_q"]
+    for e in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(hqq.dequantize_expert(qte, e, jnp.float32)),
+            np.asarray(hqq.dequantize_expert(back, e, jnp.float32)))
+
+
+# ------------------------------------------------------- sharded layout ----
+def test_sharded_roundtrip_and_lazy_index(tmp_path):
+    recs = {}
+    for i in range(8):
+        _, qt = _qt(10 + i, m=64, n=32)
+        recs[f"L0.E{i}"] = {"up_q": qt, "idx": np.arange(i + 1)}
+    total = save_sharded(tmp_path / "sh", recs)
+    assert total > 0
+    r = ShardReader(tmp_path / "sh")
+    assert set(r.keys()) == set(recs)
+    # single-record load: one decode, a fraction of the file's bytes
+    one = r.load("L0.E5")
+    assert r.records_decoded == 1
+    assert r.bytes_read == r.nbytes("L0.E5")
+    assert r.bytes_read < sum(r.nbytes(k) for k in r.keys())
+    np.testing.assert_array_equal(one["idx"], np.arange(6))
+    assert isinstance(one["up_q"], hqq.QTensor)
+    np.testing.assert_array_equal(np.asarray(recs["L0.E5"]["up_q"].packed),
+                                  one["up_q"].packed)
+
+
+def test_shard_writer_rejects_duplicate_keys(tmp_path):
+    import pytest
+    with ShardWriter(tmp_path / "sh") as w:
+        w.add("k", {"x": np.ones(2)})
+        with pytest.raises(AssertionError):
+            w.add("k", {"x": np.zeros(2)})
+
+
+def test_sharded_bf16_leaves(tmp_path):
+    x = jnp.asarray(np.linspace(-2, 2, 32), jnp.bfloat16)
+    save_sharded(tmp_path / "sh", {"a": {"w": x}})
+    back = ShardReader(tmp_path / "sh").load("a")["w"]
+    assert str(back.dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                  np.asarray(back, np.float32))

@@ -1,0 +1,393 @@
+"""Tiered expert store: formats, tiers (disk/host/device pool), planner."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.common.config import reduced
+from repro.configs import get_config
+from repro.core import hqq
+from repro.runtime.residency import ResidencyManager, payload_nbytes
+from repro.store import (DevicePool, DiskModel, DiskTier, HostTier,
+                         PlanError, dense_residency_bytes, floor_bytes,
+                         get_format, plan_store, tier_key)
+from repro.store import formats as F
+
+
+# --------------------------------------------------------------- formats ---
+def test_format_registry_lookup():
+    assert get_format("int2").up_bits == 2
+    assert get_format("fp16").keep_ratio == 1.0
+    with pytest.raises(KeyError):
+        get_format("int37")
+
+
+def test_format_bytes_ladder_monotone():
+    d, f = 256, 512
+    hosts = [F.host_bytes(get_format(n), d, f) for n in F.LADDER]
+    vrams = [F.expert_vram_bytes(get_format(n), d, f) for n in F.LADDER]
+    assert hosts == sorted(hosts), hosts  # lean -> rich grows
+    assert vrams == sorted(vrams), vrams
+
+
+def test_draft_half_of_full_slice():
+    d, n = 256, 100
+    full = F.slice_bytes(d, n, "full")
+    draft = F.slice_bytes(d, n, "draft")
+    assert full == n * 2 * d * 2
+    assert 0.45 * full < draft < 0.55 * full
+
+
+def test_qtensor_fp16_metadata_byte_accounting():
+    """Satellite pin: scale/zero stored fp16; nbytes is exactly
+    packed + 2 * group-count * cols * 2 bytes (dequant still f32)."""
+    import jax
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 64)) * 0.05
+    qt = hqq.quantize(w, bits=2, group=64)
+    assert qt.scale.dtype == np.float16 and qt.zero.dtype == np.float16
+    g = 128 // 64
+    expected = (g * (64 // 4) * 64  # packed uint8, 4 codes/byte
+                + 2 * g * 1 * 64 * 2)  # scale + zero at 2 bytes
+    assert qt.nbytes == expected, (qt.nbytes, expected)
+    wr = hqq.dequantize(qt, np.float32)
+    assert float(np.abs(np.asarray(wr) - np.asarray(w)).max()) < 0.1
+
+
+# ------------------------------------------------------------ device pool --
+def test_pool_alloc_free_roundtrip():
+    pool = DevicePool(slab_bytes=1024, num_slabs=4)
+    a = pool.try_alloc(1000)
+    b = pool.try_alloc(2048)  # span of 2
+    assert len(a.slabs) == 1 and len(b.slabs) == 2
+    assert pool.free_slabs == 1
+    pool.free(a)
+    pool.free(b)
+    assert pool.free_slabs == 4
+    pool.check_invariants()
+
+
+def test_pool_exhaustion_returns_none():
+    pool = DevicePool(slab_bytes=1024, num_slabs=2)
+    a = pool.try_alloc(2048)
+    assert pool.try_alloc(1) is None
+    assert pool.stats.failures == 1
+    pool.free(a)
+    assert pool.try_alloc(1) is not None
+
+
+def test_pool_overflow_discarded_on_free():
+    pool = DevicePool(slab_bytes=64, num_slabs=1)
+    a = pool.try_alloc(10)
+    o = pool.alloc_overflow(10)
+    assert o.slabs[0] >= pool.num_slabs
+    pool.free(o)
+    assert pool.free_slabs == 0  # overflow slab did NOT join the arena
+    pool.free(a)
+    assert pool.free_slabs == 1
+    pool.check_invariants()
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 3000)),
+                min_size=1000, max_size=1400),
+       st.integers(2, 8))
+@settings(max_examples=5, deadline=None)
+def test_pool_zero_fragmentation_growth_1000_cycles(ops, num_slabs):
+    """Acceptance pin: >= 1000 alloc/free cycles; the arena never grows,
+    free+used always partitions it, and no slab is double-owned."""
+    pool = DevicePool(slab_bytes=1024, num_slabs=num_slabs)
+    live = []
+    arena0 = pool.arena_bytes
+    for is_alloc, nbytes in ops:
+        if is_alloc or not live:
+            span = pool.try_alloc(nbytes)
+            if span is None:  # arena full: caller evicts -> free oldest
+                if live:
+                    pool.free(live.pop(0))
+                span = pool.try_alloc(nbytes)
+            if span is not None:
+                live.append(span)
+        else:
+            pool.free(live.pop(0))
+        assert pool.arena_bytes == arena0  # zero growth, every step
+        pool.check_invariants()
+        owned = [s for sp in live for s in sp.slabs]
+        assert len(owned) == len(set(owned))
+    assert pool.stats.allocs >= 1
+    assert pool.fragmentation_bytes(live) <= len(live) * 1024
+
+
+# ------------------------------------------------------------- host tier ---
+def _mini_disk(tmp_path, n=6, nbytes=100):
+    recs = {f"L0.E{i}": {"x": np.full(nbytes // 8, i, np.float64)}
+            for i in range(n)}
+    return DiskTier.build(tmp_path / "shards", recs), recs
+
+
+def test_host_tier_lru_eviction_under_byte_budget(tmp_path):
+    disk, _ = _mini_disk(tmp_path)
+    host = HostTier(capacity_bytes=250, disk=disk)
+    for i in range(4):
+        host.admit(f"L0.E{i}", {"x": i}, 100)
+    assert len(host) == 2 and host.bytes_in_use == 200
+    assert "L0.E3" in host and "L0.E2" in host  # LRU kept the newest
+    assert host.stats.evictions == 2
+
+
+def test_host_miss_refills_from_disk(tmp_path):
+    disk, recs = _mini_disk(tmp_path)
+    host = HostTier(capacity_bytes=10 ** 6, disk=disk)
+    rec, disk_s = host.fetch("L0.E3")
+    np.testing.assert_array_equal(rec["x"], recs["L0.E3"]["x"])
+    assert disk_s > 0 and host.stats.misses == 1
+    _, disk_s2 = host.fetch("L0.E3")
+    assert disk_s2 == 0.0 and host.stats.hits == 1
+
+
+def test_disk_tier_lazy_single_record(tmp_path):
+    disk, recs = _mini_disk(tmp_path)
+    rec, t = disk.load("L0.E2")
+    np.testing.assert_array_equal(rec["x"], recs["L0.E2"]["x"])
+    assert t > 0
+    # laziness: exactly one record decoded, far less than the whole file
+    assert disk.reader.records_decoded == 1
+    total = sum(disk.reader.nbytes(k) for k in disk.reader.keys())
+    assert disk.reader.bytes_read < total
+
+
+def test_disk_model_bandwidth_and_seek():
+    m = DiskModel(read_bw=1e9, seek_us=100.0)
+    assert m.read_time(1e9) == pytest.approx(1.0 + 1e-4)
+    assert m.read_time(0) == 0.0
+
+
+# --------------------------------------------------------------- planner ---
+def _cfg_freqs():
+    cfg = reduced(get_config("mixtral_8x7b"), layers=2, d_model=128)
+    rng = np.random.default_rng(0)
+    freqs = rng.dirichlet(np.ones(cfg.num_experts),
+                          size=cfg.num_layers).astype(np.float64)
+    return cfg, freqs
+
+
+def test_planner_respects_budget():
+    cfg, freqs = _cfg_freqs()
+    dense = dense_residency_bytes(cfg)
+    for frac in (0.45, 0.6, 0.8, 1.0):
+        plan = plan_store(cfg, freqs, vram_gb=frac * dense / 2 ** 30)
+        assert plan.footprint_bytes() <= plan.vram_budget
+        assert plan.slots_per_layer >= 1
+        assert len(plan.formats) == cfg.num_layers * cfg.num_experts
+
+
+def test_planner_richer_with_bigger_budget():
+    cfg, freqs = _cfg_freqs()
+    dense = dense_residency_bytes(cfg)
+
+    def wealth(plan):
+        rung = {n: i for i, n in enumerate(F.LADDER)}
+        return (sum(rung[n] for n in plan.formats.values()),
+                len(plan.pinned), plan.slots_per_layer)
+
+    w_small = wealth(plan_store(cfg, freqs, vram_gb=0.5 * dense / 2 ** 30))
+    w_big = wealth(plan_store(cfg, freqs, vram_gb=1.0 * dense / 2 ** 30))
+    assert sum(w_big) > sum(w_small)
+    assert all(b >= s for b, s in zip(w_big, w_small))
+
+
+def test_planner_rejects_infeasible_budget():
+    cfg, freqs = _cfg_freqs()
+    with pytest.raises(PlanError):
+        plan_store(cfg, freqs, vram_gb=1e-6)
+    # floor itself is feasible
+    plan = plan_store(cfg, freqs,
+                      vram_gb=floor_bytes(cfg) * 1.001 / 2 ** 30)
+    assert plan.slots_per_layer == 1 and not plan.pinned
+
+
+def test_planner_pins_hottest():
+    cfg, freqs = _cfg_freqs()
+    dense = dense_residency_bytes(cfg)
+    plan = plan_store(cfg, freqs, vram_gb=dense / 2 ** 30)
+    assert plan.pinned, "a dense-sized budget must afford pins"
+    for (li, e) in plan.pinned:
+        assert plan.formats[(li, e)] == F.LADDER[-1]
+        # every pinned expert is at least as hot as any unpinned one in
+        # its layer
+        unpinned = [freqs[li, j] for j in range(cfg.num_experts)
+                    if (li, j) not in plan.pinned]
+        if unpinned:
+            assert freqs[li, e] >= max(unpinned) - 1e-12
+
+
+def test_planner_ladder_restriction():
+    cfg, freqs = _cfg_freqs()
+    dense = dense_residency_bytes(cfg)
+    plan = plan_store(cfg, freqs, vram_gb=dense / 2 ** 30,
+                      ladder=("int2",))
+    assert set(plan.formats.values()) == {"int2"}
+
+
+# --------------------------------------------- residency × pool coupling ---
+def _payload(n, d=8):
+    idx = np.arange(n)
+    return (idx, np.zeros((n, d), np.float16), np.zeros((n, d), np.float16))
+
+
+def test_residency_put_allocates_and_eviction_frees():
+    pool = DevicePool(slab_bytes=payload_nbytes(_payload(4)), num_slabs=2)
+    res = ResidencyManager(2, pool=pool)
+    res.put("a", _payload(4))
+    res.put("b", _payload(4))
+    assert pool.free_slabs == 0
+    res.put("c", _payload(4))  # evicts LRU "a", reusing its slab
+    assert pool.free_slabs == 0 and "a" not in res
+    res.drop("b")
+    assert pool.free_slabs == 1
+    pool.check_invariants()
+
+
+def test_residency_arena_pressure_evicts_before_capacity():
+    """Slab exhaustion, not just slot count, forces eviction."""
+    one = payload_nbytes(_payload(4))
+    pool = DevicePool(slab_bytes=one, num_slabs=2)
+    res = ResidencyManager(10, pool=pool)  # slots ample, arena tight
+    res.put("a", _payload(4))
+    res.put("b", _payload(4))
+    res.put("c", _payload(4))  # arena full -> policy evicts "a"
+    assert "a" not in res and "c" in res
+    assert len(res) == 2
+    pool.check_invariants()
+
+
+def test_residency_update_payload_resizes_span():
+    one = payload_nbytes(_payload(4))
+    pool = DevicePool(slab_bytes=one, num_slabs=3)
+    res = ResidencyManager(3, pool=pool)
+    res.put("a", _payload(4))
+    assert pool.free_slabs == 2
+    res.update_payload("a", _payload(8))  # twice the bytes -> 2 slabs
+    assert pool.free_slabs == 1
+    res.update_payload("a", _payload(4))
+    assert pool.free_slabs == 2
+    pool.check_invariants()
+
+
+def test_residency_pinned_overflow_keeps_arena_fixed():
+    one = payload_nbytes(_payload(4))
+    pool = DevicePool(slab_bytes=one, num_slabs=1)
+    res = ResidencyManager(3, pool=pool, pinned=["a", "b"])
+    res.put("a", _payload(4))
+    res.put("b", _payload(4))  # everything pinned: overflow span
+    assert pool.stats.overflow_allocs == 1
+    res.drop("b")
+    assert pool.free_slabs == 0  # overflow slab discarded
+    res.drop("a")
+    assert pool.free_slabs == 1
+    pool.check_invariants()
+
+
+# ------------------------------------------------------------ tiered store -
+def test_tiered_store_serves_kept_subset(tmp_path):
+    from repro.core.pipeline import _unstack_layers
+    from repro.models import transformer as tf
+    import jax
+    import jax.numpy as jnp
+
+    cfg, freqs = _cfg_freqs()
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    layers = _unstack_layers(params, cfg)
+    thr = np.full((cfg.num_layers, cfg.num_experts), 0.2, np.float32)
+    plan = plan_store(cfg, freqs, vram_gb=0.55 *
+                      dense_residency_bytes(cfg) / 2 ** 30, max_pinned=0)
+    from repro.store import build_layer_stores
+    stores, host = build_layer_stores(layers, thr, plan,
+                                      tmp_path / "store", freqs=freqs)
+    li = 0
+    store = stores[li]
+    lean = [e for e in range(cfg.num_experts)
+            if store.fmts[e].keep_ratio < 1.0]
+    assert lean, "budget should leave some experts in a lean format"
+    e = lean[0]
+    idx = np.arange(cfg.moe_d_ff)
+    served, gate, down, info = store.fetch_slice(e, idx)
+    np.testing.assert_array_equal(served, store.available_channels(e))
+    assert gate.shape == (len(served), cfg.d_model)
+    # values match the original weights for the served channels
+    np.testing.assert_allclose(
+        np.asarray(gate, np.float32),
+        np.asarray(layers[li]["moe"]["we_gate"][e], np.float32).T[served],
+        atol=2e-3)
+    # draft fetch: half the bytes, approximately equal values
+    served_d, gate_d, _, info_d = store.fetch_slice(e, idx,
+                                                    precision="draft")
+    np.testing.assert_array_equal(served_d, served)
+    assert info_d.nbytes < 0.6 * info.nbytes
+    err = np.abs(np.asarray(gate_d, np.float32) -
+                 np.asarray(gate, np.float32)).max()
+    assert err < 0.02, err
+
+
+def test_refine_adopted_for_full_keep_format(tmp_path):
+    """Regression: when the served idx is the SAME ndarray as the request
+    (keep_ratio 1.0 fast path), the applied refine must still replace the
+    draft payload that compute sees."""
+    from repro.core.pipeline import _unstack_layers
+    from repro.models import transformer as tf
+    from repro.runtime import ExpertScheduler, ResidencyManager, \
+        TransferEngine
+    from repro.store import build_layer_stores
+    import jax
+    import jax.numpy as jnp
+
+    cfg, freqs = _cfg_freqs()
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    layers = _unstack_layers(params, cfg)
+    thr = np.full((cfg.num_layers, cfg.num_experts), 0.2, np.float32)
+    plan = plan_store(cfg, freqs, vram_gb=1.0, ladder=("fp16",),
+                      max_pinned=0)
+    stores, _ = build_layer_stores(layers, thr, plan, tmp_path / "s",
+                                   freqs=freqs)
+    res = [ResidencyManager(4) if s is not None else None for s in stores]
+    sched = ExpertScheduler(stores, res, TransferEngine())
+    e = 0
+    idx = np.arange(cfg.moe_d_ff)
+    payload, miss = sched.demand_async(0, e, lambda: idx)
+    assert miss and sched.stats.draft_fetches == 1
+    assert payload[0] is idx  # the aliasing precondition of the bug
+    sched.advance(10.0)  # refine transfer completes
+    sched.wait_for(0, e)
+    cur = sched.staged_payload(0, e)
+    assert sched.stats.refines_applied == 1
+    assert cur is not payload  # the tuple was swapped...
+    _, gate_full, _, _ = stores[0].fetch_slice(e, idx)
+    np.testing.assert_array_equal(np.asarray(cur[1]),
+                                  np.asarray(gate_full))  # ...to full fp16
+
+
+def test_tiered_store_disk_stage_reported(tmp_path):
+    from repro.core.pipeline import _unstack_layers
+    from repro.models import transformer as tf
+    import jax
+    import jax.numpy as jnp
+
+    cfg, freqs = _cfg_freqs()
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    layers = _unstack_layers(params, cfg)
+    thr = np.full((cfg.num_layers, cfg.num_experts), 0.2, np.float32)
+    plan = plan_store(cfg, freqs, vram_gb=0.6 *
+                      dense_residency_bytes(cfg) / 2 ** 30,
+                      host_gb=1e-7)  # host tier can hold ~nothing
+    plan.host_budget = 2 * F.host_bytes(get_format("fp16"), cfg.d_model,
+                                        cfg.moe_d_ff)
+    from repro.store import build_layer_stores
+    stores, host = build_layer_stores(layers, thr, plan,
+                                      tmp_path / "store", freqs=freqs)
+    store = stores[0]
+    idx = np.arange(0, cfg.moe_d_ff, 3)
+    # force a cold key: fetch an expert the warm pass could not admit
+    cold = [e for e in range(cfg.num_experts)
+            if tier_key(0, e) not in host]
+    assert cold, "tiny host budget must leave cold experts"
+    _, _, _, info = store.fetch_slice(cold[0], idx)
+    assert info.disk_s > 0.0
+    _, _, _, info2 = store.fetch_slice(cold[0], idx)
+    assert info2.disk_s == 0.0  # now host-resident

@@ -1,0 +1,185 @@
+"""End-to-end tiered store: planner-driven decode, progressive precision,
+the footprint↔stall tradeoff, and the serve.py CLI (acceptance pins)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import reduced
+from repro.configs import get_config
+from repro.core import sparsify
+from repro.core.pipeline import FloEPipeline, _unstack_layers, \
+    paper_scaled_models
+from repro.models import transformer as tf
+from repro.store import (dense_residency_bytes, floor_bytes,
+                         measure_frequencies, plan_store)
+
+
+@pytest.fixture(scope="module")
+def small_moe():
+    cfg = reduced(get_config("mixtral_8x7b"), layers=2, d_model=128)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    layers = _unstack_layers(params, cfg)
+    xcal = jax.random.normal(jax.random.PRNGKey(9), (96, cfg.d_model)) * 0.5
+    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
+    for li, layer in enumerate(layers):
+        if "moe" not in layer:
+            continue
+        for e in range(cfg.num_experts):
+            u = xcal @ layer["moe"]["we_up"][e]
+            thr[li, e] = float(sparsify.threshold_from_samples(
+                jnp.abs(u), cfg.floe.sparsity))
+    freqs = measure_frequencies(layers, cfg)
+    return cfg, params, thr, freqs
+
+
+def _decode(cfg, params, thr, freqs, plan, tmp, *, tokens=5):
+    device, link = paper_scaled_models(cfg)
+    pipe = FloEPipeline(params, cfg, thresholds=thr, use_runtime=True,
+                        store_plan=plan, store_dir=str(tmp),
+                        store_freqs=freqs, device=device, link=link)
+    outs = []
+    for i in range(tokens):
+        h = jax.random.normal(jax.random.PRNGKey(100 + i),
+                              (1, cfg.d_model), jnp.float32) * 0.3
+        out, _ = pipe.decode_token(h)
+        outs.append(np.asarray(out))
+    return pipe, outs
+
+
+def test_planned_decode_below_dense_footprint(small_moe, tmp_path):
+    """Acceptance pin: a budget well below dense residency plans and runs
+    a full decode through the tiered store."""
+    cfg, params, thr, freqs = small_moe
+    dense = dense_residency_bytes(cfg)
+    plan = plan_store(cfg, freqs, vram_gb=0.55 * dense / 2 ** 30,
+                      host_gb=0.05)
+    assert plan.footprint_bytes() < 0.55 * dense
+    pipe, outs = _decode(cfg, params, thr, freqs, plan, tmp_path / "s")
+    assert all(np.all(np.isfinite(o)) for o in outs)
+    assert pipe.sched.stats.demand_fetches + pipe.sched.stats.demand_hits > 0
+    # quality knob: a lean budget approximates, a rich budget converges
+    ref = FloEPipeline(params, cfg, thresholds=thr, mode="resident")
+    h = jax.random.normal(jax.random.PRNGKey(100), (1, cfg.d_model),
+                          jnp.float32) * 0.3
+    out_ref, _ = ref.decode_token(h)
+
+    def rel(o):
+        return float(np.linalg.norm(o - np.asarray(out_ref)) /
+                     (np.linalg.norm(np.asarray(out_ref)) + 1e-9))
+
+    rich_plan = plan_store(cfg, freqs, vram_gb=0.95 * dense / 2 ** 30,
+                           host_gb=0.05, max_pinned=0)
+    _, outs_rich = _decode(cfg, params, thr, freqs, rich_plan,
+                           tmp_path / "rich", tokens=1)
+    assert rel(outs_rich[0]) < rel(outs[0]) < 1.2, \
+        (rel(outs_rich[0]), rel(outs[0]))
+    # device pool: arena intact after the full decode
+    pipe.device_pool.check_invariants()
+    assert pipe.device_pool.stats.allocs > 0
+
+
+def test_pinned_experts_stay_resident(small_moe, tmp_path):
+    cfg, params, thr, freqs = small_moe
+    dense = dense_residency_bytes(cfg)
+    plan = plan_store(cfg, freqs, vram_gb=dense / 2 ** 30, host_gb=0.05)
+    assert plan.pinned
+    pipe, _ = _decode(cfg, params, thr, freqs, plan, tmp_path / "s")
+    for (li, e) in plan.pinned:
+        ent = pipe.residency[li].peek((li, e))
+        assert ent is not None, f"pinned ({li},{e}) was evicted"
+        assert ent.ready_t == 0.0
+
+
+def test_progressive_reduces_demand_stall(small_moe, tmp_path):
+    """Acceptance pin: draft-then-refine beats single-shot full-format on
+    demand stall at an identical plan."""
+    cfg, params, thr, freqs = small_moe
+    dense = dense_residency_bytes(cfg)
+    gb = 0.5 * dense / 2 ** 30
+    single = plan_store(cfg, freqs, vram_gb=gb, host_gb=0.05,
+                        progressive=False, max_pinned=0)
+    prog = plan_store(cfg, freqs, vram_gb=gb, host_gb=0.05,
+                      progressive=True, max_pinned=0)
+    pipe_s, _ = _decode(cfg, params, thr, freqs, single, tmp_path / "a")
+    pipe_p, _ = _decode(cfg, params, thr, freqs, prog, tmp_path / "b")
+    stall_s = sum(m.stall_s for m in pipe_s.metrics)
+    stall_p = sum(m.stall_s for m in pipe_p.metrics)
+    assert pipe_p.sched.stats.draft_fetches > 0
+    assert pipe_s.sched.stats.draft_fetches == 0
+    assert stall_p < stall_s, (stall_p, stall_s)
+
+
+def test_footprint_stall_tradeoff_monotone(small_moe, tmp_path):
+    """Acceptance pin: more VRAM -> never more stall (quality constant)."""
+    cfg, params, thr, freqs = small_moe
+    floor = floor_bytes(cfg, ("int2",))
+    points = []
+    for i, mult in enumerate((1.001, 1.4, 1.9)):
+        plan = plan_store(cfg, freqs, vram_gb=mult * floor / 2 ** 30,
+                          host_gb=0.05, ladder=("int2",))
+        pipe, _ = _decode(cfg, params, thr, freqs, plan,
+                          tmp_path / f"m{i}")
+        points.append((plan.footprint_bytes(),
+                       sum(m.stall_s for m in pipe.metrics)))
+    for (fp0, st0), (fp1, st1) in zip(points, points[1:]):
+        assert fp1 >= fp0
+        assert st1 <= st0 * 1.001 + 1e-12, points
+
+
+def test_disk_tier_exercised_under_tiny_host_budget(small_moe, tmp_path):
+    cfg, params, thr, freqs = small_moe
+    dense = dense_residency_bytes(cfg)
+    plan = plan_store(cfg, freqs, vram_gb=0.6 * dense / 2 ** 30,
+                      host_gb=3e-5)
+    pipe, outs = _decode(cfg, params, thr, freqs, plan, tmp_path / "s")
+    assert pipe.host_tier.disk.stats.reads > 0
+    assert pipe.engine.summary()["disk_s"] > 0.0
+    assert all(np.all(np.isfinite(o)) for o in outs)
+
+
+def test_controller_over_tiered_store(small_moe, tmp_path):
+    """The serving control plane decodes through the planned store."""
+    from repro.serving import ServingController, SLORequest
+    cfg, params, thr, freqs = small_moe
+    device, link = paper_scaled_models(cfg)
+    dense = dense_residency_bytes(cfg)
+    plan = plan_store(cfg, freqs, vram_gb=0.55 * dense / 2 ** 30,
+                      host_gb=0.05)
+    ctl = ServingController(
+        params, cfg, thresholds=thr, slots=2, max_len=64,
+        online_train=False,
+        offload_opts=dict(device=device, link=link, store_plan=plan,
+                          store_dir=str(tmp_path / "s"),
+                          store_freqs=freqs))
+    for i in range(3):
+        ctl.submit(SLORequest(i, np.arange(4, dtype=np.int32),
+                              max_new_tokens=3, slo_ms=10_000.0,
+                              arrival_t=0.1 * i))
+    ctl.run()
+    assert len(ctl.completed) == 3
+    assert all(len(r.output) == 3 for r in ctl.completed)
+    ctl.pipe.device_pool.check_invariants()
+
+
+def test_serve_cli_vram_budget(small_moe, monkeypatch, capsys):
+    """Acceptance pin: `launch/serve.py --vram-gb B` with B below the
+    dense-residency footprint plans and runs a full decode."""
+    from repro.launch import serve
+    cfg, *_ = small_moe
+    dense_gb = dense_residency_bytes(cfg) / 2 ** 30
+    budget = 0.6 * dense_gb
+    monkeypatch.setattr(sys, "argv", [
+        "serve.py", "--arch", "mixtral-8x7b", "--reduced", "--mode", "floe",
+        "--layers", "2", "--d_model", "128", "--max_new", "4",
+        "--vram-gb", f"{budget:.6f}", "--host-gb", "0.05"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "store plan:" in out
+    assert "mode=floe:" in out and "tok/s" in out
+    assert "store: demand_fetches=" in out
+    # the plan honored the sub-dense budget
+    line = [ln for ln in out.splitlines() if "store plan:" in ln][0]
+    assert "footprint=" in line
