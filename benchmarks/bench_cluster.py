@@ -1,0 +1,153 @@
+"""Multi-GPU cluster benchmark: stall/token and link utilization vs
+device count at FIXED per-device VRAM, plus a replication-factor sweep.
+
+FloE's premise is one memory-constrained GPU behind one PCIe link; the
+cluster subsystem adds devices, each with its own link and residency
+arena.  Two curves:
+
+* **scaling (fixed residency config)** — per-device residency is held at
+  the planner floor (``max_slots=1``, no pins) so the sweep isolates
+  what devices inherently add: parallel host→device links (a layer's
+  union of demands splits across owners) and aggregate arena slots.
+  Stall/token must STRICTLY decrease 1→2→4 devices (the acceptance
+  bar; the conformance test pins 1→2).
+* **planner spend** — the same budgets with the greedy spend unleashed:
+  splitting experts across devices frees per-device headroom that the
+  planner converts into pinned experts and slots, so stall collapses
+  even faster (at this reduced scale it typically reaches zero).
+
+The link is a deliberately narrow PCIe-3-class model (¼ of the
+paper-scaled bandwidth, same compute model for every device count) so
+transfer time dominates and the device-count effect is visible at toy
+scale; the replication sweep routes the hottest experts' fetches to the
+least-loaded replica link.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster import plan_cluster
+from repro.common.config import reduced
+from repro.configs import get_config
+from repro.core import sparsify
+from repro.core.offload import LinkModel
+from repro.core.pipeline import (FloEPipeline, _unstack_layers,
+                                 paper_scaled_models)
+from repro.models import transformer as tf
+from repro.store import floor_bytes, measure_frequencies
+
+DEVICES = (1, 2, 4)
+REPLICATES = (0, 1, 2)
+TOKENS = 6
+BATCH = 8
+ALPHA = 0.6
+_CACHE: dict = {}
+
+
+def _setup():
+    """An 8-expert reduced Mixtral (more experts than any device's
+    residency floor can hold) + a narrow PCIe-3-class link."""
+    if "setup" in _CACHE:
+        return _CACHE["setup"]
+    cfg = reduced(get_config("mixtral_8x7b"), layers=4, d_model=128,
+                  max_experts=8)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    layers = _unstack_layers(params, cfg)
+    xcal = jax.random.normal(jax.random.PRNGKey(9), (64, cfg.d_model))
+    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
+    for li, layer in enumerate(layers):
+        if "moe" not in layer:
+            continue
+        for e in range(cfg.num_experts):
+            u = xcal @ layer["moe"]["we_up"][e]
+            thr[li, e] = float(sparsify.threshold_from_samples(
+                jnp.abs(u), cfg.floe.sparsity))
+    device, link0 = paper_scaled_models(cfg)
+    link = LinkModel(peak_bw=link0.peak_bw / 4, launch_us=link0.launch_us,
+                     pack_bw=link0.pack_bw / 4)
+    freqs = measure_frequencies(layers, cfg)
+    vram_gb = 1.05 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    _CACHE["setup"] = (cfg, params, thr, device, link, freqs, vram_gb)
+    return _CACHE["setup"]
+
+
+def _h_stream(cfg, steps: int, batch: int, alpha: float):
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (batch, cfg.d_model), jnp.float32)
+    out = [h]
+    for _ in range(steps - 1):
+        key, sub = jax.random.split(key)
+        n = jax.random.normal(sub, (batch, cfg.d_model), jnp.float32)
+        h = alpha * h + (1.0 - alpha ** 2) ** 0.5 * n
+        out.append(h)
+    return out
+
+
+def _decode(n_devices: int, *, replicate: int = 0,
+            fixed_config: bool = True):
+    cfg, params, thr, device, link, freqs, vram_gb = _setup()
+    knobs = (dict(max_pinned_per_device=0, max_slots=1)
+             if fixed_config else {})
+    plan = plan_cluster(cfg, freqs, n_devices=n_devices,
+                        vram_gb_per_device=vram_gb, host_gb=0.0005,
+                        ladder=("int2",), replicate=replicate, **knobs)
+    pipe = FloEPipeline(params, cfg, thresholds=thr, device=device,
+                        link=link, mode="floe", use_runtime=True,
+                        cluster_plan=plan,
+                        store_dir=tempfile.mkdtemp(prefix="bench-clu-"),
+                        store_freqs=freqs)
+    for h in _h_stream(cfg, TOKENS, BATCH, ALPHA):
+        pipe.decode_token(h)
+    for pool in pipe.device_pools:
+        pool.check_invariants()
+    stall = sum(m.stall_s for m in pipe.metrics) / TOKENS
+    util = pipe.engine.aggregate_utilization(pipe.sched.clock)
+    return pipe, plan, stall, util
+
+
+def run(csv_rows: list):
+    # ---- curve A: device scaling at a fixed residency configuration ------
+    curve = []
+    for n in DEVICES:
+        pipe, plan, stall, util = _decode(n)
+        curve.append(stall)
+        s = pipe.sched.stats
+        busy = pipe.engine.summary()["busy_s_per_device"]
+        csv_rows.append((
+            f"cluster/stall_per_token_ms/devices={n}", 0.0,
+            f"{stall * 1e3:.3f}"))
+        csv_rows.append((
+            f"cluster/scaling/devices={n}", 0.0,
+            f"stall/token={stall * 1e3:.3f}ms agg_link_util={util:.2%} "
+            f"fetches={s.demand_fetches} "
+            f"busy/dev={[round(b * 1e3) for b in busy]}ms "
+            f"[{plan.summary()}]"))
+    strictly = all(curve[i] > curve[i + 1] for i in range(len(curve) - 1))
+    csv_rows.append(("cluster/stall_strictly_decreasing", 0.0,
+                     f"{strictly} ({' -> '.join(f'{s * 1e3:.3f}ms' for s in curve)}"
+                     f" over devices={DEVICES})"))
+
+    # ---- curve B: the same budgets with the planner spend unleashed ------
+    for n in DEVICES:
+        pipe, plan, stall, util = _decode(n, fixed_config=False)
+        pins = [len(p) for p in plan.pinned_per_device]
+        csv_rows.append((
+            f"cluster/planner_spend/devices={n}", 0.0,
+            f"stall/token={stall * 1e3:.3f}ms agg_link_util={util:.2%} "
+            f"pins/dev={pins} slots/layer={plan.slots_per_layer} "
+            f"(headroom from splitting experts -> pins+slots)"))
+
+    # ---- replication-factor sweep at the largest device count ------------
+    n = DEVICES[-1]
+    for rep in REPLICATES:
+        pipe, plan, stall, util = _decode(n, replicate=rep)
+        sel = pipe.sched.selector
+        csv_rows.append((
+            f"cluster/replication/devices={n}/replicate={rep}", 0.0,
+            f"stall/token={stall * 1e3:.3f}ms agg_link_util={util:.2%} "
+            f"replica_routed={sel.replica_choices} "
+            f"routed/dev={[sel.routed[d] for d in range(n)]}"))

@@ -1,0 +1,116 @@
+"""Diff two ``BENCH_<suite>.json`` files and flag >10% regressions.
+
+    python benchmarks/compare.py BENCH_prefetch.old.json BENCH_prefetch.json
+    python benchmarks/compare.py old/ new/ --threshold 0.15
+
+Rows are matched by name.  Two numeric channels are compared per row:
+
+* ``us_per_call`` — wall-clock microseconds; HIGHER is a regression.
+* ``derived`` — compared only when numeric in BOTH files (``run.py``
+  records it as a number whenever it parses as one).  Direction is
+  metric-specific, so a change beyond the threshold is flagged as a
+  CHANGE for a human to judge, not auto-classified.
+
+Exit status is 1 when any REGRESSION was flagged (CI gate), 0 otherwise.
+Directory arguments compare every ``BENCH_*.json`` present in both.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: us_per_call below this is timer noise, never flagged (microseconds)
+MIN_US = 1.0
+
+
+def load_rows(path: Path) -> dict:
+    data = json.loads(path.read_text())
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+def rel_delta(old: float, new: float) -> float:
+    if old == 0.0:
+        return 0.0 if new == 0.0 else float("inf")
+    return (new - old) / abs(old)
+
+
+def compare_suite(old_path: Path, new_path: Path,
+                  threshold: float) -> tuple[list, list]:
+    """(regressions, changes) — lists of printable row verdicts."""
+    old, new = load_rows(old_path), load_rows(new_path)
+    regressions, changes = [], []
+    for name in sorted(set(old) | set(new)):
+        if name not in old:
+            changes.append(f"NEW        {name}")
+            continue
+        if name not in new:
+            changes.append(f"REMOVED    {name}")
+            continue
+        o, n = old[name], new[name]
+        du = rel_delta(float(o["us_per_call"]), float(n["us_per_call"]))
+        if (du > threshold and
+                max(float(o["us_per_call"]),
+                    float(n["us_per_call"])) >= MIN_US):
+            regressions.append(
+                f"REGRESSION {name}: us_per_call "
+                f"{o['us_per_call']:.2f} -> {n['us_per_call']:.2f} "
+                f"(+{du:.0%})")
+        od, nd = o.get("derived"), n.get("derived")
+        if (isinstance(od, (int, float)) and isinstance(nd, (int, float))
+                and not isinstance(od, bool) and not isinstance(nd, bool)):
+            dd = rel_delta(float(od), float(nd))
+            if abs(dd) > threshold:
+                changes.append(
+                    f"CHANGE     {name}: derived {od} -> {nd} ({dd:+.0%})")
+        elif od != nd:
+            changes.append(f"CHANGE     {name}: derived {od!r} -> {nd!r}")
+    return regressions, changes
+
+
+def _pairs(old: Path, new: Path) -> list[tuple[Path, Path]]:
+    if old.is_dir() != new.is_dir():
+        sys.exit("compare.py: OLD and NEW must both be BENCH json files "
+                 "or both be directories of them")
+    if old.is_dir():
+        names = (sorted(p.name for p in old.glob("BENCH_*.json")
+                        if (new / p.name).exists()))
+        if not names:
+            sys.exit(f"compare.py: no BENCH_*.json common to "
+                     f"{old} and {new}")
+        return [(old / n, new / n) for n in names]
+    return [(old, new)]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", type=Path,
+                    help="baseline BENCH_<suite>.json (or a directory)")
+    ap.add_argument("new", type=Path,
+                    help="candidate BENCH_<suite>.json (or a directory)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative delta that flags a row (default 10%%)")
+    args = ap.parse_args()
+
+    n_reg = 0
+    for old_path, new_path in _pairs(args.old, args.new):
+        regressions, changes = compare_suite(old_path, new_path,
+                                             args.threshold)
+        header = f"== {old_path.name} vs {new_path.name} =="
+        if regressions or changes:
+            print(header)
+        for line in regressions + changes:
+            print(f"  {line}")
+        if not regressions and not changes:
+            print(f"{header} no deltas beyond {args.threshold:.0%}")
+        n_reg += len(regressions)
+    if n_reg:
+        print(f"{n_reg} regression(s) beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

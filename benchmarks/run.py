@@ -17,7 +17,14 @@ across PRs.
   memory  -> bench_memory          (tiered store: footprint vs stall/token
                                     across VRAM budgets, progressive
                                     precision, disk-tier pressure)
+  cluster -> bench_cluster         (multi-GPU placement: stall/token +
+                                    link utilization vs device count,
+                                    replication sweep)
   roofline-> roofline              (dry-run derived terms, if present)
+
+``derived`` is recorded in the JSON as a NUMBER whenever it parses as
+one (string fallback otherwise), so ``benchmarks/compare.py`` can diff
+two BENCH files machine-to-machine across PRs.
 """
 from __future__ import annotations
 
@@ -31,6 +38,19 @@ from pathlib import Path
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
+def derived_value(v):
+    """Numeric when it parses as one (cross-PR diffable), else string."""
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, (int, float)):
+        return v
+    try:
+        f = float(str(v).strip())
+    except ValueError:
+        return str(v)
+    return f if (f == f and abs(f) != float("inf")) else str(v)
+
+
 def write_suite_json(name: str, rows: list, timestamp: str,
                      elapsed_s: float) -> Path:
     out = {
@@ -38,7 +58,7 @@ def write_suite_json(name: str, rows: list, timestamp: str,
         "timestamp": timestamp,
         "elapsed_s": round(elapsed_s, 3),
         "rows": [{"name": r[0], "us_per_call": float(r[1]),
-                  "derived": str(r[2])} for r in rows],
+                  "derived": derived_value(r[2])} for r in rows],
     }
     path = REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(out, indent=1) + "\n")
@@ -56,9 +76,9 @@ def main() -> None:
                     help="skip writing BENCH_<suite>.json files")
     args = ap.parse_args()
 
-    from benchmarks import (bench_compression, bench_e2e_decode,
-                            bench_memory, bench_predictor, bench_prefetch,
-                            bench_sensitivity, bench_serving,
+    from benchmarks import (bench_cluster, bench_compression,
+                            bench_e2e_decode, bench_memory, bench_predictor,
+                            bench_prefetch, bench_sensitivity, bench_serving,
                             bench_sparse_kernel, bench_transfer, roofline)
 
     suites = [
@@ -71,6 +91,7 @@ def main() -> None:
         ("prefetch", bench_prefetch.run),
         ("serving", bench_serving.run),
         ("memory", bench_memory.run),
+        ("cluster", bench_cluster.run),
         ("roofline", roofline.run),
     ]
     rows: list = []

@@ -186,32 +186,43 @@ class ShardWriter:
 
 
 class ShardReader:
-    """Lazy sharded-checkpoint reader: opening touches only the index;
-    each ``load`` seeks to one record and decodes it alone."""
+    """Lazy sharded-checkpoint reader: the offset index is decoded at
+    most ONCE per reader — on first use, not at open — and reused by
+    every subsequent lookup; each ``load`` then seeks to one record and
+    decodes it alone.  ``index_builds`` (telemetry) must stay at 1 for
+    the lifetime of a reader: per-expert fetch loops (the store's
+    disk-tier prefill path) never re-scan the shard header."""
 
     def __init__(self, dirpath: str | Path):
         self.dir = Path(dirpath)
-        idx = msgpack.unpackb((self.dir / _INDEX_FILE).read_bytes(),
-                              raw=False)
-        self._index: dict[str, list] = idx["records"]
+        self._index: dict[str, list] | None = None  # built lazily, once
         # one long-lived handle: per-record loads seek, not reopen
         self._data = open(self.dir / _DATA_FILE, "rb")
         # telemetry: proves single-record loads don't touch the full file
         self.records_decoded = 0
         self.bytes_read = 0
+        self.index_builds = 0
+
+    def _ensure_index(self) -> dict[str, list]:
+        if self._index is None:
+            idx = msgpack.unpackb((self.dir / _INDEX_FILE).read_bytes(),
+                                  raw=False)
+            self._index = idx["records"]
+            self.index_builds += 1
+        return self._index
 
     def keys(self) -> Iterable[str]:
-        return list(self._index.keys())
+        return list(self._ensure_index().keys())
 
     def __contains__(self, key: str) -> bool:
-        return key in self._index
+        return key in self._ensure_index()
 
     def nbytes(self, key: str) -> int:
         """Stored (on-disk) size of one record."""
-        return self._index[key][1]
+        return self._ensure_index()[key][1]
 
     def load(self, key: str) -> Any:
-        off, length = self._index[key]
+        off, length = self._ensure_index()[key]
         self._data.seek(off)
         blob = self._data.read(length)
         self.records_decoded += 1

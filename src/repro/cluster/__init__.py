@@ -1,0 +1,26 @@
+"""repro.cluster — multi-GPU expert placement, replication, dispatch.
+
+Scale-out of the single-device runtime: ``n_devices`` simulated GPUs,
+each with its own host→device link and residency arena, behind the
+SAME scheduler interface the pipeline and serving controller already
+use.
+
+    plan_cluster(freqs, n_devices, vram_gb_per_device)
+        │ partition (freq-balanced) · replicate hottest · budget/device
+        ▼
+    ClusterScheduler ──route(layer, expert)──▶ per-device ExpertScheduler
+        │ shared lockstep clock                   │ own TransferEngine
+        ▼                                         ▼ own link timeline
+    LinkSelector (least-loaded replica link)  per-device ResidencyManager
+
+See ROADMAP.md §cluster for the architecture notes.
+"""
+from repro.cluster.dispatch import ClusterScheduler
+from repro.cluster.links import ClusterEngine, LinkSelector
+from repro.cluster.placement import (ClusterPlan, partition_layer,
+                                     plan_cluster, uniform_cluster_plan)
+
+__all__ = [
+    "ClusterPlan", "plan_cluster", "uniform_cluster_plan",
+    "partition_layer", "ClusterEngine", "LinkSelector", "ClusterScheduler",
+]

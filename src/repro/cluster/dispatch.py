@@ -1,0 +1,204 @@
+"""Device-aware dispatch: the cluster behind the single-device interface.
+
+``ClusterScheduler`` exposes exactly the :class:`ExpertScheduler`
+surface that ``core.pipeline`` and ``serving.controller`` already drive
+(``advance`` / ``enqueue_prefetch`` / ``reconcile`` / ``demand_async`` /
+``demand_union`` / ``wait_for`` / ``staged_payload`` / telemetry), and
+routes each call to one of ``n_devices`` per-device schedulers:
+
+  * **Routing** — a key that some device already *tracks* (staged, in
+    flight, queued, or awaiting a top-up) goes back to that device —
+    residency is sticky, so hits stay hits.  Otherwise the key's home
+    device takes it; replicated experts go to the least-loaded replica
+    link (:class:`~repro.cluster.links.LinkSelector`).
+  * **Shared clock** — ``advance`` moves every device's scheduler in
+    lockstep.  A demand stall measured on one device stalls the whole
+    decode step, so ``wait_for`` re-advances the OTHER devices by the
+    stalled seconds: all clocks stay equal (asserted), and transfers on
+    other links keep overlapping the stall.
+  * **Split unions** — a layer's union demands are per-expert calls, so
+    they land on each expert's own device and the DMAs overlap across
+    links; within a device the usual demand-preemption rules apply.
+  * **No device→device path** — a miss is a host-tier fetch on the
+    owning device's link, never a peer copy: the host record is the one
+    shared source of truth (FluxMoE's residency decoupling).
+
+With ``n_devices=1`` every call forwards to the single device-0
+scheduler unchanged, which makes cluster decode bitwise- AND
+timeline-identical to the plain runtime path (pinned by tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Hashable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.links import ClusterEngine, LinkSelector
+from repro.cluster.placement import ClusterPlan
+from repro.core.offload import ExpertStore
+from repro.runtime.residency import ResidencyManager
+from repro.runtime.scheduler import (ExpertScheduler, SchedulerStats,
+                                     recall_from_stats)
+
+
+class ClusterScheduler:
+    """Route the scheduler interface across per-device schedulers."""
+
+    def __init__(self, plan: ClusterPlan,
+                 stores: Sequence[Optional[ExpertStore]],
+                 residency: Sequence[Sequence[Optional[ResidencyManager]]],
+                 engines: ClusterEngine, *,
+                 lookahead: int = 2,
+                 depth_discount: float = 0.5,
+                 cancel_stale: bool = True,
+                 progressive: bool = True,
+                 calibrate: Optional[Callable[[float], float]] = None):
+        assert len(residency) == plan.n_devices == engines.n_devices
+        self.plan = plan
+        self.engines = engines
+        self.selector = LinkSelector(engines)
+        self.devs: List[ExpertScheduler] = [
+            ExpertScheduler(stores, residency[d], engines[d],
+                            lookahead=lookahead,
+                            depth_discount=depth_discount,
+                            cancel_stale=cancel_stale,
+                            progressive=progressive,
+                            calibrate=calibrate)
+            for d in range(plan.n_devices)]
+
+    # -------------------------------------------------- shared attributes --
+    key = staticmethod(ExpertScheduler.key)
+
+    @property
+    def clock(self) -> float:
+        return self.devs[0].clock
+
+    @property
+    def lookahead(self) -> int:
+        return self.devs[0].lookahead
+
+    @property
+    def progressive(self) -> bool:
+        return self.devs[0].progressive
+
+    @property
+    def calibrate(self):
+        return self.devs[0].calibrate
+
+    @calibrate.setter
+    def calibrate(self, fn) -> None:
+        for s in self.devs:
+            s.calibrate = fn
+
+    @property
+    def stats(self) -> SchedulerStats:
+        """Merged per-device stats (summed field-wise, fresh object)."""
+        merged = SchedulerStats()
+        for s in self.devs:
+            for f in dataclasses.fields(SchedulerStats):
+                setattr(merged, f.name,
+                        getattr(merged, f.name) + getattr(s.stats, f.name))
+        return merged
+
+    # ------------------------------------------------------------ routing --
+    def _locate(self, layer: int, expert: int) -> Optional[int]:
+        """Device already tracking (layer, expert), else None."""
+        for d in self.plan.devices_of(layer, expert):
+            if self.devs[d].tracks(layer, expert):
+                return d
+        return None
+
+    def _route(self, layer: int, expert: int) -> int:
+        d = self._locate(layer, expert)
+        if d is not None:
+            return d
+        homes = self.plan.devices_of(layer, expert)
+        if len(homes) == 1:
+            return homes[0]
+        return self.selector.pick(homes, self.clock)
+
+    def _sticky(self, layer: int, expert: int) -> int:
+        """For follow-up calls (wait/payload): the tracking device, else
+        the primary home (its scheduler resolves the no-op path)."""
+        d = self._locate(layer, expert)
+        return self.plan.devices_of(layer, expert)[0] if d is None else d
+
+    # -------------------------------------------------------------- clock --
+    def advance(self, dt: float) -> None:
+        for s in self.devs:
+            s.advance(dt)
+
+    def _sync_clocks(self, leader: int) -> None:
+        """After a stall moved one device's clock, bring every other
+        device forward to it (their transfers kept moving meanwhile)."""
+        t = self.devs[leader].clock
+        for d, s in enumerate(self.devs):
+            if d != leader and s.clock < t:
+                s.advance(t - s.clock)
+        assert all(abs(s.clock - t) < 1e-9 for s in self.devs)
+
+    # ----------------------------------------------------------- prefetch --
+    def enqueue_prefetch(self, layer: int, expert: int,
+                         channel_idx: np.ndarray, confidence: float,
+                         depth: int = 1) -> None:
+        self.devs[self._route(layer, expert)].enqueue_prefetch(
+            layer, expert, channel_idx, confidence, depth)
+
+    def pump(self) -> None:
+        for s in self.devs:
+            s.pump()
+
+    def reconcile(self, layer: int, true_experts: Sequence[int]) -> int:
+        return sum(s.reconcile(layer, true_experts) for s in self.devs)
+
+    # ------------------------------------------------------------- demand --
+    def demand_async(self, layer: int, expert: int,
+                     channel_idx_fn: Callable[[], np.ndarray]) -> tuple:
+        return self.devs[self._route(layer, expert)].demand_async(
+            layer, expert, channel_idx_fn)
+
+    def demand_union(self, layer: int, expert: int,
+                     need_idx: np.ndarray) -> tuple:
+        return self.devs[self._route(layer, expert)].demand_union(
+            layer, expert, need_idx)
+
+    def wait_for(self, layer: int, expert: int, *,
+                 was_miss: bool = False) -> float:
+        d = self._sticky(layer, expert)
+        stall = self.devs[d].wait_for(layer, expert, was_miss=was_miss)
+        if stall > 0.0:
+            self._sync_clocks(d)
+        return stall
+
+    def demand(self, layer: int, expert: int,
+               channel_idx_fn: Callable[[], np.ndarray]) -> tuple:
+        payload, was_miss = self.demand_async(layer, expert, channel_idx_fn)
+        stall = self.wait_for(layer, expert, was_miss=was_miss)
+        return payload, stall
+
+    def staged_payload(self, layer: int, expert: int) -> Optional[tuple]:
+        return self.devs[self._sticky(layer, expert)].staged_payload(
+            layer, expert)
+
+    # ---------------------------------------------------------- telemetry --
+    def overlap_efficiency(self) -> float:
+        busy = self.engines.busy_seconds()
+        if busy <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.stats.stall_s / busy)
+
+    def prefetch_precision(self) -> float:
+        issued = sum(s.stats.prefetch_issued for s in self.devs)
+        if issued == 0:
+            return 1.0
+        consumed = sum(r.stats.prefetch_hits for s in self.devs
+                       for r in s.residency if r is not None)
+        return min(1.0, consumed / issued)
+
+    def prefetch_recall(self) -> float:
+        return recall_from_stats(self.stats)
+
+    def reset_stats(self) -> None:
+        for s in self.devs:
+            s.reset_stats()

@@ -1,0 +1,325 @@
+"""Multi-GPU expert placement: partition, replicate, and budget per device.
+
+FloE (§3.4) treats a single PCIe link as THE bottleneck; with several
+memory-constrained GPUs the system gains one host→device link per device
+plus aggregate VRAM.  The win comes from *placement* (FluxMoE's
+residency/compute decoupling; predictive-replication work shows the
+hottest experts need more than one copy):
+
+  * **Partition** — each MoE layer's experts are split across devices by
+    a frequency-balanced deterministic greedy (hottest-first,
+    least-loaded device wins, ties break to the lowest device id), so no
+    single link serves all of a layer's hot traffic.
+  * **Replicate** — the ``replicate`` hottest experts of every layer get
+    a home on EVERY device; demand/prefetch traffic for them routes to
+    the least-loaded replica link (``cluster.links.LinkSelector``),
+    removing the routing hot-spots a single copy cannot.
+  * **Budget** — ``plan_cluster`` re-runs the ``store.planner`` greedy
+    spend per device: non-expert weights are replicated on every device,
+    but each device only holds ITS experts' resident up projections, so
+    at fixed per-device VRAM more devices buy more pinned experts,
+    richer formats, and more residency slots per device.  For
+    ``n_devices=1`` the plan is identical to ``plan_store``'s (pinned
+    by a property test).
+
+Experts never move device→device: a miss on the owning device is a
+host-tier fetch over THAT device's link (the host record is shared).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.store import formats as F
+from repro.store.planner import (PlanError, StorePlan, _moe_layers,
+                                 default_slab_bytes, non_expert_bytes)
+
+Key = Tuple[int, int]  # (layer, expert)
+
+
+@dataclasses.dataclass
+class ClusterPlan:
+    """Expert→device placement plus the per-device budget decisions.
+
+    ``store_plan`` carries the GLOBAL per-expert format map / host budget
+    (one shared host+disk tier under all devices) and is what
+    ``store.build_layer_stores`` consumes; everything device-shaped
+    (pins, arena slabs, replica homes) lives here.  ``store_plan=None``
+    is the placement-only case: flat in-host stores, no tiering — the
+    degenerate configuration the ``n_devices=1`` parity test pins
+    against the single-device runtime path.
+    """
+
+    n_devices: int
+    device_of: Dict[Key, Tuple[int, ...]]  # home devices, len >= 1
+    pinned_per_device: List[List[Key]]
+    slots_per_layer: int  # residency slots per MoE layer PER DEVICE
+    slab_bytes: int
+    num_slabs: List[int]  # arena slabs per device
+    replicate: int = 0  # hottest experts per layer homed everywhere
+    store_plan: Optional[StorePlan] = None
+    vram_budget_per_device: int = 0  # bytes (0 = placement-only plan)
+    breakdown_per_device: List[Dict[str, int]] = \
+        dataclasses.field(default_factory=list)
+
+    def devices_of(self, layer: int, expert: int) -> Tuple[int, ...]:
+        homes = self.device_of.get((layer, expert))
+        if homes is None:  # unplanned key (dense layer etc.): deterministic
+            return (expert % self.n_devices,)
+        return homes
+
+    def home_experts(self, d: int) -> List[Key]:
+        return [k for k, homes in sorted(self.device_of.items())
+                if d in homes]
+
+    def footprint_bytes(self, d: int) -> int:
+        return sum(self.breakdown_per_device[d].values()) \
+            if self.breakdown_per_device else 0
+
+    def device_summary(self, d: int) -> str:
+        n_home = len(self.home_experts(d))
+        s = (f"dev{d}: experts={n_home} "
+             f"pinned={len(self.pinned_per_device[d])} "
+             f"slots/layer={self.slots_per_layer} slabs={self.num_slabs[d]}")
+        if self.vram_budget_per_device:
+            s += (f" footprint={self.footprint_bytes(d) / 2 ** 30:.3f}GiB/"
+                  f"{self.vram_budget_per_device / 2 ** 30:.3f}GiB")
+        return s
+
+    def summary(self) -> str:
+        pins = sum(len(p) for p in self.pinned_per_device)
+        s = (f"devices={self.n_devices} replicate={self.replicate} "
+             f"pinned_total={pins} slots/layer/dev={self.slots_per_layer}")
+        if self.store_plan is not None:
+            counts: Dict[str, int] = {}
+            for name in self.store_plan.formats.values():
+                counts[name] = counts.get(name, 0) + 1
+            parts = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+            s += f" formats[{parts}]"
+        return s
+
+
+def partition_layer(freq_row: np.ndarray, n_devices: int
+                    ) -> List[Tuple[int, ...]]:
+    """Frequency-balanced greedy partition of one layer's experts.
+
+    Hottest expert first, each assigned to the device with the least
+    accumulated frequency (ties: fewest experts, then lowest device id;
+    equal-frequency experts order by id) — the classic LPT bound keeps
+    the load spread within one expert's frequency of optimal, and the
+    count tie-break keeps zero/uniform-frequency rows round-robin
+    instead of piling onto device 0.  Deterministic.
+    """
+    E = len(freq_row)
+    homes: List[Tuple[int, ...]] = [()] * E
+    load = [0.0] * n_devices
+    count = [0] * n_devices
+    for e in sorted(range(E), key=lambda e: (-float(freq_row[e]), e)):
+        d = min(range(n_devices), key=lambda i: (load[i], count[i], i))
+        homes[e] = (d,)
+        load[d] += float(freq_row[e])
+        count[d] += 1
+    return homes
+
+
+def uniform_cluster_plan(cfg: ModelConfig, n_devices: int, *,
+                         freqs: Optional[np.ndarray] = None,
+                         replicate: int = 0) -> ClusterPlan:
+    """Placement-only plan (no tiered store / budget spend): partition
+    every MoE layer's experts across ``n_devices`` — frequency-balanced
+    when ``freqs`` is given, round-robin by expert id otherwise."""
+    assert n_devices >= 1
+    moe = _moe_layers(cfg)
+    E = cfg.num_experts
+    device_of: Dict[Key, Tuple[int, ...]] = {}
+    for li in moe:
+        row = (np.asarray(freqs[li], np.float64) if freqs is not None
+               else np.zeros(E))
+        homes = partition_layer(row, n_devices)
+        for e in range(E):
+            device_of[(li, e)] = homes[e]
+        if replicate > 0:
+            hot = sorted(range(E), key=lambda e: (-float(row[e]), e))
+            for e in hot[:replicate]:
+                device_of[(li, e)] = tuple(range(n_devices))
+    return ClusterPlan(
+        n_devices=n_devices, device_of=device_of,
+        pinned_per_device=[[] for _ in range(n_devices)],
+        slots_per_layer=0, slab_bytes=0, num_slabs=[0] * n_devices,
+        replicate=replicate)
+
+
+def plan_cluster(cfg: ModelConfig, freqs: np.ndarray, *,
+                 n_devices: int, vram_gb_per_device: float,
+                 host_gb: float = 8.0,
+                 replicate: int = 0,
+                 max_slots: Optional[int] = None,
+                 max_pinned_per_device: Optional[int] = None,
+                 ladder: Optional[Tuple[str, ...]] = None,
+                 progressive: bool = True) -> ClusterPlan:
+    """Solve placement + per-device store configuration for a cluster.
+
+    The same deterministic greedy spend as ``store.plan_store``, run
+    against per-device footprints: every device replicates the
+    non-expert weights, holds resident up projections only for ITS
+    experts, and carves its own slab arena.  Stages (stall-first order,
+    identical to the single-device planner): residency slots to k+1 →
+    pin hottest experts on their home devices → format upgrades hottest
+    first (an upgrade must fit on EVERY home device) → remaining slots.
+    Raises :class:`~repro.store.planner.PlanError` if any device cannot
+    hold the leanest configuration.
+    """
+    assert n_devices >= 1
+    budget = int(vram_gb_per_device * 2 ** 30)
+    host_budget = int(host_gb * 2 ** 30)
+    d_model, d_ff = cfg.d_model, cfg.moe_d_ff
+    group = cfg.floe.quant_group
+    moe = _moe_layers(cfg)
+    E = cfg.num_experts
+    assert moe and E, "plan_cluster needs an MoE model"
+    freqs = np.asarray(freqs, np.float64)
+    assert freqs.shape == (cfg.num_layers, E), freqs.shape
+    if ladder is None:
+        ladder = F.LADDER
+
+    # ---- placement: balanced partition + replicate the hottest -----------
+    device_of: Dict[Key, Tuple[int, ...]] = {}
+    for li in moe:
+        homes = partition_layer(freqs[li], n_devices)
+        for e in range(E):
+            device_of[(li, e)] = homes[e]
+        hot = sorted(range(E), key=lambda e: (-float(freqs[li, e]), e))
+        for e in hot[:replicate]:
+            device_of[(li, e)] = tuple(range(n_devices))
+
+    # ---- budget machinery (per device) -----------------------------------
+    slab = default_slab_bytes(cfg)
+    pin_fmt = F.get_format(ladder[-1])
+    pin_span = -(-F.slice_bytes(
+        d_model, F.kept_channels(d_ff, pin_fmt.keep_ratio)) // slab)
+    base = non_expert_bytes(cfg)
+    if max_slots is None:
+        max_slots = E
+
+    fmt: Dict[Key, str] = {(li, e): ladder[0] for li in moe
+                           for e in range(E)}
+    pinned: List[List[Key]] = [[] for _ in range(n_devices)]
+    home_keys: List[List[Key]] = [
+        [k for k in sorted(device_of) if d in device_of[k]]
+        for d in range(n_devices)]
+    slots = 1
+
+    def up_cost(d: int) -> int:
+        return sum(F.expert_vram_bytes(F.get_format(fmt[k]), d_model, d_ff,
+                                       group) for k in home_keys[d])
+
+    def arena_slabs(d: int, n_slots: int) -> int:
+        return len(moe) * n_slots + len(pinned[d]) * pin_span
+
+    def total(d: int, n_slots: int) -> int:
+        return base + up_cost(d) + arena_slabs(d, n_slots) * slab
+
+    for d in range(n_devices):
+        if total(d, 1) > budget:
+            raise PlanError(
+                f"per-device vram budget {budget / 2 ** 30:.2f}GiB cannot "
+                f"hold device {d}'s leanest configuration "
+                f"({total(d, 1) / 2 ** 30:.2f}GiB: non-expert "
+                f"{base / 2 ** 30:.2f} + {ladder[0]} up "
+                f"{up_cost(d) / 2 ** 30:.2f} + 1-slot arena)")
+
+    # hottest experts first, across all layers (planner's global order)
+    order = sorted(((li, e) for li in moe for e in range(E)),
+                   key=lambda k: (-freqs[k[0], k[1]], k[0], k[1]))
+
+    # 2. slots to cover one decode step's routed experts (+1 lookahead);
+    # uniform across devices, constrained by the tightest device
+    target = min(max(2, cfg.num_experts_per_tok + 1), max_slots)
+    while slots < target and all(total(d, slots + 1) <= budget
+                                 for d in range(n_devices)):
+        slots += 1
+
+    # 3. pin hottest experts on their home devices (richest format).  A
+    # replicated expert pins everywhere or nowhere; a device that can no
+    # longer fit a pin is full — colder experts cost the same or more.
+    per_dev_cap = len(moe) * max(1, -(-E // n_devices) // 2)
+    if max_pinned_per_device is not None:
+        per_dev_cap = min(per_dev_cap, max_pinned_per_device)
+    full: set = set()
+    for k in order:
+        if len(full) == n_devices:
+            break
+        homes = device_of[k]
+        if any(d in full for d in homes):
+            continue
+        if any(len(pinned[d]) >= per_dev_cap for d in homes):
+            continue
+        prev = fmt[k]
+        fmt[k] = pin_fmt.name
+        for d in homes:
+            pinned[d].append(k)
+        failed = [d for d in homes if total(d, slots) > budget]
+        if failed:
+            for d in homes:
+                pinned[d].pop()
+            fmt[k] = prev
+            full.update(failed)  # only the devices that ran out: a
+            # replicated pin failing on one tight device must not stop
+            # single-home pinning on devices that still have headroom
+
+    # 4. per-expert format upgrades (quality/coverage), one rung per pass,
+    # hottest first; an upgrade must fit on every home device
+    for rung in range(1, len(ladder)):
+        saturated: set = set()
+        for k in order:
+            if len(saturated) == n_devices:
+                break
+            homes = device_of[k]
+            if fmt[k] != ladder[rung - 1] or any(k in pinned[d]
+                                                 for d in homes):
+                continue
+            if any(d in saturated for d in homes):
+                continue
+            fmt[k] = ladder[rung]
+            failed = [d for d in homes if total(d, slots) > budget]
+            if failed:
+                fmt[k] = ladder[rung - 1]
+                saturated.update(failed)
+
+    # 5. remainder -> more residency slots (uniform)
+    while slots < max_slots and all(total(d, slots + 1) <= budget
+                                    for d in range(n_devices)):
+        slots += 1
+
+    num_slabs = [arena_slabs(d, slots) for d in range(n_devices)]
+    breakdown = [{"non_expert": base, "resident_up": up_cost(d),
+                  "residency_arena": num_slabs[d] * slab}
+                 for d in range(n_devices)]
+    # global store plan: formats + shared host budget; ``pinned`` is the
+    # de-duplicated union (replicated pins appear once) for telemetry
+    seen: set = set()
+    pinned_union: List[Key] = []
+    for d in range(n_devices):
+        for k in pinned[d]:
+            if k not in seen:
+                seen.add(k)
+                pinned_union.append(k)
+    store_plan = StorePlan(
+        vram_budget=budget * n_devices, host_budget=host_budget,
+        formats=fmt, pinned=pinned_union, slots_per_layer=slots,
+        slab_bytes=slab, num_slabs=sum(num_slabs),
+        breakdown={"non_expert": base * n_devices,
+                   "resident_up": sum(up_cost(d) for d in range(n_devices)),
+                   "residency_arena": sum(num_slabs) * slab},
+        progressive=progressive)
+    plan = ClusterPlan(
+        n_devices=n_devices, device_of=device_of, pinned_per_device=pinned,
+        slots_per_layer=slots, slab_bytes=slab, num_slabs=num_slabs,
+        replicate=replicate, store_plan=store_plan,
+        vram_budget_per_device=budget, breakdown_per_device=breakdown)
+    for d in range(n_devices):
+        assert plan.footprint_bytes(d) <= budget, (d, plan.device_summary(d))
+    return plan

@@ -110,7 +110,8 @@ class FloEPipeline:
                  pinned_experts: tuple = (),  # ((layer, expert), ...)
                  store_plan=None,  # repro.store.StorePlan (tiered store)
                  store_dir=None,  # disk-tier shard dir (tmp dir if None)
-                 store_freqs=None):  # (L, E) activation freqs (host warm)
+                 store_freqs=None,  # (L, E) activation freqs (host warm)
+                 cluster_plan=None):  # repro.cluster.ClusterPlan (multi-GPU)
         self.cfg = cfg
         self.mode = mode
         self.prefetch = prefetch and mode == "floe"
@@ -134,9 +135,24 @@ class FloEPipeline:
         # formats, a disk/host tier stack behind the stores, and a slab
         # arena backing residency.  Requires the runtime scheduler (the
         # synchronous path has no tier-aware timeline).
+        # ------------------------------------- multi-GPU cluster (plan) --
+        # A ClusterPlan partitions experts over n_devices simulated GPUs
+        # (per-device links, arenas, pins) behind the same scheduler
+        # interface; its optional store_plan drives the tiered store
+        # exactly like a single-device one (shared host/disk tiers).
+        self.cluster_plan = cluster_plan
+        if cluster_plan is not None:
+            assert use_runtime and mode == "floe", \
+                "cluster_plan requires use_runtime=True and mode='floe'"
+            if cluster_plan.store_plan is not None:
+                assert store_plan is None, \
+                    "pass the cluster's store plan via the ClusterPlan"
+                store_plan = cluster_plan.store_plan
+
         self.store_plan = store_plan
         self.host_tier = None
         self.device_pool = None
+        self.device_pools: list = []
         if store_plan is not None:
             assert use_runtime and mode == "floe", \
                 "store_plan requires use_runtime=True and mode='floe'"
@@ -157,8 +173,13 @@ class FloEPipeline:
                 self.layers, thresholds, store_plan, store_dir,
                 link=self.link, quant_group=cfg.floe.quant_group,
                 freqs=store_freqs)
-            self.device_pool = DevicePool(store_plan.slab_bytes,
-                                          store_plan.num_slabs)
+            if cluster_plan is not None:  # one slab arena PER device
+                self.device_pools = [
+                    DevicePool(store_plan.slab_bytes, max(n, 1))
+                    for n in cluster_plan.num_slabs]
+            else:
+                self.device_pool = DevicePool(store_plan.slab_bytes,
+                                              store_plan.num_slabs)
             for li, layer in enumerate(self.layers):
                 self.up_res.append(None)  # per-expert up lives in the store
                 self.caches.append(ExpertCache(cache_slots)
@@ -189,7 +210,10 @@ class FloEPipeline:
         self.sched: Optional[ExpertScheduler] = None
         self.cross_token = cross_token
         self.batched_demand = batched_demand
-        if use_runtime and mode == "floe":
+        if use_runtime and mode == "floe" and cluster_plan is not None:
+            self._init_cluster(cache_slots, residency_policy, num_buffers,
+                               lookahead, cancel_stale, pinned_experts)
+        elif use_runtime and mode == "floe":
             self.residency: list[Optional[ResidencyManager]] = []
             for li, layer in enumerate(self.layers):
                 if "moe" not in layer:
@@ -214,19 +238,80 @@ class FloEPipeline:
     def _moe_layer_indices(self):
         return [i for i, l in enumerate(self.layers) if "moe" in l]
 
+    def _stage_one_pinned(self, li: int, e: int, res) -> None:
+        """Stage one pinned expert's full-format slice into ``res`` at
+        t=0 — the single body behind single-device and per-device
+        cluster pinned staging."""
+        store = self.stores[li]
+        avail = store.available_channels(e)
+        served, gate, down, _ = store.fetch_slice(
+            e, avail if avail is not None else np.arange(store.d_ff))
+        res.put((li, e), (served, gate, down), ready_t=0.0)
+
     def _stage_pinned(self) -> None:
         """Stage every planner-pinned expert at t=0 in its full format.
         Their slab spans come out of the arena (the planner budgeted
         them) and the entries are never evicted; the staging traffic is
         planning-time, so the transfer logs are reset afterwards."""
         for (li, e) in self.store_plan.pinned:
-            store = self.stores[li]
-            served, gate, down, _ = store.fetch_slice(
-                e, store.available_channels(e)
-                if store.available_channels(e) is not None
-                else np.arange(store.d_ff))
-            self.residency[li].put(self.sched.key(li, e),
-                                   (served, gate, down), ready_t=0.0)
+            self._stage_one_pinned(li, e, self.residency[li])
+        for s in self.stores:
+            if s is not None:
+                s.reset_log()
+
+    # --------------------------------------------------- cluster wiring ---
+    def _init_cluster(self, cache_slots: int, residency_policy: str,
+                      num_buffers: int, lookahead: int, cancel_stale: bool,
+                      pinned_experts: tuple) -> None:
+        """Per-device residency + links + the ClusterScheduler shim.
+
+        Each device gets its own per-layer ResidencyManagers (capacity =
+        planned slots + its pins, backed by its own slab arena when the
+        plan is tiered) and its own TransferEngine; the dispatcher keeps
+        their clocks in lockstep.  ``self.residency`` becomes the FLAT
+        list of every device's managers — the controller's rescore loop
+        and telemetry iterate it, they never index by layer."""
+        from repro.cluster import ClusterEngine, ClusterScheduler
+        plan = self.cluster_plan
+        tiered = plan.store_plan is not None
+        self.cluster_residency: list[list[Optional[ResidencyManager]]] = []
+        for d in range(plan.n_devices):
+            per_layer: list[Optional[ResidencyManager]] = []
+            for li, layer in enumerate(self.layers):
+                if "moe" not in layer:
+                    per_layer.append(None)
+                    continue
+                if tiered:
+                    pins = [(li, e) for (pl, e) in plan.pinned_per_device[d]
+                            if pl == li]
+                    cap = plan.slots_per_layer + len(pins)
+                    pool = self.device_pools[d]
+                else:
+                    pins = [(li, e) for (pl, e) in pinned_experts
+                            if pl == li and d in plan.devices_of(pl, e)]
+                    cap = cache_slots
+                    pool = None
+                per_layer.append(ResidencyManager(
+                    cap, policy=residency_policy, pinned=pins, pool=pool))
+            self.cluster_residency.append(per_layer)
+        self.residency = [r for dev in self.cluster_residency
+                          for r in dev if r is not None]
+        self.engine = ClusterEngine(self.link, n_devices=plan.n_devices,
+                                    num_buffers=num_buffers)
+        self.sched = ClusterScheduler(
+            plan, self.stores, self.cluster_residency, self.engine,
+            lookahead=lookahead, cancel_stale=cancel_stale,
+            progressive=(plan.store_plan.progressive if tiered else True))
+        if tiered:
+            self._stage_pinned_cluster()
+
+    def _stage_pinned_cluster(self) -> None:
+        """Stage each device's planner-pinned experts at t=0 (a
+        replicated pinned expert gets a copy on EVERY home device; the
+        per-device arenas budgeted the spans)."""
+        for d, pins in enumerate(self.cluster_plan.pinned_per_device):
+            for (li, e) in pins:
+                self._stage_one_pinned(li, e, self.cluster_residency[d][li])
         for s in self.stores:
             if s is not None:
                 s.reset_log()

@@ -18,6 +18,13 @@ activation frequencies are measured, ``repro.store.plan_store`` solves
 per-expert formats / pinned set / residency pool for the budget, and the
 decode runs through the disk/host/device tier stack (runtime scheduler,
 progressive-precision demand fetches).  ``--host-gb`` bounds the host tier.
+
+``--devices N`` (floe / floe-serve) spreads the experts over N simulated
+GPUs (``repro.cluster``): frequency-balanced partition, per-device
+host→device links and residency arenas, ``--replicate R`` homes each
+layer's R hottest experts on every device.  With ``--vram-gb`` the
+budget is PER DEVICE (``plan_cluster``); without it the cluster is
+placement-only over the flat in-host store.
 """
 from __future__ import annotations
 
@@ -63,6 +70,11 @@ def main():
                     help="disk-tier shard directory (tmp dir if empty)")
     ap.add_argument("--no-progressive", action="store_true",
                     help="disable progressive-precision demand fetches")
+    ap.add_argument("--devices", type=int, default=1,
+                    help=">1 simulates a multi-GPU cluster (per-device "
+                         "links + residency; --vram-gb becomes per-device)")
+    ap.add_argument("--replicate", type=int, default=0,
+                    help="hottest experts per layer homed on EVERY device")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -114,7 +126,34 @@ def main():
 
     # ---- tiered store: plan formats/pins/pool for the VRAM budget --------
     store_opts: dict = {}
-    if args.vram_gb > 0:
+    if args.devices > 1 or args.replicate > 0:
+        from repro.store import dense_residency_bytes, measure_frequencies
+        freqs = measure_frequencies(layers, cfg)
+        if args.vram_gb > 0:
+            from repro.cluster import plan_cluster
+            plan = plan_cluster(cfg, freqs, n_devices=args.devices,
+                                vram_gb_per_device=args.vram_gb,
+                                host_gb=args.host_gb,
+                                replicate=args.replicate,
+                                progressive=not args.no_progressive)
+            dense_gb = dense_residency_bytes(cfg) / 2 ** 30
+            print(f"cluster plan: {plan.summary()}")
+            print(f"  dense-resident needs {dense_gb:.3f}GiB on one device; "
+                  f"budget {args.vram_gb:.3f}GiB x {args.devices} devices")
+            for d in range(plan.n_devices):
+                print(f"  {plan.device_summary(d)}")
+            store_opts = dict(cluster_plan=plan, store_freqs=freqs,
+                              store_dir=args.store_dir or None,
+                              use_runtime=True)
+        else:  # placement-only: flat in-host store behind the dispatcher
+            from repro.cluster import uniform_cluster_plan
+            plan = uniform_cluster_plan(cfg, args.devices, freqs=freqs,
+                                        replicate=args.replicate)
+            print(f"cluster plan (placement-only): {plan.summary()}")
+            for d in range(plan.n_devices):
+                print(f"  {plan.device_summary(d)}")
+            store_opts = dict(cluster_plan=plan, use_runtime=True)
+    elif args.vram_gb > 0:
         from repro.store import (dense_residency_bytes, measure_frequencies,
                                  plan_store)
         freqs = measure_frequencies(layers, cfg)
@@ -169,7 +208,8 @@ def main():
         return
 
     if store_opts and args.mode != "floe":
-        raise SystemExit("--vram-gb requires --mode floe or floe-serve")
+        raise SystemExit(
+            "--vram-gb/--devices require --mode floe or floe-serve")
     pipe = FloEPipeline(params, cfg, thresholds=thr,
                         cache_slots=args.cache_slots, mode=args.mode,
                         device=device, link=link, **store_opts)
@@ -180,7 +220,25 @@ def main():
     stalls = sum(x.stall_s for x in pipe.metrics)
     print(f"mode={args.mode}: {pipe.tokens_per_second():.1f} tok/s (modeled)"
           f"  coverage={m.coverage:.2f}  total_stall={stalls * 1e3:.2f}ms")
-    if store_opts:
+    if store_opts and pipe.cluster_plan is not None:
+        s = pipe.sched.stats
+        for pool in pipe.device_pools:
+            pool.check_invariants()
+        eng = pipe.engine
+        busy = eng.summary()["busy_s_per_device"]
+        print(f"cluster: devices={pipe.cluster_plan.n_devices} "
+              f"agg_link_util="
+              f"{eng.aggregate_utilization(pipe.sched.clock):.2%} "
+              f"busy/dev={[round(b * 1e3, 1) for b in busy]}ms "
+              f"demand_fetches={s.demand_fetches} "
+              f"replica_routed={pipe.sched.selector.replica_choices}")
+        if pipe.host_tier is not None:
+            print(f"  host_hit_rate={pipe.host_tier.stats.hit_rate:.2f} "
+                  f"disk_reads={pipe.host_tier.disk.stats.reads} "
+                  f"pool_free=" +
+                  "/".join(f"{p.free_slabs}:{p.num_slabs}"
+                           for p in pipe.device_pools))
+    elif store_opts:
         s = pipe.sched.stats
         pipe.device_pool.check_invariants()
         print(f"store: demand_fetches={s.demand_fetches} "

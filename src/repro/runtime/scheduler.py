@@ -69,6 +69,17 @@ class SchedulerStats:
             setattr(self, f.name, type(getattr(self, f.name))())
 
 
+def recall_from_stats(stats: SchedulerStats) -> float:
+    """Prefetch recall over a stats block: demand events a prediction
+    covered, over all demand events (unpredicted reuse counts against).
+    One definition shared by the single-device scheduler and the
+    cluster dispatcher's merged view — the semantics have shifted once
+    already (``Entry.predicted`` credit) and must not diverge."""
+    served = stats.demand_hits + stats.residual_waits
+    total = served + stats.demand_fetches + stats.demand_reuse
+    return served / total if total else 1.0
+
+
 @dataclasses.dataclass
 class PrefetchRequest:
     layer: int
@@ -126,6 +137,16 @@ class ExpertScheduler:
         r = self.residency[layer]
         assert r is not None, f"layer {layer} has no residency manager"
         return r
+
+    def tracks(self, layer: int, expert: int) -> bool:
+        """This scheduler currently owns state for (layer, expert):
+        staged, in flight, queued, or awaiting a top-up completion.  The
+        multi-device dispatcher routes follow-up calls (demand, wait,
+        payload reads) to the scheduler that tracks the key."""
+        k = self.key(layer, expert)
+        r = self.residency[layer]
+        return ((r is not None and k in r) or k in self.engine.inflight
+                or k in self._queued or k in self._topup_ready)
 
     # -------------------------------------------------------------- clock --
     def advance(self, dt: float) -> None:
@@ -437,10 +458,7 @@ class ExpertScheduler:
         already staged AND re-named by a live prediction), over all demand
         events.  Unpredicted demand-fetch reuse is cache locality — it
         counts against recall, not for it."""
-        served = self.stats.demand_hits + self.stats.residual_waits
-        total = (served + self.stats.demand_fetches +
-                 self.stats.demand_reuse)
-        return served / total if total else 1.0
+        return recall_from_stats(self.stats)
 
     def reset_stats(self) -> None:
         self.stats.reset()

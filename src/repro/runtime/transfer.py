@@ -70,6 +70,7 @@ class TransferRecord:
     demoted: bool = False  # stale prefetch the router disagreed with
     disk_s: float = 0.0  # disk→host stage pipelined into the duration
     precision: str = "full"  # "full" | "draft" (progressive first pass)
+    device: int = 0  # destination device (multi-GPU cluster; 0 otherwise)
 
     @property
     def duration(self) -> float:
@@ -80,11 +81,13 @@ class TransferEngine:
     """Staging-buffer + link timeline over one or more ``ExpertStore``s."""
 
     def __init__(self, link: Optional[LinkModel] = None, *,
-                 num_buffers: int = 2, chunk_channels: int = 50):
+                 num_buffers: int = 2, chunk_channels: int = 50,
+                 device_id: int = 0):
         assert num_buffers >= 1
         self.link = link or LinkModel()
         self.num_buffers = num_buffers
         self.chunk_channels = max(1, chunk_channels)
+        self.device_id = device_id  # which GPU this engine's link feeds
         self._buffer_free = [0.0] * num_buffers
         self._link_free = 0.0
         self.inflight: Dict[Hashable, TransferRecord] = {}
@@ -97,6 +100,11 @@ class TransferEngine:
 
     def has_capacity(self, now: float) -> bool:
         return self.active_count(now) < self.num_buffers
+
+    def link_free_at(self, now: float) -> float:
+        """Earliest time this link can start a NEW transfer — the load
+        signal a multi-device ``LinkSelector`` ranks replicas by."""
+        return max(self._link_free, now)
 
     def poll(self, now: float) -> List[TransferRecord]:
         """Retire transfers completed by ``now`` (frees their buffers)."""
@@ -165,7 +173,7 @@ class TransferEngine:
         rec = TransferRecord(key=key, kind=kind, nbytes=nbytes, chunks=chunks,
                              strategy=strategy, enqueue_t=now, start_t=start,
                              complete_t=complete, disk_s=info.disk_s,
-                             precision=info.precision)
+                             precision=info.precision, device=self.device_id)
         self.inflight[key] = rec
         self.records.append(rec)
         return payload, rec
@@ -223,25 +231,33 @@ class TransferEngine:
         return False
 
     # ----------------------------------------------------------- telemetry -
+    def _own_records(self) -> List[TransferRecord]:
+        """This engine's transfers.  A cluster aliases every engine's
+        ``records`` to ONE shared chronological log, so per-engine
+        telemetry must filter by device (single-device engines only
+        ever hold their own records — the filter is a no-op there)."""
+        return [r for r in self.records if r.device == self.device_id]
+
     def busy_seconds(self) -> float:
-        return sum(r.duration for r in self.records)
+        return sum(r.duration for r in self._own_records())
 
     def wasted_bytes(self) -> int:
-        return sum(r.nbytes for r in self.records if r.demoted)
+        return sum(r.nbytes for r in self._own_records() if r.demoted)
 
     def summary(self) -> dict:
-        n = len(self.records)
+        recs = self._own_records()
+        n = len(recs)
         return {
             "transfers": n,
-            "bytes": sum(r.nbytes for r in self.records),
+            "bytes": sum(r.nbytes for r in recs),
             "busy_s": self.busy_seconds(),
-            "demoted": sum(1 for r in self.records if r.demoted),
+            "demoted": sum(1 for r in recs if r.demoted),
             "wasted_bytes": self.wasted_bytes(),
-            "disk_s": sum(r.disk_s for r in self.records),
+            "disk_s": sum(r.disk_s for r in recs),
             "draft_transfers":
-                sum(1 for r in self.records if r.precision == "draft"),
-            "refines": sum(1 for r in self.records if r.kind == "refine"),
+                sum(1 for r in recs if r.precision == "draft"),
+            "refines": sum(1 for r in recs if r.kind == "refine"),
             "direct_fraction":
-                (sum(1 for r in self.records if r.strategy == "direct") / n)
+                (sum(1 for r in recs if r.strategy == "direct") / n)
                 if n else 0.0,
         }

@@ -885,7 +885,18 @@ class ServingController:
         done = self.completed
         ttfts = [r.ttft for r in done if r.ttft is not None]
         tpots = [r.tpot for r in done if r.tpot is not None]
+        cluster = {}
+        if self.pipe.cluster_plan is not None:
+            # batched decode over repro.cluster: per-device links under
+            # the same union-demand path (split per owning device)
+            cluster = {
+                "devices": self.pipe.cluster_plan.n_devices,
+                "agg_link_utilization":
+                    self.pipe.engine.aggregate_utilization(self.sched.clock),
+                "replica_routed": self.sched.selector.replica_choices,
+            }
         return {
+            **cluster,
             "policy": self.policy,
             "completed": len(done),
             "rejected": len(self.rejected),

@@ -54,6 +54,7 @@ class DiskStats:
     reads: int = 0
     bytes_read: int = 0
     modeled_seconds: float = 0.0
+    index_builds: int = 0  # shard-header scans; stays 1 per reader
 
 
 class DiskTier:
@@ -81,13 +82,16 @@ class DiskTier:
 
     def load(self, key: str) -> Tuple[dict, float]:
         """One expert record + its modeled read seconds (lazy: only this
-        record's bytes are read and decoded)."""
+        record's bytes are read and decoded; the offset index is built
+        once per reader and reused across fetches — per-expert loads in
+        a cluster prefill loop never re-scan the shard header)."""
         rec = self.reader.load(key)
         n = self.reader.nbytes(key)
         t = self.model.read_time(n)
         self.stats.reads += 1
         self.stats.bytes_read += n
         self.stats.modeled_seconds += t
+        self.stats.index_builds = self.reader.index_builds
         return rec, t
 
 

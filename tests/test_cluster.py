@@ -1,0 +1,358 @@
+"""repro.cluster unit + property tests: deterministic balanced placement
+(``plan_cluster`` / ``partition_layer``), per-device link selection, and
+the ClusterScheduler dispatch invariants (sticky routing, lockstep
+clocks, n=1 trace parity with the plain single-device scheduler).
+
+Property tests run under real ``hypothesis`` when installed, else the
+deterministic grid fallback (``tests/_hypothesis_compat.py``)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterEngine, ClusterPlan, ClusterScheduler,
+                           LinkSelector, partition_layer, plan_cluster,
+                           uniform_cluster_plan)
+from repro.common.config import reduced
+from repro.configs import get_config
+from repro.core.offload import LinkModel, build_expert_store
+from repro.runtime import ExpertScheduler, ResidencyManager, TransferEngine
+from repro.store import floor_bytes, plan_store
+
+from tests._hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------- helpers --
+def _cfg(max_experts=8):
+    return reduced(get_config("mixtral_8x7b"), layers=4, d_model=128,
+                   max_experts=max_experts)
+
+
+def _freqs(cfg, seed):
+    rng = np.random.default_rng(seed)
+    f = rng.random((cfg.num_layers, cfg.num_experts)) ** 2
+    return f / f.sum(axis=1, keepdims=True)
+
+
+def _store(e=4, d=16, f=32, seed=0):
+    rng = np.random.default_rng(seed)
+    moe = {
+        "we_gate": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_up": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_down": jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32) * 0.1,
+    }
+    thr = np.full((e,), 0.5, np.float32)
+    return build_expert_store(moe, thr, bits=2, group=16)
+
+
+def _flat_plan(n, E, replicate=0):
+    """One-MoE-layer placement-only plan: expert e homes on device e%n,
+    the first ``replicate`` experts home everywhere."""
+    device_of = {(0, e): (tuple(range(n)) if e < replicate else (e % n,))
+                 for e in range(E)}
+    return ClusterPlan(n_devices=n, device_of=device_of,
+                       pinned_per_device=[[] for _ in range(n)],
+                       slots_per_layer=0, slab_bytes=0, num_slabs=[0] * n,
+                       replicate=replicate)
+
+
+def _cluster(store, n, *, slots=3, num_buffers=2, replicate=0):
+    plan = _flat_plan(n, store.num_experts, replicate)
+    engines = ClusterEngine(LinkModel(), n_devices=n,
+                            num_buffers=num_buffers, chunk_channels=8)
+    residency = [[ResidencyManager(slots)] for _ in range(n)]
+    sched = ClusterScheduler(plan, [store], residency, engines, lookahead=2)
+    return sched, residency, engines
+
+
+# -------------------------------------------------------------- placement --
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n_devices=st.integers(min_value=1, max_value=5))
+def test_partition_frequency_balanced(seed, n_devices):
+    """Greedy LPT bound: device frequency loads differ by at most one
+    expert's frequency, and every expert has exactly one home."""
+    rng = np.random.default_rng(seed)
+    freq = rng.random(8) ** 2
+    homes = partition_layer(freq, n_devices)
+    assert all(len(h) == 1 for h in homes)
+    load = np.zeros(n_devices)
+    for e, (d,) in enumerate(homes):
+        load[d] += freq[e]
+    assert load.max() - load.min() <= freq.max() + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n_devices=st.sampled_from([1, 2, 3, 4]),
+       replicate=st.sampled_from([0, 1, 2]))
+def test_plan_cluster_deterministic_and_well_formed(seed, n_devices,
+                                                    replicate):
+    """Same inputs -> identical plan; pins live on their home devices,
+    per-device footprints respect the budget, replicated experts home
+    everywhere."""
+    cfg = _cfg()
+    freqs = _freqs(cfg, seed)
+    vram_gb = 1.3 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    kw = dict(n_devices=n_devices, vram_gb_per_device=vram_gb,
+              host_gb=0.01, ladder=("int2",), replicate=replicate)
+    a = plan_cluster(cfg, freqs, **kw)
+    b = plan_cluster(cfg, freqs, **kw)
+    assert a.device_of == b.device_of
+    assert a.pinned_per_device == b.pinned_per_device
+    assert a.store_plan.formats == b.store_plan.formats
+    assert a.slots_per_layer == b.slots_per_layer
+    assert a.num_slabs == b.num_slabs
+
+    moe = [li for li in range(cfg.num_layers)]
+    for li in moe:
+        for e in range(cfg.num_experts):
+            homes = a.devices_of(li, e)
+            assert len(homes) >= 1
+            assert len(set(homes)) == len(homes)
+        hot = sorted(range(cfg.num_experts),
+                     key=lambda e: (-freqs[li, e], e))[:replicate]
+        for e in hot:
+            assert a.devices_of(li, e) == tuple(range(n_devices))
+    for d in range(n_devices):
+        for k in a.pinned_per_device[d]:
+            assert d in a.device_of[k]
+        assert a.footprint_bytes(d) <= a.vram_budget_per_device
+
+
+def test_plan_cluster_n1_matches_plan_store():
+    """With one device the cluster planner must reproduce plan_store's
+    greedy spend exactly (formats, pins, slots, arena)."""
+    cfg = _cfg()
+    for seed in (0, 3, 9):
+        freqs = _freqs(cfg, seed)
+        for mult in (1.05, 1.4):
+            vram_gb = mult * floor_bytes(cfg, ("int2",)) / 2 ** 30
+            cp = plan_cluster(cfg, freqs, n_devices=1,
+                              vram_gb_per_device=vram_gb, host_gb=0.01,
+                              ladder=("int2",))
+            sp = plan_store(cfg, freqs, vram_gb=vram_gb, host_gb=0.01,
+                            ladder=("int2",))
+            assert cp.store_plan.formats == sp.formats
+            assert cp.pinned_per_device[0] == sp.pinned
+            assert cp.slots_per_layer == sp.slots_per_layer
+            assert cp.num_slabs[0] == sp.num_slabs
+
+
+def test_pinned_set_balanced_across_devices():
+    """Equal budgets + balanced partition keep per-device pinned counts
+    within 2 of each other (fixed representative seeds)."""
+    cfg = _cfg()
+    for seed in (0, 1, 2, 7):
+        freqs = _freqs(cfg, seed)
+        vram_gb = 1.25 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+        for n in (2, 4):
+            plan = plan_cluster(cfg, freqs, n_devices=n,
+                                vram_gb_per_device=vram_gb, host_gb=0.01,
+                                ladder=("int2",))
+            counts = [len(p) for p in plan.pinned_per_device]
+            assert max(counts) - min(counts) <= 2, (seed, n, counts)
+
+
+def test_plan_cluster_infeasible_budget_raises():
+    from repro.store import PlanError
+    cfg = _cfg()
+    with pytest.raises(PlanError):
+        plan_cluster(cfg, _freqs(cfg, 0), n_devices=2,
+                     vram_gb_per_device=1e-6, host_gb=0.01)
+
+
+def test_uniform_plan_round_robin_without_freqs():
+    cfg = _cfg(max_experts=4)
+    plan = uniform_cluster_plan(cfg, 2)
+    for (li, e), homes in plan.device_of.items():
+        assert homes == (e % 2,)  # uniform freqs degrade to round-robin
+
+
+# ------------------------------------------------------------------ links --
+def test_link_selector_prefers_least_loaded_link():
+    engines = ClusterEngine(LinkModel(), n_devices=3, chunk_channels=8)
+    engines[0]._link_free = 5.0
+    engines[1]._link_free = 1.0
+    engines[2]._link_free = 3.0
+    sel = LinkSelector(engines)
+    assert sel.pick((0, 1, 2), now=0.0) == 1
+    assert sel.pick((0, 2), now=0.0) == 2
+    # ties break to the lowest device id; `now` floors idle links
+    engines[1]._link_free = 0.0
+    engines[2]._link_free = 0.0
+    assert sel.pick((2, 1), now=2.0) == 1
+    assert sel.replica_choices == 3
+
+
+def test_cluster_engine_shared_record_log():
+    store = _store()
+    engines = ClusterEngine(LinkModel(), n_devices=2, chunk_channels=8)
+    engines[0].issue(store, (0, 0), 0, np.arange(8), 0.0)
+    engines[1].issue(store, (0, 1), 1, np.arange(8), 0.0)
+    assert [r.device for r in engines.records] == [0, 1]
+    assert engines.busy_seconds() == pytest.approx(
+        engines.device_busy_seconds(0) + engines.device_busy_seconds(1))
+    # independent links: both transfers start at t=0, genuinely parallel
+    assert all(r.start_t == 0.0 for r in engines.records)
+
+
+# --------------------------------------------------------------- dispatch --
+def _trace(records):
+    return [(r.key, r.kind, round(r.enqueue_t, 12), round(r.start_t, 12),
+             round(r.complete_t, 12), r.nbytes, r.chunks) for r in records]
+
+
+def _drive(sched, store, seed, n_ops=40):
+    """The same random op trace the runtime property suite uses."""
+    rng = np.random.default_rng(seed)
+    f = store.d_ff
+    for _ in range(n_ops):
+        op = rng.integers(0, 5)
+        e = int(rng.integers(0, store.num_experts))
+        idx = np.sort(rng.choice(f, size=int(rng.integers(1, f // 2)),
+                                 replace=False))
+        if op == 0:
+            sched.enqueue_prefetch(0, e, idx, float(rng.random()),
+                                   depth=int(rng.integers(1, 3)))
+        elif op == 1:
+            sched.pump()
+        elif op == 2:
+            sched.advance(float(rng.random()) * 1e-3)
+        elif op == 3:
+            payload, miss = sched.demand_async(0, e, lambda i=idx: i)
+            sched.wait_for(0, e, was_miss=miss)
+        else:
+            truth = rng.choice(store.num_experts,
+                               size=int(rng.integers(1, 3)), replace=False)
+            sched.reconcile(0, truth.tolist())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_single_device_cluster_trace_identical(seed):
+    """n_devices=1 dispatch is a transparent shim: the same op trace
+    produces the identical transfer timeline and stats as the plain
+    ExpertScheduler."""
+    store = _store(seed=1)
+    plain_res = [ResidencyManager(3)]
+    plain_eng = TransferEngine(LinkModel(), num_buffers=2, chunk_channels=8)
+    plain = ExpertScheduler([store], plain_res, plain_eng, lookahead=2)
+    clustered, _, engines = _cluster(_store(seed=1), 1)
+    _drive(plain, store, seed)
+    _drive(clustered, store, seed)
+    assert _trace(plain_eng.records) == _trace(engines.records)
+    assert dataclasses.asdict(plain.stats) == \
+        dataclasses.asdict(clustered.stats)
+    assert plain.clock == clustered.clock
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n_devices=st.sampled_from([2, 3, 4]))
+def test_cluster_clocks_stay_lockstep(seed, n_devices):
+    store = _store(seed=2)
+    sched, _, _ = _cluster(store, n_devices)
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        _drive(sched, store, int(rng.integers(0, 10 ** 9)), n_ops=2)
+        clocks = [s.clock for s in sched.devs]
+        assert max(clocks) - min(clocks) <= 1e-9, clocks
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_transfers_land_on_home_devices(seed):
+    """Un-replicated experts only ever transfer over their home device's
+    link, and only that device's residency holds them."""
+    store = _store(seed=3)
+    n = 2
+    sched, residency, engines = _cluster(store, n)
+    _drive(sched, store, seed, n_ops=50)
+    for r in engines.records:
+        key = r.key[0] if (isinstance(r.key, tuple) and
+                           isinstance(r.key[0], tuple)) else r.key
+        _, e = key
+        assert r.device == e % n, (r.key, r.device)
+    for d in range(n):
+        for (li, e) in residency[d][0].keys():
+            assert e % n == d
+
+
+def test_replicated_expert_routes_to_least_loaded_link():
+    """A replicated expert's cold fetch goes over the idler link; once
+    staged, later demands stick to the device that holds it."""
+    store = _store()
+    sched, residency, engines = _cluster(store, 2, replicate=1)
+    # saturate device 0's link (expert 2 homes on device 0)
+    p, m = sched.demand_async(0, 2, lambda: np.arange(16))
+    assert engines.records[-1].device == 0
+    # expert 0 is replicated: with device 0 busy it must fetch on dev 1
+    p, m = sched.demand_async(0, 0, lambda: np.arange(8))
+    assert engines.records[-1].device == 1
+    assert (0, 0) in residency[1][0]
+    sched.wait_for(0, 0, was_miss=m)
+    # sticky: a repeat demand is a hit on device 1, no new transfer
+    n_rec = len(engines.records)
+    p, m2 = sched.demand_async(0, 0, lambda: np.arange(8))
+    assert not m2 and len(engines.records) == n_rec
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n_devices=st.sampled_from([2, 3]))
+def test_cluster_demand_accounting_conserved(seed, n_devices):
+    """Merged stats: every waited demand lands in exactly one bucket,
+    summed across devices."""
+    store = _store(seed=6)
+    sched, _, _ = _cluster(store, n_devices, slots=store.num_experts)
+    rng = np.random.default_rng(seed)
+    f = store.d_ff
+    n_waits = 0
+    for _ in range(25):
+        e = int(rng.integers(0, store.num_experts))
+        if rng.random() < 0.5:
+            sched.enqueue_prefetch(0, e, np.arange(f // 4),
+                                   float(rng.random()))
+            sched.pump()
+        else:
+            idx = np.arange(int(rng.integers(1, f)))
+            payload, miss = sched.demand_async(0, e, lambda i=idx: i)
+            sched.wait_for(0, e, was_miss=miss)
+            n_waits += 1
+        sched.advance(float(rng.random()) * 1e-3)
+    s = sched.stats
+    assert (s.demand_hits + s.residual_waits + s.demand_reuse +
+            s.demand_fetches) == n_waits
+    assert 0.0 <= sched.prefetch_recall() <= 1.0
+    assert 0.0 <= sched.prefetch_precision() <= 1.0
+
+
+def test_cluster_reconcile_cancels_on_every_device():
+    store = _store()
+    sched, _, engines = _cluster(store, 2, num_buffers=1)
+    # one queued (never issued) prefetch per device
+    for e in range(4):
+        sched.enqueue_prefetch(0, e, np.arange(4), 0.5 + 0.1 * e)
+    queued = sum(len(s._queued) for s in sched.devs)
+    assert queued >= 2  # both devices have backlog
+    cancelled = sched.reconcile(0, [])
+    assert cancelled == queued
+    assert all(not s._queued for s in sched.devs)
+
+
+def test_cluster_demand_union_covers_need_across_devices():
+    store = _store()
+    sched, _, _ = _cluster(store, 2, slots=store.num_experts)
+    for e in range(store.num_experts):
+        need = np.sort(np.unique(np.arange(e, store.d_ff, 3)))
+        (idx, gate, down), miss = sched.demand_union(0, e, need)
+        sched.wait_for(0, e, was_miss=miss)
+        assert np.all(np.isin(need, idx))
+        assert gate.shape[0] == idx.shape[0] == down.shape[0]
+    # grow one union: the top-up happens on the expert's own device
+    (idx, _, _), m = sched.demand_union(0, 1, np.arange(store.d_ff))
+    sched.wait_for(0, 1, was_miss=m)
+    assert np.all(np.isin(np.arange(store.d_ff), idx))
+    assert sched.stats.demand_topups >= 1

@@ -153,6 +153,22 @@ def test_disk_tier_lazy_single_record(tmp_path):
     assert disk.reader.bytes_read < total
 
 
+def test_disk_tier_index_built_once_per_reader(tmp_path):
+    """The shard's offset index is decoded lazily and exactly once: a
+    loop of per-expert fetches (the cluster prefill path) reuses it
+    instead of re-scanning the header, and telemetry proves it."""
+    disk, _ = _mini_disk(tmp_path)
+    assert disk.reader.index_builds == 0  # opening never scans the header
+    for i in range(6):
+        disk.load(f"L0.E{i}")
+    for i in range(6):  # repeat fetches reuse the same index
+        disk.load(f"L0.E{i}")
+        assert f"L0.E{i}" in disk
+    assert disk.reader.index_builds == 1
+    assert disk.stats.index_builds == 1
+    assert disk.stats.reads == 12
+
+
 def test_disk_model_bandwidth_and_seek():
     m = DiskModel(read_bw=1e9, seek_us=100.0)
     assert m.read_time(1e9) == pytest.approx(1.0 + 1e-4)
