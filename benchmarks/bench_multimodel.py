@@ -1,0 +1,194 @@
+"""Multi-model serving benchmark: one shared host tier vs isolation.
+
+The ``repro.deploy`` fleet serves several models over ONE
+HostTier/DiskTier (global hottest-first warming, per-model key
+prefixes) with disjoint per-device arenas.  The claim to pin:
+
+* **stall/token is NO WORSE** than running the same two models as two
+  fully isolated deployments (each with its own host tier), because
+  the shared LRU keeps both models' HOT records resident and decode
+  never reaches the evicted cold tail; and
+* **host bytes are STRICTLY LOWER**, because the shared tier is
+  provisioned below the sum of the two isolated tiers and the cold
+  tail of the union is simply not resident.
+
+Both regimes decode identical token streams through identical plans
+(``plan_cluster`` at one device reproduces ``plan_store`` exactly, and
+the n=1 cluster shim is timeline-identical to the plain runtime — both
+pinned by tests), with prefetch and progressive refinement disabled so
+the link is drained between steps and the comparison isolates the host
+tier.  The decode is interleaved token-by-token across the two models —
+the fleet's lockstep-clock regime — so any cross-model contention on
+the shared link would show up as stall.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
+                          RuntimeSpec, build, build_fleet)
+from repro.store import floor_bytes
+from repro.store import formats as F
+
+TOKENS = 6
+BATCH = 1
+ALPHA = 0.9
+SEEDS = (0, 1)
+#: the shared tier is provisioned at this fraction of the two isolated
+#: tiers' total — the strictly-lower-bytes claim under test
+SHARED_FRACTION = 0.8
+_CACHE: dict = {}
+
+
+def _spec(name: str, seed: int, vram_gb: float, host_gb: float
+          ) -> DeploymentSpec:
+    return DeploymentSpec(
+        name=name,
+        model=ModelSpec(arch="mixtral-8x7b", layers=4, d_model=128,
+                        max_experts=8, seed=seed),
+        resources=ResourceSpec(vram_gb=vram_gb, host_gb=host_gb,
+                               ladder=("int2",), progressive=False),
+        runtime=RuntimeSpec(use_runtime=True, prefetch=False))
+
+
+def _setup():
+    if "setup" in _CACHE:
+        return _CACHE["setup"]
+    probe = _spec("probe", 0, 1.0, 1.0)
+    cfg = probe.resolve_config()
+    vram_gb = 1.2 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    # one model's record bytes (formats are budget-determined, so any
+    # seed's plan sizes the records identically)
+    from repro.deploy.builder import plan_resources, resolve_params
+    from repro.core.pipeline import _unstack_layers
+    s0 = _spec("probe", 0, vram_gb, 1.0)
+    params = resolve_params(s0.model, cfg)
+    plan, _ = plan_resources(s0, cfg, _unstack_layers(params, cfg))
+    rec_bytes = sum(
+        F.host_bytes(F.get_format(name), cfg.d_model, cfg.moe_d_ff)
+        for name in plan.formats.values())
+    _CACHE["setup"] = (cfg, vram_gb, rec_bytes)
+    return _CACHE["setup"]
+
+
+def _h_streams(cfg):
+    import jax
+    import jax.numpy as jnp
+    streams = {}
+    for name, seed in zip("ab", SEEDS):
+        key = jax.random.PRNGKey(1000 + seed)
+        hs = []
+        h = jax.random.normal(key, (BATCH, cfg.d_model), jnp.float32)
+        for _ in range(TOKENS):
+            hs.append(h)
+            key, sub = jax.random.split(key)
+            n = jax.random.normal(sub, (BATCH, cfg.d_model), jnp.float32)
+            h = ALPHA * h + (1 - ALPHA ** 2) ** 0.5 * n
+        streams[name] = hs
+    return streams
+
+
+def _stream_freqs(spec: DeploymentSpec, stream, cfg) -> np.ndarray:
+    """Measured (L, E) activation frequencies of THIS decode stream: a
+    throwaway deployment decodes it once with the router instrumented.
+    Both regimes then plan and warm from the same measured temperatures
+    (the production analogue: plan from the traffic you actually serve,
+    not from a synthetic proxy)."""
+    dep = build(spec)
+    counts = np.zeros((cfg.num_layers, cfg.num_experts), np.float64)
+    route = dep.pipeline._route
+
+    def counting_route(h, li):
+        gates, eids, probs = route(h, li)
+        ids, n = np.unique(np.asarray(eids).reshape(-1), return_counts=True)
+        counts[li, ids] += n
+        return gates, eids, probs
+
+    dep.pipeline._route = counting_route
+    for h in stream:
+        dep.generate(1, h_stream=[h])
+    sums = counts.sum(axis=1, keepdims=True)
+    return counts / np.maximum(sums, 1.0)
+
+
+def run(csv_rows: list):
+    cfg, vram_gb, rec_bytes = _setup()
+    iso_host_gb = 1.05 * rec_bytes / 2 ** 30  # each isolated tier: ALL
+    #                                           of its model resident
+    shared_gb = SHARED_FRACTION * 2 * iso_host_gb
+    streams = _h_streams(cfg)
+    freqs = {name: _stream_freqs(_spec(name, seed, vram_gb, iso_host_gb),
+                                 streams[name], cfg)
+             for name, seed in zip("ab", SEEDS)}
+
+    # ---- regime A: two fully isolated deployments ------------------------
+    iso_stall = iso_bytes = 0.0
+    for name, seed in zip("ab", SEEDS):
+        dep = build(_spec(name, seed, vram_gb, iso_host_gb),
+                    freqs=freqs[name])
+        for h in streams[name]:
+            dep.generate(1, h_stream=[h])
+        iso_stall += sum(m.stall_s for m in dep.pipeline.metrics)
+        iso_bytes += dep.pipeline.host_tier.bytes_in_use
+    iso_stall_tok = iso_stall / (2 * TOKENS)
+
+    # ---- regime B: one fleet over a SHARED host/disk tier ----------------
+    # each member promises (and is admitted for) half the shared tier
+    member_gb = shared_gb / 2
+    fleet = build_fleet(
+        [_spec(name, seed, vram_gb, member_gb)
+         for name, seed in zip("ab", SEEDS)],
+        vram_gb_per_device=2.5 * vram_gb, host_gb=shared_gb,
+        freqs=[freqs[n] for n in "ab"])
+    for i in range(TOKENS):  # interleave: the multi-model serving regime
+        for name in "ab":
+            fleet.generate(name, 1, h_stream=[streams[name][i]])
+    shared_stall = sum(
+        m.stall_s for mem in fleet.members.values()
+        for m in mem.deployment.pipeline.metrics)
+    shared_stall_tok = shared_stall / (2 * TOKENS)
+    rep = fleet.report()
+    shared_bytes = rep["host_bytes_in_use"]
+    decode_misses = fleet.host.stats.misses
+
+    no_worse = shared_stall_tok <= iso_stall_tok + 1e-9
+    strictly_lower = shared_bytes < iso_bytes
+
+    csv_rows.append(("multimodel/stall_per_token_ms/isolated", 0.0,
+                     f"{iso_stall_tok * 1e3:.4f}"))
+    csv_rows.append(("multimodel/stall_per_token_ms/shared_tier", 0.0,
+                     f"{shared_stall_tok * 1e3:.4f}"))
+    csv_rows.append(("multimodel/host_bytes/isolated", 0.0,
+                     f"{iso_bytes:.0f}"))
+    csv_rows.append(("multimodel/host_bytes/shared_tier", 0.0,
+                     f"{shared_bytes:.0f}"))
+    csv_rows.append((
+        "multimodel/shared_stall_no_worse", 0.0,
+        f"{no_worse} ({shared_stall_tok * 1e3:.4f}ms vs "
+        f"{iso_stall_tok * 1e3:.4f}ms; decode host misses="
+        f"{decode_misses})"))
+    csv_rows.append((
+        "multimodel/host_bytes_strictly_lower", 0.0,
+        f"{strictly_lower} ({shared_bytes / max(iso_bytes, 1):.2%} of "
+        f"isolated; shared tier provisioned at {SHARED_FRACTION:.0%} "
+        f"of the two isolated tiers)"))
+    csv_rows.append((
+        "multimodel/shared_tier", 0.0,
+        f"hit_rate={rep['host_hit_rate']:.3f} "
+        f"resident/model="
+        f"{[rep['models'][n]['host_resident_bytes'] for n in 'ab']} "
+        f"capacity={rep['host_capacity_bytes']}"))
+
+    # admission telemetry: the same fleet rejects a third model (the
+    # footprint-aware admission path exercised under bench conditions)
+    from repro.deploy import AdmissionError
+    try:
+        build_fleet(
+            [_spec(name, seed, vram_gb, member_gb)
+             for name, seed in zip("abc", (0, 1, 2))],
+            vram_gb_per_device=2.5 * vram_gb, host_gb=shared_gb)
+        admitted = "ADMITTED (unexpected)"
+    except AdmissionError as e:
+        admitted = f"rejected: {e.field}"
+    csv_rows.append(("multimodel/oversubscribed_third_model", 0.0,
+                     admitted))

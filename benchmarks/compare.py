@@ -9,7 +9,11 @@ Rows are matched by name.  Two numeric channels are compared per row:
 * ``derived`` — compared only when numeric in BOTH files (``run.py``
   records it as a number whenever it parses as one).  Direction is
   metric-specific, so a change beyond the threshold is flagged as a
-  CHANGE for a human to judge, not auto-classified.
+  CHANGE for a human to judge, not auto-classified — EXCEPT boolean
+  acceptance pins: a derived value flipping from ``True...`` to
+  ``False...`` (e.g. ``cluster/stall_strictly_decreasing``,
+  ``multimodel/shared_stall_no_worse``) is a REGRESSION, since those
+  rows encode pass/fail claims, not tunable metrics.
 
 Exit status is 1 when any REGRESSION was flagged (CI gate), 0 otherwise.
 Directory arguments compare every ``BENCH_*.json`` present in both.
@@ -64,6 +68,11 @@ def compare_suite(old_path: Path, new_path: Path,
             if abs(dd) > threshold:
                 changes.append(
                     f"CHANGE     {name}: derived {od} -> {nd} ({dd:+.0%})")
+        elif (isinstance(od, str) and isinstance(nd, str)
+                and od.startswith("True") and nd.startswith("False")):
+            regressions.append(
+                f"REGRESSION {name}: acceptance pin flipped "
+                f"{od!r} -> {nd!r}")
         elif od != nd:
             changes.append(f"CHANGE     {name}: derived {od!r} -> {nd!r}")
     return regressions, changes

@@ -20,6 +20,10 @@ across PRs.
   cluster -> bench_cluster         (multi-GPU placement: stall/token +
                                     link utilization vs device count,
                                     replication sweep)
+  multimodel -> bench_multimodel   (fleet: two models over one shared
+                                    host/disk tier vs isolation — stall
+                                    no worse, host bytes strictly lower,
+                                    footprint-aware admission)
   roofline-> roofline              (dry-run derived terms, if present)
 
 ``derived`` is recorded in the JSON as a NUMBER whenever it parses as
@@ -77,7 +81,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cluster, bench_compression,
-                            bench_e2e_decode, bench_memory, bench_predictor,
+                            bench_e2e_decode, bench_memory,
+                            bench_multimodel, bench_predictor,
                             bench_prefetch, bench_sensitivity, bench_serving,
                             bench_sparse_kernel, bench_transfer, roofline)
 
@@ -92,6 +97,7 @@ def main() -> None:
         ("serving", bench_serving.run),
         ("memory", bench_memory.run),
         ("cluster", bench_cluster.run),
+        ("multimodel", bench_multimodel.run),
         ("roofline", roofline.run),
     ]
     rows: list = []

@@ -4,8 +4,10 @@ the paper's Fig. 6 scenario at laptop scale.
     PYTHONPATH=src python examples/serve_offloaded.py [--tokens 8]
 
 Trains briefly (so activations have real structure), calibrates thresholds,
-trains the inter-expert predictors from a routing trace, then decodes under
-naive / FloE(no prefetch) / FloE / resident serving modes.
+trains the inter-expert predictors from a routing trace, then decodes the
+SAME weights under four declarative deployments (``repro.deploy``):
+naive / FloE(no prefetch) / FloE / resident — each mode is one
+:class:`DeploymentSpec` differing only in its ``RuntimeSpec``.
 """
 import argparse
 
@@ -16,9 +18,9 @@ import numpy as np
 from repro.common.config import TrainConfig, reduced
 from repro.configs import get_config
 from repro.core import predictor, sparsify
-from repro.core.pipeline import (FloEPipeline, _unstack_layers,
-                                 paper_scaled_models)
+from repro.core.pipeline import _unstack_layers
 from repro.data import SyntheticLM, make_batches
+from repro.deploy import DeploymentSpec, ModelSpec, RuntimeSpec, build
 from repro.launch.train import train_loop
 from repro.models import blocks as blk
 from repro.models import nn
@@ -78,20 +80,19 @@ def main():
     print(f"calibrated thresholds + {sum(p is not None for p in inter)} "
           "inter-expert predictors")
 
-    device, link = paper_scaled_models(cfg)
+    model = ModelSpec(arch="mixtral-8x7b", layers=4, d_model=128)
     results = {}
     for mode, pf in (("naive", False), ("floe-noprefetch", False),
                      ("floe", True), ("resident", False)):
-        m = "floe" if mode.startswith("floe") else mode
-        pipe = FloEPipeline(params, cfg, thresholds=thr,
-                            inter_predictors=inter if pf else None,
-                            cache_slots=4, mode=m, prefetch=pf,
-                            device=device, link=link)
-        for i in range(args.tokens):
-            h = jax.random.normal(jax.random.PRNGKey(50 + i),
-                                  (1, cfg.d_model)) * 0.3
-            out, _ = pipe.decode_token(h)
-        results[mode] = pipe.tokens_per_second()
+        spec = DeploymentSpec(
+            name=mode, model=model,
+            runtime=RuntimeSpec(mode="floe" if mode.startswith("floe")
+                                else mode,
+                                prefetch=pf, use_runtime=False))
+        dep = build(spec, params=params, thresholds=thr,
+                    inter_predictors=inter if pf else None)
+        dep.generate(args.tokens, seed=50)
+        results[mode] = dep.report()["tokens_per_s"]
     base = results["naive"]
     print("\nmode              tok/s(modeled)  speedup-vs-naive")
     for mode, tps in results.items():

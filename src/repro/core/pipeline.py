@@ -111,7 +111,32 @@ class FloEPipeline:
                  store_plan=None,  # repro.store.StorePlan (tiered store)
                  store_dir=None,  # disk-tier shard dir (tmp dir if None)
                  store_freqs=None,  # (L, E) activation freqs (host warm)
-                 cluster_plan=None):  # repro.cluster.ClusterPlan (multi-GPU)
+                 cluster_plan=None,  # repro.cluster.ClusterPlan (multi-GPU)
+                 runtime_spec=None,  # repro.deploy.RuntimeSpec (overrides
+                 #                     the individual runtime kwargs above)
+                 engine=None,  # pre-built Transfer/ClusterEngine (a fleet
+                 #               shares one so models contend per link)
+                 layer_stores=None):  # (stores, host_tier) built externally
+        from repro.deploy.spec import RuntimeSpec, SpecError
+
+        # The runtime kwargs are a thin shim over the typed spec: they are
+        # normalized into ONE RuntimeSpec here and every knob below reads
+        # from it, so a spec-built pipeline (repro.deploy.build) and a
+        # kwargs-built one construct through the identical path — bitwise
+        # parity by construction (pinned by test).
+        if runtime_spec is None:
+            runtime_spec = RuntimeSpec(
+                mode=mode, use_runtime=use_runtime, prefetch=prefetch,
+                lookahead=lookahead, residency_policy=residency_policy,
+                num_buffers=num_buffers, cache_slots=cache_slots,
+                cancel_stale=cancel_stale, cross_token=cross_token,
+                batched_demand=batched_demand)
+        rs = self.runtime_spec = runtime_spec
+        mode, use_runtime, prefetch = rs.mode, rs.use_runtime, rs.prefetch
+        lookahead, residency_policy = rs.lookahead, rs.residency_policy
+        num_buffers, cancel_stale = rs.num_buffers, rs.cancel_stale
+        cache_slots = rs.cache_slots
+
         self.cfg = cfg
         self.mode = mode
         self.prefetch = prefetch and mode == "floe"
@@ -128,7 +153,6 @@ class FloEPipeline:
         self.embedding = params["embedding"]
         self.final_norm = params["final_norm"]
         self.lm_head = params.get("lm_head")
-        self.cfg = cfg
 
         # ----------------------------------- tiered store (VRAM planner) --
         # A StorePlan routes every expert through repro.store: per-expert
@@ -142,11 +166,18 @@ class FloEPipeline:
         # exactly like a single-device one (shared host/disk tiers).
         self.cluster_plan = cluster_plan
         if cluster_plan is not None:
-            assert use_runtime and mode == "floe", \
-                "cluster_plan requires use_runtime=True and mode='floe'"
+            if not (use_runtime and mode == "floe"):
+                raise SpecError(
+                    "runtime.use_runtime",
+                    "cluster_plan requires use_runtime=True and "
+                    f"mode='floe' (got use_runtime={use_runtime}, "
+                    f"mode={mode!r})")
             if cluster_plan.store_plan is not None:
-                assert store_plan is None, \
-                    "pass the cluster's store plan via the ClusterPlan"
+                if store_plan is not None:
+                    raise SpecError(
+                        "resources.vram_gb",
+                        "pass the cluster's store plan via the "
+                        "ClusterPlan, not store_plan=")
                 store_plan = cluster_plan.store_plan
 
         self.store_plan = store_plan
@@ -154,8 +185,12 @@ class FloEPipeline:
         self.device_pool = None
         self.device_pools: list = []
         if store_plan is not None:
-            assert use_runtime and mode == "floe", \
-                "store_plan requires use_runtime=True and mode='floe'"
+            if not (use_runtime and mode == "floe"):
+                raise SpecError(
+                    "runtime.use_runtime",
+                    "store_plan requires use_runtime=True and "
+                    f"mode='floe' (got use_runtime={use_runtime}, "
+                    f"mode={mode!r})")
             cache_slots = store_plan.slots_per_layer
             pinned_experts = tuple(store_plan.pinned)
 
@@ -164,15 +199,17 @@ class FloEPipeline:
         self.up_res: list = []
         self.caches: list = []
         if store_plan is not None:
-            import tempfile
-
             from repro.store import DevicePool, build_layer_stores
-            if store_dir is None:
-                store_dir = tempfile.mkdtemp(prefix="floe-store-")
-            self.stores, self.host_tier = build_layer_stores(
-                self.layers, thresholds, store_plan, store_dir,
-                link=self.link, quant_group=cfg.floe.quant_group,
-                freqs=store_freqs)
+            if layer_stores is not None:  # fleet-shared host/disk tiers
+                self.stores, self.host_tier = layer_stores
+            else:
+                import tempfile
+                if store_dir is None:
+                    store_dir = tempfile.mkdtemp(prefix="floe-store-")
+                self.stores, self.host_tier = build_layer_stores(
+                    self.layers, thresholds, store_plan, store_dir,
+                    link=self.link, quant_group=cfg.floe.quant_group,
+                    freqs=store_freqs)
             if cluster_plan is not None:  # one slab arena PER device
                 self.device_pools = [
                     DevicePool(store_plan.slab_bytes, max(n, 1))
@@ -180,10 +217,11 @@ class FloEPipeline:
             else:
                 self.device_pool = DevicePool(store_plan.slab_bytes,
                                               store_plan.num_slabs)
-            for li, layer in enumerate(self.layers):
+            for layer in self.layers:
                 self.up_res.append(None)  # per-expert up lives in the store
-                self.caches.append(ExpertCache(cache_slots)
-                                   if "moe" in layer else None)
+                # the ExpertCache is the SYNC path's residency; a tiered
+                # store mandates the runtime scheduler, so none is built
+                self.caches.append(None)
         else:
             for li, layer in enumerate(self.layers):
                 if "moe" not in layer:
@@ -208,11 +246,12 @@ class FloEPipeline:
 
         # ------------------------------------------- runtime scheduler ----
         self.sched: Optional[ExpertScheduler] = None
-        self.cross_token = cross_token
-        self.batched_demand = batched_demand
+        self.cross_token = rs.cross_token
+        self.batched_demand = rs.batched_demand
         if use_runtime and mode == "floe" and cluster_plan is not None:
             self._init_cluster(cache_slots, residency_policy, num_buffers,
-                               lookahead, cancel_stale, pinned_experts)
+                               lookahead, cancel_stale, pinned_experts,
+                               engine)
         elif use_runtime and mode == "floe":
             self.residency: list[Optional[ResidencyManager]] = []
             for li, layer in enumerate(self.layers):
@@ -225,7 +264,8 @@ class FloEPipeline:
                 self.residency.append(ResidencyManager(
                     cap, policy=residency_policy, pinned=pins,
                     pool=self.device_pool))
-            self.engine = TransferEngine(self.link, num_buffers=num_buffers)
+            self.engine = engine if engine is not None else \
+                TransferEngine(self.link, num_buffers=num_buffers)
             self.sched = ExpertScheduler(
                 self.stores, self.residency, self.engine,
                 lookahead=lookahead, cancel_stale=cancel_stale,
@@ -262,7 +302,7 @@ class FloEPipeline:
     # --------------------------------------------------- cluster wiring ---
     def _init_cluster(self, cache_slots: int, residency_policy: str,
                       num_buffers: int, lookahead: int, cancel_stale: bool,
-                      pinned_experts: tuple) -> None:
+                      pinned_experts: tuple, engine=None) -> None:
         """Per-device residency + links + the ClusterScheduler shim.
 
         Each device gets its own per-layer ResidencyManagers (capacity =
@@ -296,8 +336,17 @@ class FloEPipeline:
             self.cluster_residency.append(per_layer)
         self.residency = [r for dev in self.cluster_residency
                           for r in dev if r is not None]
-        self.engine = ClusterEngine(self.link, n_devices=plan.n_devices,
-                                    num_buffers=num_buffers)
+        if engine is not None:
+            if engine.n_devices != plan.n_devices:
+                from repro.deploy.spec import SpecError
+                raise SpecError(
+                    "resources.devices",
+                    f"shared engine has {engine.n_devices} device link(s) "
+                    f"but the plan needs {plan.n_devices}")
+            self.engine = engine
+        else:
+            self.engine = ClusterEngine(self.link, n_devices=plan.n_devices,
+                                        num_buffers=num_buffers)
         self.sched = ClusterScheduler(
             plan, self.stores, self.cluster_residency, self.engine,
             lookahead=lookahead, cancel_stale=cancel_stale,

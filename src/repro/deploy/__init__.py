@@ -1,0 +1,41 @@
+"""repro.deploy — declarative deployment specs resolved once into systems.
+
+    DeploymentSpec (spec.py)   typed ModelSpec/ResourceSpec/RuntimeSpec/
+                               ServingSpec composition; JSON round-trip;
+                               eager cross-field validation (SpecError)
+    build (builder.py)         ONE engine-build path: spec -> plans ->
+                               pipeline (+ controller) -> Deployment
+                               session (generate / serve / report)
+    build_fleet (fleet.py)     multi-model serving over shared tiers:
+                               one HostTier/DiskTier under every model,
+                               disjoint per-device arenas, footprint-
+                               aware admission (AdmissionError), idle-
+                               model pinned-set eviction
+
+The builder/fleet modules import the pipeline and controller, which in
+turn read ``repro.deploy.spec`` for their kwargs shims — so this package
+re-exports them lazily (PEP 562) to keep the import graph acyclic.
+"""
+from repro.deploy.spec import (DeploymentSpec, ModelSpec, ResourceSpec,
+                               RuntimeSpec, ServingSpec, SpecError)
+
+_LAZY = {
+    "build": "builder", "Deployment": "builder",
+    "calibrate_thresholds": "builder", "resolve_params": "builder",
+    "build_fleet": "fleet", "Fleet": "fleet", "FleetMember": "fleet",
+    "AdmissionError": "fleet",
+}
+
+__all__ = [
+    "DeploymentSpec", "ModelSpec", "ResourceSpec", "RuntimeSpec",
+    "ServingSpec", "SpecError", *sorted(_LAZY),
+]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.deploy.{mod}"), name)

@@ -1,0 +1,313 @@
+"""``build(spec)`` — the one engine-build path from spec to live system.
+
+Resolution order (each step consumes only the typed spec):
+
+  1. model    — config (+reduction), params (init / brief train / ckpt),
+                threshold calibration, activation frequencies
+  2. plans    — ``plan_store`` (single device) or ``plan_cluster``
+                (devices > 1 / replication); ``PlanError`` surfaces as a
+                ``SpecError`` naming ``resources.vram_gb``
+  3. system   — ``FloEPipeline`` (and a ``ServingController`` when the
+                spec carries a ``ServingSpec``), constructed through the
+                SAME kwargs shims the legacy call sites use, so a
+                spec-built system is bitwise-identical to a hand-wired
+                one (pinned by test)
+
+The result is a :class:`Deployment` session object: ``generate()`` for
+single-stream decode, ``serve()`` for the SLO control plane, and one
+``report()`` merging pipeline / store / cluster / controller telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.deploy.spec import DeploymentSpec, ModelSpec, SpecError
+
+
+# ------------------------------------------------------------- resolution --
+def resolve_params(m: ModelSpec, cfg) -> dict:
+    """Model parameters per the spec: checkpoint > brief train > init."""
+    import jax
+    import jax.numpy as jnp
+
+    if m.ckpt:
+        from repro.checkpoint import load_checkpoint
+        return load_checkpoint(m.ckpt)
+    if m.train_steps > 0:
+        from repro.common.config import TrainConfig
+        from repro.launch.train import train_loop
+        tc = TrainConfig(learning_rate=2e-3, total_steps=m.train_steps,
+                         warmup_steps=max(m.train_steps // 10, 1))
+        params, _, _ = train_loop(cfg, tc, batch=8, seq=64,
+                                  steps=m.train_steps, log_every=10 ** 9)
+        return params
+    from repro.models import transformer as tf
+    return tf.init_model(jax.random.PRNGKey(m.seed), cfg, jnp.float32)
+
+
+def calibrate_thresholds(layers: List[dict], cfg, *, samples: int = 128,
+                         seed: int = 9, scale: float = 0.5) -> np.ndarray:
+    """(L, E) sparsification thresholds from routing calibration states
+    (the loop every launcher used to inline)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import sparsify
+
+    xcal = jax.random.normal(jax.random.PRNGKey(seed),
+                             (samples, cfg.d_model)) * scale
+    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
+    for li, layer in enumerate(layers):
+        if "moe" not in layer:
+            continue
+        for e in range(cfg.num_experts):
+            u = xcal @ layer["moe"]["we_up"][e]
+            thr[li, e] = float(sparsify.threshold_from_samples(
+                jnp.abs(u), cfg.floe.sparsity))
+    return thr
+
+
+def plan_resources(spec: DeploymentSpec, cfg, layers: List[dict], *,
+                   freqs: Optional[np.ndarray] = None):
+    """(plan, freqs) for the spec's ResourceSpec: a ``ClusterPlan`` when
+    devices > 1 or replication is requested, a ``StorePlan`` for a
+    single-device VRAM budget, ``None`` for the flat in-host store."""
+    r = spec.resources
+    clustered = r.devices > 1 or r.replicate > 0
+    if not clustered and r.vram_gb <= 0:
+        return None, freqs
+    from repro.store import measure_frequencies
+    if freqs is None:
+        freqs = measure_frequencies(layers, cfg)
+    try:
+        if clustered:
+            from repro.cluster import plan_cluster, uniform_cluster_plan
+            if r.vram_gb > 0:
+                plan = plan_cluster(
+                    cfg, freqs, n_devices=r.devices,
+                    vram_gb_per_device=r.vram_gb, host_gb=r.host_gb,
+                    replicate=r.replicate, max_slots=r.max_slots,
+                    max_pinned_per_device=r.max_pinned, ladder=r.ladder,
+                    progressive=r.progressive)
+            else:
+                plan = uniform_cluster_plan(cfg, r.devices, freqs=freqs,
+                                            replicate=r.replicate)
+        else:
+            from repro.store import plan_store
+            plan = plan_store(cfg, freqs, vram_gb=r.vram_gb,
+                              host_gb=r.host_gb, max_slots=r.max_slots,
+                              max_pinned=r.max_pinned, ladder=r.ladder,
+                              progressive=r.progressive)
+    except Exception as e:
+        from repro.store import PlanError
+        if isinstance(e, PlanError):
+            raise SpecError("resources.vram_gb", str(e)) from e
+        raise
+    return plan, freqs
+
+
+def pipeline_opts(spec: DeploymentSpec, plan, freqs) -> dict:
+    """The FloEPipeline kwargs a spec resolves to (plan wiring + the
+    typed RuntimeSpec — nothing tunnels through untyped dicts)."""
+    opts: dict = dict(runtime_spec=spec.runtime)
+    if plan is None:
+        return opts
+    from repro.cluster import ClusterPlan
+    store_dir = spec.resources.store_dir or None
+    if isinstance(plan, ClusterPlan):
+        opts.update(cluster_plan=plan)
+        if plan.store_plan is not None:
+            opts.update(store_freqs=freqs, store_dir=store_dir)
+    else:
+        opts.update(store_plan=plan, store_freqs=freqs, store_dir=store_dir)
+    return opts
+
+
+# -------------------------------------------------------------- the build --
+def build(spec: DeploymentSpec, *,
+          params: Optional[dict] = None,
+          thresholds: Optional[np.ndarray] = None,
+          freqs: Optional[np.ndarray] = None,
+          device=None, link=None,
+          inter_predictors: Optional[list] = None,
+          paper_scale: bool = True,
+          engine=None, layer_stores=None, plan=None) -> "Deployment":
+    """Resolve a :class:`DeploymentSpec` into a live :class:`Deployment`.
+
+    ``params`` / ``thresholds`` / ``freqs`` injection lets callers that
+    already hold model state (parity tests, the fleet builder, trained
+    checkpoints in memory) skip re-resolution; everything else follows
+    the spec.  ``paper_scale=True`` uses the paper-ratio device/link
+    models (the launcher default) unless explicit models are passed.
+    """
+    from repro.core.pipeline import (FloEPipeline, _unstack_layers,
+                                     paper_scaled_models)
+
+    spec.validate()
+    cfg = spec.resolve_config()
+    if params is None:
+        params = resolve_params(spec.model, cfg)
+    layers = _unstack_layers(params, cfg)
+    if thresholds is None:
+        thresholds = calibrate_thresholds(layers, cfg)
+    if paper_scale and (device is None or link is None):
+        pdev, plink = paper_scaled_models(cfg)
+        device = device if device is not None else pdev
+        link = link if link is not None else plink
+    if plan is None:
+        plan, freqs = plan_resources(spec, cfg, layers, freqs=freqs)
+
+    opts = pipeline_opts(spec, plan, freqs)
+    if engine is not None:
+        opts.update(engine=engine)
+    if layer_stores is not None:
+        opts.update(layer_stores=layer_stores)
+    if inter_predictors is not None:
+        opts.update(inter_predictors=inter_predictors)
+
+    controller = None
+    if spec.serving is not None:
+        from repro.serving import ServingController
+        # the controller owns batching and cross-token speculation: its
+        # pipeline always runs the scheduler with union demands and
+        # pipeline-side cross-token OFF (exactly what the kwargs shim
+        # defaults to), regardless of the single-stream RuntimeSpec
+        opts["runtime_spec"] = dataclasses.replace(
+            spec.runtime, use_runtime=True, batched_demand=True,
+            cross_token=False)
+        controller = ServingController(
+            params, cfg, thresholds=thresholds,
+            serving_spec=spec.serving,
+            offload_opts=dict(device=device, link=link, **opts))
+        pipeline = controller.pipe
+    else:
+        pipeline = FloEPipeline(params, cfg, thresholds=thresholds,
+                                device=device, link=link, **opts)
+    return Deployment(spec=spec, cfg=cfg, params=params,
+                      thresholds=thresholds, freqs=freqs, plan=plan,
+                      pipeline=pipeline, controller=controller)
+
+
+# -------------------------------------------------------------- the session -
+@dataclasses.dataclass
+class Deployment:
+    """A resolved deployment: one model wired through its plans."""
+
+    spec: DeploymentSpec
+    cfg: object
+    params: dict
+    thresholds: np.ndarray
+    freqs: Optional[np.ndarray]
+    plan: object  # StorePlan | ClusterPlan | None
+    pipeline: object  # FloEPipeline
+    controller: object = None  # ServingController | None
+
+    @property
+    def name(self) -> str:
+        return self.spec.label
+
+    # ------------------------------------------------------------ decode --
+    def h_stream(self, tokens: int, batch: int = 1, seed: int = 100,
+                 alpha: Optional[float] = None) -> list:
+        """A deterministic hidden-state stream for offloaded decode:
+        independent draws (the launcher's historical inputs) or an
+        AR(1) stream when ``alpha`` is given (temporally-correlated
+        routing, the benches' regime)."""
+        import jax
+        import jax.numpy as jnp
+        if alpha is None:
+            return [jax.random.normal(jax.random.PRNGKey(seed + i),
+                                      (batch, self.cfg.d_model),
+                                      jnp.float32) * 0.3
+                    for i in range(tokens)]
+        key = jax.random.PRNGKey(seed)
+        h = jax.random.normal(key, (batch, self.cfg.d_model), jnp.float32)
+        out = [h]
+        for _ in range(tokens - 1):
+            key, sub = jax.random.split(key)
+            n = jax.random.normal(sub, (batch, self.cfg.d_model),
+                                  jnp.float32)
+            h = alpha * h + (1.0 - alpha ** 2) ** 0.5 * n
+            out.append(h)
+        return out
+
+    def generate(self, tokens: int = 8, *, batch: int = 1, seed: int = 100,
+                 h_stream: Optional[list] = None) -> list:
+        """Decode ``tokens`` steps through the pipeline; returns the
+        per-step metrics (also appended to ``pipeline.metrics``)."""
+        if h_stream is None:
+            h_stream = self.h_stream(tokens, batch, seed)
+        out = []
+        for h in h_stream:
+            _, m = self.pipeline.decode_token(h)
+            out.append(m)
+        return out
+
+    # ----------------------------------------------------------- serving --
+    def serve(self, requests: Optional[list] = None, *,
+              n_requests: int = 4, rate: float = 2.0, max_new: int = 16,
+              prompt_len: int = 8, seed: int = 0) -> list:
+        """Run the SLO control plane: explicit ``SLORequest``s, or a
+        Poisson arrival stream synthesized from the spec's defaults."""
+        if self.controller is None:
+            raise SpecError("serving",
+                            f"deployment {self.name!r} has no ServingSpec")
+        from repro.serving import SLORequest
+        if requests is None:
+            rng = np.random.default_rng(seed)
+            slo_ms = self.spec.serving.slo_ms
+            t, requests = 0.0, []
+            for i in range(n_requests):
+                t += float(rng.exponential(1.0 / max(rate, 1e-6)))
+                requests.append(SLORequest(
+                    i, rng.integers(0, self.cfg.vocab_size,
+                                    prompt_len).astype(np.int32),
+                    max_new_tokens=max_new, slo_ms=slo_ms, arrival_t=t))
+        for r in requests:
+            self.controller.submit(r)
+        return self.controller.run()
+
+    # --------------------------------------------------------- telemetry --
+    def report(self) -> dict:
+        """One merged report: decode throughput + store / cluster /
+        controller telemetry, whichever subsystems this spec lit up."""
+        pipe = self.pipeline
+        rep: dict = {
+            "name": self.name,
+            "mode": self.spec.runtime.mode,
+            "tokens_per_s": pipe.tokens_per_second(),
+            "decode_steps": len(pipe.metrics),
+            "stall_s": sum(m.stall_s for m in pipe.metrics),
+            "coverage": (float(np.mean([m.coverage for m in pipe.metrics]))
+                         if pipe.metrics else 1.0),
+        }
+        if self.plan is not None:
+            rep["plan"] = self.plan.summary()
+        if pipe.sched is not None:
+            s = pipe.sched.stats
+            rep.update(demand_fetches=s.demand_fetches,
+                       demand_topups=s.demand_topups,
+                       draft_fetches=s.draft_fetches,
+                       refines_applied=s.refines_applied,
+                       prefetch_recall=pipe.sched.prefetch_recall())
+        if pipe.host_tier is not None:
+            rep.update(host_hit_rate=pipe.host_tier.stats.hit_rate,
+                       host_bytes=pipe.host_tier.bytes_in_use,
+                       disk_reads=pipe.host_tier.disk.stats.reads
+                       if pipe.host_tier.disk is not None else 0)
+        pools = pipe.device_pools or (
+            [pipe.device_pool] if pipe.device_pool is not None else [])
+        if pools:
+            rep["pool_free_slabs"] = [p.free_slabs for p in pools]
+        if pipe.cluster_plan is not None:
+            rep.update(
+                devices=pipe.cluster_plan.n_devices,
+                agg_link_utilization=pipe.engine.aggregate_utilization(
+                    pipe.sched.clock),
+                replica_routed=pipe.sched.selector.replica_choices)
+        if self.controller is not None:
+            rep["serving"] = self.controller.report()
+        return rep

@@ -1,0 +1,335 @@
+"""Multi-model serving over shared tiers (the ROADMAP open item).
+
+``build_fleet([specs])`` resolves several :class:`DeploymentSpec`s over
+ONE memory hierarchy:
+
+  * **one shared HostTier / DiskTier** — every model's expert records
+    live in the same sharded checkpoint and the same byte-budget LRU
+    host cache, scoped by per-model key prefixes; host warming ranks
+    ALL models' experts in one global temperature order.
+  * **disjoint per-device arenas** — each admitted model carves its own
+    ``DevicePool`` slab arenas (one per device) out of the device
+    budget; arenas never overlap, so one model's residency churn cannot
+    fragment another's.
+  * **footprint-aware admission** — a model is admitted iff its plan's
+    per-device footprints (non-expert weights + resident ups + arena)
+    AND its host share fit what previous admissions left; a model whose
+    plan cannot fit raises a typed :class:`AdmissionError` naming it.
+  * **one link per device, arbitrated** — all models share one
+    ``ClusterEngine`` (per-device ``TransferEngine`` timelines), so
+    their traffic genuinely contends per link and each model's
+    ``LinkSelector`` routes replicas around the OTHER models' transfers
+    too.  Model clocks run lockstep (synced around every operation).
+  * **idle-model pinned-set eviction** — ``suspend(name)`` drops an
+    idle model's pinned staged slices (its strongest VRAM claim) and
+    credits the freed arena bytes back to the ledger; ``resume(name)``
+    re-admits and re-stages them, failing with ``AdmissionError`` when
+    the headroom has since been spent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from typing import Dict, List, Optional, Sequence
+
+from repro.deploy.spec import DeploymentSpec, SpecError
+
+
+class AdmissionError(SpecError):
+    """A model's plan does not fit the fleet's remaining footprint."""
+
+
+@dataclasses.dataclass
+class FleetMember:
+    """One admitted model: its deployment plus the fleet's ledger view."""
+
+    name: str
+    spec: DeploymentSpec
+    deployment: object  # repro.deploy.Deployment
+    plan: object  # ClusterPlan
+    device_bytes: List[int]  # per-device footprint committed at admission
+    host_share: int  # host bytes promised at admission
+    pinned_bytes: List[int] = dataclasses.field(default_factory=list)
+    active: bool = True
+
+
+def _member_host_share(plan, cfg, spec: DeploymentSpec) -> int:
+    """The host bytes a member's admission promises: its full record
+    set, capped at its own requested host budget."""
+    from repro.store import formats as F
+    total = sum(
+        F.host_bytes(F.get_format(name), cfg.d_model, cfg.moe_d_ff)
+        for name in plan.store_plan.formats.values())
+    return min(total, int(spec.resources.host_gb * 2 ** 30))
+
+
+class Fleet:
+    """Several deployments over one shared memory hierarchy."""
+
+    def __init__(self, *, n_devices: int, vram_gb_per_device: float,
+                 host, store_dir: str, engine, link):
+        self.n_devices = n_devices
+        self.capacity_per_device = int(vram_gb_per_device * 2 ** 30)
+        self.host = host  # shared HostTier (disk attached)
+        self.store_dir = store_dir
+        self.engine = engine  # shared ClusterEngine
+        self.link = link
+        self.committed: List[int] = [0] * n_devices
+        self.committed_host = 0
+        self.admitted: List[str] = []  # admission order (ledger holders)
+        self.members: Dict[str, FleetMember] = {}
+
+    # ----------------------------------------------------------- ledger ---
+    def headroom_bytes(self, d: int) -> int:
+        return self.capacity_per_device - self.committed[d]
+
+    def host_headroom_bytes(self) -> int:
+        return self.host.capacity_bytes - self.committed_host
+
+    def admit(self, name: str, plan, cfg, spec: DeploymentSpec) -> int:
+        """Commit a model's footprint to the ledger, or raise a typed
+        :class:`AdmissionError` naming the model and the tight device."""
+        host_share = _member_host_share(plan, cfg, spec)
+        for d in range(self.n_devices):
+            need = plan.footprint_bytes(d)
+            if need > self.headroom_bytes(d):
+                raise AdmissionError(
+                    f"fleet.{name}",
+                    f"device {d} footprint {need / 2 ** 30:.4f}GiB exceeds "
+                    f"remaining {self.headroom_bytes(d) / 2 ** 30:.4f}GiB "
+                    f"of {self.capacity_per_device / 2 ** 30:.4f}GiB "
+                    f"(committed by: {self.admitted})")
+        if host_share > self.host_headroom_bytes():
+            raise AdmissionError(
+                f"fleet.{name}",
+                f"host share {host_share / 2 ** 30:.4f}GiB exceeds "
+                f"remaining "
+                f"{self.host_headroom_bytes() / 2 ** 30:.4f}GiB of the "
+                f"shared host tier")
+        for d in range(self.n_devices):
+            self.committed[d] += plan.footprint_bytes(d)
+        self.committed_host += host_share
+        self.admitted.append(name)
+        return host_share
+
+    # ------------------------------------------------------------ clocks --
+    def _sync_clocks(self) -> None:
+        """Bring every member's per-device schedulers forward to the
+        fleet-wide max clock — in-flight transfers of models that were
+        not decoding keep completing on the shared link timelines."""
+        scheds = [m.deployment.pipeline.sched for m in self.members.values()]
+        if not scheds:
+            return
+        t = max(s.clock for s in scheds)
+        for s in scheds:
+            if s.clock < t:
+                s.advance(t - s.clock)
+
+    # -------------------------------------------------------- operations --
+    def __getitem__(self, name: str) -> FleetMember:
+        return self.members[name]
+
+    def generate(self, name: str, tokens: int = 4, *, batch: int = 1,
+                 seed: int = 100, h_stream: Optional[list] = None) -> list:
+        m = self.members[name]
+        if not m.active:
+            raise SpecError(f"fleet.{name}",
+                            "model is suspended; resume() it first")
+        self._sync_clocks()
+        out = m.deployment.generate(tokens, batch=batch, seed=seed,
+                                    h_stream=h_stream)
+        self._sync_clocks()
+        return out
+
+    def serve(self, name: str, requests: Optional[list] = None, **kw):
+        m = self.members[name]
+        if not m.active:
+            raise SpecError(f"fleet.{name}",
+                            "model is suspended; resume() it first")
+        self._sync_clocks()
+        out = m.deployment.serve(requests, **kw)
+        self._sync_clocks()
+        return out
+
+    # ------------------------------------------- idle pinned-set eviction --
+    def suspend(self, name: str) -> int:
+        """Evict an idle model's pinned staged slices and credit the
+        freed arena bytes back to the ledger.  Returns bytes freed."""
+        m = self.members[name]
+        if not m.active:
+            return 0
+        pipe = m.deployment.pipeline
+        m.pinned_bytes = []
+        for d in range(self.n_devices):
+            pool = pipe.device_pools[d]
+            before = pool.free_slabs
+            for (li, e) in m.plan.pinned_per_device[d]:
+                pipe.cluster_residency[d][li].drop((li, e))
+            freed = (pool.free_slabs - before) * pool.slab_bytes
+            m.pinned_bytes.append(freed)
+            self.committed[d] -= freed
+        m.active = False
+        return sum(m.pinned_bytes)
+
+    def resume(self, name: str) -> None:
+        """Re-admit a suspended model's pinned set (AdmissionError when
+        the headroom has since been spent) and re-stage it at the
+        current clock."""
+        m = self.members[name]
+        if m.active:
+            return
+        for d in range(self.n_devices):
+            if m.pinned_bytes[d] > self.headroom_bytes(d):
+                raise AdmissionError(
+                    f"fleet.{name}",
+                    f"cannot resume: pinned set needs "
+                    f"{m.pinned_bytes[d] / 2 ** 30:.4f}GiB on device {d}, "
+                    f"only {self.headroom_bytes(d) / 2 ** 30:.4f}GiB left")
+        for d in range(self.n_devices):
+            self.committed[d] += m.pinned_bytes[d]
+        m.deployment.pipeline._stage_pinned_cluster()
+        m.pinned_bytes = []
+        m.active = True
+
+    # --------------------------------------------------------- telemetry --
+    def report(self) -> dict:
+        eng = self.engine.summary()
+        return {
+            "models": {n: dict(m.deployment.report(), active=m.active,
+                               host_share_bytes=m.host_share,
+                               host_resident_bytes=self.host.bytes_for_prefix(
+                                   f"{n}/"))
+                       for n, m in self.members.items()},
+            "devices": self.n_devices,
+            "committed_bytes_per_device": list(self.committed),
+            "capacity_bytes_per_device": self.capacity_per_device,
+            "host_bytes_in_use": self.host.bytes_in_use,
+            "host_capacity_bytes": self.host.capacity_bytes,
+            "host_hit_rate": self.host.stats.hit_rate,
+            "disk_reads": (self.host.disk.stats.reads
+                           if self.host.disk is not None else 0),
+            "link_busy_s_per_device": eng["busy_s_per_device"],
+        }
+
+
+def build_fleet(specs: Sequence[DeploymentSpec], *,
+                vram_gb_per_device: float,
+                host_gb: float,
+                store_dir: Optional[str] = None,
+                device=None, link=None,
+                params: Optional[Sequence[dict]] = None,
+                thresholds: Optional[Sequence] = None,
+                freqs: Optional[Sequence] = None) -> Fleet:
+    """Resolve several specs into one :class:`Fleet` over shared tiers.
+
+    Every member needs a tiered store (``resources.vram_gb > 0``) and
+    the same ``resources.devices``; admission runs in list order, so the
+    first model that cannot fit raises :class:`AdmissionError` before
+    any heavy build work happens for it.
+    """
+    from repro.cluster import ClusterEngine, plan_cluster
+    from repro.checkpoint.io import ShardWriter
+    from repro.core.pipeline import _unstack_layers, paper_scaled_models
+    from repro.deploy.builder import (build, calibrate_thresholds,
+                                      resolve_params)
+    from repro.store import DiskTier, HostTier, build_layer_stores
+    from repro.store.planner import measure_frequencies
+    from repro.store.tiered import warm_host_tier
+
+    if not specs:
+        raise SpecError("fleet", "need at least one DeploymentSpec")
+    n_devices = specs[0].resources.devices
+    names: List[str] = []
+    for i, spec in enumerate(specs):
+        if spec.resources.vram_gb <= 0:
+            raise SpecError(f"fleet.{spec.label}.resources.vram_gb",
+                            "fleet members need a tiered store "
+                            "(vram_gb > 0)")
+        if spec.resources.devices != n_devices:
+            raise SpecError(f"fleet.{spec.label}.resources.devices",
+                            f"all members must agree on devices; got "
+                            f"{spec.resources.devices} vs {n_devices}")
+        name = spec.label
+        if name in names:
+            raise SpecError(f"fleet.{name}.name",
+                            "duplicate model label; set distinct "
+                            "spec.name / model.name values")
+        names.append(name)
+
+    if store_dir is None:
+        store_dir = tempfile.mkdtemp(prefix="floe-fleet-")
+    if link is None:
+        _, link = paper_scaled_models(specs[0].resolve_config())
+    num_buffers = max(s.runtime.num_buffers for s in specs)
+    host = HostTier(int(host_gb * 2 ** 30))
+    engine = ClusterEngine(link, n_devices=n_devices,
+                           num_buffers=num_buffers)
+    fleet = Fleet(n_devices=n_devices,
+                  vram_gb_per_device=vram_gb_per_device, host=host,
+                  store_dir=store_dir, engine=engine, link=link)
+
+    # ---- resolve + plan + ADMIT everything before heavy store builds -----
+    resolved = []
+    for i, spec in enumerate(specs):
+        cfg = spec.resolve_config()
+        p = params[i] if params is not None else resolve_params(spec.model,
+                                                                cfg)
+        layers = _unstack_layers(p, cfg)
+        thr = (thresholds[i] if thresholds is not None
+               else calibrate_thresholds(layers, cfg))
+        fq = (freqs[i] if freqs is not None
+              else measure_frequencies(layers, cfg))
+        r = spec.resources
+        try:
+            plan = plan_cluster(
+                cfg, fq, n_devices=n_devices,
+                vram_gb_per_device=r.vram_gb, host_gb=r.host_gb,
+                replicate=r.replicate, max_slots=r.max_slots,
+                max_pinned_per_device=r.max_pinned, ladder=r.ladder,
+                progressive=r.progressive)
+        except Exception as e:
+            from repro.store import PlanError
+            if isinstance(e, PlanError):
+                raise SpecError(f"fleet.{names[i]}.resources.vram_gb",
+                                str(e)) from e
+            raise
+        host_share = fleet.admit(names[i], plan, cfg, spec)
+        resolved.append((names[i], spec, cfg, p, layers, thr, fq, plan,
+                         host_share))
+
+    # ---- one shared shard + host tier under every admitted model ---------
+    writer = ShardWriter(store_dir)
+    built_stores = []
+    for (name, spec, cfg, p, layers, thr, fq, plan, _) in resolved:
+        stores, _ = build_layer_stores(
+            layers, thr, plan.store_plan, store_dir, link=link,
+            quant_group=cfg.floe.quant_group, host=host, writer=writer,
+            key_prefix=f"{name}/")
+        built_stores.append(stores)
+    writer.close()
+    host.disk = DiskTier(store_dir)
+
+    # global hottest-first warming across ALL models' experts
+    entries = []
+    for (name, spec, cfg, p, layers, thr, fq, plan, _), stores in zip(
+            resolved, built_stores):
+        for li, store in enumerate(stores):
+            if store is None:
+                continue
+            for e in range(store.num_experts):
+                entries.append((float(fq[li, e]), store, e))
+    warm_host_tier(host, entries)
+
+    # ---- wire each member's pipeline over the shared substrate -----------
+    for (name, spec, cfg, p, layers, thr, fq, plan, host_share), stores \
+            in zip(resolved, built_stores):
+        dep = build(spec, params=p, thresholds=thr, freqs=fq,
+                    device=device, link=link, engine=engine,
+                    layer_stores=(stores, host), plan=plan)
+        fleet.members[name] = FleetMember(
+            name=name, spec=spec, deployment=dep, plan=plan,
+            device_bytes=[plan.footprint_bytes(d)
+                          for d in range(n_devices)],
+            host_share=host_share)
+    fleet._sync_clocks()
+    return fleet

@@ -1,0 +1,338 @@
+"""Declarative deployment spec — construction resolved once, not per call.
+
+Four PRs of subsystem growth scattered construction across ~20
+``FloEPipeline.__init__`` kwargs, the controller's untyped
+``offload_opts`` tunnel, and a dozen ``launch/serve.py`` flags.  This
+module is the single typed description of a deployment:
+
+    ModelSpec     — which model, how its params come to exist
+    ResourceSpec  — vram / host / devices / replication (what the
+                    planner spends)
+    RuntimeSpec   — scheduler & decode knobs (what the runtime obeys)
+    ServingSpec   — control-plane knobs (slots / SLO / policy /
+                    predictor training)
+
+composing into a :class:`DeploymentSpec` with JSON round-trip
+(``spec == DeploymentSpec.from_json(spec.to_json())``) and EAGER
+cross-field validation: every invalid combination raises a typed
+:class:`SpecError` naming the offending field at construction time,
+replacing the deep-in-constructor asserts a bad kwarg used to hit only
+after minutes of setup.
+
+``repro.deploy.build(spec)`` resolves a spec into a live
+:class:`~repro.deploy.builder.Deployment`;
+``repro.deploy.build_fleet([specs])`` resolves several over one shared
+host/disk tier.  The old kwargs constructors keep working as thin shims
+that build these specs internally, so spec-built and kwargs-built
+deployments are bitwise-identical (pinned by test).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+
+class SpecError(ValueError):
+    """A deployment spec field (or combination) is invalid.
+
+    ``field`` is the dotted path of the offending field, e.g.
+    ``"resources.vram_gb"`` — every raise names exactly one field so the
+    error is actionable without reading the validator.
+    """
+
+    def __init__(self, field: str, message: str):
+        self.field = field
+        super().__init__(f"{field}: {message}")
+
+
+# ------------------------------------------------------------------ model --
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Which model, and how its parameters come to exist."""
+
+    arch: str = "mixtral-8x7b"
+    reduced: bool = True  # smoke-scale variant (layers/d_model below)
+    layers: int = 4
+    d_model: int = 128
+    max_experts: int = 4
+    vocab: int = 512
+    seed: int = 0  # init_model PRNG seed
+    train_steps: int = 0  # >0: briefly pre-train so routing has structure
+    ckpt: str = ""  # load params from a checkpoint instead of init
+    name: str = ""  # fleet label; defaults to arch
+
+
+# -------------------------------------------------------------- resources --
+@dataclasses.dataclass(frozen=True)
+class ResourceSpec:
+    """What the planner may spend: memory budgets and device topology."""
+
+    vram_gb: float = 0.0  # 0 disables the tiered store (flat host store)
+    host_gb: float = 4.0  # host (pinned DRAM) tier budget
+    devices: int = 1  # >1 simulates a multi-GPU cluster
+    replicate: int = 0  # hottest experts/layer homed on EVERY device
+    store_dir: str = ""  # disk-tier shard dir ("" = tmp dir)
+    progressive: bool = True  # INT8-draft demand fetches + refine
+    ladder: Optional[Tuple[str, ...]] = None  # format ladder restriction
+    max_slots: Optional[int] = None
+    max_pinned: Optional[int] = None  # per device when devices > 1
+
+
+# ---------------------------------------------------------------- runtime --
+@dataclasses.dataclass(frozen=True)
+class RuntimeSpec:
+    """Scheduler / decode knobs (``FloEPipeline``'s former kwargs)."""
+
+    mode: str = "floe"  # "floe" | "naive" | "resident"
+    use_runtime: bool = True  # event-loop scheduler vs synchronous path
+    prefetch: bool = True
+    lookahead: int = 2
+    residency_policy: str = "lru"  # "lru" | "lfu" | "weighted"
+    num_buffers: int = 2
+    cache_slots: int = 4  # residency slots (planner overrides when tiered)
+    cancel_stale: bool = True
+    cross_token: bool = True
+    batched_demand: bool = False
+
+
+# ---------------------------------------------------------------- serving --
+@dataclasses.dataclass(frozen=True)
+class ServingSpec:
+    """Control-plane knobs (``ServingController``'s former kwargs)."""
+
+    slots: int = 4  # concurrent batch slots
+    max_len: int = 256
+    policy: str = "slo"  # "slo" | "static"
+    slo_ms: float = 1000.0  # default per-request SLO for front-ends
+    eos_id: int = -1
+    seed: int = 0
+    online_train: bool = True
+    train_every_tokens: int = 16
+    train_window: int = 256
+    train_steps: int = 60
+    predictor_hidden: int = 0
+    min_train_rows: int = 64
+    max_preemptions: int = 2
+    cross_token: bool = True  # controller-side cross-token speculation
+
+
+# ------------------------------------------------------------- deployment --
+_MODES = ("floe", "naive", "resident")
+_POLICIES = ("slo", "static")
+_RESIDENCY = ("lru", "lfu", "weighted")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """One deployable model: model + resources + runtime (+ serving).
+
+    Validation is EAGER: constructing an invalid spec raises
+    :class:`SpecError` immediately (``from_json`` goes through the same
+    constructor, so a bad JSON file fails at load time, not mid-build).
+    """
+
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    resources: ResourceSpec = dataclasses.field(default_factory=ResourceSpec)
+    runtime: RuntimeSpec = dataclasses.field(default_factory=RuntimeSpec)
+    serving: Optional[ServingSpec] = None
+    name: str = ""
+
+    def __post_init__(self):
+        self.validate()
+
+    # ------------------------------------------------------------ labels --
+    @property
+    def label(self) -> str:
+        return self.name or self.model.name or self.model.arch
+
+    # -------------------------------------------------------- validation --
+    def resolve_config(self):
+        """The :class:`~repro.common.config.ModelConfig` this spec names
+        (reduced when requested) — also the cross-field validation
+        anchor: expert counts and the VRAM feasibility floor are
+        properties of the resolved config, not of any one field."""
+        from repro.common.config import reduced as reduce_cfg
+        from repro.configs import get_config
+        try:
+            cfg = get_config(self.model.arch)
+        except (ImportError, ModuleNotFoundError, KeyError) as e:
+            raise SpecError("model.arch",
+                            f"unknown architecture {self.model.arch!r} "
+                            f"({e})") from e
+        if self.model.reduced:
+            cfg = reduce_cfg(cfg, layers=self.model.layers,
+                             d_model=self.model.d_model,
+                             max_experts=self.model.max_experts,
+                             vocab=self.model.vocab)
+        return cfg
+
+    def validate(self) -> None:
+        m, r, rt, sv = self.model, self.resources, self.runtime, self.serving
+        # ---- per-field floors ------------------------------------------
+        if m.reduced and m.layers < 1:
+            raise SpecError("model.layers", f"need >= 1, got {m.layers}")
+        if m.reduced and m.d_model < 8:
+            raise SpecError("model.d_model", f"need >= 8, got {m.d_model}")
+        if m.max_experts < 0:
+            raise SpecError("model.max_experts",
+                            f"need >= 0, got {m.max_experts}")
+        if m.train_steps < 0:
+            raise SpecError("model.train_steps",
+                            f"need >= 0, got {m.train_steps}")
+        if rt.mode not in _MODES:
+            raise SpecError("runtime.mode",
+                            f"unknown mode {rt.mode!r}; choose from {_MODES}")
+        if rt.residency_policy not in _RESIDENCY:
+            raise SpecError("runtime.residency_policy",
+                            f"unknown policy {rt.residency_policy!r}; "
+                            f"choose from {_RESIDENCY}")
+        if rt.lookahead < 1:
+            raise SpecError("runtime.lookahead",
+                            f"need >= 1, got {rt.lookahead}")
+        if rt.num_buffers < 1:
+            raise SpecError("runtime.num_buffers",
+                            f"need >= 1, got {rt.num_buffers}")
+        if rt.cache_slots < 1:
+            raise SpecError("runtime.cache_slots",
+                            f"need >= 1, got {rt.cache_slots}")
+        if r.devices < 1:
+            raise SpecError("resources.devices",
+                            f"need >= 1 device, got {r.devices}")
+        if r.replicate < 0:
+            raise SpecError("resources.replicate",
+                            f"need >= 0, got {r.replicate}")
+        if r.vram_gb < 0:
+            raise SpecError("resources.vram_gb",
+                            f"need >= 0, got {r.vram_gb}")
+        if sv is not None:
+            if sv.policy not in _POLICIES:
+                raise SpecError("serving.policy",
+                                f"unknown policy {sv.policy!r}; choose "
+                                f"from {_POLICIES}")
+            if sv.slots < 1:
+                raise SpecError("serving.slots",
+                                f"need >= 1 batch slot, got {sv.slots}")
+            if sv.slo_ms <= 0:
+                raise SpecError("serving.slo_ms",
+                                f"need > 0, got {sv.slo_ms}")
+            if sv.max_len < 1:
+                raise SpecError("serving.max_len",
+                                f"need >= 1, got {sv.max_len}")
+            if sv.max_preemptions < 0:
+                raise SpecError("serving.max_preemptions",
+                                f"need >= 0, got {sv.max_preemptions}")
+
+        # ---- cross-field ----------------------------------------------
+        offloaded = rt.mode == "floe" and rt.use_runtime
+        if r.vram_gb > 0 and not offloaded:
+            raise SpecError(
+                "resources.vram_gb",
+                "a tiered store needs runtime.mode='floe' and "
+                "runtime.use_runtime=True")
+        if r.vram_gb > 0 and r.host_gb <= 0:
+            raise SpecError("resources.host_gb",
+                            "the tiered store needs a positive host "
+                            f"budget, got {r.host_gb}")
+        if (r.devices > 1 or r.replicate > 0) and not offloaded:
+            raise SpecError(
+                "resources.devices",
+                "a cluster needs runtime.mode='floe' and "
+                "runtime.use_runtime=True")
+        if sv is not None and not rt.use_runtime:
+            raise SpecError("runtime.use_runtime",
+                            "the serving controller requires the runtime "
+                            "scheduler (use_runtime=True)")
+
+        # ---- config-anchored (expert counts, feasibility floor) --------
+        cfg = self.resolve_config()
+        if cfg.num_experts and r.replicate >= cfg.num_experts:
+            raise SpecError(
+                "resources.replicate",
+                f"replicate={r.replicate} must be < num_experts="
+                f"{cfg.num_experts} (replicating every expert leaves "
+                f"nothing to place)")
+        if sv is not None and not cfg.num_experts:
+            raise SpecError("serving.policy",
+                            "the serving controller needs an MoE model; "
+                            f"{self.model.arch!r} has no experts")
+        if r.vram_gb > 0:
+            if not cfg.num_experts:
+                raise SpecError("resources.vram_gb",
+                                "a tiered store needs an MoE model; "
+                                f"{self.model.arch!r} has no experts")
+            from repro.store import floor_bytes
+            from repro.store.formats import FORMATS
+            if r.ladder is not None:
+                for fmt in r.ladder:
+                    if fmt not in FORMATS:
+                        raise SpecError(
+                            "resources.ladder",
+                            f"unknown format {fmt!r}; choose from "
+                            f"{tuple(FORMATS)}")
+            floor = floor_bytes(cfg, r.ladder)
+            if int(r.vram_gb * 2 ** 30) < floor:
+                raise SpecError(
+                    "resources.vram_gb",
+                    f"{r.vram_gb:.6f}GiB is below the feasibility floor "
+                    f"{floor / 2 ** 30:.6f}GiB for {cfg.name} (leanest "
+                    f"format + 1-slot arena)")
+
+    # ---------------------------------------------------- JSON round-trip --
+    def to_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "model": dataclasses.asdict(self.model),
+            "resources": dataclasses.asdict(self.resources),
+            "runtime": dataclasses.asdict(self.runtime),
+        }
+        if self.resources.ladder is not None:  # tuples are not JSON-native
+            d["resources"]["ladder"] = list(self.resources.ladder)
+        if self.serving is not None:
+            d["serving"] = dataclasses.asdict(self.serving)
+        return d
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeploymentSpec":
+        known_sections = ("name", "model", "resources", "runtime",
+                          "serving")
+        bad_sections = sorted(set(d) - set(known_sections))
+        if bad_sections:  # a typo'd section must not load as all-defaults
+            raise SpecError(bad_sections[0],
+                            f"unknown section(s) {bad_sections}; expected "
+                            f"{known_sections}")
+
+        def sub(klass, key):
+            payload = dict(d.get(key) or {})
+            known = {f.name for f in dataclasses.fields(klass)}
+            bad = sorted(set(payload) - known)
+            if bad:
+                raise SpecError(f"{key}.{bad[0]}",
+                                f"unknown field(s) {bad} for {klass.__name__}")
+            return klass(**payload)
+
+        res = sub(ResourceSpec, "resources")
+        if res.ladder is not None:
+            res = dataclasses.replace(res, ladder=tuple(res.ladder))
+        return cls(
+            model=sub(ModelSpec, "model"),
+            resources=res,
+            runtime=sub(RuntimeSpec, "runtime"),
+            # an explicit "serving": null means NO serving plane
+            serving=(sub(ServingSpec, "serving")
+                     if d.get("serving") is not None else None),
+            name=d.get("name", ""),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "DeploymentSpec":
+        try:
+            d = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise SpecError("<json>", f"not valid JSON: {e}") from e
+        if not isinstance(d, dict):
+            raise SpecError("<json>", "spec JSON must be an object")
+        return cls.from_dict(d)

@@ -1,7 +1,18 @@
-"""Serving launcher: batched resident serving or FloE-offloaded decode.
+"""Serving launcher — a thin front-end over ``repro.deploy``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --reduced --mode floe --requests 8 --max_new 16
+
+Flags are parsed into ONE typed :class:`repro.deploy.DeploymentSpec`
+(eagerly validated — a bad combination fails here, not mid-build), or
+the whole spec is loaded from a file:
+
+    python -m repro.launch.serve --spec examples/deploy_mixtral_11gb.json
+    python -m repro.launch.serve --mode floe --vram-gb 0.0012 --dump-spec
+
+``repro.deploy.build(spec)`` then resolves params, thresholds, plans
+(``plan_store`` / ``plan_cluster``), pipeline, and — for floe-serve —
+the SLO controller; this file only prints the resulting telemetry.
 
 Modes:
   resident   — all weights on device, batched engine (repro.serving)
@@ -9,38 +20,113 @@ Modes:
   floe       — the paper's pipeline: hybrid compression + dual predictors +
                prefetch (repro.core.pipeline)
   floe-serve — SLO-aware continuous-batching controller over the runtime
-               scheduler (repro.serving.controller): Poisson arrivals with
-               per-request SLOs, online-trained inter-predictor, per-request
-               TTFT/TPOT + SLO attainment report
+               scheduler (repro.serving.controller)
 
-``--vram-gb B`` (floe / floe-serve) turns on the tiered parameter store:
-activation frequencies are measured, ``repro.store.plan_store`` solves
-per-expert formats / pinned set / residency pool for the budget, and the
-decode runs through the disk/host/device tier stack (runtime scheduler,
-progressive-precision demand fetches).  ``--host-gb`` bounds the host tier.
-
-``--devices N`` (floe / floe-serve) spreads the experts over N simulated
-GPUs (``repro.cluster``): frequency-balanced partition, per-device
-host→device links and residency arenas, ``--replicate R`` homes each
-layer's R hottest experts on every device.  With ``--vram-gb`` the
-budget is PER DEVICE (``plan_cluster``); without it the cluster is
-placement-only over the flat in-host store.
+``--vram-gb B`` plans the tiered parameter store for the budget;
+``--devices N`` (with ``--replicate R``) spreads experts over N
+simulated GPUs — with ``--vram-gb`` the budget is PER DEVICE.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.common.config import TrainConfig, reduced as reduce_cfg
-from repro.configs import get_config
-from repro.models import transformer as tf
+def spec_from_args(args) -> "DeploymentSpec":
+    """Flags -> typed spec (the validation lives in the spec, not here)."""
+    from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
+                              RuntimeSpec, ServingSpec)
+    offloaded = args.mode in ("floe", "naive")
+    serving = None
+    if args.mode == "floe-serve":
+        serving = ServingSpec(
+            slots=args.slots, max_len=256, policy=args.policy,
+            slo_ms=args.slo_ms, online_train=True, train_every_tokens=16,
+            train_window=64, min_train_rows=32, train_steps=40)
+    return DeploymentSpec(
+        model=ModelSpec(arch=args.arch, reduced=args.reduced,
+                        layers=args.layers, d_model=args.d_model,
+                        train_steps=args.train_steps, ckpt=args.ckpt),
+        resources=ResourceSpec(
+            vram_gb=args.vram_gb, host_gb=args.host_gb,
+            devices=args.devices, replicate=args.replicate,
+            store_dir=args.store_dir,
+            progressive=not args.no_progressive),
+        runtime=RuntimeSpec(
+            mode="floe" if args.mode == "floe-serve" else args.mode,
+            use_runtime=(args.vram_gb > 0 or args.devices > 1 or
+                         args.replicate > 0 or args.mode == "floe-serve"),
+            cache_slots=args.cache_slots),
+        serving=serving)
+
+
+def print_plan(dep) -> None:
+    from repro.cluster import ClusterPlan
+    from repro.store import dense_residency_bytes
+    plan = dep.plan
+    if plan is None:
+        return
+    dense_gb = dense_residency_bytes(dep.cfg) / 2 ** 30
+    if isinstance(plan, ClusterPlan):
+        tag = "" if plan.store_plan is not None else " (placement-only)"
+        print(f"cluster plan{tag}: {plan.summary()}")
+        if plan.vram_budget_per_device:
+            print(f"  dense-resident needs {dense_gb:.3f}GiB on one "
+                  f"device; budget "
+                  f"{plan.vram_budget_per_device / 2 ** 30:.3f}GiB x "
+                  f"{plan.n_devices} devices")
+        for d in range(plan.n_devices):
+            print(f"  {plan.device_summary(d)}")
+    else:
+        budget_gb = plan.vram_budget / 2 ** 30
+        print(f"store plan: {plan.summary()}")
+        print(f"  dense-resident would need {dense_gb:.3f}GiB; budget "
+              f"{budget_gb:.3f}GiB ({budget_gb / dense_gb:.2f}x dense)")
+        for part, nbytes in plan.breakdown.items():
+            print(f"  {part:>16}: {nbytes / 2 ** 20:8.2f}MiB")
+
+
+def print_store_telemetry(dep) -> None:
+    pipe = dep.pipeline
+    if pipe.sched is None or pipe.store_plan is None and \
+            pipe.cluster_plan is None:
+        return
+    s = pipe.sched.stats
+    if pipe.cluster_plan is not None:
+        for pool in pipe.device_pools:
+            pool.check_invariants()
+        eng = pipe.engine
+        busy = eng.summary()["busy_s_per_device"]
+        print(f"cluster: devices={pipe.cluster_plan.n_devices} "
+              f"agg_link_util="
+              f"{eng.aggregate_utilization(pipe.sched.clock):.2%} "
+              f"busy/dev={[round(b * 1e3, 1) for b in busy]}ms "
+              f"demand_fetches={s.demand_fetches} "
+              f"replica_routed={pipe.sched.selector.replica_choices}")
+        if pipe.host_tier is not None:
+            print(f"  host_hit_rate={pipe.host_tier.stats.hit_rate:.2f} "
+                  f"disk_reads={pipe.host_tier.disk.stats.reads} "
+                  f"pool_free=" +
+                  "/".join(f"{p.free_slabs}:{p.num_slabs}"
+                           for p in pipe.device_pools))
+    elif pipe.store_plan is not None:
+        pipe.device_pool.check_invariants()
+        print(f"store: demand_fetches={s.demand_fetches} "
+              f"drafts={s.draft_fetches} refined={s.refines_applied} "
+              f"topups={s.demand_topups} "
+              f"host_hit_rate={pipe.host_tier.stats.hit_rate:.2f} "
+              f"disk_reads={pipe.host_tier.disk.stats.reads} "
+              f"pool_free={pipe.device_pool.free_slabs}/"
+              f"{pipe.device_pool.num_slabs}")
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default="",
+                    help="load the full DeploymentSpec from a JSON file "
+                         "(the other flags are ignored)")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved spec JSON and exit")
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--mode",
                     choices=["resident", "naive", "floe", "floe-serve"],
@@ -77,24 +163,26 @@ def main():
                     help="hottest experts per layer homed on EVERY device")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduce_cfg(cfg, layers=args.layers, d_model=args.d_model)
+    from repro.deploy import DeploymentSpec, build
 
-    if args.ckpt:
-        from repro.checkpoint import load_checkpoint
-        params = load_checkpoint(args.ckpt)
-    elif args.train_steps:
-        from repro.launch.train import train_loop
-        tc = TrainConfig(learning_rate=2e-3, total_steps=args.train_steps,
-                         warmup_steps=max(args.train_steps // 10, 1))
-        params, _, _ = train_loop(cfg, tc, batch=8, seq=64,
-                                  steps=args.train_steps, log_every=50)
+    if args.spec:
+        spec = DeploymentSpec.from_json(open(args.spec).read())
     else:
-        params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+        spec = spec_from_args(args)
 
-    if args.mode == "resident" or not cfg.is_moe:
+    if args.dump_spec:
+        sys.stdout.write(spec.to_json())
+        return
+
+    if spec.runtime.mode == "resident" or \
+            not spec.resolve_config().is_moe:
+        # resident serving keeps the batched ServingEngine path (no
+        # offload plans to resolve — not a deploy concern)
+        import numpy as np
+        from repro.deploy.builder import resolve_params
         from repro.serving import Request, ServingEngine
+        cfg = spec.resolve_config()
+        params = resolve_params(spec.model, cfg)
         eng = ServingEngine(params, cfg, batch_size=min(args.requests, 4),
                             max_len=256)
         rng = np.random.default_rng(0)
@@ -108,86 +196,14 @@ def main():
         print(f"{eng.tokens_per_second():.1f} tok/s wall-clock")
         return
 
-    # --- offloaded MoE decode (the paper's scenario) ---
-    from repro.core import sparsify
-    from repro.core.pipeline import (FloEPipeline, _unstack_layers,
-                                     paper_scaled_models)
-    layers = _unstack_layers(params, cfg)
-    xcal = jax.random.normal(jax.random.PRNGKey(9), (128, cfg.d_model)) * 0.5
-    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
-    for li, layer in enumerate(layers):
-        if "moe" not in layer:
-            continue
-        for e in range(cfg.num_experts):
-            u = xcal @ layer["moe"]["we_up"][e]
-            thr[li, e] = float(sparsify.threshold_from_samples(
-                jnp.abs(u), cfg.floe.sparsity))
-    device, link = paper_scaled_models(cfg)
+    # --- offloaded MoE decode / serving (the paper's scenario) ------------
+    dep = build(spec)
+    print_plan(dep)
 
-    # ---- tiered store: plan formats/pins/pool for the VRAM budget --------
-    store_opts: dict = {}
-    if args.devices > 1 or args.replicate > 0:
-        from repro.store import dense_residency_bytes, measure_frequencies
-        freqs = measure_frequencies(layers, cfg)
-        if args.vram_gb > 0:
-            from repro.cluster import plan_cluster
-            plan = plan_cluster(cfg, freqs, n_devices=args.devices,
-                                vram_gb_per_device=args.vram_gb,
-                                host_gb=args.host_gb,
-                                replicate=args.replicate,
-                                progressive=not args.no_progressive)
-            dense_gb = dense_residency_bytes(cfg) / 2 ** 30
-            print(f"cluster plan: {plan.summary()}")
-            print(f"  dense-resident needs {dense_gb:.3f}GiB on one device; "
-                  f"budget {args.vram_gb:.3f}GiB x {args.devices} devices")
-            for d in range(plan.n_devices):
-                print(f"  {plan.device_summary(d)}")
-            store_opts = dict(cluster_plan=plan, store_freqs=freqs,
-                              store_dir=args.store_dir or None,
-                              use_runtime=True)
-        else:  # placement-only: flat in-host store behind the dispatcher
-            from repro.cluster import uniform_cluster_plan
-            plan = uniform_cluster_plan(cfg, args.devices, freqs=freqs,
-                                        replicate=args.replicate)
-            print(f"cluster plan (placement-only): {plan.summary()}")
-            for d in range(plan.n_devices):
-                print(f"  {plan.device_summary(d)}")
-            store_opts = dict(cluster_plan=plan, use_runtime=True)
-    elif args.vram_gb > 0:
-        from repro.store import (dense_residency_bytes, measure_frequencies,
-                                 plan_store)
-        freqs = measure_frequencies(layers, cfg)
-        plan = plan_store(cfg, freqs, vram_gb=args.vram_gb,
-                          host_gb=args.host_gb,
-                          progressive=not args.no_progressive)
-        dense_gb = dense_residency_bytes(cfg) / 2 ** 30
-        print(f"store plan: {plan.summary()}")
-        print(f"  dense-resident would need {dense_gb:.3f}GiB; budget "
-              f"{args.vram_gb:.3f}GiB "
-              f"({args.vram_gb / dense_gb:.2f}x dense)")
-        for part, nbytes in plan.breakdown.items():
-            print(f"  {part:>16}: {nbytes / 2 ** 20:8.2f}MiB")
-        store_opts = dict(store_plan=plan, store_freqs=freqs,
-                          store_dir=args.store_dir or None,
-                          use_runtime=True)
-
-    if args.mode == "floe-serve":
-        from repro.serving import ServingController, SLORequest
-        ctl = ServingController(
-            params, cfg, thresholds=thr, slots=args.slots, max_len=256,
-            policy=args.policy, online_train=True, train_every_tokens=16,
-            train_window=64, min_train_rows=32, train_steps=40,
-            offload_opts=dict(device=device, link=link,
-                              cache_slots=args.cache_slots, **store_opts))
-        rng = np.random.default_rng(0)
-        t = 0.0
-        for i in range(args.requests):
-            t += float(rng.exponential(1.0 / max(args.rate, 1e-6)))
-            ctl.submit(SLORequest(
-                i, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
-                max_new_tokens=args.max_new, slo_ms=args.slo_ms,
-                arrival_t=t))
-        ctl.run()
+    if dep.controller is not None:  # floe-serve
+        dep.serve(n_requests=args.requests, rate=args.rate,
+                  max_new=args.max_new)
+        ctl = dep.controller
         rep = ctl.report()
         for r in sorted(ctl.completed, key=lambda r: r.uid):
             print(f"req {r.uid}: ttft={1e3 * r.ttft:7.1f}ms "
@@ -196,7 +212,8 @@ def main():
                   f"preempted={r.preemptions}")
         for r in ctl.rejected:
             print(f"req {r.uid}: REJECTED (SLO infeasible at admission)")
-        print(f"policy={rep['policy']}  slo_attainment={rep['slo_attainment']:.0%}"
+        print(f"policy={rep['policy']}  "
+              f"slo_attainment={rep['slo_attainment']:.0%}"
               f"  tokens/s={rep['tokens_per_s']:.1f} (modeled, busy-time)")
         print(f"preemptions={rep['preemptions']}  rejected={rep['rejected']}"
               f"  swaps={rep['swaps_in']}/{rep['swaps_out']}"
@@ -207,47 +224,13 @@ def main():
               f"calibration={rep['calibration_scale']:.2f}")
         return
 
-    if store_opts and args.mode != "floe":
-        raise SystemExit(
-            "--vram-gb/--devices require --mode floe or floe-serve")
-    pipe = FloEPipeline(params, cfg, thresholds=thr,
-                        cache_slots=args.cache_slots, mode=args.mode,
-                        device=device, link=link, **store_opts)
-    for i in range(args.max_new):
-        h = jax.random.normal(jax.random.PRNGKey(100 + i),
-                              (1, cfg.d_model), jnp.float32) * 0.3
-        _, m = pipe.decode_token(h)
-    stalls = sum(x.stall_s for x in pipe.metrics)
-    print(f"mode={args.mode}: {pipe.tokens_per_second():.1f} tok/s (modeled)"
-          f"  coverage={m.coverage:.2f}  total_stall={stalls * 1e3:.2f}ms")
-    if store_opts and pipe.cluster_plan is not None:
-        s = pipe.sched.stats
-        for pool in pipe.device_pools:
-            pool.check_invariants()
-        eng = pipe.engine
-        busy = eng.summary()["busy_s_per_device"]
-        print(f"cluster: devices={pipe.cluster_plan.n_devices} "
-              f"agg_link_util="
-              f"{eng.aggregate_utilization(pipe.sched.clock):.2%} "
-              f"busy/dev={[round(b * 1e3, 1) for b in busy]}ms "
-              f"demand_fetches={s.demand_fetches} "
-              f"replica_routed={pipe.sched.selector.replica_choices}")
-        if pipe.host_tier is not None:
-            print(f"  host_hit_rate={pipe.host_tier.stats.hit_rate:.2f} "
-                  f"disk_reads={pipe.host_tier.disk.stats.reads} "
-                  f"pool_free=" +
-                  "/".join(f"{p.free_slabs}:{p.num_slabs}"
-                           for p in pipe.device_pools))
-    elif store_opts:
-        s = pipe.sched.stats
-        pipe.device_pool.check_invariants()
-        print(f"store: demand_fetches={s.demand_fetches} "
-              f"drafts={s.draft_fetches} refined={s.refines_applied} "
-              f"topups={s.demand_topups} "
-              f"host_hit_rate={pipe.host_tier.stats.hit_rate:.2f} "
-              f"disk_reads={pipe.host_tier.disk.stats.reads} "
-              f"pool_free={pipe.device_pool.free_slabs}/"
-              f"{pipe.device_pool.num_slabs}")
+    metrics = dep.generate(args.max_new)
+    stalls = sum(m.stall_s for m in dep.pipeline.metrics)
+    print(f"mode={spec.runtime.mode}: "
+          f"{dep.pipeline.tokens_per_second():.1f} tok/s (modeled)"
+          f"  coverage={metrics[-1].coverage:.2f}"
+          f"  total_stall={stalls * 1e3:.2f}ms")
+    print_store_telemetry(dep)
 
 
 if __name__ == "__main__":

@@ -210,13 +210,41 @@ class ServingController:
                  min_train_rows: int = 64,
                  max_preemptions: int = 2,
                  cross_token: bool = True,
-                 offload_opts: Optional[dict] = None):
+                 offload_opts: Optional[dict] = None,
+                 serving_spec=None):  # repro.deploy.ServingSpec (overrides
+        #                               the individual kwargs above)
+        from repro.deploy.spec import ServingSpec, SpecError
+
+        # The kwargs are a thin shim over the typed spec: they are
+        # normalized into ONE ServingSpec and every knob below reads from
+        # it, so a spec-built controller (repro.deploy.build) and a
+        # kwargs-built one construct identically (parity pinned by test).
+        if serving_spec is None:
+            serving_spec = ServingSpec(
+                slots=slots, max_len=max_len, policy=policy, eos_id=eos_id,
+                seed=seed, online_train=online_train,
+                train_every_tokens=train_every_tokens,
+                train_window=train_window, train_steps=train_steps,
+                predictor_hidden=predictor_hidden,
+                min_train_rows=min_train_rows,
+                max_preemptions=max_preemptions, cross_token=cross_token)
+        sv = self.serving_spec = serving_spec
+        slots, max_len, policy = sv.slots, sv.max_len, sv.policy
+        eos_id, seed, online_train = sv.eos_id, sv.seed, sv.online_train
+        train_every_tokens = sv.train_every_tokens
+        train_window, train_steps = sv.train_window, sv.train_steps
+        predictor_hidden = sv.predictor_hidden
+        min_train_rows = sv.min_train_rows
+        max_preemptions, cross_token = sv.max_preemptions, sv.cross_token
+
         if policy not in ("slo", "static"):
-            raise ValueError(f"unknown policy {policy!r}")
+            raise SpecError("serving.policy", f"unknown policy {policy!r}")
         if slots < 1:
-            raise ValueError(f"need at least one batch slot, got {slots}")
+            raise SpecError("serving.slots",
+                            f"need at least one batch slot, got {slots}")
         if not cfg.num_experts:
-            raise ValueError("the serving controller needs an MoE model")
+            raise SpecError("serving.policy",
+                            "the serving controller needs an MoE model")
         for pattern, _ in cfg.segments():
             bad = [k for k in pattern if k not in ("dense", "moe")]
             if bad:

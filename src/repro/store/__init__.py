@@ -22,7 +22,8 @@ from repro.store.formats import (FORMATS, LADDER, ExpertFormat, get_format,
 from repro.store.planner import (PlanError, StorePlan, dense_residency_bytes,
                                  floor_bytes, measure_frequencies,
                                  non_expert_bytes, plan_store)
-from repro.store.tiered import TieredExpertStore, build_layer_stores
+from repro.store.tiered import (TieredExpertStore, build_layer_stores,
+                                warm_host_tier)
 from repro.store.tiers import (DevicePool, DiskModel, DiskTier, HostTier,
                                SlabSpan, tier_key)
 
@@ -32,4 +33,5 @@ __all__ = [
     "non_expert_bytes", "dense_residency_bytes", "floor_bytes",
     "DiskTier", "DiskModel", "HostTier", "DevicePool", "SlabSpan",
     "tier_key", "TieredExpertStore", "build_layer_stores",
+    "warm_host_tier",
 ]

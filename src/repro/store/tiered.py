@@ -54,7 +54,8 @@ class TieredExpertStore(ExpertStore):
                  plan: StorePlan, layer: int, host: HostTier,
                  link: Optional[LinkModel] = None,
                  quant_group: int = 64,
-                 shard_writer=None):
+                 shard_writer=None,
+                 key_prefix: str = ""):
         we_gate = np.asarray(moe_params["we_gate"], np.float16)
         we_down = np.asarray(moe_params["we_down"], np.float16)
         e, d, f = we_gate.shape
@@ -62,6 +63,7 @@ class TieredExpertStore(ExpertStore):
         self.layer = layer
         self.plan = plan
         self.host = host
+        self.key_prefix = key_prefix  # scopes records in SHARED tiers
         self.thresholds = np.asarray(thresholds)
         self.link = link or LinkModel()
         self.log = TransferLog()
@@ -84,9 +86,9 @@ class TieredExpertStore(ExpertStore):
                 record["draft"] = codes
                 record["draft_scale"] = scale
             if shard_writer is not None:
-                shard_writer.add(tier_key(layer, i), record)
+                shard_writer.add(self.key(i), record)
             else:  # no disk tier: records live host-side unconditionally
-                self.host.admit(tier_key(layer, i), record,
+                self.host.admit(self.key(i), record,
                                 record_nbytes(record))
 
         # ---- device-resident up projections at per-expert precision ------
@@ -131,6 +133,9 @@ class TieredExpertStore(ExpertStore):
         return rec + self.up_nbytes(0)
 
     # -------------------------------------------------------------- tiers --
+    def key(self, e: int) -> str:
+        return tier_key(self.layer, e, self.key_prefix)
+
     def available_channels(self, e: int) -> Optional[np.ndarray]:
         if self.fmts[e].keep_ratio >= 1.0:
             return None
@@ -149,7 +154,7 @@ class TieredExpertStore(ExpertStore):
         kept = self._kept[e]
         served = idx if self.fmts[e].keep_ratio >= 1.0 else \
             np.intersect1d(idx, kept)
-        record, disk_s = self.host.fetch(tier_key(self.layer, e))
+        record, disk_s = self.host.fetch(self.key(e))
         pos = np.searchsorted(record["chan_idx"], served)
         if precision == "draft" and "draft" in record:
             rec = _draft_decode(record["draft"][pos],
@@ -198,19 +203,49 @@ class TieredExpertStore(ExpertStore):
         return v, np.asarray(jnp.abs(v) >= self.thresholds[e])
 
 
+def warm_host_tier(host: HostTier,
+                   entries: Sequence[Tuple[float, TieredExpertStore, int]]
+                   ) -> None:
+    """Prefill the host tier hottest-first under its byte budget from
+    ``(freq, store, expert)`` entries — shared by the single-model build
+    below and the fleet builder (which ranks across ALL models so one
+    global temperature order decides residency in the shared tier)."""
+    for _, store, e in sorted(entries, key=lambda t: (-t[0],
+                                                      t[1].key_prefix,
+                                                      t[1].layer, t[2])):
+        key = store.key(e)
+        if key in host:
+            continue
+        if host.bytes_in_use + store.host_bytes(e) > host.capacity_bytes:
+            break
+        rec, _ = host.disk.load(key)
+        host.admit(key, rec, record_nbytes(rec))
+
+
 def build_layer_stores(layers: Sequence[dict], thresholds: np.ndarray,
                        plan: StorePlan, store_dir, *,
                        link: Optional[LinkModel] = None,
                        disk_model: Optional[DiskModel] = None,
                        quant_group: int = 64,
-                       freqs: Optional[np.ndarray] = None
+                       freqs: Optional[np.ndarray] = None,
+                       host: Optional[HostTier] = None,
+                       writer=None,
+                       key_prefix: str = ""
                        ) -> Tuple[List[Optional[TieredExpertStore]], HostTier]:
     """Build every MoE layer's tiered store over ONE shared disk shard +
-    host tier, then warm the host tier hottest-first under its budget."""
+    host tier, then warm the host tier hottest-first under its budget.
+
+    A fleet passes its SHARED ``host`` and ``writer`` (plus a per-model
+    ``key_prefix``); it then owns finalization — closing the writer,
+    attaching the DiskTier, and warming globally across models — so
+    those steps only run here when the writer is locally owned."""
     from repro.checkpoint.io import ShardWriter
 
-    host = HostTier(plan.host_budget)
-    writer = ShardWriter(store_dir)
+    if host is None:
+        host = HostTier(plan.host_budget)
+    own_writer = writer is None
+    if own_writer:
+        writer = ShardWriter(store_dir)
     stores: List[Optional[TieredExpertStore]] = []
     for li, layer in enumerate(layers):
         if "moe" not in layer:
@@ -218,25 +253,20 @@ def build_layer_stores(layers: Sequence[dict], thresholds: np.ndarray,
             continue
         stores.append(TieredExpertStore(
             layer["moe"], thresholds[li], plan=plan, layer=li, host=host,
-            link=link, quant_group=quant_group, shard_writer=writer))
+            link=link, quant_group=quant_group, shard_writer=writer,
+            key_prefix=key_prefix))
+    if not own_writer:
+        return stores, host
     writer.close()
     host.disk = DiskTier(store_dir, model=disk_model)
 
     # hottest experts become host-resident first
-    ranked: List[Tuple[float, int, int]] = []
+    entries: List[Tuple[float, TieredExpertStore, int]] = []
     for li, store in enumerate(stores):
         if store is None:
             continue
         for e in range(store.num_experts):
             f = float(freqs[li, e]) if freqs is not None else 0.0
-            ranked.append((-f, li, e))
-    for _, li, e in sorted(ranked):
-        store = stores[li]
-        key = tier_key(li, e)
-        if key in host:
-            continue
-        if host.bytes_in_use + store.host_bytes(e) > host.capacity_bytes:
-            break
-        rec, _ = host.disk.load(key)
-        host.admit(key, rec, record_nbytes(rec))
+            entries.append((f, store, e))
+    warm_host_tier(host, entries)
     return stores, host

@@ -24,8 +24,13 @@ from typing import Dict, Hashable, List, Optional, Tuple
 from repro.checkpoint.io import ShardReader, ShardWriter
 
 
-def tier_key(layer: int, expert: int) -> str:
-    return f"L{layer}.E{expert}"
+def tier_key(layer: int, expert: int, prefix: str = "") -> str:
+    """Key of one expert's record in the shared host/disk tiers.  A
+    fleet deployment scopes each model's records with a ``prefix`` so
+    several models can share ONE HostTier/DiskTier without key
+    collisions; single-model stores keep the historical unprefixed
+    layout (shards stay readable across versions)."""
+    return f"{prefix}L{layer}.E{expert}"
 
 
 def record_nbytes(record: dict) -> int:
@@ -147,6 +152,13 @@ class HostTier:
         self._records[key] = record
         self._nbytes[key] = nbytes
         self.bytes_in_use += nbytes
+
+    def bytes_for_prefix(self, prefix: str) -> int:
+        """Resident bytes whose keys carry ``prefix`` — per-model host
+        share telemetry for fleet deployments (LRU itself stays global:
+        shares are an admission-time promise, not a partition)."""
+        return sum(n for k, n in self._nbytes.items()
+                   if k.startswith(prefix))
 
     def fetch(self, key: str) -> Tuple[dict, float]:
         """(record, modeled disk seconds) — 0.0 on a host hit."""

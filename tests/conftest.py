@@ -9,9 +9,9 @@ jax.config.update("jax_enable_x64", False)
 # Everything still runs under the ROADMAP tier-1 command — the marker only
 # enables `-m "not slow"` for a quick dev loop.
 _SLOW_MODULES = {
-    "test_cluster_e2e", "test_controller", "test_pipeline", "test_runtime",
-    "test_serving", "test_smoke_archs", "test_store_e2e", "test_system",
-    "test_train_ckpt",
+    "test_cluster_e2e", "test_controller", "test_deploy_e2e",
+    "test_pipeline", "test_runtime", "test_serving", "test_smoke_archs",
+    "test_store_e2e", "test_system", "test_train_ckpt",
 }
 
 

@@ -1,0 +1,214 @@
+"""Spec-layer conformance: typed validation + lossless JSON round-trip.
+
+Every invalid ``DeploymentSpec`` field combination raises a
+:class:`~repro.deploy.SpecError` that NAMES the offending field (the
+acceptance bar for replacing the old deep-in-constructor asserts), and
+``spec == from_json(to_json(spec))`` holds for representative specs
+including the committed example file.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
+                          RuntimeSpec, ServingSpec, SpecError)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _spec(**kw):
+    base = dict(model=ModelSpec(arch="mixtral-8x7b", layers=2,
+                                d_model=128))
+    base.update(kw)
+    return DeploymentSpec(**base)
+
+
+# ------------------------------------------------------------- validation --
+@pytest.mark.parametrize("field,kw", [
+    # vram below the feasibility floor
+    ("resources.vram_gb", dict(resources=ResourceSpec(vram_gb=1e-6))),
+    # negative vram
+    ("resources.vram_gb", dict(resources=ResourceSpec(vram_gb=-1.0))),
+    # tiered store without the runtime scheduler
+    ("resources.vram_gb", dict(resources=ResourceSpec(vram_gb=1.0),
+                               runtime=RuntimeSpec(use_runtime=False))),
+    # devices < 1
+    ("resources.devices", dict(resources=ResourceSpec(devices=0))),
+    # cluster without the runtime scheduler
+    ("resources.devices", dict(resources=ResourceSpec(devices=2),
+                               runtime=RuntimeSpec(use_runtime=False))),
+    # replicate >= num_experts (reduced mixtral has 4)
+    ("resources.replicate", dict(resources=ResourceSpec(replicate=4))),
+    ("resources.replicate", dict(resources=ResourceSpec(replicate=-1))),
+    # tiered store without host budget
+    ("resources.host_gb", dict(resources=ResourceSpec(vram_gb=1.0,
+                                                      host_gb=0.0))),
+    # unknown ladder format
+    ("resources.ladder", dict(resources=ResourceSpec(
+        vram_gb=1.0, ladder=("int3",)))),
+    # unknown runtime mode / residency policy, bad knobs
+    ("runtime.mode", dict(runtime=RuntimeSpec(mode="turbo"))),
+    ("runtime.residency_policy",
+     dict(runtime=RuntimeSpec(residency_policy="mru"))),
+    ("runtime.lookahead", dict(runtime=RuntimeSpec(lookahead=0))),
+    ("runtime.num_buffers", dict(runtime=RuntimeSpec(num_buffers=0))),
+    ("runtime.cache_slots", dict(runtime=RuntimeSpec(cache_slots=0))),
+    # serving: slo <= 0, unknown policy, slots < 1
+    ("serving.slo_ms", dict(serving=ServingSpec(slo_ms=0.0))),
+    ("serving.slo_ms", dict(serving=ServingSpec(slo_ms=-5.0))),
+    ("serving.policy", dict(serving=ServingSpec(policy="fifo"))),
+    ("serving.slots", dict(serving=ServingSpec(slots=0))),
+    ("serving.max_len", dict(serving=ServingSpec(max_len=0))),
+    ("serving.max_preemptions",
+     dict(serving=ServingSpec(max_preemptions=-1))),
+    # serving needs the runtime scheduler
+    ("runtime.use_runtime", dict(serving=ServingSpec(),
+                                 runtime=RuntimeSpec(use_runtime=False))),
+    # model floors
+    ("model.layers", dict(model=ModelSpec(layers=0))),
+    ("model.d_model", dict(model=ModelSpec(d_model=4))),
+    ("model.max_experts", dict(model=ModelSpec(max_experts=-1))),
+    ("model.train_steps", dict(model=ModelSpec(train_steps=-1))),
+])
+def test_invalid_spec_raises_typed_error_naming_field(field, kw):
+    with pytest.raises(SpecError) as ei:
+        _spec(**kw)
+    assert ei.value.field == field, (ei.value.field, field)
+    assert field in str(ei.value)
+
+
+def test_unknown_arch_names_field():
+    with pytest.raises(SpecError) as ei:
+        _spec(model=ModelSpec(arch="gpt-17-nano"))
+    assert ei.value.field == "model.arch"
+
+
+def test_spec_error_is_value_error():
+    # callers that caught ValueError from the old asserts keep working
+    with pytest.raises(ValueError):
+        _spec(resources=ResourceSpec(devices=0))
+
+
+def test_serving_requires_moe_model():
+    with pytest.raises(SpecError) as ei:
+        DeploymentSpec(model=ModelSpec(arch="starcoder2-7b", layers=2,
+                                       d_model=128),
+                       serving=ServingSpec())
+    assert ei.value.field == "serving.policy"
+
+
+# --------------------------------------------------------- JSON round-trip --
+@pytest.mark.parametrize("spec", [
+    DeploymentSpec(),
+    _spec(),
+    _spec(resources=ResourceSpec(vram_gb=1.0, host_gb=0.5, devices=2,
+                                 replicate=1, ladder=("int2", "int4"),
+                                 max_slots=3, max_pinned=2,
+                                 progressive=False),
+          runtime=RuntimeSpec(lookahead=3, residency_policy="weighted",
+                              batched_demand=True, cross_token=False),
+          serving=ServingSpec(slots=2, slo_ms=2500.0, policy="static",
+                              online_train=False),
+          name="round-trip"),
+])
+def test_json_round_trip_is_lossless(spec):
+    assert DeploymentSpec.from_json(spec.to_json()) == spec
+    # and a second trip is a fixed point
+    j = spec.to_json()
+    assert DeploymentSpec.from_json(j).to_json() == j
+
+
+def test_ladder_survives_as_tuple():
+    spec = _spec(resources=ResourceSpec(vram_gb=1.0,
+                                        ladder=("int2",)))
+    back = DeploymentSpec.from_json(spec.to_json())
+    assert back.resources.ladder == ("int2",)
+    assert isinstance(back.resources.ladder, tuple)
+
+
+def test_from_json_rejects_unknown_fields():
+    with pytest.raises(SpecError) as ei:
+        DeploymentSpec.from_json(
+            '{"runtime": {"mode": "floe", "warp_speed": true}}')
+    assert "warp_speed" in str(ei.value)
+
+
+def test_from_json_rejects_unknown_sections():
+    """A typo'd SECTION name must not load as all-defaults."""
+    with pytest.raises(SpecError) as ei:
+        DeploymentSpec.from_json('{"runtimes": {"mode": "floe"}}')
+    assert ei.value.field == "runtimes"
+
+
+def test_from_json_explicit_null_serving_means_no_serving():
+    spec = DeploymentSpec.from_json('{"serving": null}')
+    assert spec.serving is None
+
+
+def test_from_json_rejects_non_object():
+    with pytest.raises(SpecError):
+        DeploymentSpec.from_json("[1, 2]")
+    with pytest.raises(SpecError):
+        DeploymentSpec.from_json("not json at all {")
+
+
+def test_committed_example_spec_is_valid_and_round_trips():
+    """examples/deploy_mixtral_11gb.json — the paper's headline config
+    (full Mixtral-8x7B under an 11 GiB budget) as a committed spec."""
+    text = (REPO / "examples" / "deploy_mixtral_11gb.json").read_text()
+    spec = DeploymentSpec.from_json(text)
+    assert spec.model.arch == "mixtral-8x7b" and not spec.model.reduced
+    assert spec.resources.vram_gb == 11.0
+    assert spec.serving is not None
+    assert DeploymentSpec.from_json(spec.to_json()) == spec
+    # 11 GiB sits between the feasibility floor and dense residency
+    from repro.store import dense_residency_bytes, floor_bytes
+    cfg = spec.resolve_config()
+    assert floor_bytes(cfg) < 11 * 2 ** 30 < dense_residency_bytes(cfg)
+
+
+# ------------------------------------------------------------ kwargs shims --
+def test_pipeline_kwargs_build_a_runtime_spec():
+    """The legacy kwargs surface is a thin shim: FloEPipeline normalizes
+    its runtime kwargs into one typed RuntimeSpec."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.common.config import reduced
+    from repro.configs import get_config
+    from repro.core.pipeline import FloEPipeline
+    from repro.models import transformer as tf
+
+    cfg = reduced(get_config("mixtral-8x7b"), layers=2, d_model=128)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
+    pipe = FloEPipeline(params, cfg, thresholds=thr, mode="floe",
+                        use_runtime=True, lookahead=3,
+                        residency_policy="lfu", cache_slots=6)
+    assert pipe.runtime_spec == RuntimeSpec(
+        mode="floe", use_runtime=True, lookahead=3,
+        residency_policy="lfu", cache_slots=6)
+    assert pipe.sched.lookahead == 3
+
+
+def test_controller_kwargs_build_a_serving_spec():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.common.config import reduced
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.serving import ServingController
+
+    cfg = reduced(get_config("mixtral-8x7b"), layers=2, d_model=128)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    thr = np.zeros((cfg.num_layers, cfg.num_experts), np.float32)
+    ctl = ServingController(params, cfg, thresholds=thr, slots=3,
+                            policy="static", online_train=False,
+                            max_preemptions=1)
+    assert ctl.serving_spec == ServingSpec(slots=3, policy="static",
+                                           online_train=False,
+                                           max_preemptions=1)
+    with pytest.raises(SpecError) as ei:
+        ServingController(params, cfg, thresholds=thr, policy="bogus")
+    assert ei.value.field == "serving.policy"

@@ -1,0 +1,275 @@
+"""Deploy acceptance pins.
+
+* ``build(spec)`` decode is BITWISE-identical to the equivalent
+  kwargs-constructed ``FloEPipeline`` / ``ServingController`` (same
+  clocks too) — the one-build-path guarantee.
+* A two-model ``build_fleet`` over ONE shared HostTier/DiskTier
+  completes; footprint-aware admission rejects a model whose plan
+  cannot fit with a typed :class:`AdmissionError`; suspending an idle
+  model evicts its pinned set and frees ledger headroom.
+* The serve CLI drives everything from a spec file.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (FloEPipeline, _unstack_layers,
+                                 paper_scaled_models)
+from repro.deploy import (AdmissionError, DeploymentSpec, ModelSpec,
+                          ResourceSpec, RuntimeSpec, ServingSpec,
+                          SpecError, build, build_fleet)
+from repro.deploy.builder import calibrate_thresholds
+from repro.models import transformer as tf
+from repro.store import floor_bytes
+
+
+@pytest.fixture(scope="module")
+def small_moe():
+    spec = DeploymentSpec(model=ModelSpec(arch="mixtral-8x7b", layers=4,
+                                          d_model=128))
+    cfg = spec.resolve_config()
+    params = tf.init_model(jax.random.PRNGKey(0), cfg, jnp.float32)
+    thr = calibrate_thresholds(_unstack_layers(params, cfg), cfg)
+    return spec, cfg, params, thr
+
+
+def _fleet_spec(name, seed, vram_gb, **res):
+    return DeploymentSpec(
+        name=name,
+        model=ModelSpec(arch="mixtral-8x7b", layers=4, d_model=128,
+                        max_experts=8, seed=seed),
+        resources=ResourceSpec(vram_gb=vram_gb, host_gb=0.001,
+                               ladder=("int2",), **res),
+        runtime=RuntimeSpec(use_runtime=True))
+
+
+# --------------------------------------------------- spec == kwargs parity --
+def test_build_matches_kwargs_pipeline_bitwise(small_moe):
+    """Acceptance pin: spec-built decode == kwargs-built decode, bitwise,
+    with identical measured clocks."""
+    spec, cfg, params, thr = small_moe
+    dep = build(spec, params=params, thresholds=thr)
+    device, link = paper_scaled_models(cfg)
+    pipe = FloEPipeline(params, cfg, thresholds=thr, device=device,
+                        link=link, mode="floe", use_runtime=True,
+                        cache_slots=4, lookahead=2)
+    hs = dep.h_stream(4, batch=2)
+    for h in hs:
+        a, _ = dep.pipeline.decode_token(h)
+        b, _ = pipe.decode_token(h)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert dep.pipeline.sched.clock == pipe.sched.clock
+    for ma, mb in zip(dep.pipeline.metrics, pipe.metrics):
+        assert ma.stall_s == mb.stall_s
+        assert ma.prefetch_s == mb.prefetch_s
+
+
+def test_build_matches_kwargs_pipeline_tiered(small_moe):
+    """Same pin through the tiered store: spec-planned formats/pins and
+    a hand-run plan_store produce identical decode + timeline."""
+    from repro.store import measure_frequencies, plan_store
+    spec, cfg, params, thr = small_moe
+    vram_gb = 1.2 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    tiered = DeploymentSpec(
+        model=spec.model,
+        resources=ResourceSpec(vram_gb=vram_gb, host_gb=0.05,
+                               ladder=("int2",)),
+        runtime=RuntimeSpec(use_runtime=True))
+    dep = build(tiered, params=params, thresholds=thr)
+    device, link = paper_scaled_models(cfg)
+    layers = _unstack_layers(params, cfg)
+    freqs = measure_frequencies(layers, cfg)
+    plan = plan_store(cfg, freqs, vram_gb=vram_gb, host_gb=0.05,
+                      ladder=("int2",))
+    pipe = FloEPipeline(params, cfg, thresholds=thr, device=device,
+                        link=link, mode="floe", use_runtime=True,
+                        store_plan=plan, store_freqs=freqs)
+    for h in dep.h_stream(3):
+        a, _ = dep.pipeline.decode_token(h)
+        b, _ = pipe.decode_token(h)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert dep.pipeline.sched.clock == pipe.sched.clock
+    assert dep.plan.formats == plan.formats
+    assert dep.plan.pinned == plan.pinned
+
+
+def test_build_matches_kwargs_controller(small_moe):
+    """Spec-built controller tokens/clock == kwargs-built controller."""
+    from repro.serving import ServingController, SLORequest
+    spec, cfg, params, thr = small_moe
+
+    def submit_all(ctl):
+        for i in range(3):
+            ctl.submit(SLORequest(i, np.arange(4, dtype=np.int32),
+                                  max_new_tokens=3, slo_ms=60_000.0,
+                                  arrival_t=0.05 * i))
+        ctl.run()
+        return {r.uid: r.output for r in ctl.completed}, ctl.sched.clock
+
+    served = DeploymentSpec(
+        model=spec.model,
+        runtime=RuntimeSpec(use_runtime=True),
+        serving=ServingSpec(slots=2, max_len=64, online_train=False))
+    dep = build(served, params=params, thresholds=thr)
+    out_spec, t_spec = submit_all(dep.controller)
+
+    device, link = paper_scaled_models(cfg)
+    ctl = ServingController(params, cfg, thresholds=thr, slots=2,
+                            max_len=64, online_train=False,
+                            offload_opts=dict(device=device, link=link,
+                                              cache_slots=4))
+    out_kw, t_kw = submit_all(ctl)
+    assert out_spec == out_kw
+    assert t_spec == t_kw
+
+
+# --------------------------------------------------------------- the fleet --
+def test_fleet_two_models_share_tiers_and_reject_oversize():
+    """Acceptance pin: a two-model fleet over ONE shared HostTier/DiskTier
+    completes decode for both models, and admission rejects (typed
+    error) a third model whose plan cannot fit."""
+    probe = _fleet_spec("probe", 0, 1.0)
+    vg = 1.2 * floor_bytes(probe.resolve_config(), ("int2",)) / 2 ** 30
+    sa, sb = _fleet_spec("a", 0, vg), _fleet_spec("b", 1, vg)
+    fleet = build_fleet([sa, sb], vram_gb_per_device=2.5 * vg,
+                        host_gb=0.002)
+    assert list(fleet.members) == ["a", "b"]
+    # ONE shared substrate under both models
+    pa = fleet["a"].deployment.pipeline
+    pb = fleet["b"].deployment.pipeline
+    assert pa.host_tier is pb.host_tier
+    assert pa.host_tier.disk is pb.host_tier.disk
+    assert pa.engine is pb.engine
+    # but DISJOINT per-device arenas
+    assert pa.device_pools[0] is not pb.device_pools[0]
+
+    ma = fleet.generate("a", tokens=2, batch=2)
+    mb = fleet.generate("b", tokens=2, batch=2)
+    assert len(ma) == len(mb) == 2
+    # clocks stay lockstep across models (shared link timelines)
+    assert pa.sched.clock == pb.sched.clock
+    rep = fleet.report()
+    assert rep["host_bytes_in_use"] <= rep["host_capacity_bytes"]
+    # each model's records are scoped by its prefix in the shared tier
+    assert rep["models"]["a"]["host_resident_bytes"] > 0
+    assert rep["models"]["b"]["host_resident_bytes"] > 0
+
+    # a third identical model cannot fit the remaining footprint
+    with pytest.raises(AdmissionError) as ei:
+        build_fleet([sa, sb, _fleet_spec("c", 2, vg)],
+                    vram_gb_per_device=2.5 * vg, host_gb=0.01)
+    assert ei.value.field == "fleet.c"
+    assert "footprint" in str(ei.value)
+
+
+def test_fleet_host_share_admission():
+    """Admission is host-aware too: two models whose host shares exceed
+    the shared tier's capacity are rejected at the host check."""
+    probe = _fleet_spec("probe", 0, 1.0)
+    vg = 1.2 * floor_bytes(probe.resolve_config(), ("int2",)) / 2 ** 30
+    with pytest.raises(AdmissionError) as ei:
+        build_fleet([_fleet_spec("a", 0, vg), _fleet_spec("b", 1, vg)],
+                    vram_gb_per_device=2.5 * vg, host_gb=0.0005)
+    assert "host share" in str(ei.value)
+
+
+def test_fleet_suspend_evicts_pinned_and_frees_headroom():
+    """Idle-model pinned-set eviction: suspend() drops the pinned staged
+    slices (arena slabs return to the pool), the ledger credits the
+    bytes back, and resume() re-stages and decodes correctly."""
+    probe = _fleet_spec("probe", 0, 1.0)
+    # leave pinning ON (default plan spend) so there is a pinned set
+    vg = 1.5 * floor_bytes(probe.resolve_config(), ("int2",)) / 2 ** 30
+    sa, sb = _fleet_spec("a", 0, vg), _fleet_spec("b", 1, vg)
+    fleet = build_fleet([sa, sb], vram_gb_per_device=2.6 * vg,
+                        host_gb=0.002)
+    m = fleet["a"]
+    assert sum(len(p) for p in m.plan.pinned_per_device) > 0
+    pipe = m.deployment.pipeline
+    free_before = pipe.device_pools[0].free_slabs
+    committed_before = fleet.committed[0]
+
+    freed = fleet.suspend("a")
+    assert freed > 0
+    assert pipe.device_pools[0].free_slabs > free_before
+    assert fleet.committed[0] == committed_before - freed
+    assert not fleet["a"].active
+    with pytest.raises(SpecError):
+        fleet.generate("a", tokens=1)
+    # the other model keeps serving while "a" is idle
+    fleet.generate("b", tokens=1)
+
+    fleet.resume("a")
+    assert fleet.committed[0] == committed_before
+    # pinned entries are staged again and decode works
+    for d, pins in enumerate(m.plan.pinned_per_device):
+        for (li, e) in pins:
+            assert (li, e) in pipe.cluster_residency[d][li]
+    fleet.generate("a", tokens=1)
+    for pool in pipe.device_pools:
+        pool.check_invariants()
+
+
+def test_fleet_spec_errors():
+    probe = _fleet_spec("probe", 0, 1.0)
+    vg = 1.2 * floor_bytes(probe.resolve_config(), ("int2",)) / 2 ** 30
+    flat = DeploymentSpec(name="flat",
+                          model=ModelSpec(arch="mixtral-8x7b", layers=4,
+                                          d_model=128, max_experts=8),
+                          runtime=RuntimeSpec(use_runtime=True))
+    with pytest.raises(SpecError):  # fleet members need a tiered store
+        build_fleet([flat], vram_gb_per_device=1.0, host_gb=0.01)
+    with pytest.raises(SpecError):  # duplicate labels
+        build_fleet([_fleet_spec("a", 0, vg), _fleet_spec("a", 1, vg)],
+                    vram_gb_per_device=2.5 * vg, host_gb=0.01)
+
+
+def test_fleet_two_devices_links_shared():
+    """A 2-device fleet: both models' traffic lands on the SAME two
+    per-device link timelines (one ClusterEngine), clocks lockstep."""
+    probe = _fleet_spec("probe", 0, 1.0, devices=2)
+    vg = 1.2 * floor_bytes(probe.resolve_config(), ("int2",)) / 2 ** 30
+    fleet = build_fleet(
+        [_fleet_spec("a", 0, vg, devices=2, replicate=1),
+         _fleet_spec("b", 1, vg, devices=2, replicate=1)],
+        vram_gb_per_device=2.5 * vg, host_gb=0.002)
+    fleet.generate("a", tokens=2, batch=4)
+    fleet.generate("b", tokens=2, batch=4)
+    eng = fleet.engine
+    assert {r.device for r in eng.records} == {0, 1}
+    clocks = [s.clock for m in fleet.members.values()
+              for s in m.deployment.pipeline.sched.devs]
+    assert max(clocks) - min(clocks) <= 1e-9
+
+
+# ----------------------------------------------------------------- the CLI --
+def test_serve_cli_from_spec_file(tmp_path, monkeypatch, capsys):
+    """`serve.py --spec deploy.json` drives the whole build from a file."""
+    from repro.launch import serve
+    spec = DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=128),
+        resources=ResourceSpec(vram_gb=0.0012, host_gb=0.05),
+        runtime=RuntimeSpec(use_runtime=True))
+    path = tmp_path / "deploy.json"
+    path.write_text(spec.to_json())
+    monkeypatch.setattr(sys, "argv",
+                        ["serve.py", "--spec", str(path), "--max_new", "4"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "store plan:" in out
+    assert "mode=floe:" in out and "tok/s" in out
+
+
+def test_serve_cli_dump_spec(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", [
+        "serve.py", "--arch", "mixtral-8x7b", "--reduced", "--mode", "floe",
+        "--layers", "2", "--vram-gb", "0.0012", "--dump-spec"])
+    serve.main()
+    out = capsys.readouterr().out
+    spec = DeploymentSpec.from_json(out)
+    assert spec.resources.vram_gb == 0.0012
+    assert spec.runtime.use_runtime
