@@ -15,6 +15,13 @@ Rows are matched by name.  Two numeric channels are compared per row:
   ``multimodel/shared_stall_no_worse``) is a REGRESSION, since those
   rows encode pass/fail claims, not tunable metrics.
 
+When both files embed a ``metrics`` snapshot (``run.py`` records the
+per-suite repro.obs registry), those are diffed too: an increase in
+``stall.conservation_violations`` is a REGRESSION; any other metric
+moving beyond the threshold is a METRIC change for a human to judge.
+Entries where both values are below 1e-6 in magnitude are exempt
+(sub-microsecond simulated-timer noise).
+
 Exit status is 1 when any REGRESSION was flagged (CI gate), 0 otherwise.
 Directory arguments compare every ``BENCH_*.json`` present in both.
 """
@@ -28,10 +35,45 @@ from pathlib import Path
 #: us_per_call below this is timer noise, never flagged (microseconds)
 MIN_US = 1.0
 
+#: metric values where BOTH sides are below this magnitude are exempt
+#: (sub-microsecond simulated-timer noise)
+MIN_METRIC = 1e-6
+
 
 def load_rows(path: Path) -> dict:
     data = json.loads(path.read_text())
     return {r["name"]: r for r in data.get("rows", [])}
+
+
+def load_metrics(path: Path) -> dict:
+    return json.loads(path.read_text()).get("metrics") or {}
+
+
+def compare_metrics(old_path: Path, new_path: Path,
+                    threshold: float) -> tuple[list, list]:
+    """(regressions, changes) over the embedded metrics snapshots."""
+    old, new = load_metrics(old_path), load_metrics(new_path)
+    if not old or not new:  # at least one side predates metric embedding
+        return [], []
+    regressions, changes = [], []
+    for key in sorted(set(old) | set(new)):
+        ov, nv = old.get(key, 0), new.get(key, 0)
+        if not (isinstance(ov, (int, float)) and
+                isinstance(nv, (int, float))):
+            if ov != nv:
+                changes.append(f"METRIC     {key}: {ov!r} -> {nv!r}")
+            continue
+        if abs(float(ov)) < MIN_METRIC and abs(float(nv)) < MIN_METRIC:
+            continue
+        if key == "stall.conservation_violations" and nv > ov:
+            regressions.append(
+                f"REGRESSION {key}: {ov} -> {nv} (stall cause segments "
+                f"no longer sum to the stalled seconds)")
+            continue
+        dd = rel_delta(float(ov), float(nv))
+        if abs(dd) > threshold:
+            changes.append(f"METRIC     {key}: {ov} -> {nv} ({dd:+.0%})")
+    return regressions, changes
 
 
 def rel_delta(old: float, new: float) -> float:
@@ -106,6 +148,9 @@ def main() -> int:
     for old_path, new_path in _pairs(args.old, args.new):
         regressions, changes = compare_suite(old_path, new_path,
                                              args.threshold)
+        m_reg, m_chg = compare_metrics(old_path, new_path, args.threshold)
+        regressions += m_reg
+        changes += m_chg
         header = f"== {old_path.name} vs {new_path.name} =="
         if regressions or changes:
             print(header)

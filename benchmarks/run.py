@@ -29,6 +29,14 @@ across PRs.
 ``derived`` is recorded in the JSON as a NUMBER whenever it parses as
 one (string fallback otherwise), so ``benchmarks/compare.py`` can diff
 two BENCH files machine-to-machine across PRs.
+
+Each suite runs with a ``repro.obs`` MetricsCollector attached: its
+deterministic snapshot is embedded as ``metrics`` in the suite JSON
+(``compare.py`` diffs it), and any suite that produced events gains a
+``<suite>/stall_conservation`` acceptance row whose derived value flips
+``True... -> False...`` — a CI regression — if any stall event's cause
+segments fail to sum back to its stalled seconds.  ``--trace-dir DIR``
+additionally exports one Perfetto trace per suite.
 """
 from __future__ import annotations
 
@@ -56,7 +64,7 @@ def derived_value(v):
 
 
 def write_suite_json(name: str, rows: list, timestamp: str,
-                     elapsed_s: float) -> Path:
+                     elapsed_s: float, metrics: dict | None = None) -> Path:
     out = {
         "suite": name,
         "timestamp": timestamp,
@@ -64,9 +72,26 @@ def write_suite_json(name: str, rows: list, timestamp: str,
         "rows": [{"name": r[0], "us_per_call": float(r[1]),
                   "derived": derived_value(r[2])} for r in rows],
     }
+    if metrics:
+        out["metrics"] = metrics
     path = REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(out, indent=1) + "\n")
     return path
+
+
+def conservation_row(name: str, collector) -> tuple | None:
+    """Per-suite acceptance pin: every stall event's cause segments must
+    sum back to its stalled seconds.  Derived is ``True events=N`` /
+    ``False violations=K events=N`` so a flip is a compare.py
+    REGRESSION, not a judgement call."""
+    reg = collector.registry.snapshot()
+    events = int(reg.get("events_total", 0))
+    if events == 0:  # pure-kernel suite: nothing to conserve
+        return None
+    violations = int(reg.get("stall.conservation_violations", 0))
+    derived = (f"True events={events}" if violations == 0
+               else f"False violations={violations} events={events}")
+    return (f"{name}/stall_conservation", 0.0, derived)
 
 
 def main() -> None:
@@ -78,6 +103,9 @@ def main() -> None:
                          "commit date, for cross-PR perf tracking)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing BENCH_<suite>.json files")
+    ap.add_argument("--trace-dir", default="",
+                    help="export a Perfetto trace-event JSON per suite "
+                         "into this directory (trace_<suite>.json)")
     args = ap.parse_args()
 
     from benchmarks import (bench_cluster, bench_compression,
@@ -100,6 +128,12 @@ def main() -> None:
         ("multimodel", bench_multimodel.run),
         ("roofline", roofline.run),
     ]
+    from repro import obs
+
+    trace_dir = Path(args.trace_dir) if args.trace_dir else None
+    if trace_dir is not None:
+        trace_dir.mkdir(parents=True, exist_ok=True)
+
     rows: list = []
     print("name,us_per_call,derived")
     for name, fn in suites:
@@ -107,17 +141,29 @@ def main() -> None:
             continue
         t0 = time.perf_counter()
         before = len(rows)
+        collector = obs.MetricsCollector()
+        tracer = obs.Tracer() if trace_dir is not None else None
+        consumers = [collector] + ([tracer] if tracer is not None else [])
         try:
-            fn(rows)
+            with obs.consumer(*consumers):
+                fn(rows)
         except Exception as e:  # keep the harness running
             traceback.print_exc()
             rows.append((f"{name}/ERROR", 0.0, repr(e)))
+        row = conservation_row(name, collector)
+        if row is not None:
+            rows.append(row)
         for r in rows[before:]:
             print(f"{r[0]},{r[1]:.2f},{r[2]}")
         sys.stdout.flush()
         elapsed = time.perf_counter() - t0
         if not args.no_json:
-            write_suite_json(name, rows[before:], args.timestamp, elapsed)
+            write_suite_json(name, rows[before:], args.timestamp, elapsed,
+                             metrics=collector.registry.snapshot())
+        if tracer is not None:
+            n = tracer.export(trace_dir / f"trace_{name}.json")
+            print(f"# {name}: {n} trace events -> "
+                  f"{trace_dir / f'trace_{name}.json'}", file=sys.stderr)
         print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr)
 
 

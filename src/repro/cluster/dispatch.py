@@ -37,6 +37,7 @@ import numpy as np
 from repro.cluster.links import ClusterEngine, LinkSelector
 from repro.cluster.placement import ClusterPlan
 from repro.core.offload import ExpertStore
+from repro.obs.stall import StallAttribution
 from repro.runtime.residency import ResidencyManager
 from repro.runtime.scheduler import (ExpertScheduler, SchedulerStats,
                                      recall_from_stats)
@@ -100,6 +101,27 @@ class ClusterScheduler:
                 setattr(merged, f.name,
                         getattr(merged, f.name) + getattr(s.stats, f.name))
         return merged
+
+    @property
+    def attribution(self) -> StallAttribution:
+        """Merged per-device stall attribution (fresh object).
+
+        Conservation carries over: each device's attributor is bitwise
+        lockstep with its own ``stats.stall_s``, and both merges sum the
+        per-device values in the same device order."""
+        merged = StallAttribution()
+        for s in self.devs:
+            merged = merged.merge(s.attribution)
+        return merged
+
+    @property
+    def activation_freqs(self) -> dict:
+        """Merged per-(layer, expert) demand counts across devices."""
+        out: dict = {}
+        for s in self.devs:
+            for k, v in s.activation_freqs.items():
+                out[k] = out.get(k, 0) + v
+        return out
 
     # ------------------------------------------------------------ routing --
     def _locate(self, layer: int, expert: int) -> Optional[int]:

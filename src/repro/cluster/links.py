@@ -15,10 +15,12 @@ lowest device id — deterministic least-loaded-link routing.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.offload import LinkModel
-from repro.runtime.transfer import TransferEngine, TransferRecord
+from repro.runtime.transfer import (RecordLog, TransferAggregates,
+                                    TransferEngine)
 
 
 class ClusterEngine:
@@ -29,7 +31,7 @@ class ClusterEngine:
                  chunk_channels: int = 50):
         assert n_devices >= 1
         self.n_devices = n_devices
-        self.records: List[TransferRecord] = []  # shared, in issue order
+        self.records = RecordLog()  # shared ring, in issue order
         self.engines: List[TransferEngine] = []
         for d in range(n_devices):
             eng = TransferEngine(link, num_buffers=num_buffers,
@@ -41,15 +43,21 @@ class ClusterEngine:
         return self.engines[d]
 
     # ---------------------------------------------------------- telemetry -
+    # Cluster telemetry is the sum of per-engine rolling aggregates —
+    # no pass over the shared (and bounded) log.
+    def _agg(self) -> TransferAggregates:
+        return functools.reduce(TransferAggregates.merged,
+                                (e.agg for e in self.engines))
+
     def busy_seconds(self) -> float:
         """Aggregate link-busy seconds across every device."""
-        return sum(r.duration for r in self.records)
+        return sum(e.agg.busy_s for e in self.engines)
 
     def device_busy_seconds(self, d: int) -> float:
-        return self.engines[d].busy_seconds()  # filters the shared log
+        return self.engines[d].busy_seconds()
 
     def wasted_bytes(self) -> int:
-        return sum(r.nbytes for r in self.records if r.demoted)
+        return sum(e.agg.wasted_bytes for e in self.engines)
 
     def aggregate_utilization(self, now: float) -> float:
         """Busy fraction of the cluster's total link-time capacity
@@ -57,19 +65,24 @@ class ClusterEngine:
         cap = self.n_devices * max(now, 1e-12)
         return min(1.0, self.busy_seconds() / cap)
 
+    def drain_events(self) -> None:
+        """Retire all in-flight transfers so the tracer sees final spans."""
+        for e in self.engines:
+            e.drain_events()
+
     def summary(self) -> dict:
-        n = len(self.records)
+        agg = self._agg()
         per_dev = [self.device_busy_seconds(d)
                    for d in range(self.n_devices)]
         return {
             "devices": self.n_devices,
-            "transfers": n,
-            "bytes": sum(r.nbytes for r in self.records),
+            "transfers": agg.transfers,
+            "bytes": agg.bytes,
             "busy_s": self.busy_seconds(),
             "busy_s_per_device": per_dev,
-            "demoted": sum(1 for r in self.records if r.demoted),
-            "wasted_bytes": self.wasted_bytes(),
-            "disk_s": sum(r.disk_s for r in self.records),
+            "demoted": agg.demoted,
+            "wasted_bytes": agg.wasted_bytes,
+            "disk_s": agg.disk_s,
         }
 
 

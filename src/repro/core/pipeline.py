@@ -273,6 +273,9 @@ class FloEPipeline:
                              if store_plan is not None else True))
             if store_plan is not None:
                 self._stage_pinned()
+        if self.host_tier is not None and self.sched is not None:
+            # host-tier events (host.miss instants) stamp sim time
+            self.host_tier.bind_clock(lambda: self.sched.clock)
 
     # ------------------------------------------------------------ helpers --
     def _moe_layer_indices(self):
@@ -695,7 +698,7 @@ class FloEPipeline:
         metrics = StepMetrics()
         covs = []
         moe_layers = set(self._moe_layer_indices())
-        rec_start = len(self.engine.records)
+        rec_mark = self.engine.records.total  # monotonic, ring-safe
         h_in = h  # token-entry state: the cross-token routing proxy
 
         for li, layer in enumerate(self.layers):
@@ -745,7 +748,7 @@ class FloEPipeline:
         sched.advance(t_head)
 
         metrics.prefetch_s = sum(
-            r.duration for r in self.engine.records[rec_start:]
+            r.duration for r in self.engine.records.since(rec_mark)
             if r.kind == "prefetch")
         metrics.coverage = float(np.mean(covs)) if covs else 1.0
         self.metrics.append(metrics)

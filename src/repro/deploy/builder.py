@@ -310,4 +310,19 @@ class Deployment:
                 replica_routed=pipe.sched.selector.replica_choices)
         if self.controller is not None:
             rep["serving"] = self.controller.report()
+        rep["metrics"] = self.metrics_snapshot()
         return rep
+
+    def metrics_snapshot(self) -> dict:
+        """Deterministic flat metrics snapshot (``repro.obs`` registry)
+        for this deployment: the controller's full serving snapshot when
+        a control plane exists, else the scheduler-level view (stall
+        attribution with the conservation check, prefetch quality,
+        per-expert activation frequencies)."""
+        if self.controller is not None:
+            return self.controller.metrics_snapshot()
+        if self.pipeline.sched is None:
+            return {}
+        from repro.obs.metrics import MetricsRegistry, scheduler_metrics
+        return scheduler_metrics(MetricsRegistry(),
+                                 self.pipeline.sched).snapshot()

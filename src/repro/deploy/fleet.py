@@ -32,6 +32,7 @@ import dataclasses
 import tempfile
 from typing import Dict, List, Optional, Sequence
 
+from repro import obs
 from repro.deploy.spec import DeploymentSpec, SpecError
 
 
@@ -136,8 +137,9 @@ class Fleet:
             raise SpecError(f"fleet.{name}",
                             "model is suspended; resume() it first")
         self._sync_clocks()
-        out = m.deployment.generate(tokens, batch=batch, seed=seed,
-                                    h_stream=h_stream)
+        with obs.scope(name):  # events from this model's decode carry it
+            out = m.deployment.generate(tokens, batch=batch, seed=seed,
+                                        h_stream=h_stream)
         self._sync_clocks()
         return out
 
@@ -147,7 +149,8 @@ class Fleet:
             raise SpecError(f"fleet.{name}",
                             "model is suspended; resume() it first")
         self._sync_clocks()
-        out = m.deployment.serve(requests, **kw)
+        with obs.scope(name):
+            out = m.deployment.serve(requests, **kw)
         self._sync_clocks()
         return out
 
@@ -169,6 +172,10 @@ class Fleet:
             m.pinned_bytes.append(freed)
             self.committed[d] -= freed
         m.active = False
+        if obs.enabled():
+            obs.emit("fleet.suspend", pipe.sched.clock, cat="fleet",
+                     args={"model": name,
+                           "freed_bytes": sum(m.pinned_bytes)})
         return sum(m.pinned_bytes)
 
     def resume(self, name: str) -> None:
@@ -187,9 +194,13 @@ class Fleet:
                     f"only {self.headroom_bytes(d) / 2 ** 30:.4f}GiB left")
         for d in range(self.n_devices):
             self.committed[d] += m.pinned_bytes[d]
-        m.deployment.pipeline._stage_pinned_cluster()
+        with obs.scope(name):
+            m.deployment.pipeline._stage_pinned_cluster()
         m.pinned_bytes = []
         m.active = True
+        if obs.enabled():
+            obs.emit("fleet.resume", m.deployment.pipeline.sched.clock,
+                     cat="fleet", args={"model": name})
 
     # --------------------------------------------------------- telemetry --
     def report(self) -> dict:

@@ -161,6 +161,12 @@ def main():
                          "links + residency; --vram-gb becomes per-device)")
     ap.add_argument("--replicate", type=int, default=0,
                     help="hottest experts per layer homed on EVERY device")
+    ap.add_argument("--trace", default="",
+                    help="export a Chrome/Perfetto trace-event JSON of the "
+                         "run to this path (open in ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the deterministic metrics snapshot "
+                         "(counters/gauges/histograms) after the run")
     args = ap.parse_args()
 
     from repro.deploy import DeploymentSpec, build
@@ -197,6 +203,30 @@ def main():
         return
 
     # --- offloaded MoE decode / serving (the paper's scenario) ------------
+    # Attach observability consumers BEFORE build so staging transfers
+    # land in the trace too; disabled flags keep the bus a no-op.
+    from repro import obs
+    tracer = None
+    collector = None
+    if args.trace:
+        tracer = obs.Tracer()
+        obs.attach(tracer)
+    if args.metrics:
+        collector = obs.MetricsCollector()
+        obs.attach(collector)
+    try:
+        dep = run_offloaded(args, spec)
+    finally:
+        if tracer is not None:
+            obs.detach(tracer)
+        if collector is not None:
+            obs.detach(collector)
+    if dep is not None:
+        finish_obs(args, dep, tracer, collector)
+
+
+def run_offloaded(args, spec):
+    from repro.deploy import build
     dep = build(spec)
     print_plan(dep)
 
@@ -222,7 +252,7 @@ def main():
               f"precision={rep['prefetch_precision']:.2f}  "
               f"train_rounds={rep['train_rounds']}  "
               f"calibration={rep['calibration_scale']:.2f}")
-        return
+        return dep
 
     metrics = dep.generate(args.max_new)
     stalls = sum(m.stall_s for m in dep.pipeline.metrics)
@@ -231,6 +261,31 @@ def main():
           f"  coverage={metrics[-1].coverage:.2f}"
           f"  total_stall={stalls * 1e3:.2f}ms")
     print_store_telemetry(dep)
+    return dep
+
+
+def finish_obs(args, dep, tracer, collector) -> None:
+    """Flush retired-transfer spans, export the trace, print metrics."""
+    from repro import obs
+    pipe = dep.pipeline
+    if pipe is not None and pipe.engine is not None and \
+            (tracer is not None or collector is not None):
+        # transfer.complete spans are emitted at poll()-retire time (final,
+        # preemption-proof timings); drain whatever is still in flight.
+        with obs.consumer(*[c for c in (tracer, collector) if c]):
+            pipe.engine.drain_events()
+    if tracer is not None:
+        n = tracer.export(args.trace)
+        print(f"trace: {n} events -> {args.trace}")
+    if args.metrics:
+        snap = dict(dep.metrics_snapshot())
+        if collector is not None:
+            snap.update(collector.registry.snapshot())
+        print("metrics snapshot:")
+        for k in sorted(snap):
+            v = snap[k]
+            print(f"  {k} = {v:.6g}" if isinstance(v, float)
+                  else f"  {k} = {v}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,48 @@
+"""repro.obs — unified tracing, stall attribution, and metrics.
+
+Three consumers over one typed event bus on the simulated clock:
+
+* :class:`Tracer` — Chrome/Perfetto trace-event export
+  (``launch/serve.py --trace out.json``),
+* :class:`StallAttribution` — every stalled second classified into a
+  root cause with a conservation invariant against
+  ``SchedulerStats.stall_s``,
+* :class:`MetricsRegistry` / :class:`MetricsCollector` — deterministic
+  counter/gauge/histogram snapshots embedded in ``Deployment.report()``
+  and ``BENCH_*.json``.
+
+Emit sites live in the subsystems; they guard with :func:`enabled` so a
+run with no consumer attached pays nothing and changes nothing.
+"""
+from repro.obs.events import (  # noqa: F401
+    BUS,
+    Event,
+    EventBus,
+    attach,
+    consumer,
+    detach,
+    emit,
+    enabled,
+    scope,
+    subscribe,
+    use_bus,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsCollector,
+    MetricsRegistry,
+    request_metrics,
+    scheduler_metrics,
+)
+from repro.obs.stall import CAUSES, StallAttribution  # noqa: F401
+from repro.obs.trace import Tracer  # noqa: F401
+
+__all__ = [
+    "BUS", "Event", "EventBus", "attach", "consumer", "detach", "emit",
+    "enabled", "scope", "subscribe", "use_bus",
+    "Counter", "Gauge", "Histogram", "MetricsCollector", "MetricsRegistry",
+    "request_metrics", "scheduler_metrics",
+    "CAUSES", "StallAttribution", "Tracer",
+]

@@ -1,0 +1,165 @@
+"""The observability event bus — typed events on the simulated clock.
+
+One process-wide :class:`EventBus` carries every subsystem's structured
+events (``transfer.start/complete``, ``demand.stall``, ``residency.evict``,
+``request.admit/reject/preempt/finish``, ``refine.apply/drop``, ...) to
+whichever consumers are attached: a :class:`~repro.obs.trace.Tracer`
+(Chrome/Perfetto export), a :class:`~repro.obs.metrics.MetricsCollector`
+(counters / histograms), or a test harness.
+
+Zero overhead when disabled: with no consumer attached ``enabled()`` is
+False and every emit site skips even *building* its args dict::
+
+    if obs.enabled():
+        obs.emit("transfer.start", now, cat="transfer", device=d,
+                 args={"key": str(key), "nbytes": rec.nbytes})
+
+Emitting never touches the modeled timeline — events are observations of
+event times the runtime already computed, so decode outputs and transfer
+schedules are bitwise identical with the bus on or off (pinned by the
+golden-trace and parity tests).
+
+Scoping: ``with obs.scope(model="llama-a"):`` stamps every event emitted
+inside the block with that model label (fleet members, deployments);
+``device`` is stamped per event by the emitting engine/scheduler.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class Event:
+    """One structured observation on the simulated clock.
+
+    ``t``/``dur`` are modeled seconds; ``dur > 0`` renders as a span
+    (Perfetto ``X`` event), ``dur == 0`` as an instant.  ``lane`` (when
+    set) overrides ``device`` as the display track — per-request
+    timelines use ``lane = uid`` so requests get their own rows.
+    """
+
+    seq: int
+    t: float
+    name: str
+    cat: str
+    dur: float = 0.0
+    device: int = 0
+    model: str = ""
+    lane: Optional[int] = None
+    args: Optional[dict] = None
+
+
+class EventBus:
+    """Fan events out to attached consumers; a no-op with none attached."""
+
+    def __init__(self):
+        self._consumers: List[object] = []
+        self._scope: List[str] = []
+        self._seq = 0
+
+    # ---------------------------------------------------------- consumers --
+    @property
+    def consumers(self) -> List[object]:
+        return list(self._consumers)
+
+    def attach(self, consumer) -> None:
+        """Attach a consumer (anything with ``on_event(event)``)."""
+        assert hasattr(consumer, "on_event"), consumer
+        if consumer not in self._consumers:
+            self._consumers.append(consumer)
+
+    def detach(self, consumer) -> None:
+        if consumer in self._consumers:
+            self._consumers.remove(consumer)
+
+    def enabled(self) -> bool:
+        return bool(self._consumers)
+
+    # ------------------------------------------------------------ scoping --
+    @contextlib.contextmanager
+    def scope(self, model: str):
+        """Stamp events emitted inside the block with ``model``."""
+        self._scope.append(model)
+        try:
+            yield
+        finally:
+            self._scope.pop()
+
+    @property
+    def current_model(self) -> str:
+        return self._scope[-1] if self._scope else ""
+
+    # --------------------------------------------------------------- emit --
+    def emit(self, name: str, t: float, *, cat: str = "", dur: float = 0.0,
+             device: int = 0, lane: Optional[int] = None,
+             args: Optional[dict] = None) -> None:
+        if not self._consumers:
+            return
+        ev = Event(seq=self._seq, t=float(t), name=name, cat=cat,
+                   dur=float(dur), device=int(device),
+                   model=self.current_model, lane=lane, args=args)
+        self._seq += 1
+        for c in self._consumers:
+            c.on_event(ev)
+
+
+#: The process-wide bus every subsystem emits to.  Swappable for test
+#: isolation via :func:`use_bus`.
+BUS = EventBus()
+
+
+def enabled() -> bool:
+    """Guard for emit sites: skip building args when nobody listens."""
+    return BUS.enabled()
+
+
+def emit(name: str, t: float, **kw) -> None:
+    BUS.emit(name, t, **kw)
+
+
+def attach(consumer) -> None:
+    BUS.attach(consumer)
+
+
+def detach(consumer) -> None:
+    BUS.detach(consumer)
+
+
+def scope(model: str):
+    return BUS.scope(model)
+
+
+@contextlib.contextmanager
+def use_bus(bus: EventBus):
+    """Swap the process-wide bus (test isolation)."""
+    global BUS
+    prev, BUS = BUS, bus
+    try:
+        yield bus
+    finally:
+        BUS = prev
+
+
+@contextlib.contextmanager
+def consumer(*consumers):
+    """Attach consumers for the duration of a block (always detached)."""
+    for c in consumers:
+        attach(c)
+    try:
+        yield consumers[0] if len(consumers) == 1 else consumers
+    finally:
+        for c in consumers:
+            detach(c)
+
+
+def subscribe(fn: Callable[[Event], None]):
+    """Adapt a plain callable into a consumer object (returns it attached;
+    caller detaches)."""
+    class _Fn:
+        def on_event(self, ev):  # noqa: D401 - tiny adapter
+            fn(ev)
+    c = _Fn()
+    attach(c)
+    return c

@@ -1,0 +1,220 @@
+"""Metrics — counters / gauges / histograms with deterministic snapshots.
+
+A :class:`MetricsRegistry` is a flat namespace of instruments; its
+:meth:`~MetricsRegistry.snapshot` renders one sorted ``{name: value}``
+dict (histograms expand to ``.count/.sum/.mean/.p50/.p99/.max``) that is
+stable across identical simulated runs — the representation embedded in
+``Deployment.report()["metrics"]``, printed by ``launch/serve.py
+--metrics``, and pinned inside ``BENCH_*.json`` for
+``benchmarks/compare.py`` to diff.
+
+:class:`MetricsCollector` is the bus consumer that folds the event
+stream into a registry: transfer traffic by kind, stalled seconds by
+attributed cause (with a ``stall.conservation_violations`` counter that
+increments whenever an event's cause segments fail to sum back to its
+stall — the per-event view of the conservation invariant), residency
+churn, and the request lifecycle with TTFT/TPOT split into
+queue-wait / stall / compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+from repro.obs.events import Event
+
+
+class Counter:
+    """Monotonic accumulator (ints or seconds)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+
+class Gauge:
+    """Last-written value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+
+class Histogram:
+    """Exact-sample histogram; percentiles by nearest-rank on the sorted
+    sample (deterministic — no binning error, no randomized sketches)."""
+
+    __slots__ = ("values",)
+
+    def __init__(self):
+        self.values: List[float] = []
+
+    def observe(self, value: float) -> None:
+        self.values.append(float(value))
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    def percentile(self, q: float) -> float:
+        if not self.values:
+            return 0.0
+        s = sorted(self.values)
+        k = min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))
+        return s[k]
+
+    def summary(self) -> Dict[str, float]:
+        n = len(self.values)
+        total = sum(self.values)
+        return {
+            "count": n,
+            "sum": total,
+            "mean": total / n if n else 0.0,
+            "p50": self.percentile(0.50),
+            "p99": self.percentile(0.99),
+            "max": max(self.values) if n else 0.0,
+        }
+
+
+class MetricsRegistry:
+    """Get-or-create namespace of instruments with one flat snapshot."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        return self._counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        return self._gauges.setdefault(name, Gauge())
+
+    def histogram(self, name: str) -> Histogram:
+        return self._histograms.setdefault(name, Histogram())
+
+    def snapshot(self) -> Dict[str, float]:
+        """Sorted flat ``{name: value}`` dict, deterministic run-to-run."""
+        out: Dict[str, float] = {}
+        for name, c in self._counters.items():
+            v = c.value
+            out[name] = int(v) if float(v).is_integer() else v
+        for name, g in self._gauges.items():
+            out[name] = g.value
+        for name, h in self._histograms.items():
+            for stat, v in h.summary().items():
+                out[f"{name}.{stat}"] = v
+        return dict(sorted(out.items()))
+
+    def reset(self) -> None:
+        self._counters.clear()
+        self._gauges.clear()
+        self._histograms.clear()
+
+
+def scheduler_metrics(reg: MetricsRegistry, sched) -> MetricsRegistry:
+    """Fold a scheduler's telemetry into ``reg`` (report-time snapshot).
+
+    Duck-typed over :class:`~repro.runtime.scheduler.ExpertScheduler`
+    and the cluster dispatcher's merged view: stats counters, stall
+    attribution by cause (plus the conservation check as a 0/1 gauge),
+    prefetch precision/recall, and per-expert activation frequencies.
+    """
+    st = sched.stats
+    for f in dataclasses.fields(st):
+        reg.counter(f"sched.{f.name}").inc(getattr(st, f.name))
+    attr = sched.attribution
+    snap = attr.snapshot()
+    for cause, v in snap["causes"].items():
+        reg.counter(f"stall.cause.{cause}_s").inc(v)
+    reg.counter("stall.attributed_s").inc(attr.attributed_s())
+    reg.gauge("stall.conservation_ok").set(
+        1.0 if attr.check_conservation(st.stall_s) else 0.0)
+    reg.gauge("prefetch.precision").set(sched.prefetch_precision())
+    reg.gauge("prefetch.recall").set(sched.prefetch_recall())
+    reg.gauge("overlap.efficiency").set(sched.overlap_efficiency())
+    for (li, e), n in sorted(sched.activation_freqs.items()):
+        reg.counter(f"experts.freq.L{li}.E{e}").inc(n)
+    return reg
+
+
+def request_metrics(reg: MetricsRegistry, requests) -> MetricsRegistry:
+    """Fold completed serving requests into ``reg``: TTFT/TPOT plus the
+    breakdown of each request's life into queue-wait / stall / compute."""
+    for r in requests:
+        if r.ttft is not None:
+            reg.histogram("request.ttft_s").observe(r.ttft)
+        if r.tpot is not None:
+            reg.histogram("request.tpot_s").observe(r.tpot)
+        if r.admitted_t is not None:
+            reg.histogram("request.queue_s").observe(
+                max(r.admitted_t - r.arrival_t, 0.0))
+        reg.histogram("request.stall_s").observe(
+            getattr(r, "stall_share_s", 0.0))
+        reg.histogram("request.compute_s").observe(
+            getattr(r, "compute_share_s", 0.0))
+    return reg
+
+
+_SEG_TOL = 1e-9  # per-event conservation slack (float associativity)
+
+
+class MetricsCollector:
+    """Bus consumer folding the event stream into a registry."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+
+    # The event names handled here mirror the emit sites across the
+    # runtime/serving stack; unknown events only bump a generic counter
+    # so new instrumentation never breaks an old collector.
+    def on_event(self, ev: Event) -> None:
+        m = self.registry
+        m.counter("events_total").inc()
+        if ev.name == "transfer.complete":
+            a = ev.args or {}
+            kind = a.get("kind", "unknown")
+            m.counter(f"transfer.{kind}.count").inc()
+            m.counter(f"transfer.{kind}.bytes").inc(a.get("nbytes", 0))
+            m.histogram(f"transfer.{kind}.duration_s").observe(ev.dur)
+            if a.get("demoted"):
+                m.counter("transfer.demoted.count").inc()
+            if a.get("disk_s", 0.0) > 0.0:
+                m.counter("transfer.disk.count").inc()
+        elif ev.name == "demand.stall":
+            a = ev.args or {}
+            stall = a.get("stall_s", ev.dur)
+            m.counter("stall.total_s").inc(stall)
+            m.histogram("stall.per_wait_s").observe(stall)
+            attributed = 0.0
+            for cause, seconds in (a.get("causes") or {}).items():
+                m.counter(f"stall.cause.{cause}_s").inc(seconds)
+                attributed += seconds
+            if abs(attributed - stall) > _SEG_TOL * max(1.0, stall):
+                m.counter("stall.conservation_violations").inc()
+        elif ev.name == "residency.evict":
+            m.counter("residency.evictions").inc()
+        elif ev.name == "refine.apply":
+            m.counter("refine.applied").inc()
+        elif ev.name == "refine.drop":
+            m.counter("refine.dropped").inc()
+        elif ev.name.startswith("request."):
+            what = ev.name.partition(".")[2]
+            m.counter(f"requests.{what}").inc()
+            if what == "finish":
+                a = ev.args or {}
+                for field in ("ttft_s", "tpot_s", "queue_s",
+                              "stall_s", "compute_s"):
+                    if field in a:
+                        m.histogram(f"request.{field}").observe(a[field])
+        elif ev.name.startswith("swap."):
+            m.counter(f"serving.{ev.name.partition('.')[2]}s").inc()

@@ -1,0 +1,147 @@
+"""Stall attribution — classify every stalled second into a root cause.
+
+FloE's headline is stall time removed from the decode critical path, so
+a stall number without a *why* is unanswerable: was the predictor wrong,
+did a speculative prefetch get demoted behind a demand, did residency
+evict an expert the future needed, was the link simply busy, did the
+fetch have to go to disk, or is the token waiting on an INT8 draft
+residual?  :class:`StallAttribution` answers that at the only place the
+truth is known — :meth:`ExpertScheduler.wait_for`, where the residual
+wait is computed — by splitting each stall into segments:
+
+``link_contention``
+    The governing transfer sat queued behind other traffic before it
+    reached the link: ``clip(record.start_t - now, 0, stall)``.
+``disk_tier_miss``
+    The transfer had to page through the disk tier; the slowdown beyond
+    a pure host→device copy: ``clip(duration - h2d_s, 0, remaining)``.
+``speculative_demotion``
+    Waiting on a prefetch that demand preemption pushed back.
+``eviction``
+    A demand re-fetch of an expert residency had previously evicted.
+``draft_residual``
+    Progressive serving waited on the low-bit draft of a cold expert.
+``prefetch_late``
+    A healthy, undemoted prefetch simply had not finished in time.
+``predictor_miss``
+    Cold demand with no mitigating story — the predictor never asked.
+
+Conservation is the invariant the whole design hangs on: the attributor
+accumulates ``total_s += stall`` in lockstep with the scheduler's
+``stats.stall_s += stall`` — same values, same order — so the two are
+**bitwise** equal, and per-cause segments are constructed to sum back
+to each stall (checked within float-associativity tolerance).  The
+attributor is always on (it is stats-level bookkeeping, like
+``stall_s`` itself), independent of whether the event bus has
+consumers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+#: Every cause class the attributor can emit, in reporting order.
+CAUSES = (
+    "predictor_miss",
+    "speculative_demotion",
+    "eviction",
+    "link_contention",
+    "disk_tier_miss",
+    "draft_residual",
+    "prefetch_late",
+)
+
+_REL_TOL = 1e-9  # float associativity headroom for per-cause sums
+
+
+class StallAttribution:
+    """Per-scheduler ledger mapping stalled seconds to root causes."""
+
+    def __init__(self):
+        self.causes: Dict[str, float] = {}
+        self.total_s: float = 0.0
+        self.events: int = 0
+
+    # ---------------------------------------------------------- recording --
+    def attribute(self, stall: float, now: float, *, record=None,
+                  cause: Optional[str] = None,
+                  origin_prefetch: bool = False) -> Dict[str, float]:
+        """Record one ``wait_for`` residual and split it into segments.
+
+        ``stall`` must be the exact value added to ``stats.stall_s`` so
+        the conservation invariant holds bitwise.  ``record`` is the
+        governing transfer (the one whose ``complete_t`` gated the
+        wait), if any; ``cause`` is an explicit primary cause from the
+        demand path (eviction / draft_residual / predictor_miss);
+        ``origin_prefetch`` marks waits satisfied by a live prefetch.
+        """
+        self.total_s += stall
+        self.events += 1
+        segs: Dict[str, float] = {}
+        if stall <= 0.0:
+            return segs
+        remaining = stall
+        if record is not None:
+            # Queueing delay before the transfer reached the link.
+            queued = min(max(record.start_t - now, 0.0), remaining)
+            if queued > 0.0:
+                segs["link_contention"] = queued
+                remaining -= queued
+            # Disk-tier overhead beyond the pure host->device copy.
+            if remaining > 0.0 and getattr(record, "disk_s", 0.0) > 0.0:
+                h2d = getattr(record, "h2d_s", 0.0)
+                disk = min(max(record.duration - h2d, 0.0), remaining)
+                if disk > 0.0:
+                    segs["disk_tier_miss"] = disk
+                    remaining -= disk
+        if remaining > 0.0:
+            primary = cause
+            if primary is None:
+                if record is not None and record.demoted:
+                    primary = "speculative_demotion"
+                elif origin_prefetch:
+                    primary = "prefetch_late"
+                else:
+                    primary = "predictor_miss"
+            segs[primary] = segs.get(primary, 0.0) + remaining
+        for k, v in segs.items():
+            self.causes[k] = self.causes.get(k, 0.0) + v
+        return segs
+
+    # ---------------------------------------------------------- reporting --
+    def snapshot(self) -> dict:
+        """Deterministic dict view: every cause (zeros included), totals."""
+        return {
+            "total_s": self.total_s,
+            "events": self.events,
+            "causes": {c: self.causes.get(c, 0.0) for c in CAUSES},
+        }
+
+    def attributed_s(self) -> float:
+        return sum(self.causes.get(c, 0.0) for c in CAUSES)
+
+    def check_conservation(self, stall_s: float) -> bool:
+        """True iff attribution conserves the scheduler's stall total.
+
+        ``total_s`` must equal ``stall_s`` *bitwise* (lockstep
+        accumulation), and the per-cause segments must sum back to the
+        total within float-associativity tolerance.
+        """
+        if self.total_s != stall_s:
+            return False
+        tol = _REL_TOL * max(1.0, abs(self.total_s))
+        return abs(self.attributed_s() - self.total_s) <= tol
+
+    def merge(self, other: "StallAttribution") -> "StallAttribution":
+        """Field-wise sum (cluster view over per-device attributors)."""
+        out = StallAttribution()
+        for src in (self, other):
+            out.total_s += src.total_s
+            out.events += src.events
+            for k, v in src.causes.items():
+                out.causes[k] = out.causes.get(k, 0.0) + v
+        return out
+
+    def reset(self) -> None:
+        self.causes.clear()
+        self.total_s = 0.0
+        self.events = 0

@@ -1,0 +1,102 @@
+"""Tracer — collect bus events and export Chrome/Perfetto trace JSON.
+
+The exported file is the standard trace-event format (the JSON flavour
+both ``chrome://tracing`` and https://ui.perfetto.dev load directly):
+
+* ``ph: "X"`` complete events for spans (transfers on a link, decode
+  steps, request lifetimes) with ``ts``/``dur`` in microseconds,
+* ``ph: "i"`` instant events for point observations (stalls, evictions,
+  admission decisions),
+* ``ph: "M"`` metadata records naming processes (one per model) and
+  threads (one per device, plus one lane per request uid).
+
+``pid`` is the model's first-seen index (single-model runs collapse to
+pid 0); ``tid`` is the device index, or ``1000 + uid`` for per-request
+lanes so request timelines render as their own rows under the same
+process.  Export is byte-deterministic: events are sorted by emission
+sequence, timestamps are rounded to sub-ns, and ``json.dumps`` runs
+with ``sort_keys=True`` — two identical simulated runs produce
+byte-identical files (pinned by ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from repro.obs.events import Event
+
+_REQ_LANE = 1000  # tid offset for per-request rows
+
+
+def _us(t: float) -> float:
+    """Modeled seconds → trace microseconds, rounded for repr stability."""
+    return round(t * 1e6, 3)
+
+
+class Tracer:
+    """Bus consumer that buffers events and renders trace-event JSON."""
+
+    def __init__(self):
+        self.events: List[Event] = []
+        self._models: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ consume --
+    def on_event(self, ev: Event) -> None:
+        self.events.append(ev)
+        if ev.model not in self._models:
+            self._models[ev.model] = len(self._models)
+
+    def clear(self) -> None:
+        self.events.clear()
+        self._models.clear()
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    # ------------------------------------------------------------- export --
+    def _pid(self, model: str) -> int:
+        return self._models.get(model, 0)
+
+    def to_chrome(self) -> dict:
+        """Render the buffered events as a trace-event JSON object."""
+        out: List[dict] = []
+        seen_threads = set()
+        for model, pid in sorted(self._models.items(), key=lambda kv: kv[1]):
+            out.append({"ph": "M", "pid": pid, "tid": 0,
+                        "name": "process_name",
+                        "args": {"name": model or "repro"}})
+        for ev in self.events:
+            pid = self._pid(ev.model)
+            if ev.lane is not None:
+                tid = _REQ_LANE + ev.lane
+                label = f"request {ev.lane}"
+            else:
+                tid = ev.device
+                label = f"device {ev.device}"
+            if (pid, tid) not in seen_threads:
+                seen_threads.add((pid, tid))
+                out.append({"ph": "M", "pid": pid, "tid": tid,
+                            "name": "thread_name",
+                            "args": {"name": label}})
+            rec = {"name": ev.name, "cat": ev.cat or "repro",
+                   "pid": pid, "tid": tid, "ts": _us(ev.t)}
+            if ev.dur > 0.0:
+                rec["ph"] = "X"
+                rec["dur"] = _us(ev.dur)
+            else:
+                rec["ph"] = "i"
+                rec["s"] = "t"
+            if ev.args:
+                rec["args"] = dict(ev.args)
+            out.append(rec)
+        return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+    def export_str(self) -> str:
+        return json.dumps(self.to_chrome(), sort_keys=True,
+                          separators=(",", ":")) + "\n"
+
+    def export(self, path) -> int:
+        """Write the trace to ``path``; returns the event count."""
+        with open(path, "w") as f:
+            f.write(self.export_str())
+        return len(self.events)

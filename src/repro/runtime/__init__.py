@@ -17,11 +17,13 @@ from repro.runtime.residency import (Entry, ResidencyManager, ResidencyStats,
                                      POLICIES)
 from repro.runtime.scheduler import (ExpertScheduler, PrefetchRequest,
                                      SchedulerStats)
-from repro.runtime.transfer import (TransferEngine, TransferRecord,
+from repro.runtime.transfer import (RecordLog, TransferAggregates,
+                                    TransferEngine, TransferRecord,
                                     coalesce_runs)
 
 __all__ = [
     "Entry", "ResidencyManager", "ResidencyStats", "POLICIES",
     "ExpertScheduler", "PrefetchRequest", "SchedulerStats",
-    "TransferEngine", "TransferRecord", "coalesce_runs",
+    "RecordLog", "TransferAggregates", "TransferEngine", "TransferRecord",
+    "coalesce_runs",
 ]

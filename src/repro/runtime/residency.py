@@ -33,7 +33,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, Hashable, Iterable, Optional
+from typing import Any, Callable, Dict, Hashable, Iterable, Optional
+
+from repro import obs
 
 POLICIES = ("lru", "lfu", "weighted")
 
@@ -99,6 +101,23 @@ class ResidencyManager:
         self._slots: "collections.OrderedDict[Hashable, Entry]" = \
             collections.OrderedDict()
         self.stats = ResidencyStats()
+        # keys this manager has evicted and not re-admitted since: lets
+        # the scheduler classify a demand re-fetch of one as an
+        # eviction-of-future-hit rather than a predictor miss
+        self._evicted_keys: set = set()
+        # observability context (simulated clock + device id), bound by
+        # the owning scheduler so evictions can be emitted at sim time
+        self._clock_fn: Optional[Callable[[], float]] = None
+        self._obs_device = 0
+
+    def bind_clock(self, clock_fn: Callable[[], float],
+                   device: int = 0) -> None:
+        """Attach the owning scheduler's simulated clock (event stamps)."""
+        self._clock_fn = clock_fn
+        self._obs_device = device
+
+    def was_evicted(self, key: Hashable) -> bool:
+        return key in self._evicted_keys
 
     # ------------------------------------------------------------- lookup --
     def __contains__(self, key: Hashable) -> bool:
@@ -134,6 +153,13 @@ class ResidencyManager:
         if self.pool is not None:
             self.pool.free(ent.slab)
         self.stats.evictions += 1
+        self._evicted_keys.add(victim)
+        if obs.enabled():
+            t = self._clock_fn() if self._clock_fn is not None else 0.0
+            obs.emit("residency.evict", t, cat="residency",
+                     device=self._obs_device,
+                     args={"key": repr(victim), "uses": ent.uses,
+                           "score": ent.score})
 
     def _pool_alloc(self, key: Hashable, nbytes: int):
         """A slab span for this payload, evicting (policy order) while the
@@ -187,6 +213,7 @@ class ResidencyManager:
                     raw_score=raw_score, prefetch=prefetch,
                     origin_prefetch=prefetch)
         self._slots[key] = ent
+        self._evicted_keys.discard(key)  # re-admitted: no longer a victim
         if self.pool is not None:
             ent.slab = self._pool_alloc(key, payload_nbytes(payload))
         self.stats.insertions += 1

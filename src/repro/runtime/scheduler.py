@@ -40,9 +40,11 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.offload import ExpertStore
+from repro.obs.stall import StallAttribution
 from repro.runtime.residency import Entry, ResidencyManager
-from repro.runtime.transfer import TransferEngine
+from repro.runtime.transfer import TransferEngine, TransferRecord
 
 
 @dataclasses.dataclass
@@ -120,13 +122,29 @@ class ExpertScheduler:
         self.calibrate = calibrate
         self.clock = 0.0
         self.stats = SchedulerStats()
+        # stall attribution is stats-level bookkeeping (always on, like
+        # stall_s itself): every residual wait is classified at wait_for
+        # time, and attribution.total_s accumulates in lockstep with
+        # stats.stall_s so the conservation invariant holds bitwise
+        self.attribution = StallAttribution()
+        # root-cause context for the next wait on a key, set by the
+        # demand paths where the cause is known (eviction re-fetch,
+        # progressive draft, cold predictor miss)
+        self._attr_ctx: Dict[Hashable, str] = {}
+        # per-(layer, expert) demand counts — the activation-frequency
+        # telemetry placement/replication planners consume
+        self.activation_freqs: Dict[Hashable, int] = {}
         self._queue: List[tuple] = []  # (-priority, seq, PrefetchRequest)
         self._queued: Dict[Hashable, PrefetchRequest] = {}
         # pending top-up completion per key: consulted by wait_for even if
         # the residency entry was evicted between demand_union and the wait
         # (the top-up's inflight record is under its own compound key)
         self._topup_ready: Dict[Hashable, float] = {}
+        self._topup_rec: Dict[Hashable, TransferRecord] = {}
         self._seq = itertools.count()
+        for r in self.residency:
+            if r is not None:
+                r.bind_clock(lambda: self.clock, engine.device_id)
 
     # ------------------------------------------------------------ helpers --
     @staticmethod
@@ -265,10 +283,19 @@ class ExpertScheduler:
         applies the upgrade once its modeled completion has passed."""
         store = self.stores[layer]
         prog = self.progressive and store.progressive_available(expert)
+        res = self._res(layer)
+        # classify the cold miss while the evidence is still visible:
+        # residency remembers keys it evicted, so a re-fetch of one is an
+        # eviction-of-future-hit, not a predictor miss
+        if res.was_evicted(k):
+            self._attr_ctx[k] = "eviction"
+        elif prog:
+            self._attr_ctx[k] = "draft_residual"
+        else:
+            self._attr_ctx[k] = "predictor_miss"
         payload, rec = self.engine.issue(
             store, k, expert, np.asarray(idx), self.clock, kind="demand",
             precision="draft" if prog else "full")
-        res = self._res(layer)
         res.put(k, payload, ready_t=rec.complete_t)
         ent = res.peek(k)
         ent.uses += 1  # consumed on arrival (miss already counted)
@@ -317,6 +344,24 @@ class ExpertScheduler:
         if topup is not None:  # survives eviction of the entry itself
             ready = max(ready, topup)
         stall = max(0.0, ready - self.clock)
+        self.activation_freqs[k] = self.activation_freqs.get(k, 0) + 1
+        # ---- stall attribution: classify BEFORE the clock moves, while
+        # `now` still means "when the demand arrived".  The governing
+        # record is whichever transfer gates the wait (base key vs top-up).
+        cause = self._attr_ctx.pop(k, None)
+        trec = self._topup_rec.pop(k, None)
+        gov = rec
+        if trec is not None and (gov is None
+                                 or trec.complete_t >= gov.complete_t):
+            gov = trec
+        segs = self.attribution.attribute(
+            stall, self.clock, record=gov, cause=cause,
+            origin_prefetch=(ent is not None and ent.origin_prefetch))
+        if stall > 0.0 and obs.enabled():
+            obs.emit("demand.stall", self.clock, cat="stall",
+                     dur=stall, device=self.engine.device_id,
+                     args={"key": repr(k), "stall_s": stall,
+                           "causes": segs, "was_miss": was_miss})
         if not was_miss:
             # prediction-covered demands count toward prefetch recall:
             # either a prediction STAGED the entry (origin_prefetch) or a
@@ -352,11 +397,19 @@ class ExpertScheduler:
                               np.asarray(ent.payload[0])):
             ent.refine = None
             self.stats.refines_dropped += 1
+            if obs.enabled():
+                obs.emit("refine.drop", self.clock, cat="refine",
+                         device=self.engine.device_id,
+                         args={"key": repr(k)})
             return
         if ready_t <= self.clock + 1e-12:
             self._res(layer).update_payload(k, full)
             ent.refine = None
             self.stats.refines_applied += 1
+            if obs.enabled():
+                obs.emit("refine.apply", self.clock, cat="refine",
+                         device=self.engine.device_id,
+                         args={"key": repr(k)})
         else:
             self.stats.draft_served += 1
 
@@ -432,6 +485,13 @@ class ExpertScheduler:
         ent.ready_t = max(ent.ready_t, rec.complete_t)
         self._topup_ready[k] = max(self._topup_ready.get(k, 0.0),
                                    rec.complete_t)
+        prev = self._topup_rec.get(k)
+        if prev is None or rec.complete_t >= prev.complete_t:
+            self._topup_rec[k] = rec
+        # a top-up stall means the predictor staged the expert but got
+        # its channel set wrong — a predictor miss unless a stronger
+        # cause (eviction re-fetch) is already pending on this key
+        self._attr_ctx.setdefault(k, "predictor_miss")
         self.stats.demand_topups += 1
         self.stats.topup_channels += int(missing.size)
         return ent.payload, False
@@ -462,6 +522,10 @@ class ExpertScheduler:
 
     def reset_stats(self) -> None:
         self.stats.reset()
+        # attribution accumulates in lockstep with stats.stall_s, so a
+        # stats reset must clear it too or conservation breaks
+        self.attribution.reset()
+        self.activation_freqs.clear()
         for r in self.residency:
             if r is not None:
                 r.reset_stats()

@@ -35,11 +35,13 @@ rather than the serial sum — distinct bandwidths, one clock.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Dict, Hashable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.offload import ExpertStore, LinkModel
 
 
@@ -71,10 +73,111 @@ class TransferRecord:
     disk_s: float = 0.0  # disk→host stage pipelined into the duration
     precision: str = "full"  # "full" | "draft" (progressive first pass)
     device: int = 0  # destination device (multi-GPU cluster; 0 otherwise)
+    h2d_s: float = 0.0  # pure host→device time before disk pipelining
+    seq: int = -1  # position in the append-order log (monotonic)
 
     @property
     def duration(self) -> float:
         return self.complete_t - self.start_t
+
+
+class RecordLog:
+    """Bounded ring of recent transfer records.
+
+    The full history used to live in an ever-growing list that cluster
+    engines aliased and telemetry re-filtered on every stats call.
+    Aggregates are now maintained incrementally (:class:`TransferAggregates`)
+    so the log only has to serve the tracer and tests: a ``deque`` keeps
+    the most recent ``maxlen`` records, ``total`` counts every append
+    ever, and ``since(seq)`` replaces ``records[i:]`` slicing (pipeline
+    per-token prefetch accounting) without assuming the log is unbounded.
+    """
+
+    def __init__(self, maxlen: int = 4096):
+        self._ring: collections.deque = collections.deque(maxlen=maxlen)
+        self.total = 0
+
+    def append(self, rec: TransferRecord) -> None:
+        rec.seq = self.total
+        self.total += 1
+        self._ring.append(rec)
+
+    def since(self, seq: int) -> List[TransferRecord]:
+        """Records appended at or after ``seq`` (still in the ring)."""
+        return [r for r in self._ring if r.seq >= seq]
+
+    @property
+    def dropped(self) -> int:
+        """Appends that have aged out of the ring."""
+        return self.total - len(self._ring)
+
+    def __iter__(self) -> Iterator[TransferRecord]:
+        return iter(self._ring)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def __getitem__(self, i: int) -> TransferRecord:
+        return self._ring[i]
+
+
+@dataclasses.dataclass
+class TransferAggregates:
+    """Per-engine rolling telemetry, updated at append/mutation time.
+
+    Replaces whole-log re-filtering: every ``issue`` adds its record
+    here, ``demote`` and demand preemption apply deltas, so stats are
+    O(1) regardless of run length and survive the ring dropping old
+    records.  ``tests/test_obs.py`` pins these equal to a full-log
+    recomputation.
+    """
+
+    transfers: int = 0
+    bytes: int = 0
+    busy_s: float = 0.0
+    demoted: int = 0
+    wasted_bytes: int = 0
+    disk_s: float = 0.0
+    draft_transfers: int = 0
+    refines: int = 0
+    direct: int = 0
+
+    def add(self, rec: TransferRecord) -> None:
+        self.transfers += 1
+        self.bytes += rec.nbytes
+        self.busy_s += rec.duration
+        self.disk_s += rec.disk_s
+        if rec.precision == "draft":
+            self.draft_transfers += 1
+        if rec.kind == "refine":
+            self.refines += 1
+        if rec.strategy == "direct":
+            self.direct += 1
+
+    def mark_demoted(self, rec: TransferRecord) -> None:
+        self.demoted += 1
+        self.wasted_bytes += rec.nbytes
+
+    def summary(self) -> dict:
+        n = self.transfers
+        return {
+            "transfers": n,
+            "bytes": self.bytes,
+            "busy_s": self.busy_s,
+            "demoted": self.demoted,
+            "wasted_bytes": self.wasted_bytes,
+            "disk_s": self.disk_s,
+            "draft_transfers": self.draft_transfers,
+            "refines": self.refines,
+            "direct_fraction": (self.direct / n) if n else 0.0,
+        }
+
+    def merged(self, other: "TransferAggregates") -> "TransferAggregates":
+        out = TransferAggregates()
+        for f in dataclasses.fields(TransferAggregates):
+            setattr(out, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return out
 
 
 class TransferEngine:
@@ -91,7 +194,8 @@ class TransferEngine:
         self._buffer_free = [0.0] * num_buffers
         self._link_free = 0.0
         self.inflight: Dict[Hashable, TransferRecord] = {}
-        self.records: List[TransferRecord] = []
+        self.records = RecordLog()
+        self.agg = TransferAggregates()
 
     # ------------------------------------------------------------ timeline -
     def active_count(self, now: float) -> int:
@@ -110,7 +214,23 @@ class TransferEngine:
         """Retire transfers completed by ``now`` (frees their buffers)."""
         done = [k for k, r in self.inflight.items() if r.complete_t <= now]
         out = [self.inflight.pop(k) for k in done]
+        if out and obs.enabled():
+            # emit at retire time: a retired record can no longer be
+            # mutated by demand preemption, so its span is final
+            for r in out:
+                obs.emit("transfer.complete", r.start_t, cat="transfer",
+                         dur=r.duration, device=r.device,
+                         args={"key": repr(r.key), "kind": r.kind,
+                               "nbytes": r.nbytes, "chunks": r.chunks,
+                               "strategy": r.strategy,
+                               "precision": r.precision,
+                               "demoted": r.demoted, "disk_s": r.disk_s})
         return out
+
+    def drain_events(self) -> List[TransferRecord]:
+        """Retire EVERYTHING still in flight (end of run) so the tracer
+        sees every transfer as a finalized span."""
+        return self.poll(float("inf"))
 
     def _chunking(self, channel_idx: np.ndarray, nbytes: int
                   ) -> Tuple[int, str, float]:
@@ -156,6 +276,7 @@ class TransferEngine:
             precision=precision)
         nbytes = info.nbytes
         chunks, strategy, duration = self._chunking(served, nbytes)
+        h2d_s = duration  # pure host→device time, pre disk pipelining
         if info.disk_s > 0.0:
             duration = self._pipelined(info.disk_s, duration, chunks)
         payload = (served, gate_cols, down_rows)
@@ -173,9 +294,18 @@ class TransferEngine:
         rec = TransferRecord(key=key, kind=kind, nbytes=nbytes, chunks=chunks,
                              strategy=strategy, enqueue_t=now, start_t=start,
                              complete_t=complete, disk_s=info.disk_s,
-                             precision=info.precision, device=self.device_id)
+                             precision=info.precision, device=self.device_id,
+                             h2d_s=h2d_s)
         self.inflight[key] = rec
         self.records.append(rec)
+        self.agg.add(rec)
+        if obs.enabled():
+            obs.emit("transfer.start", now, cat="transfer",
+                     device=self.device_id,
+                     args={"key": repr(key), "kind": kind, "nbytes": nbytes,
+                           "chunks": chunks, "strategy": strategy,
+                           "precision": info.precision,
+                           "start_t": start, "complete_t": complete})
         return payload, rec
 
     def _preempt_schedule(self, now: float, duration: float
@@ -202,7 +332,9 @@ class TransferEngine:
             wait = min(remaining, chunk_len)
             start += wait
             if wait < remaining:  # preempted: its tail resumes after us
+                old_dur = r.duration
                 r.complete_t += duration
+                self.agg.busy_s += r.duration - old_dur
         complete = start + duration
         pending = sorted((r for r in active
                           if r.start_t > now and r.kind != "demand"),
@@ -212,6 +344,8 @@ class TransferEngine:
             d = r.duration
             r.start_t = max(t, r.enqueue_t)
             r.complete_t = r.start_t + d
+            if r.duration != d:  # float re-lay drift: keep agg log-exact
+                self.agg.busy_s += r.duration - d
             t = r.complete_t
         self._link_free = max(t, complete)
         comps = sorted((r.complete_t for r in active), reverse=True)
@@ -227,37 +361,25 @@ class TransferEngine:
         rec = self.inflight.get(key)
         if rec is not None and not rec.demoted:
             rec.demoted = True
+            self.agg.mark_demoted(rec)
+            if obs.enabled():
+                obs.emit("transfer.demote", rec.enqueue_t, cat="transfer",
+                         device=rec.device,
+                         args={"key": repr(key), "nbytes": rec.nbytes})
             return True
         return False
 
     # ----------------------------------------------------------- telemetry -
-    def _own_records(self) -> List[TransferRecord]:
-        """This engine's transfers.  A cluster aliases every engine's
-        ``records`` to ONE shared chronological log, so per-engine
-        telemetry must filter by device (single-device engines only
-        ever hold their own records — the filter is a no-op there)."""
-        return [r for r in self.records if r.device == self.device_id]
-
+    # Rolling aggregates (updated at append/mutation time) replace the
+    # old whole-log re-filtering: O(1) per stats call, and correct even
+    # after the bounded RecordLog drops old records.  A cluster aliases
+    # every engine's ``records`` to ONE shared log, but ``agg`` stays
+    # per-engine, so device telemetry needs no filtering at all.
     def busy_seconds(self) -> float:
-        return sum(r.duration for r in self._own_records())
+        return self.agg.busy_s
 
     def wasted_bytes(self) -> int:
-        return sum(r.nbytes for r in self._own_records() if r.demoted)
+        return self.agg.wasted_bytes
 
     def summary(self) -> dict:
-        recs = self._own_records()
-        n = len(recs)
-        return {
-            "transfers": n,
-            "bytes": sum(r.nbytes for r in recs),
-            "busy_s": self.busy_seconds(),
-            "demoted": sum(1 for r in recs if r.demoted),
-            "wasted_bytes": self.wasted_bytes(),
-            "disk_s": sum(r.disk_s for r in recs),
-            "draft_transfers":
-                sum(1 for r in recs if r.precision == "draft"),
-            "refines": sum(1 for r in recs if r.kind == "refine"),
-            "direct_fraction":
-                (sum(1 for r in recs if r.strategy == "direct") / n)
-                if n else 0.0,
-        }
+        return self.agg.summary()

@@ -50,8 +50,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.common.config import ModelConfig
 from repro.core import floe_layer, predictor
+from repro.obs.metrics import (MetricsRegistry, request_metrics,
+                               scheduler_metrics)
 from repro.core.pipeline import FloEPipeline, StepMetrics
 from repro.models import attention as attn_lib
 from repro.models import blocks as blk
@@ -81,6 +84,12 @@ class SLORequest:
     preemptions: int = 0
     done: bool = False
     output: list = dataclasses.field(default_factory=list)
+    # latency breakdown: stalled vs computing seconds accrued over every
+    # decode step this request rode in (queue-wait is admitted_t -
+    # arrival_t) — the per-request TTFT/TPOT decomposition the metrics
+    # registry snapshots
+    stall_share_s: float = 0.0
+    compute_share_s: float = 0.0
 
     # private decode state (per-layer KV caches, batch dim 1)
     states: Optional[list] = dataclasses.field(default=None, repr=False)
@@ -397,6 +406,14 @@ class ServingController:
         req.admitted_t = now if req.admitted_t is None else req.admitted_t
         self.running.append(req)
         self.stats["swaps_in"] += 1
+        if obs.enabled():
+            obs.emit("request.admit", self.sched.clock, cat="serving",
+                     lane=req.uid, args={"uid": req.uid,
+                                         "queue_s": max(
+                                             req.admitted_t - req.arrival_t,
+                                             0.0)})
+            obs.emit("swap.in", self.sched.clock, cat="serving",
+                     args={"uid": req.uid})
         if self.cross_token and self.pipe.prefetch:
             h = np.asarray(tf._embed_inputs(
                 self.params,
@@ -420,6 +437,11 @@ class ServingController:
                 self.rejected.append(r)
                 self.stats["rejections"] += 1
                 self.tracker.remove(r.uid)
+                if obs.enabled():
+                    obs.emit("request.reject", now, cat="serving",
+                             lane=r.uid,
+                             args={"uid": r.uid,
+                                   "deadline_t": r.deadline_t})
             else:
                 keep.append(r)
         self.queue = keep
@@ -452,6 +474,12 @@ class ServingController:
         victim.preemptions += 1
         self.stats["preemptions"] += 1
         self.stats["swaps_out"] += 1
+        if obs.enabled():
+            obs.emit("request.preempt", now, cat="serving",
+                     lane=victim.uid,
+                     args={"uid": victim.uid, "for_uid": urgent.uid})
+            obs.emit("swap.out", now, cat="serving",
+                     args={"uid": victim.uid})
         self.queue.insert(0, victim)
         self.queue.sort(key=lambda r: (r.deadline_t, r.uid))
         self._admit(urgent, self.sched.clock)
@@ -486,6 +514,25 @@ class ServingController:
     def _finish(self, req: SLORequest) -> None:
         req.done = True
         req.finish_t = self.sched.clock
+        if obs.enabled():
+            args = {"uid": req.uid, "tokens": len(req.output),
+                    "stall_s": req.stall_share_s,
+                    "compute_s": req.compute_share_s,
+                    "attained": req.attained}
+            if req.ttft is not None:
+                args["ttft_s"] = req.ttft
+            if req.tpot is not None:
+                args["tpot_s"] = req.tpot
+            if req.admitted_t is not None:
+                args["queue_s"] = max(req.admitted_t - req.arrival_t, 0.0)
+            # request lifetime span on the request's own lane, plus the
+            # finish instant the metrics collector folds into histograms
+            if req.admitted_t is not None:
+                obs.emit("request.lifetime", req.arrival_t, cat="serving",
+                         dur=max(req.finish_t - req.arrival_t, 0.0),
+                         lane=req.uid, args={"uid": req.uid})
+            obs.emit("request.finish", req.finish_t, cat="serving",
+                     lane=req.uid, args=args)
 
     # ------------------------------------------------------------ sampling -
     def _sample_one(self, req: SLORequest, logits: np.ndarray) -> int:
@@ -571,6 +618,10 @@ class ServingController:
             if r.done:
                 continue  # static policy: finished rows ride along
             live += 1
+            # every live rider waits out the step's stalls and compute —
+            # the per-request latency breakdown accrues the full step
+            r.stall_share_s += metrics.stall_s
+            r.compute_share_s += metrics.compute_s
             r.output.append(tok)
             if tok == self.eos or len(r.output) >= r.max_new_tokens:
                 self._finish(r)
@@ -579,6 +630,11 @@ class ServingController:
         self.metrics.append(metrics)
         pipe.metrics.append(metrics)
         dt = now - t0
+        if obs.enabled():
+            obs.emit("serving.step", t0, cat="serving", dur=dt,
+                     args={"batch": n, "live": live,
+                           "stall_s": metrics.stall_s,
+                           "compute_s": metrics.compute_s})
         self.stats["steps"] += 1
         self.stats["tokens"] += live
         self.stats["busy_s"] += dt
@@ -948,3 +1004,21 @@ class ServingController:
             "train_rounds": self.train_rounds,
             "calibration_scale": self.calibrator.scale,
         }
+
+    def metrics_snapshot(self) -> dict:
+        """Deterministic flat metrics snapshot (``repro.obs`` registry):
+        scheduler counters, stall attribution by cause (with the
+        conservation check), prefetch precision/recall, per-expert
+        activation frequencies, request TTFT/TPOT histograms broken into
+        queue-wait / stall / compute, and the serving control-plane
+        counters."""
+        reg = MetricsRegistry()
+        scheduler_metrics(reg, self.sched)
+        request_metrics(reg, self.completed)
+        for k, v in self.stats.items():
+            reg.counter(f"serving.{k}").inc(v)
+        reg.counter("serving.completed").inc(len(self.completed))
+        reg.counter("serving.rejected_total").inc(len(self.rejected))
+        reg.gauge("serving.slo_attainment").set(self.slo_attainment())
+        reg.gauge("serving.prediction_recall").set(self.prediction_recall())
+        return reg.snapshot()

@@ -21,6 +21,7 @@ import collections
 import dataclasses
 from typing import Dict, Hashable, List, Optional, Tuple
 
+from repro import obs
 from repro.checkpoint.io import ShardReader, ShardWriter
 
 
@@ -130,6 +131,15 @@ class HostTier:
         self._nbytes: Dict[str, int] = {}
         self.bytes_in_use = 0
         self.stats = HostStats()
+        # simulated clock for event stamps, bound by the owning pipeline
+        # (a bare host tier without a runtime emits at t=0)
+        self._clock_fn = None
+
+    def bind_clock(self, clock_fn) -> None:
+        self._clock_fn = clock_fn
+
+    def _now(self) -> float:
+        return self._clock_fn() if self._clock_fn is not None else 0.0
 
     def __contains__(self, key: str) -> bool:
         return key in self._records
@@ -172,6 +182,9 @@ class HostTier:
             f"{key} in neither host nor disk tier"
         rec, disk_s = self.disk.load(key)
         self.admit(key, rec, record_nbytes(rec))
+        if obs.enabled():
+            obs.emit("host.miss", self._now(), cat="tier",
+                     args={"key": key, "disk_s": disk_s})
         return rec, disk_s
 
 

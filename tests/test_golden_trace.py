@@ -2,13 +2,17 @@
 
 One fixed-seed scenario — prefetches at mixed confidence/depth, clock
 advances, demand fetches, reconcile cancellation/demotion, union demands
-with top-ups — is serialized event-for-event (every transfer record's
-timing, sizing, and strategy, plus the final stats) and compared against
-``tests/data/golden_trace.json``.
+with top-ups — is run with a ``repro.obs`` Tracer attached, and the
+UNIFIED EVENT STREAM (every ``transfer.start``/``transfer.complete``/
+``demand.stall``/``residency.evict``/... the subsystems emit, plus the
+final stats) is compared against ``tests/data/golden_trace.json``.
 
-A timing refactor that shifts ANY event must regenerate the file
-deliberately (run with ``GOLDEN_REGEN=1``) and justify the diff in
-review, instead of drifting silently.
+Pinning the bus output rather than raw engine records means the pin
+covers both the timing model AND the instrumentation: a refactor that
+shifts any event time, drops an emit site, or changes an attribution
+segment must regenerate the file deliberately (run with
+``GOLDEN_REGEN=1``) and justify the diff in review, instead of drifting
+silently.
 """
 import json
 import os
@@ -17,6 +21,7 @@ import pathlib
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.offload import LinkModel, build_expert_store
 from repro.runtime import ExpertScheduler, ResidencyManager, TransferEngine
 
@@ -24,7 +29,7 @@ GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_trace.json"
 _ROUND = 12  # decimal places: arithmetic is deterministic, repr is not
 
 
-def _scenario():
+def _scenario(tracer=None):
     rng = np.random.default_rng(1234)
     e, d, f = 6, 16, 32
     moe = {
@@ -39,54 +44,70 @@ def _scenario():
     sched = ExpertScheduler([store], res, eng, lookahead=2,
                             depth_discount=0.5)
 
-    # mixed-confidence speculation, one deep
-    sched.enqueue_prefetch(0, 0, np.arange(12), 0.9, depth=1)
-    sched.enqueue_prefetch(0, 1, np.arange(4, 20), 0.4, depth=1)
-    sched.enqueue_prefetch(0, 2, np.arange(8), 0.8, depth=3)
-    sched.pump()
-    sched.advance(2e-4)
+    consumers = [tracer] if tracer is not None else []
+    # a fresh bus per run: event seq numbers restart at 0, so two runs
+    # in one process produce identical streams
+    with obs.use_bus(obs.EventBus()), obs.consumer(*consumers):
+        # mixed-confidence speculation, one deep
+        sched.enqueue_prefetch(0, 0, np.arange(12), 0.9, depth=1)
+        sched.enqueue_prefetch(0, 1, np.arange(4, 20), 0.4, depth=1)
+        sched.enqueue_prefetch(0, 2, np.arange(8), 0.8, depth=3)
+        sched.pump()
+        sched.advance(2e-4)
 
-    # a straggler prediction that never reaches the link...
-    sched.enqueue_prefetch(0, 4, np.arange(24), 0.3, depth=2)
-    # ...true router: cancels queued 4, keeps 0/1; demand 3 (cold miss)
-    sched.reconcile(0, [0, 1, 3])
-    payload, miss = sched.demand_async(0, 3, lambda: np.arange(0, 32, 3))
-    sched.wait_for(0, 3, was_miss=miss)
+        # a straggler prediction that never reaches the link...
+        sched.enqueue_prefetch(0, 4, np.arange(24), 0.3, depth=2)
+        # ...true router: cancels queued 4, keeps 0/1; demand 3 (cold miss)
+        sched.reconcile(0, [0, 1, 3])
+        payload, miss = sched.demand_async(0, 3, lambda: np.arange(0, 32, 3))
+        sched.wait_for(0, 3, was_miss=miss)
 
-    # union demands: full hit on 0, top-up on 1, promoted-then-demand
-    (idx0, _, _), m0 = sched.demand_union(0, 0, np.arange(6))
-    sched.wait_for(0, 0, was_miss=m0)
-    (idx1, _, _), m1 = sched.demand_union(0, 1, np.arange(0, 24))
-    sched.wait_for(0, 1, was_miss=m1)
-    sched.advance(5e-4)
+        # union demands: full hit on 0, top-up on 1, promoted-then-demand
+        (idx0, _, _), m0 = sched.demand_union(0, 0, np.arange(6))
+        sched.wait_for(0, 0, was_miss=m0)
+        (idx1, _, _), m1 = sched.demand_union(0, 1, np.arange(0, 24))
+        sched.wait_for(0, 1, was_miss=m1)
+        sched.advance(5e-4)
 
-    # second round: re-speculate, demote in flight
-    sched.enqueue_prefetch(0, 2, np.arange(16), 0.7, depth=1)
-    sched.pump()
-    sched.reconcile(0, [0])
-    sched.advance(1.0)
+        # second round: re-speculate, demote in flight
+        sched.enqueue_prefetch(0, 2, np.arange(16), 0.7, depth=1)
+        sched.pump()
+        sched.reconcile(0, [0])
+        sched.advance(1.0)
+        # flush transfer.complete spans for anything still on the link
+        eng.drain_events()
     return sched, eng
 
 
+def _round(v):
+    if isinstance(v, float):
+        return round(v, _ROUND)
+    if isinstance(v, dict):
+        return {k: _round(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_round(x) for x in v]
+    return v
+
+
 def _trace():
-    sched, eng = _scenario()
+    tracer = obs.Tracer()
+    sched, eng = _scenario(tracer)
     events = []
-    for r in eng.records:
+    for ev in tracer.events:
         events.append({
-            "key": repr(r.key),
-            "kind": r.kind,
-            "nbytes": r.nbytes,
-            "chunks": r.chunks,
-            "strategy": r.strategy,
-            "enqueue_t": round(r.enqueue_t, _ROUND),
-            "start_t": round(r.start_t, _ROUND),
-            "complete_t": round(r.complete_t, _ROUND),
-            "demoted": r.demoted,
+            "seq": ev.seq,
+            "t": round(ev.t, _ROUND),
+            "name": ev.name,
+            "cat": ev.cat,
+            "dur": round(ev.dur, _ROUND),
+            "device": ev.device,
+            "args": _round(ev.args or {}),
         })
     s = sched.stats
     stats = {k: (round(v, _ROUND) if isinstance(v, float) else v)
              for k, v in vars(s).items()}
     return {"events": events, "stats": stats,
+            "attribution": _round(sched.attribution.snapshot()),
             "clock": round(sched.clock, _ROUND)}
 
 
@@ -97,11 +118,12 @@ def test_golden_trace_event_for_event():
         GOLDEN.write_text(json.dumps(got, indent=1) + "\n")
     want = json.loads(GOLDEN.read_text())
     assert len(got["events"]) == len(want["events"]), \
-        "transfer count changed — regenerate deliberately (GOLDEN_REGEN=1)"
+        "event count changed — regenerate deliberately (GOLDEN_REGEN=1)"
     for i, (g, w) in enumerate(zip(got["events"], want["events"])):
         assert g == w, (f"event {i} drifted:\n got {g}\nwant {w}\n"
                         f"(GOLDEN_REGEN=1 to accept)")
     assert got["stats"] == want["stats"]
+    assert got["attribution"] == want["attribution"]
     assert got["clock"] == want["clock"]
 
 
@@ -111,10 +133,36 @@ def test_golden_trace_is_deterministic():
     assert _trace() == _trace()
 
 
+def test_tracer_export_is_byte_identical():
+    """Two identical simulated runs render byte-identical Perfetto JSON
+    (sorted keys, sub-ns-rounded timestamps, seq-ordered events)."""
+    t1, t2 = obs.Tracer(), obs.Tracer()
+    _scenario(t1)
+    _scenario(t2)
+    assert t1.export_str() == t2.export_str()
+    assert len(t1) > 0
+
+
+def test_observation_does_not_perturb_the_run():
+    """Tracing is observation-only: the timeline with a consumer
+    attached is bitwise the timeline without one."""
+    sched_on, eng_on = _scenario(obs.Tracer())
+    sched_off, eng_off = _scenario(None)
+    on = [(r.key, r.kind, r.start_t, r.complete_t, r.demoted)
+          for r in eng_on.records]
+    off = [(r.key, r.kind, r.start_t, r.complete_t, r.demoted)
+           for r in eng_off.records]
+    assert on == off
+    assert vars(sched_on.stats) == vars(sched_off.stats)
+    assert sched_on.clock == sched_off.clock
+
+
 def test_golden_trace_covers_new_paths():
     """The pinned scenario must exercise cancellation, demotion, top-up,
-    and demand traffic — so drift in any of those paths trips the pin."""
-    sched, eng = _scenario()
+    demand traffic, AND the emit sites — so drift in any of those paths
+    trips the pin."""
+    tracer = obs.Tracer()
+    sched, eng = _scenario(tracer)
     s = sched.stats
     assert s.prefetch_cancelled >= 1
     assert s.prefetch_demoted >= 1
@@ -122,3 +170,9 @@ def test_golden_trace_covers_new_paths():
     assert s.demand_fetches >= 1
     assert any(r.kind == "demand" for r in eng.records)
     assert any(r.demoted for r in eng.records)
+    names = {ev.name for ev in tracer.events}
+    assert "transfer.start" in names
+    assert "transfer.complete" in names
+    assert "demand.stall" in names
+    # attribution conservation holds on the pinned scenario exactly
+    assert sched.attribution.check_conservation(s.stall_s)

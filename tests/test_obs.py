@@ -1,0 +1,238 @@
+"""repro.obs — bus semantics, Perfetto export validity, metrics
+determinism, and the bounded-transfer-telemetry refactor.
+
+Covers the observability acceptance criteria directly:
+
+* with no consumer attached the bus is disabled and emitting is a no-op
+  (the zero-overhead guard emit sites rely on),
+* the exported trace is valid Chrome/Perfetto trace-event JSON (every
+  record carries ``name``/``ph``/``pid``/``tid``; spans carry ``dur``,
+  instants carry ``s``; metadata names processes and threads),
+* export is byte-deterministic across identical runs,
+* :class:`TransferAggregates` maintained incrementally at append /
+  demote / preemption time equal a recomputation over the full record
+  log (the rolling-aggregate refactor of the unbounded-telemetry fix),
+* :class:`RecordLog` stays bounded while ``total``/``since`` keep
+  absolute positions.
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.offload import LinkModel, build_expert_store
+from repro.runtime import (ExpertScheduler, RecordLog, ResidencyManager,
+                           TransferEngine, TransferRecord)
+
+
+def _store(e=4, d=16, f=32, seed=0):
+    rng = np.random.default_rng(seed)
+    moe = {
+        "we_gate": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_up": jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32) * 0.1,
+        "we_down": jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32) * 0.1,
+    }
+    thr = np.full((e,), 0.5, np.float32)
+    return build_expert_store(moe, thr, bits=2, group=16)
+
+
+def _drive(seed=7, n_ops=60, tracer=None):
+    """Random but reproducible schedule with optional consumers."""
+    store = _store(seed=1)
+    res = [ResidencyManager(3, policy="weighted")]
+    eng = TransferEngine(LinkModel(), num_buffers=2, chunk_channels=8)
+    sched = ExpertScheduler([store], res, eng, lookahead=2)
+    rng = np.random.default_rng(seed)
+    f = store.d_ff
+    consumers = [tracer] if tracer is not None else []
+    with obs.use_bus(obs.EventBus()), obs.consumer(*consumers):
+        for _ in range(n_ops):
+            op = rng.integers(0, 5)
+            e = int(rng.integers(0, store.num_experts))
+            idx = np.sort(rng.choice(f, size=int(rng.integers(1, f // 2)),
+                                     replace=False))
+            if op == 0:
+                sched.enqueue_prefetch(0, e, idx, float(rng.random()),
+                                       depth=int(rng.integers(1, 3)))
+            elif op == 1:
+                sched.pump()
+            elif op == 2:
+                sched.advance(float(rng.random()) * 1e-3)
+            elif op == 3:
+                payload, miss = sched.demand_async(0, e, lambda i=idx: i)
+                sched.wait_for(0, e, was_miss=miss)
+            else:
+                sched.reconcile(0, [int(x) for x in
+                                    rng.choice(store.num_experts, size=2,
+                                               replace=False)])
+        sched.advance(1.0)
+        eng.drain_events()
+    return sched, eng
+
+
+# ------------------------------------------------------------------- bus ---
+def test_bus_disabled_without_consumers():
+    with obs.use_bus(obs.EventBus()) as bus:
+        assert not obs.enabled()
+        obs.emit("anything", 0.0)  # no consumer: silently dropped
+        seen = []
+        with obs.consumer(obs.subscribe(lambda ev: seen.append(ev))) as c:
+            assert obs.enabled()
+            obs.emit("ping", 1.5, cat="test", args={"x": 1})
+        assert not obs.enabled()
+        assert [e.name for e in seen] == ["ping"]
+        assert seen[0].t == 1.5 and seen[0].args == {"x": 1}
+        assert bus.consumers == []
+
+
+def test_scope_stamps_model():
+    seen = []
+    with obs.use_bus(obs.EventBus()):
+        with obs.consumer(obs.subscribe(lambda ev: seen.append(ev))):
+            obs.emit("a", 0.0)
+            with obs.scope("llama"):
+                obs.emit("b", 0.0)
+                with obs.scope("qwen"):
+                    obs.emit("c", 0.0)
+            obs.emit("d", 0.0)
+    assert [e.model for e in seen] == ["", "llama", "qwen", ""]
+    assert [e.seq for e in seen] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------- tracer ---
+def test_trace_export_is_valid_trace_event_json(tmp_path):
+    tracer = obs.Tracer()
+    _drive(tracer=tracer)
+    path = tmp_path / "trace.json"
+    n = tracer.export(path)
+    assert n == len(tracer.events) > 0
+    doc = json.loads(path.read_text())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs
+    phases = set()
+    for rec in evs:
+        assert {"name", "ph", "pid", "tid"} <= set(rec)
+        phases.add(rec["ph"])
+        if rec["ph"] == "X":
+            assert rec["dur"] >= 0 and "ts" in rec
+        elif rec["ph"] == "i":
+            assert rec["s"] == "t" and "ts" in rec
+        else:
+            assert rec["ph"] == "M"
+            assert rec["name"] in ("process_name", "thread_name")
+    assert {"M", "X", "i"} <= phases
+    # every (pid, tid) that carries events is named by metadata
+    named = {(r["pid"], r["tid"]) for r in evs
+             if r["ph"] == "M" and r["name"] == "thread_name"}
+    used = {(r["pid"], r["tid"]) for r in evs if r["ph"] != "M"}
+    assert used <= named
+
+
+def test_trace_export_byte_deterministic():
+    t1, t2 = obs.Tracer(), obs.Tracer()
+    _drive(seed=11, tracer=t1)
+    _drive(seed=11, tracer=t2)
+    assert len(t1) > 0
+    assert t1.export_str() == t2.export_str()
+
+
+def test_observation_only_no_timeline_change():
+    s_on, e_on = _drive(seed=13, tracer=obs.Tracer())
+    s_off, e_off = _drive(seed=13, tracer=None)
+    assert vars(s_on.stats) == vars(s_off.stats)
+    assert s_on.clock == s_off.clock
+    assert [(r.key, r.start_t, r.complete_t) for r in e_on.records] == \
+           [(r.key, r.start_t, r.complete_t) for r in e_off.records]
+
+
+# --------------------------------------------------------------- metrics ---
+def test_metrics_snapshot_deterministic_and_sorted():
+    c1, c2 = obs.MetricsCollector(), obs.MetricsCollector()
+    _drive(seed=17, tracer=c1)
+    _drive(seed=17, tracer=c2)
+    s1, s2 = c1.registry.snapshot(), c2.registry.snapshot()
+    assert s1 == s2
+    assert list(s1) == sorted(s1)
+    assert s1["events_total"] > 0
+    assert s1.get("stall.conservation_violations", 0) == 0
+
+
+def test_histogram_percentiles_nearest_rank():
+    h = obs.Histogram()
+    for v in [5.0, 1.0, 3.0, 2.0, 4.0]:
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 5 and s["sum"] == 15.0
+    assert s["p50"] == 3.0 and s["p99"] == 5.0 and s["max"] == 5.0
+    assert obs.Histogram().summary()["count"] == 0
+
+
+def test_scheduler_metrics_fold():
+    sched, _ = _drive(seed=19)
+    reg = obs.scheduler_metrics(obs.MetricsRegistry(), sched)
+    snap = reg.snapshot()
+    assert snap["sched.demand_fetches"] == sched.stats.demand_fetches
+    assert snap["stall.conservation_ok"] == 1.0
+    assert any(k.startswith("experts.freq.") for k in snap)
+    assert abs(snap["stall.attributed_s"] -
+               sched.attribution.attributed_s()) < 1e-12
+
+
+# --------------------------------- bounded telemetry (rolling aggregates) --
+def _agg_from_log(records):
+    """Recompute the rolling aggregates from the raw record log."""
+    agg = {"transfers": 0, "bytes": 0, "busy_s": 0.0, "demoted": 0,
+           "wasted_bytes": 0, "disk_s": 0.0}
+    for r in records:
+        agg["transfers"] += 1
+        agg["bytes"] += r.nbytes
+        agg["busy_s"] += r.duration
+        agg["disk_s"] += r.disk_s
+        if r.demoted:
+            agg["demoted"] += 1
+            agg["wasted_bytes"] += r.nbytes
+    return agg
+
+
+def test_aggregates_equal_full_log():
+    """Incremental aggregates (append/demote/preemption deltas) must
+    equal a recomputation over the full record log — the invariant the
+    unbounded-list fix rests on."""
+    _, eng = _drive(seed=23)
+    assert eng.records.dropped == 0  # full log still in the ring
+    want = _agg_from_log(eng.records)
+    assert eng.agg.transfers == want["transfers"]
+    assert eng.agg.bytes == want["bytes"]
+    assert eng.agg.demoted == want["demoted"]
+    assert eng.agg.wasted_bytes == want["wasted_bytes"]
+    assert abs(eng.agg.busy_s - want["busy_s"]) <= \
+        1e-9 * max(1.0, want["busy_s"])
+    assert abs(eng.agg.disk_s - want["disk_s"]) <= 1e-9
+    assert abs(eng.busy_seconds() - want["busy_s"]) <= \
+        1e-9 * max(1.0, want["busy_s"])
+
+
+def test_record_log_stays_bounded():
+    log = RecordLog(maxlen=8)
+    recs = [TransferRecord(key=(0, i), kind="prefetch", nbytes=1, chunks=1,
+                           strategy="packed", enqueue_t=0.0, start_t=0.0,
+                           complete_t=1.0) for i in range(20)]
+    for r in recs:
+        log.append(r)
+    assert len(log) == 8
+    assert log.total == 20
+    assert log.dropped == 12
+    assert [r.seq for r in log] == list(range(12, 20))
+    assert [r.seq for r in log.since(15)] == [15, 16, 17, 18, 19]
+    assert log[-1].seq == 19
+
+
+def test_summary_matches_aggregates():
+    _, eng = _drive(seed=29)
+    s = eng.summary()
+    assert s["transfers"] == eng.agg.transfers
+    assert s["bytes"] == eng.agg.bytes
+    assert s["demoted"] == eng.agg.demoted
+    assert s["wasted_bytes"] == eng.agg.wasted_bytes
