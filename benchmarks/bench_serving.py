@@ -16,6 +16,12 @@ A second section compares prefetch recall with the router-reuse fallback
 vs the online-trained residual inter-predictor: two controllers serve an
 identical two-phase workload; one trains during phase 1, and phase-2
 recall (stats reset at the boundary) is compared.
+
+A third section drives the controller from committed ``repro.workload``
+scenarios (``examples/scenarios/``): per-tenant SLO attainment under the
+diurnal + flash-crowd traffic mixes, and the stall-cause composition
+shift a drifting router distribution induces (total-variation distance
+between the attribution mix of the run's two halves).
 """
 from __future__ import annotations
 
@@ -46,25 +52,34 @@ def _setup():
     return _CACHE["m"]
 
 
+_uid_base = 0  # bench-wide uid sequence — all uids come from the generator
+
+
 def _workload(cfg, n: int, rate: float, slo_ms: float, seed: int,
               max_new: int = 6, t0: float = 0.0, jitter: bool = False):
-    """Poisson arrivals; ``jitter`` draws heterogeneous output lengths in
-    [max(2, max_new // 3), max_new] — mixed lengths are exactly where
-    run-to-completion batching loses (short requests wait on long batch
-    mates, queued requests wait on whole batches)."""
-    from repro.serving import SLORequest
-    rng = np.random.default_rng(seed)
-    reqs = []
-    t = t0
-    for i in range(n):
-        t += float(rng.exponential(1.0 / rate))
-        mn = (int(rng.integers(max(2, max_new // 3), max_new + 1))
-              if jitter else max_new)
-        reqs.append(SLORequest(
-            uid=seed * 1000 + i,
-            prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
-            max_new_tokens=mn, slo_ms=slo_ms, arrival_t=t,
-            temperature=0.8))
+    """Poisson arrivals via the ``repro.workload`` generator; ``jitter``
+    draws heterogeneous output lengths in [max(2, max_new // 3), max_new]
+    — mixed lengths are exactly where run-to-completion batching loses
+    (short requests wait on long batch mates, queued requests wait on
+    whole batches).  uids are allocated centrally from a bench-wide
+    sequence (the old ``seed * 1000 + i`` scheme collided at n >= 1000;
+    the controller now rejects duplicates at submit)."""
+    global _uid_base
+    from repro.workload import (ArrivalSpec, ScenarioSpec, TenantSpec,
+                                generate_requests)
+    spec = ScenarioSpec(
+        name=f"sweep_seed{seed}", seed=seed, n_requests=n,
+        arrival=ArrivalSpec(kind="poisson", rate=rate),
+        tenants=(TenantSpec(
+            name="bench", slo_ms=slo_ms, prompt_len_min=8,
+            prompt_len_max=8,
+            max_new_min=max(2, max_new // 3) if jitter else max_new,
+            max_new_max=max_new, temperature=0.8, session_len=1,
+            router_bias=0.9, bias_seed=seed),))
+    reqs = generate_requests(spec, cfg.vocab_size, uid_base=_uid_base)
+    _uid_base += len(reqs)
+    for r in reqs:
+        r.arrival_t += t0
     return reqs
 
 
@@ -147,3 +162,64 @@ def run(csv_rows: list, n_requests: int = 8):
     csv_rows.append((
         "serving/prefetch_recall/trained_vs_fallback", 0.0,
         f"delta={delta:+.3f} (acceptance: > 0)"))
+
+    # ---- traffic scenarios (committed repro.workload specs) --------------
+    global _uid_base
+    import os
+    from repro.workload import ScenarioSpec, generate_requests
+    scen_dir = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "examples", "scenarios")
+
+    # Per-tenant SLO attainment under the diurnal and flash-crowd mixes:
+    # one controller per scenario, tenants reported separately (tight
+    # chat SLOs vs relaxed long-context SLOs attain differently).
+    for fname in ("diurnal_mix.json", "flash_crowd.json"):
+        spec = ScenarioSpec.load(os.path.join(scen_dir, fname))
+        ctl = _controller(cfg, params, thr, device, link,
+                          policy="slo", online=False)
+        reqs = generate_requests(spec, cfg.vocab_size, uid_base=_uid_base)
+        _uid_base += len(reqs)
+        for r in reqs:
+            ctl.submit(r)
+        ctl.run()
+        rep = ctl.report()
+        for tname, t in ctl.tenant_report().items():
+            csv_rows.append((
+                f"serving/scenario/{spec.name}/tenant={tname}", 0.0,
+                f"attainment={t['slo_attainment']:.0%} "
+                f"completed={t['completed']} rejected={t['rejected']} "
+                f"ttft={t['ttft_ms_mean']:.0f}ms"))
+        csv_rows.append((
+            f"serving/scenario/{spec.name}", 0.0,
+            f"slo={rep['slo_attainment']:.0%} "
+            f"tps={rep['tokens_per_s']:.1f} "
+            f"preempt={rep['preemptions']} rej={rep['rejected']} "
+            f"(acceptance: per-tenant rows recorded)"))
+
+    # Stall-cause composition shift under drift: serve the drifting
+    # scenario's two halves on fresh controllers and compare their
+    # normalized stall-attribution mixes (total-variation distance).
+    # The rotated router distribution stresses different experts late
+    # in the run, so the attribution composition must move.
+    spec = ScenarioSpec.load(os.path.join(scen_dir, "drift_rotate.json"))
+    reqs = generate_requests(spec, cfg.vocab_size, uid_base=_uid_base)
+    _uid_base += len(reqs)
+    mixes = []
+    for half in (reqs[:len(reqs) // 2], reqs[len(reqs) // 2:]):
+        ctl = _controller(cfg, params, thr, device, link,
+                          policy="slo", online=False)
+        for r in half:
+            ctl.submit(r)
+        ctl.run()
+        causes = dict(ctl.sched.attribution.snapshot()["causes"])
+        total = sum(causes.values())
+        mixes.append({k: v / total for k, v in causes.items()}
+                     if total > 0 else {})
+    keys = set(mixes[0]) | set(mixes[1])
+    tv = 0.5 * sum(abs(mixes[0].get(k, 0.0) - mixes[1].get(k, 0.0))
+                   for k in keys)
+    tops = [max(m, key=m.get) if m else "none" for m in mixes]
+    csv_rows.append((
+        "serving/scenario/drift_rotate/shift", 0.0,
+        f"tv_distance={tv:.3f} early_top={tops[0]} late_top={tops[1]} "
+        f"causes={len(keys)} (acceptance: tv > 0 under drift)"))

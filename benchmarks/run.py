@@ -23,7 +23,12 @@ across PRs.
   multimodel -> bench_multimodel   (fleet: two models over one shared
                                     host/disk tier vs isolation — stall
                                     no worse, host bytes strictly lower,
-                                    footprint-aware admission)
+                                    footprint-aware admission; scenario-
+                                    driven fleet serving)
+  fleetscale -> bench_fleetscale   (nightly scale lane: 2 models x
+                                    2 devices x 10k scenario requests —
+                                    sub-quadratic intake, conservation
+                                    at scale; NOT in the push/PR loop)
   roofline-> roofline              (dry-run derived terms, if present)
 
 ``derived`` is recorded in the JSON as a NUMBER whenever it parses as
@@ -109,9 +114,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cluster, bench_compression,
-                            bench_e2e_decode, bench_memory,
-                            bench_multimodel, bench_predictor,
-                            bench_prefetch, bench_sensitivity, bench_serving,
+                            bench_e2e_decode, bench_fleetscale,
+                            bench_memory, bench_multimodel,
+                            bench_predictor, bench_prefetch,
+                            bench_sensitivity, bench_serving,
                             bench_sparse_kernel, bench_transfer, roofline)
 
     suites = [
@@ -126,6 +132,7 @@ def main() -> None:
         ("memory", bench_memory.run),
         ("cluster", bench_cluster.run),
         ("multimodel", bench_multimodel.run),
+        ("fleetscale", bench_fleetscale.run),
         ("roofline", roofline.run),
     ]
     from repro import obs

@@ -247,25 +247,52 @@ class Deployment:
         return out
 
     # ----------------------------------------------------------- serving --
+    _uid_seq: int = 0  # next uid for synthesized/scenario requests
+
     def serve(self, requests: Optional[list] = None, *,
-              n_requests: int = 4, rate: float = 2.0, max_new: int = 16,
-              prompt_len: int = 8, seed: int = 0) -> list:
-        """Run the SLO control plane: explicit ``SLORequest``s, or a
-        Poisson arrival stream synthesized from the spec's defaults."""
+              scenario=None, n_requests: int = 4, rate: float = 2.0,
+              max_new: int = 16, prompt_len: int = 8, seed: int = 0) -> list:
+        """Run the SLO control plane over one of three request sources:
+        explicit ``SLORequest``s, a ``repro.workload`` scenario (a
+        :class:`~repro.workload.ScenarioSpec` or a path to its JSON),
+        or a Poisson arrival stream synthesized from the spec's
+        defaults.  Synthesized/scenario uids are allocated from a
+        per-deployment sequence so repeated ``serve()`` calls never
+        collide (the controller rejects duplicate uids), and their
+        arrival times are offsets rebased onto the controller's
+        current clock — a later ``serve()`` (or a fleet sibling having
+        advanced the lockstep clock) must not make every deadline
+        pre-expired.  Explicit ``requests`` keep their absolute
+        times."""
         if self.controller is None:
             raise SpecError("serving",
                             f"deployment {self.name!r} has no ServingSpec")
+        if scenario is not None and requests is not None:
+            raise SpecError("serving",
+                            "pass either requests or scenario, not both")
         from repro.serving import SLORequest
-        if requests is None:
+        t0 = self.controller.sched.clock
+        if scenario is not None:
+            from repro.workload import ScenarioSpec, generate_requests
+            if not isinstance(scenario, ScenarioSpec):
+                scenario = ScenarioSpec.load(scenario)
+            requests = generate_requests(scenario, self.cfg.vocab_size,
+                                         uid_base=self._uid_seq)
+            self._uid_seq += len(requests)
+            for r in requests:
+                r.arrival_t += t0
+        elif requests is None:
             rng = np.random.default_rng(seed)
             slo_ms = self.spec.serving.slo_ms
-            t, requests = 0.0, []
-            for i in range(n_requests):
+            t, requests = t0, []
+            for _ in range(n_requests):
                 t += float(rng.exponential(1.0 / max(rate, 1e-6)))
                 requests.append(SLORequest(
-                    i, rng.integers(0, self.cfg.vocab_size,
-                                    prompt_len).astype(np.int32),
+                    self._uid_seq,
+                    rng.integers(0, self.cfg.vocab_size,
+                                 prompt_len).astype(np.int32),
                     max_new_tokens=max_new, slo_ms=slo_ms, arrival_t=t))
+                self._uid_seq += 1
         for r in requests:
             self.controller.submit(r)
         return self.controller.run()

@@ -143,6 +143,10 @@ def main():
                     help="floe-serve: concurrent batch slots")
     ap.add_argument("--rate", type=float, default=2.0,
                     help="floe-serve: mean arrivals per modeled second")
+    ap.add_argument("--scenario", default="",
+                    help="floe-serve: drive the run from a repro.workload "
+                         "ScenarioSpec JSON (see examples/scenarios/; "
+                         "overrides --requests/--rate)")
     ap.add_argument("--slo_ms", type=float, default=3000.0,
                     help="floe-serve: per-request latency SLO")
     ap.add_argument("--policy", choices=["slo", "static"], default="slo")
@@ -231,8 +235,11 @@ def run_offloaded(args, spec):
     print_plan(dep)
 
     if dep.controller is not None:  # floe-serve
-        dep.serve(n_requests=args.requests, rate=args.rate,
-                  max_new=args.max_new)
+        if getattr(args, "scenario", ""):
+            dep.serve(scenario=args.scenario)
+        else:
+            dep.serve(n_requests=args.requests, rate=args.rate,
+                      max_new=args.max_new)
         ctl = dep.controller
         rep = ctl.report()
         for r in sorted(ctl.completed, key=lambda r: r.uid):
@@ -252,6 +259,14 @@ def run_offloaded(args, spec):
               f"precision={rep['prefetch_precision']:.2f}  "
               f"train_rounds={rep['train_rounds']}  "
               f"calibration={rep['calibration_scale']:.2f}")
+        tenants = ctl.tenant_report()
+        if set(tenants) - {""}:  # scenario runs: per-traffic-class rollup
+            for name, t in tenants.items():
+                print(f"tenant {name or '(untagged)'}: "
+                      f"attainment={t['slo_attainment']:.0%} "
+                      f"completed={t['completed']} "
+                      f"rejected={t['rejected']} "
+                      f"ttft={t['ttft_ms_mean']:.1f}ms")
         return dep
 
     metrics = dep.generate(args.max_new)

@@ -20,7 +20,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+import zlib
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.obs.events import Event
 
@@ -50,20 +53,53 @@ class Gauge:
 
 
 class Histogram:
-    """Exact-sample histogram; percentiles by nearest-rank on the sorted
-    sample (deterministic — no binning error, no randomized sketches)."""
+    """Sample histogram; percentiles by nearest-rank on the sorted sample.
 
-    __slots__ = ("values",)
+    Exact (and therefore bit-identical to the historical behavior) while
+    the sample count stays at or below ``bound``.  Past the bound the
+    sample store becomes a fixed-size uniform reservoir (Vitter's
+    algorithm R) driven by a histogram-local seeded RNG, so memory stays
+    O(bound) on 10k+-request runs while quantiles remain stable across
+    identical runs — deterministic bounded mode, not a randomized
+    sketch.  ``count/sum/mean/max`` are maintained as running values and
+    stay EXACT in both modes; only ``p50/p99`` switch to the reservoir
+    estimate once the bound is exceeded.  ``bound=None`` (the default
+    for directly constructed histograms) keeps every sample.
+    """
 
-    def __init__(self):
+    __slots__ = ("values", "bound", "_seen", "_sum", "_max", "_rng")
+
+    def __init__(self, bound: Optional[int] = None, seed: int = 0):
+        if bound is not None and bound < 1:
+            raise ValueError(f"histogram bound must be >= 1, got {bound}")
         self.values: List[float] = []
+        self.bound = bound
+        self._seen = 0
+        self._sum = 0.0
+        self._max = 0.0
+        # lazily created on first reservoir replacement so unbounded /
+        # small-N histograms never pay for RNG state
+        self._rng = None if bound is None else seed
 
     def observe(self, value: float) -> None:
-        self.values.append(float(value))
+        value = float(value)
+        self._max = value if self._seen == 0 else max(self._max, value)
+        self._seen += 1
+        self._sum += value
+        if self.bound is None or len(self.values) < self.bound:
+            self.values.append(value)
+            return
+        if isinstance(self._rng, int):
+            self._rng = np.random.default_rng(self._rng)
+        # algorithm R: sample i (0-based) replaces a reservoir slot
+        # with probability bound/(i+1)
+        j = int(self._rng.integers(0, self._seen))
+        if j < self.bound:
+            self.values[j] = value
 
     @property
     def count(self) -> int:
-        return len(self.values)
+        return self._seen
 
     def percentile(self, q: float) -> float:
         if not self.values:
@@ -73,25 +109,41 @@ class Histogram:
         return s[k]
 
     def summary(self) -> Dict[str, float]:
-        n = len(self.values)
-        total = sum(self.values)
+        n = self._seen
         return {
             "count": n,
-            "sum": total,
-            "mean": total / n if n else 0.0,
+            "sum": self._sum,
+            "mean": self._sum / n if n else 0.0,
             "p50": self.percentile(0.50),
             "p99": self.percentile(0.99),
-            "max": max(self.values) if n else 0.0,
+            "max": self._max if n else 0.0,
         }
 
 
-class MetricsRegistry:
-    """Get-or-create namespace of instruments with one flat snapshot."""
+#: Default per-histogram sample bound for registry-created histograms.
+#: Exact below this count (so small-N pins are unaffected), reservoir
+#: above it (so fleet-scale runs stay O(bound) per instrument).
+DEFAULT_HIST_BOUND = 4096
 
-    def __init__(self):
+
+class MetricsRegistry:
+    """Get-or-create namespace of instruments with one flat snapshot.
+
+    Histograms created through :meth:`histogram` are bounded at
+    ``hist_bound`` samples (see :class:`Histogram`); each instrument's
+    reservoir RNG is seeded from ``crc32(name) ^ seed`` so snapshots
+    are deterministic per (registry seed, instrument name) — never from
+    ``hash()``, which is randomized per process.  Pass
+    ``hist_bound=None`` for the historical keep-everything behavior.
+    """
+
+    def __init__(self, hist_bound: Optional[int] = DEFAULT_HIST_BOUND,
+                 seed: int = 0):
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+        self._hist_bound = hist_bound
+        self._seed = int(seed)
 
     def counter(self, name: str) -> Counter:
         return self._counters.setdefault(name, Counter())
@@ -100,7 +152,13 @@ class MetricsRegistry:
         return self._gauges.setdefault(name, Gauge())
 
     def histogram(self, name: str) -> Histogram:
-        return self._histograms.setdefault(name, Histogram())
+        h = self._histograms.get(name)
+        if h is None:
+            h = Histogram(
+                bound=self._hist_bound,
+                seed=zlib.crc32(name.encode()) ^ self._seed)
+            self._histograms[name] = h
+        return h
 
     def snapshot(self) -> Dict[str, float]:
         """Sorted flat ``{name: value}`` dict, deterministic run-to-run."""

@@ -44,6 +44,7 @@ Design points:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, Hashable, List, Optional, Tuple
 
 import jax
@@ -75,6 +76,7 @@ class SLORequest:
     slo_ms: float = 1000.0
     arrival_t: float = 0.0
     temperature: float = 0.0
+    tenant: str = ""  # traffic class (repro.workload), "" when untagged
 
     # lifecycle (filled by the controller)
     admitted_t: Optional[float] = None
@@ -314,7 +316,12 @@ class ServingController:
         self.train_rounds = 0
 
         # ---- request books -----------------------------------------------
-        self.pending: List[SLORequest] = []  # submitted, not yet arrived
+        # pending is a heap of (arrival_t, uid, req): O(log n) intake
+        # instead of the old sort-on-every-submit + pop(0) list, which
+        # went quadratic at 10k+ requests.  Pop order (arrival_t, uid) is
+        # identical to the old sorted path (pinned by test).
+        self.pending: List[Tuple[float, int, SLORequest]] = []
+        self._uids: set = set()  # every uid ever submitted (collision gate)
         self.queue: List[SLORequest] = []  # arrived, waiting for a slot
         self.running: List[SLORequest] = []
         self.completed: List[SLORequest] = []
@@ -337,13 +344,20 @@ class ServingController:
 
     # ------------------------------------------------------------ intake ---
     def submit(self, req: SLORequest) -> None:
+        uid = int(req.uid)
+        if uid in self._uids:
+            # colliding uids silently merge two requests into one tracer
+            # lane (tid = 1000 + uid) and corrupt per-request metrics —
+            # allocate uids centrally (repro.workload) or per-controller
+            raise ValueError(f"duplicate request uid {uid}: uids must be "
+                             f"unique per controller")
+        self._uids.add(uid)
         req.prompt = np.asarray(req.prompt, np.int32)
-        self.pending.append(req)
-        self.pending.sort(key=lambda r: (r.arrival_t, r.uid))
+        heapq.heappush(self.pending, (req.arrival_t, uid, req))
 
     def _ingest(self, now: float) -> None:
-        while self.pending and self.pending[0].arrival_t <= now + 1e-12:
-            self.queue.append(self.pending.pop(0))
+        while self.pending and self.pending[0][0] <= now + 1e-12:
+            self.queue.append(heapq.heappop(self.pending)[2])
 
     # --------------------------------------------------------- estimation --
     def _est_step(self) -> Optional[float]:
@@ -927,9 +941,15 @@ class ServingController:
         self._admission(now)
         if not self.running:
             if self.pending:  # idle: jump to the next arrival
-                dt = max(self.pending[0].arrival_t - self.sched.clock, 0.0)
+                t_next = self.pending[0][0]
+                dt = max(t_next - self.sched.clock, 0.0)
                 self.stats["idle_s"] += dt
-                self.sched.advance(dt + 1e-12)
+                # advance EXACTLY dt (the old +1e-12 tie-breaker drifted
+                # busy+idle away from the clock by one epsilon per idle
+                # gap); ingest against the arrival time itself so float
+                # rounding of clock+dt can never strand the head request
+                self.sched.advance(dt)
+                self._ingest(max(self.sched.clock, t_next))
                 return True
             return bool(self.queue)
         self._decode_step()
@@ -957,6 +977,39 @@ class ServingController:
     def reset_pred_stats(self) -> None:
         for k in self.pred_stats:
             self.pred_stats[k] = 0
+
+    def tenant_report(self) -> dict:
+        """Per-tenant attainment / latency over every tracked request
+        (``repro.workload`` tags requests with their traffic class;
+        untagged requests group under ``""``)."""
+        groups: Dict[str, dict] = {}
+        for r in self.completed + self.rejected:
+            g = groups.setdefault(r.tenant, {
+                "completed": 0, "rejected": 0, "attained": 0,
+                "ttfts": [], "tpots": []})
+            if r.rejected:
+                g["rejected"] += 1
+                continue
+            g["completed"] += 1
+            g["attained"] += int(r.attained)
+            if r.ttft is not None:
+                g["ttfts"].append(r.ttft)
+            if r.tpot is not None:
+                g["tpots"].append(r.tpot)
+        out = {}
+        for name in sorted(groups):
+            g = groups[name]
+            total = g["completed"] + g["rejected"]
+            out[name] = {
+                "completed": g["completed"],
+                "rejected": g["rejected"],
+                "slo_attainment": g["attained"] / total if total else 1.0,
+                "ttft_ms_mean": (1e3 * float(np.mean(g["ttfts"]))
+                                 if g["ttfts"] else 0.0),
+                "tpot_ms_mean": (1e3 * float(np.mean(g["tpots"]))
+                                 if g["tpots"] else 0.0),
+            }
+        return out
 
     def slo_attainment(self) -> float:
         total = (len(self.completed) + len(self.rejected) +

@@ -1,0 +1,25 @@
+"""Production traffic scenarios — deterministic workload generation.
+
+The evaluation substrate for the serving stack (the ROADMAP traffic-
+harness item): a typed, JSON-round-trippable :class:`ScenarioSpec`
+composes arrival processes (stationary Poisson, diurnal sinusoid,
+flash-crowd bursts) × tenant mixes (per-tenant SLOs, length
+distributions, router-distribution biases, session affinity) × drift
+models (gradual rotation / abrupt phase change of each tenant's routing
+bias over modeled time).  :func:`generate_requests` turns a spec into a
+seeded, replay-deterministic stream of
+:class:`~repro.serving.SLORequest`\\ s; :mod:`repro.workload.trace`
+saves/replays a generated workload as a byte-deterministic JSON
+artifact.
+"""
+from repro.workload.generate import (WorkloadError, generate_requests,
+                                     rotation_offset, tenant_token_probs)
+from repro.workload.scenario import (ArrivalSpec, BurstSpec, DriftSpec,
+                                     ScenarioSpec, TenantSpec)
+from repro.workload.trace import load_trace, save_trace, trace_str
+
+__all__ = [
+    "ArrivalSpec", "BurstSpec", "DriftSpec", "ScenarioSpec", "TenantSpec",
+    "WorkloadError", "generate_requests", "rotation_offset",
+    "tenant_token_probs", "load_trace", "save_trace", "trace_str",
+]

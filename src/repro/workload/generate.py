@@ -1,0 +1,180 @@
+"""ScenarioSpec -> deterministic SLORequest stream on the simulated clock.
+
+Generation is a single seeded pass, so the same spec + seed produces a
+byte-identical stream (pinned by test):
+
+1. **Session arrivals** — a non-homogeneous Poisson process sampled by
+   thinning against the rate envelope's upper bound: stationary base
+   rate × diurnal sinusoid × flash-crowd burst multipliers.
+2. **Tenant mix** — each session draws its tenant by normalized weight;
+   the session issues 1..``session_len`` requests with ``think_time_s``
+   exponential gaps, all SHARING the session's prompt prefix (the
+   affinity a prefix cache / KV reuse layer would exploit).
+3. **Router-distribution bias** — prompt tokens are drawn from a
+   Zipf-skewed distribution over a tenant-specific vocab permutation;
+   because routing downstream is a function of the embedded tokens,
+   tenants with different biases exercise visibly different expert
+   frequencies.  :class:`~repro.workload.scenario.DriftSpec` reweights
+   that distribution over modeled time — ``rotate`` slides the
+   permutation monotonically (:func:`rotation_offset`), ``phase`` swaps
+   it wholesale at one instant.
+4. **uid allocation** — uids are assigned centrally, sequential from
+   ``uid_base`` in arrival order, so every request stream the generator
+   produces is collision-free by construction (the controller asserts
+   uniqueness again at submit).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import numpy as np
+
+from repro.workload.scenario import ScenarioSpec, TenantSpec
+
+
+class WorkloadError(ValueError):
+    """Workload generation failed (e.g. vocab too small for the spec)."""
+
+
+# ------------------------------------------------------------ rate envelope --
+def instantaneous_rate(spec: ScenarioSpec, t: float) -> float:
+    """Session arrivals / modeled second at time ``t``."""
+    a = spec.arrival
+    r = a.rate
+    if a.kind == "diurnal":
+        r *= 1.0 + a.amplitude * math.sin(
+            2.0 * math.pi * (t / a.period_s + a.phase))
+    for b in a.bursts:
+        if b.start_t <= t < b.start_t + b.duration_s:
+            r *= b.multiplier
+    return r
+
+
+def _peak_rate(spec: ScenarioSpec) -> float:
+    """An upper bound of the rate envelope (thinning proposal rate)."""
+    a = spec.arrival
+    r = a.rate * (1.0 + a.amplitude if a.kind == "diurnal" else 1.0)
+    for b in a.bursts:  # overlapping bursts multiply — bound them all
+        r *= max(b.multiplier, 1.0)
+    return r
+
+
+# --------------------------------------------------------- token distribution
+def rotation_offset(spec: ScenarioSpec, t: float, vocab_size: int) -> int:
+    """How far (in vocab ranks) the drift has rotated the tenant
+    permutations by modeled time ``t`` — monotone non-decreasing in
+    ``t`` for ``kind="rotate"``, 0 otherwise."""
+    d = spec.drift
+    if d.kind != "rotate":
+        return 0
+    return int(vocab_size * d.strength * (max(t, 0.0) / d.period_s))
+
+
+def tenant_token_probs(spec: ScenarioSpec, tenant: TenantSpec,
+                       vocab_size: int, t: float) -> np.ndarray:
+    """The tenant's token distribution at modeled time ``t``.
+
+    Rank weights are Zipf-like, ``(1+rank)^-router_bias``, laid over a
+    tenant-specific permutation of the vocab (seeded by
+    ``(spec.seed, tenant.bias_seed)``) so two tenants with the same
+    skew still stress DIFFERENT tokens — and therefore different
+    experts.  Drift moves the distribution over time without touching
+    its shape: ``rotate`` shifts every token's rank by
+    :func:`rotation_offset`; ``phase`` switches to an unrelated
+    permutation at ``at_t``.
+    """
+    d = spec.drift
+    phase_flip = int(d.kind == "phase" and t >= d.at_t)
+    perm_rng = np.random.default_rng(
+        (spec.seed, 7919 + tenant.bias_seed, phase_flip))
+    perm = perm_rng.permutation(vocab_size)  # rank -> token id
+    ranks = np.arange(vocab_size, dtype=np.float64)
+    if d.kind == "rotate":
+        ranks = (ranks + rotation_offset(spec, t, vocab_size)) % vocab_size
+    w = (1.0 + ranks) ** (-float(tenant.router_bias))
+    probs = np.zeros(vocab_size, np.float64)
+    probs[perm] = w
+    return probs / probs.sum()
+
+
+# -------------------------------------------------------------- generation --
+def generate_requests(spec: ScenarioSpec, vocab_size: int, *,
+                      uid_base: int = 0) -> List["SLORequest"]:
+    """Generate the scenario's request stream (sorted by arrival time).
+
+    Returns at most ``spec.n_requests`` requests; generation also stops
+    at ``spec.duration_s`` when set.  Deterministic: one
+    ``np.random.default_rng(spec.seed)`` drives every draw in a fixed
+    order, so identical (spec, vocab_size, uid_base) inputs reproduce
+    the stream exactly.
+    """
+    from repro.serving import SLORequest
+
+    if vocab_size < 2:
+        raise WorkloadError(f"need vocab_size >= 2, got {vocab_size}")
+    for i, t in enumerate(spec.tenants):
+        if t.prompt_len_max > 4 * vocab_size:
+            raise WorkloadError(
+                f"tenants[{i}].prompt_len_max={t.prompt_len_max} is "
+                f"implausible for vocab_size={vocab_size}")
+
+    rng = np.random.default_rng(spec.seed)
+    weights = np.array([t.weight for t in spec.tenants], np.float64)
+    weights /= weights.sum()
+    peak = _peak_rate(spec)
+    horizon = (spec.duration_s if spec.duration_s is not None
+               else float("inf"))
+
+    raw = []  # (arrival_t, order, request-fields) before uid assignment
+    t = 0.0
+    order = 0
+    while len(raw) < spec.n_requests:
+        # thinning: propose at the peak rate, accept at the true rate
+        t += float(rng.exponential(1.0 / peak))
+        if t > horizon:
+            break
+        if rng.random() >= instantaneous_rate(spec, t) / peak:
+            continue
+        tenant = spec.tenants[int(rng.choice(len(spec.tenants), p=weights))]
+        n_sess = int(rng.integers(1, tenant.session_len + 1))
+        # the session's shared prompt prefix (affinity: every request in
+        # the session starts with these tokens)
+        probs = tenant_token_probs(spec, tenant, vocab_size, t)
+        prefix = rng.choice(vocab_size, size=tenant.prompt_len_min,
+                            p=probs).astype(np.int32)
+        t_req = t
+        for j in range(n_sess):
+            if j > 0:
+                t_req += float(rng.exponential(tenant.think_time_s)) \
+                    if tenant.think_time_s > 0 else 0.0
+            plen = int(rng.integers(tenant.prompt_len_min,
+                                    tenant.prompt_len_max + 1))
+            fresh = plen - len(prefix)
+            if fresh > 0:
+                probs_j = tenant_token_probs(spec, tenant, vocab_size,
+                                             t_req)
+                tail = rng.choice(vocab_size, size=fresh,
+                                  p=probs_j).astype(np.int32)
+                prompt = np.concatenate([prefix, tail])
+            else:
+                prompt = prefix.copy()
+            max_new = int(rng.integers(tenant.max_new_min,
+                                       tenant.max_new_max + 1))
+            raw.append((t_req, order, tenant, prompt, max_new))
+            order += 1
+
+    raw.sort(key=lambda r: (r[0], r[1]))
+    del raw[spec.n_requests:]  # sessions may overshoot the cap
+    return [
+        SLORequest(
+            uid=uid_base + i,
+            prompt=prompt,
+            max_new_tokens=max_new,
+            slo_ms=tenant.slo_ms,
+            arrival_t=arrival_t,
+            temperature=tenant.temperature,
+            tenant=tenant.name,
+        )
+        for i, (arrival_t, _, tenant, prompt, max_new) in enumerate(raw)
+    ]

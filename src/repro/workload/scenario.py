@@ -1,0 +1,306 @@
+"""Typed traffic-scenario spec — the workload analogue of ``repro.deploy``.
+
+A :class:`ScenarioSpec` is the declarative description of a production
+traffic pattern on the simulated clock, mirroring the
+``repro.deploy.spec`` conventions: frozen dataclasses, lossless JSON
+round-trip (``spec == ScenarioSpec.from_json(spec.to_json())``), and
+EAGER cross-field validation — every invalid field (or combination)
+raises a typed :class:`~repro.deploy.spec.SpecError` naming the dotted
+field at construction time, so a bad scenario file fails at load, not
+ten thousand simulated requests in.
+
+Three orthogonal axes compose:
+
+* :class:`ArrivalSpec` — WHEN sessions arrive: stationary Poisson, a
+  diurnal sinusoid rate envelope, and flash-crowd :class:`BurstSpec`
+  windows that multiply the instantaneous rate.
+* :class:`TenantSpec` — WHO arrives: traffic classes (chat / code /
+  long-context) with per-tenant SLOs, prompt/output-length ranges,
+  session affinity (requests per session, think-time gaps, shared
+  prompt prefixes), and a distinct router-distribution bias (a skewed
+  token distribution over a tenant-specific vocab permutation, which is
+  what drives per-tenant expert-routing skew downstream).
+* :class:`DriftSpec` — HOW routing pressure moves over modeled time:
+  ``rotate`` slides every tenant's token-rank permutation gradually
+  (gradual expert-frequency rotation), ``phase`` swaps to an unrelated
+  permutation at one instant (abrupt phase change).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+from repro.deploy.spec import SpecError
+
+_ARRIVALS = ("poisson", "diurnal")
+_DRIFTS = ("none", "rotate", "phase")
+
+
+# ------------------------------------------------------------------ bursts --
+@dataclasses.dataclass(frozen=True)
+class BurstSpec:
+    """A flash-crowd window: the arrival rate is multiplied by
+    ``multiplier`` for ``duration_s`` starting at ``start_t``."""
+
+    start_t: float = 0.0
+    duration_s: float = 1.0
+    multiplier: float = 4.0
+
+
+# ---------------------------------------------------------------- arrivals --
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """The session arrival process on the simulated clock.
+
+    ``kind="poisson"`` is a stationary process at ``rate`` sessions per
+    modeled second; ``kind="diurnal"`` modulates that base rate with a
+    sinusoid of relative ``amplitude`` and period ``period_s`` (phase
+    in fractions of a period).  ``bursts`` multiply the instantaneous
+    rate inside their windows in either kind.
+    """
+
+    kind: str = "poisson"
+    rate: float = 1.0  # mean session arrivals / modeled second (base)
+    period_s: float = 60.0  # diurnal period
+    amplitude: float = 0.5  # diurnal modulation depth in [0, 1)
+    phase: float = 0.0  # fraction of a period
+    bursts: Tuple[BurstSpec, ...] = ()
+
+
+# ----------------------------------------------------------------- tenants --
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One traffic class: SLO, shape distributions, sessions, routing bias.
+
+    ``router_bias`` is the Zipf-like skew exponent of the tenant's token
+    distribution over a tenant-specific vocab permutation (seeded by
+    ``bias_seed``): 0 is uniform, larger concentrates traffic on fewer
+    tokens — and therefore on fewer routed experts downstream.  Session
+    affinity: each session issues 1..``session_len`` requests that SHARE
+    the session's prompt prefix (the first ``prompt_len_min`` tokens)
+    and arrive ``think_time_s``-mean exponential gaps apart.
+    """
+
+    name: str = "chat"
+    weight: float = 1.0  # mix share (normalized across tenants)
+    slo_ms: float = 1000.0
+    prompt_len_min: int = 8
+    prompt_len_max: int = 16
+    max_new_min: int = 4
+    max_new_max: int = 8
+    temperature: float = 0.8
+    session_len: int = 1  # max requests per session (uniform 1..N)
+    think_time_s: float = 0.5  # mean gap between a session's requests
+    router_bias: float = 1.0  # Zipf skew of the token distribution
+    bias_seed: int = 0  # tenant vocab-permutation seed
+
+
+# ------------------------------------------------------------------- drift --
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """Routing-distribution drift over modeled time, applied by
+    reweighting every tenant's token distribution:
+
+    * ``rotate`` — each tenant's token-rank permutation rotates by
+      ``strength`` of the vocab per ``period_s`` (gradual, monotone
+      expert-frequency rotation).
+    * ``phase``  — at ``at_t`` every tenant swaps to an unrelated
+      permutation (abrupt phase change).
+    """
+
+    kind: str = "none"
+    period_s: float = 30.0  # rotate: seconds per full-strength rotation
+    at_t: float = 0.0  # phase: the change instant
+    strength: float = 1.0  # fraction of the vocab rotated / in (0, 1]
+
+
+# ---------------------------------------------------------------- scenario --
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One traffic scenario: arrivals × tenant mix × drift, seeded.
+
+    ``n_requests`` bounds the generated stream (sessions are truncated
+    mid-flight if needed); ``duration_s`` (optional) additionally stops
+    generation at a modeled horizon.  Same spec + same seed produces a
+    byte-identical request stream (pinned by test).
+    """
+
+    name: str = "scenario"
+    seed: int = 0
+    n_requests: int = 16
+    duration_s: Optional[float] = None
+    arrival: ArrivalSpec = dataclasses.field(default_factory=ArrivalSpec)
+    tenants: Tuple[TenantSpec, ...] = dataclasses.field(
+        default_factory=lambda: (TenantSpec(),))
+    drift: DriftSpec = dataclasses.field(default_factory=DriftSpec)
+
+    def __post_init__(self):
+        self.validate()
+
+    # -------------------------------------------------------- validation --
+    def validate(self) -> None:
+        a, d = self.arrival, self.drift
+        if not self.name:
+            raise SpecError("scenario.name", "need a non-empty name")
+        if self.seed < 0:
+            raise SpecError("scenario.seed",
+                            f"need >= 0 (np.random seed), got {self.seed}")
+        if self.n_requests < 1:
+            raise SpecError("scenario.n_requests",
+                            f"need >= 1, got {self.n_requests}")
+        if self.duration_s is not None and self.duration_s <= 0:
+            raise SpecError("scenario.duration_s",
+                            f"need > 0 (or null), got {self.duration_s}")
+        if a.kind not in _ARRIVALS:
+            raise SpecError("arrival.kind",
+                            f"unknown kind {a.kind!r}; choose from "
+                            f"{_ARRIVALS}")
+        if a.rate <= 0:
+            raise SpecError("arrival.rate", f"need > 0, got {a.rate}")
+        if a.kind == "diurnal":
+            if a.period_s <= 0:
+                raise SpecError("arrival.period_s",
+                                f"need > 0, got {a.period_s}")
+            if not 0.0 <= a.amplitude < 1.0:
+                raise SpecError(
+                    "arrival.amplitude",
+                    f"need 0 <= amplitude < 1 (the rate must stay "
+                    f"positive), got {a.amplitude}")
+        for i, b in enumerate(a.bursts):
+            if b.duration_s <= 0:
+                raise SpecError(f"arrival.bursts[{i}].duration_s",
+                                f"need > 0, got {b.duration_s}")
+            if b.multiplier <= 0:
+                raise SpecError(f"arrival.bursts[{i}].multiplier",
+                                f"need > 0, got {b.multiplier}")
+            if b.start_t < 0:
+                raise SpecError(f"arrival.bursts[{i}].start_t",
+                                f"need >= 0, got {b.start_t}")
+        if not self.tenants:
+            raise SpecError("tenants", "need at least one TenantSpec")
+        seen = set()
+        for i, t in enumerate(self.tenants):
+            f = f"tenants[{i}]"
+            if not t.name:
+                raise SpecError(f"{f}.name", "tenant name must be set")
+            if t.name in seen:
+                raise SpecError(f"{f}.name",
+                                f"duplicate tenant name {t.name!r}")
+            seen.add(t.name)
+            if t.weight <= 0:
+                raise SpecError(f"{f}.weight", f"need > 0, got {t.weight}")
+            if t.slo_ms <= 0:
+                raise SpecError(f"{f}.slo_ms", f"need > 0, got {t.slo_ms}")
+            if t.prompt_len_min < 1:
+                raise SpecError(f"{f}.prompt_len_min",
+                                f"need >= 1, got {t.prompt_len_min}")
+            if t.prompt_len_max < t.prompt_len_min:
+                raise SpecError(
+                    f"{f}.prompt_len_max",
+                    f"need >= prompt_len_min={t.prompt_len_min}, got "
+                    f"{t.prompt_len_max}")
+            if t.max_new_min < 1:
+                raise SpecError(f"{f}.max_new_min",
+                                f"need >= 1, got {t.max_new_min}")
+            if t.max_new_max < t.max_new_min:
+                raise SpecError(f"{f}.max_new_max",
+                                f"need >= max_new_min={t.max_new_min}, "
+                                f"got {t.max_new_max}")
+            if t.temperature < 0:
+                raise SpecError(f"{f}.temperature",
+                                f"need >= 0, got {t.temperature}")
+            if t.session_len < 1:
+                raise SpecError(f"{f}.session_len",
+                                f"need >= 1, got {t.session_len}")
+            if t.think_time_s < 0:
+                raise SpecError(f"{f}.think_time_s",
+                                f"need >= 0, got {t.think_time_s}")
+            if t.router_bias < 0:
+                raise SpecError(f"{f}.router_bias",
+                                f"need >= 0, got {t.router_bias}")
+            if t.bias_seed < 0:
+                raise SpecError(f"{f}.bias_seed",
+                                f"need >= 0, got {t.bias_seed}")
+        if d.kind not in _DRIFTS:
+            raise SpecError("drift.kind",
+                            f"unknown kind {d.kind!r}; choose from "
+                            f"{_DRIFTS}")
+        if d.kind != "none" and not 0.0 < d.strength <= 1.0:
+            raise SpecError("drift.strength",
+                            f"need 0 < strength <= 1, got {d.strength}")
+        if d.kind == "rotate" and d.period_s <= 0:
+            raise SpecError("drift.period_s",
+                            f"need > 0, got {d.period_s}")
+        if d.kind == "phase" and d.at_t < 0:
+            raise SpecError("drift.at_t", f"need >= 0, got {d.at_t}")
+
+    # ---------------------------------------------------- JSON round-trip --
+    def to_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "seed": self.seed,
+            "n_requests": self.n_requests,
+            "duration_s": self.duration_s,
+            "arrival": dataclasses.asdict(self.arrival),
+            "tenants": [dataclasses.asdict(t) for t in self.tenants],
+            "drift": dataclasses.asdict(self.drift),
+        }
+        d["arrival"]["bursts"] = [dataclasses.asdict(b)
+                                  for b in self.arrival.bursts]
+        return d
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent,
+                          sort_keys=True) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSpec":
+        known = ("name", "seed", "n_requests", "duration_s", "arrival",
+                 "tenants", "drift")
+        bad = sorted(set(d) - set(known))
+        if bad:  # a typo'd section must not load as all-defaults
+            raise SpecError(bad[0],
+                            f"unknown section(s) {bad}; expected {known}")
+
+        def sub(klass, payload, where):
+            payload = dict(payload or {})
+            fields = {f.name for f in dataclasses.fields(klass)}
+            extra = sorted(set(payload) - fields)
+            if extra:
+                raise SpecError(f"{where}.{extra[0]}",
+                                f"unknown field(s) {extra} for "
+                                f"{klass.__name__}")
+            return klass(**payload)
+
+        arr = sub(ArrivalSpec, d.get("arrival"), "arrival")
+        arr = dataclasses.replace(arr, bursts=tuple(
+            sub(BurstSpec, b, f"arrival.bursts[{i}]")
+            for i, b in enumerate(arr.bursts)))
+        tenants = tuple(sub(TenantSpec, t, f"tenants[{i}]")
+                        for i, t in enumerate(d.get("tenants") or ({},)))
+        return cls(
+            name=d.get("name", "scenario"),
+            seed=d.get("seed", 0),
+            n_requests=d.get("n_requests", 16),
+            duration_s=d.get("duration_s"),
+            arrival=arr,
+            tenants=tenants,
+            drift=sub(DriftSpec, d.get("drift"), "drift"),
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "ScenarioSpec":
+        try:
+            d = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise SpecError("<json>", f"not valid JSON: {e}") from e
+        if not isinstance(d, dict):
+            raise SpecError("<json>", "scenario JSON must be an object")
+        return cls.from_dict(d)
+
+    @classmethod
+    def load(cls, path) -> "ScenarioSpec":
+        """Load a spec from a JSON file path."""
+        with open(path) as f:
+            return cls.from_json(f.read())

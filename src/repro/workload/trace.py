@@ -1,0 +1,69 @@
+"""Workload traces — save / replay a generated request stream.
+
+A trace is a JSON artifact binding the :class:`ScenarioSpec` that
+produced it to the exact request stream it produced, so a workload can
+be committed (``examples/scenarios/``), diffed across PRs, and replayed
+byte-for-byte without regenerating:
+
+    {"scenario": {...spec...}, "requests": [{...}, ...]}
+
+Rendering is byte-deterministic — sorted keys, fixed indent, exact
+float round-trip through Python's shortest-repr JSON floats — so
+``generate -> save -> load -> save`` produces identical bytes (pinned
+by test), and replay reconstructs :class:`~repro.serving.SLORequest`\\ s
+whose fields (including prompt token ids) equal the generated ones.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.workload.scenario import ScenarioSpec
+
+
+def _request_dict(r) -> dict:
+    return {
+        "uid": int(r.uid),
+        "tenant": r.tenant,
+        "arrival_t": float(r.arrival_t),
+        "slo_ms": float(r.slo_ms),
+        "max_new_tokens": int(r.max_new_tokens),
+        "temperature": float(r.temperature),
+        "prompt": [int(x) for x in np.asarray(r.prompt).reshape(-1)],
+    }
+
+
+def trace_str(spec: ScenarioSpec, requests) -> str:
+    """Byte-deterministic JSON rendering of (spec, request stream)."""
+    return json.dumps(
+        {"scenario": spec.to_dict(),
+         "requests": [_request_dict(r) for r in requests]},
+        indent=1, sort_keys=True) + "\n"
+
+
+def save_trace(path, spec: ScenarioSpec, requests) -> None:
+    with open(path, "w") as f:
+        f.write(trace_str(spec, requests))
+
+
+def load_trace(path) -> Tuple[ScenarioSpec, List["SLORequest"]]:
+    """Replay a saved trace: (spec, reconstructed request stream)."""
+    from repro.serving import SLORequest
+    with open(path) as f:
+        d = json.load(f)
+    spec = ScenarioSpec.from_dict(d["scenario"])
+    reqs = [
+        SLORequest(
+            uid=r["uid"],
+            prompt=np.asarray(r["prompt"], np.int32),
+            max_new_tokens=r["max_new_tokens"],
+            slo_ms=r["slo_ms"],
+            arrival_t=r["arrival_t"],
+            temperature=r["temperature"],
+            tenant=r.get("tenant", ""),
+        )
+        for r in d["requests"]
+    ]
+    return spec, reqs

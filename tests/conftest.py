@@ -12,6 +12,7 @@ _SLOW_MODULES = {
     "test_cluster_e2e", "test_controller", "test_deploy_e2e",
     "test_pipeline", "test_runtime", "test_serving", "test_smoke_archs",
     "test_store_e2e", "test_system", "test_train_ckpt",
+    "test_workload_scale",
 }
 
 

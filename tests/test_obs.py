@@ -236,3 +236,59 @@ def test_summary_matches_aggregates():
     assert s["bytes"] == eng.agg.bytes
     assert s["demoted"] == eng.agg.demoted
     assert s["wasted_bytes"] == eng.agg.wasted_bytes
+
+
+# ------------------------------------------------- bounded histograms --
+def test_histogram_exact_below_bound():
+    from repro.obs.metrics import Histogram
+    bounded = Histogram(bound=100, seed=3)
+    exact = Histogram()
+    for i in range(100):
+        v = float((i * 37) % 100)
+        bounded.observe(v)
+        exact.observe(v)
+    assert bounded.summary() == exact.summary()
+    assert bounded.values == exact.values
+
+
+def test_histogram_reservoir_stats_exact_above_bound():
+    from repro.obs.metrics import Histogram
+    h = Histogram(bound=64, seed=9)
+    vals = [float((i * 7919) % 1000) for i in range(5000)]
+    for v in vals:
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 5000
+    assert s["sum"] == sum(vals)
+    assert s["max"] == max(vals)
+    assert len(h.values) == 64  # memory stays at the bound
+    # quantiles come from the reservoir but stay in range
+    assert min(vals) <= s["p50"] <= max(vals)
+
+
+def test_histogram_reservoir_deterministic():
+    from repro.obs.metrics import MetricsRegistry
+    def fill(reg):
+        for i in range(3000):
+            reg.histogram("x.latency").observe(float((i * 13) % 500))
+        return reg.snapshot()
+    a = fill(MetricsRegistry(hist_bound=128, seed=42))
+    b = fill(MetricsRegistry(hist_bound=128, seed=42))
+    assert a == b
+    # a different registry seed reseeds the reservoir (quantiles may
+    # move) but never the exact running stats
+    c = fill(MetricsRegistry(hist_bound=128, seed=43))
+    for k in ("x.latency.count", "x.latency.sum", "x.latency.mean",
+              "x.latency.max"):
+        assert a[k] == c[k]
+
+
+def test_registry_default_bound_engages_only_at_scale():
+    from repro.obs.metrics import DEFAULT_HIST_BOUND, MetricsRegistry
+    reg = MetricsRegistry()
+    h = reg.histogram("small")
+    assert h.bound == DEFAULT_HIST_BOUND
+    for i in range(200):  # well below the bound: exact mode
+        h.observe(float(i))
+    assert h.values == [float(i) for i in range(200)]
+    assert reg.snapshot()["small.p50"] == 99.0

@@ -1,0 +1,299 @@
+"""repro.workload: scenario validation, determinism, traffic shapes.
+
+Fast (no jax model): everything here runs on the generator itself —
+spec validation matrix and JSON round-trip, replay byte-determinism of
+saved traces, statistical pins on the diurnal/burst arrival envelopes
+(via the `_hypothesis_compat` property shim), session-affinity prefix
+reuse, drift monotonicity, and central uid allocation.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.deploy.spec import SpecError
+from repro.workload import (ArrivalSpec, BurstSpec, DriftSpec, ScenarioSpec,
+                            TenantSpec, WorkloadError, generate_requests,
+                            load_trace, rotation_offset, save_trace,
+                            tenant_token_probs, trace_str)
+from repro.workload.generate import _peak_rate, instantaneous_rate
+
+VOCAB = 128
+
+
+def _spec(**kw):
+    base = dict(name="t", seed=5, n_requests=20)
+    base.update(kw)
+    return ScenarioSpec(**base)
+
+
+# ------------------------------------------------------------- validation --
+@pytest.mark.parametrize("kw,field", [
+    (dict(name=""), "scenario.name"),
+    (dict(seed=-1), "scenario.seed"),
+    (dict(n_requests=0), "scenario.n_requests"),
+    (dict(duration_s=0.0), "scenario.duration_s"),
+    (dict(arrival=ArrivalSpec(kind="weekly")), "arrival.kind"),
+    (dict(arrival=ArrivalSpec(rate=0.0)), "arrival.rate"),
+    (dict(arrival=ArrivalSpec(kind="diurnal", amplitude=1.0)),
+     "arrival.amplitude"),
+    (dict(arrival=ArrivalSpec(kind="diurnal", period_s=0.0)),
+     "arrival.period_s"),
+    (dict(arrival=ArrivalSpec(bursts=(BurstSpec(multiplier=0.0),))),
+     "arrival.bursts[0].multiplier"),
+    (dict(arrival=ArrivalSpec(bursts=(BurstSpec(duration_s=0.0),))),
+     "arrival.bursts[0].duration_s"),
+    (dict(arrival=ArrivalSpec(bursts=(BurstSpec(start_t=-1.0),))),
+     "arrival.bursts[0].start_t"),
+    (dict(tenants=()), "tenants"),
+    (dict(tenants=(TenantSpec(name=""),)), "tenants[0].name"),
+    (dict(tenants=(TenantSpec(), TenantSpec())), "tenants[1].name"),
+    (dict(tenants=(TenantSpec(weight=0.0),)), "tenants[0].weight"),
+    (dict(tenants=(TenantSpec(slo_ms=0.0),)), "tenants[0].slo_ms"),
+    (dict(tenants=(TenantSpec(prompt_len_min=0),)),
+     "tenants[0].prompt_len_min"),
+    (dict(tenants=(TenantSpec(prompt_len_max=4),)),
+     "tenants[0].prompt_len_max"),
+    (dict(tenants=(TenantSpec(max_new_max=2),)), "tenants[0].max_new_max"),
+    (dict(tenants=(TenantSpec(temperature=-0.1),)),
+     "tenants[0].temperature"),
+    (dict(tenants=(TenantSpec(session_len=0),)), "tenants[0].session_len"),
+    (dict(tenants=(TenantSpec(think_time_s=-1.0),)),
+     "tenants[0].think_time_s"),
+    (dict(tenants=(TenantSpec(router_bias=-0.5),)),
+     "tenants[0].router_bias"),
+    (dict(tenants=(TenantSpec(bias_seed=-1),)), "tenants[0].bias_seed"),
+    (dict(drift=DriftSpec(kind="sideways")), "drift.kind"),
+    (dict(drift=DriftSpec(kind="rotate", strength=0.0)), "drift.strength"),
+    (dict(drift=DriftSpec(kind="rotate", strength=1.5)), "drift.strength"),
+    (dict(drift=DriftSpec(kind="rotate", period_s=0.0)), "drift.period_s"),
+    (dict(drift=DriftSpec(kind="phase", at_t=-1.0)), "drift.at_t"),
+])
+def test_validation_matrix(kw, field):
+    with pytest.raises(SpecError) as e:
+        _spec(**kw)
+    assert e.value.field == field
+
+
+def test_valid_spec_constructs():
+    s = _spec(
+        arrival=ArrivalSpec(kind="diurnal", rate=2.0, amplitude=0.5,
+                            bursts=(BurstSpec(),)),
+        tenants=(TenantSpec(name="a"), TenantSpec(name="b", bias_seed=1)),
+        drift=DriftSpec(kind="rotate"))
+    assert s.n_requests == 20
+
+
+def test_json_round_trip_exact():
+    s = _spec(
+        duration_s=90.0,
+        arrival=ArrivalSpec(kind="diurnal", rate=1.5, period_s=45.0,
+                            amplitude=0.25, phase=0.1,
+                            bursts=(BurstSpec(start_t=3.0, duration_s=2.0,
+                                              multiplier=6.0),)),
+        tenants=(TenantSpec(name="chat", weight=2.5, session_len=3),
+                 TenantSpec(name="code", bias_seed=9, router_bias=0.3)),
+        drift=DriftSpec(kind="phase", at_t=40.0))
+    assert ScenarioSpec.from_json(s.to_json()) == s
+    # and the rendering itself is stable (sorted keys, fixed indent)
+    assert s.to_json() == ScenarioSpec.from_json(s.to_json()).to_json()
+
+
+def test_from_dict_rejects_unknown_fields():
+    d = _spec().to_dict()
+    d["extra"] = 1
+    with pytest.raises(SpecError):
+        ScenarioSpec.from_dict(d)
+    d2 = _spec().to_dict()
+    d2["arrival"]["surge"] = 2.0
+    with pytest.raises(SpecError):
+        ScenarioSpec.from_dict(d2)
+
+
+def test_generate_rejects_tiny_vocab():
+    with pytest.raises(WorkloadError):
+        generate_requests(_spec(), vocab_size=1)
+
+
+# ----------------------------------------------------------- determinism --
+def test_generation_deterministic_and_sorted():
+    s = _spec(arrival=ArrivalSpec(kind="diurnal", rate=3.0, amplitude=0.4),
+              tenants=(TenantSpec(name="a", session_len=2),
+                       TenantSpec(name="b", bias_seed=3)))
+    a = generate_requests(s, VOCAB)
+    b = generate_requests(s, VOCAB)
+    assert trace_str(s, a) == trace_str(s, b)
+    assert len(a) == s.n_requests
+    assert all(x.arrival_t <= y.arrival_t for x, y in zip(a, a[1:]))
+    # different seed -> different stream
+    c = generate_requests(_spec(seed=6), VOCAB)
+    assert trace_str(s, a) != trace_str(_spec(seed=6), c)
+
+
+def test_uid_allocation_central_and_unique():
+    s = _spec(n_requests=50, tenants=(TenantSpec(session_len=4),))
+    a = generate_requests(s, VOCAB)
+    assert [r.uid for r in a] == list(range(50))
+    b = generate_requests(s, VOCAB, uid_base=len(a))
+    uids = [r.uid for r in a] + [r.uid for r in b]
+    assert len(set(uids)) == len(uids) == 100
+
+
+def test_trace_replay_byte_deterministic(tmp_path):
+    s = _spec(tenants=(TenantSpec(name="chat", session_len=3),
+                       TenantSpec(name="code", bias_seed=2)))
+    reqs = generate_requests(s, VOCAB)
+    p1, p2 = tmp_path / "t1.json", tmp_path / "t2.json"
+    save_trace(p1, s, reqs)
+    spec2, reqs2 = load_trace(p1)
+    save_trace(p2, spec2, reqs2)
+    assert p1.read_bytes() == p2.read_bytes()
+    assert spec2 == s
+    for r, r2 in zip(reqs, reqs2):
+        assert (r.uid, r.tenant, r.arrival_t, r.slo_ms, r.max_new_tokens,
+                r.temperature) == (r2.uid, r2.tenant, r2.arrival_t,
+                                   r2.slo_ms, r2.max_new_tokens,
+                                   r2.temperature)
+        assert np.array_equal(r.prompt, r2.prompt)
+
+
+def test_committed_example_scenarios_load_and_generate():
+    import os
+    d = os.path.join(os.path.dirname(__file__), os.pardir,
+                     "examples", "scenarios")
+    names = sorted(os.listdir(d))
+    assert {"diurnal_mix.json", "flash_crowd.json",
+            "drift_rotate.json"} <= set(names)
+    for fname in names:
+        spec = ScenarioSpec.load(os.path.join(d, fname))
+        reqs = generate_requests(spec, VOCAB)
+        assert len(reqs) == spec.n_requests
+        # committed artifacts are in canonical rendering already
+        with open(os.path.join(d, fname)) as f:
+            assert f.read() == spec.to_json()
+
+
+# ------------------------------------------------------- arrival envelope --
+@settings(max_examples=12, deadline=None)
+@given(rate=st.floats(min_value=0.5, max_value=8.0),
+       amplitude=st.floats(min_value=0.0, max_value=0.9))
+def test_diurnal_rate_envelope(rate, amplitude):
+    s = _spec(arrival=ArrivalSpec(kind="diurnal", rate=rate,
+                                  period_s=50.0, amplitude=amplitude))
+    peak = _peak_rate(s)
+    for t in np.linspace(0.0, 150.0, 61):
+        r = instantaneous_rate(s, float(t))
+        assert 0.0 < r <= peak + 1e-12
+        expect = rate * (1.0 + amplitude * math.sin(2 * math.pi * t / 50.0))
+        assert r == pytest.approx(expect)
+
+
+def test_diurnal_arrivals_concentrate_at_rate_peaks():
+    # period 100s, phase 0: rate peaks in (0, 50), troughs in (50, 100).
+    s = _spec(seed=2, n_requests=400, duration_s=100.0,
+              arrival=ArrivalSpec(kind="diurnal", rate=8.0,
+                                  period_s=100.0, amplitude=0.9))
+    reqs = generate_requests(s, VOCAB)
+    first = sum(1 for r in reqs if r.arrival_t % 100.0 < 50.0)
+    second = len(reqs) - first
+    assert first > 1.5 * second, (first, second)
+
+
+def test_burst_multiplies_local_arrival_density():
+    base = _spec(seed=3, n_requests=600, duration_s=60.0,
+                 arrival=ArrivalSpec(kind="poisson", rate=5.0))
+    burst = _spec(seed=3, n_requests=600, duration_s=60.0,
+                  arrival=ArrivalSpec(kind="poisson", rate=5.0,
+                                      bursts=(BurstSpec(start_t=20.0,
+                                                        duration_s=10.0,
+                                                        multiplier=6.0),)))
+    def in_window(reqs):
+        return sum(1 for r in reqs if 20.0 <= r.arrival_t < 30.0)
+    n_base = in_window(generate_requests(base, VOCAB))
+    n_burst = in_window(generate_requests(burst, VOCAB))
+    assert n_burst > 3 * max(n_base, 1), (n_burst, n_base)
+
+
+# --------------------------------------------------------------- tenants --
+def test_tenant_mix_follows_weights():
+    s = _spec(seed=4, n_requests=300,
+              tenants=(TenantSpec(name="heavy", weight=4.0),
+                       TenantSpec(name="light", weight=1.0, bias_seed=1)))
+    reqs = generate_requests(s, VOCAB)
+    heavy = sum(1 for r in reqs if r.tenant == "heavy")
+    assert 0.65 < heavy / len(reqs) < 0.95
+    # every request carries its tenant's SLO / length envelope
+    for r in reqs:
+        assert r.tenant in ("heavy", "light")
+        assert 8 <= len(r.prompt) <= 16
+        assert 4 <= r.max_new_tokens <= 8
+
+
+def test_session_affinity_shares_prefix():
+    s = _spec(seed=9, n_requests=60,
+              tenants=(TenantSpec(name="chat", session_len=4,
+                                  think_time_s=0.2),))
+    reqs = generate_requests(s, VOCAB)
+    # group by identical leading prompt_len_min tokens: sessions of >1
+    # request MUST exist and share the prefix
+    pref = {}
+    for r in reqs:
+        pref.setdefault(tuple(r.prompt[:8]), []).append(r)
+    multi = [g for g in pref.values() if len(g) > 1]
+    assert multi, "no multi-request sessions generated"
+    for g in multi:
+        # think-time gaps: later requests in the session arrive later
+        ts = sorted(r.arrival_t for r in g)
+        assert ts == [r.arrival_t for r in sorted(g,
+                                                  key=lambda r: r.arrival_t)]
+        p0 = tuple(g[0].prompt[:8])
+        assert all(tuple(r.prompt[:8]) == p0 for r in g)
+
+
+def test_tenant_bias_separates_token_distributions():
+    s = _spec(tenants=(TenantSpec(name="a", bias_seed=0),
+                       TenantSpec(name="b", bias_seed=1)))
+    pa = tenant_token_probs(s, s.tenants[0], VOCAB, 0.0)
+    pb = tenant_token_probs(s, s.tenants[1], VOCAB, 0.0)
+    assert pa.shape == pb.shape == (VOCAB,)
+    assert pa.sum() == pytest.approx(1.0) and pb.sum() == pytest.approx(1.0)
+    # same Zipf shape, different permutation -> same sorted weights,
+    # different placement
+    assert np.allclose(np.sort(pa), np.sort(pb))
+    assert not np.allclose(pa, pb)
+
+
+# ----------------------------------------------------------------- drift --
+def test_rotation_offset_monotone_and_zero_without_drift():
+    s = _spec(drift=DriftSpec(kind="rotate", period_s=25.0, strength=0.5))
+    offs = [rotation_offset(s, t, VOCAB) for t in np.linspace(0, 200, 81)]
+    assert offs == sorted(offs)
+    assert offs[0] == 0 and offs[-1] > 0
+    s0 = _spec()
+    assert all(rotation_offset(s0, t, VOCAB) == 0 for t in (0.0, 50.0))
+
+
+def test_rotate_drift_moves_distribution_gradually():
+    s = _spec(drift=DriftSpec(kind="rotate", period_s=50.0, strength=0.5),
+              tenants=(TenantSpec(name="a", router_bias=1.5),))
+    p0 = tenant_token_probs(s, s.tenants[0], VOCAB, 0.0)
+    p_mid = tenant_token_probs(s, s.tenants[0], VOCAB, 60.0)
+    p_far = tenant_token_probs(s, s.tenants[0], VOCAB, 140.0)
+    tv_mid = 0.5 * np.abs(p0 - p_mid).sum()
+    tv_far = 0.5 * np.abs(p0 - p_far).sum()
+    assert 0.0 < tv_mid
+    assert np.allclose(np.sort(p0), np.sort(p_mid))  # shape preserved
+
+
+def test_phase_drift_is_abrupt():
+    s = _spec(drift=DriftSpec(kind="phase", at_t=30.0),
+              tenants=(TenantSpec(name="a"),))
+    before = tenant_token_probs(s, s.tenants[0], VOCAB, 29.9)
+    before2 = tenant_token_probs(s, s.tenants[0], VOCAB, 0.0)
+    after = tenant_token_probs(s, s.tenants[0], VOCAB, 30.0)
+    after2 = tenant_token_probs(s, s.tenants[0], VOCAB, 200.0)
+    assert np.allclose(before, before2)   # static before the switch
+    assert np.allclose(after, after2)     # static after the switch
+    assert not np.allclose(before, after)  # the switch itself

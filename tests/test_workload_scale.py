@@ -1,0 +1,164 @@
+"""Serving-path scale + integration tests for repro.workload (slow).
+
+Controller integration of the scenario harness and the scale bugfixes:
+heap intake pops in exactly the old sorted admission order, duplicate
+uids are rejected at submit, busy+idle conserves the simulated clock
+across idle jumps, ``Deployment.serve(scenario=)`` wires the generator
+end-to-end (with a per-deployment uid sequence across repeated calls),
+and the 10k-request fleet-scale run (2 models x 2 devices) completes
+with the stall-conservation row True and sub-quadratic intake.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.deploy.spec import SpecError
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.bench_e2e_decode import _thresholds
+    from repro.common.config import reduced
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    cfg = reduced(get_config("mixtral_8x7b"), layers=2, d_model=64)
+    params = tf.init_model(jax.random.PRNGKey(1), cfg, jnp.float32)
+    return cfg, params, _thresholds(cfg, params)
+
+
+def _make(setup, **kw):
+    from repro.core.pipeline import paper_scaled_models
+    from repro.serving import ServingController
+    cfg, params, thr = setup
+    device, link = paper_scaled_models(cfg)
+    opts = dict(slots=2, max_len=128, policy="slo", online_train=False,
+                offload_opts=dict(device=device, link=link, cache_slots=2))
+    opts.update(kw)
+    return ServingController(params, cfg, thresholds=thr, **opts)
+
+
+def _scenario_requests(setup, n=24, seed=5, **tenant_kw):
+    from repro.workload import (ArrivalSpec, ScenarioSpec, TenantSpec,
+                                generate_requests)
+    cfg = setup[0]
+    tkw = dict(name="chat", slo_ms=5000.0, max_new_min=2, max_new_max=3)
+    tkw.update(tenant_kw)
+    spec = ScenarioSpec(
+        name="itest", seed=seed, n_requests=n,
+        arrival=ArrivalSpec(kind="poisson", rate=2.0),
+        tenants=(TenantSpec(**tkw),))
+    return spec, generate_requests(spec, cfg.vocab_size)
+
+
+def test_heap_intake_preserves_sorted_admission_order(setup):
+    """Pin: heapq intake pops (arrival_t, uid) exactly like the old
+    sort-on-submit + pop(0) path, regardless of submit order."""
+    _, reqs = _scenario_requests(setup, n=32)
+    ctl = _make(setup)
+    shuffled = reqs[:]
+    random.Random(7).shuffle(shuffled)
+    for r in shuffled:
+        ctl.submit(r)
+    order = []
+    while ctl.pending:
+        ctl._ingest(ctl.pending[0][0] + 1e-9)
+        while ctl.queue:
+            order.append(ctl.queue.pop(0).uid)
+    expect = [r.uid for r in
+              sorted(reqs, key=lambda r: (r.arrival_t, r.uid))]
+    assert order == expect
+
+
+def test_duplicate_uid_rejected_at_submit(setup):
+    from repro.serving import SLORequest
+    ctl = _make(setup)
+    cfg = setup[0]
+    r = SLORequest(3, np.zeros(4, np.int32), max_new_tokens=2,
+                   slo_ms=1e6, arrival_t=0.0)
+    ctl.submit(r)
+    with pytest.raises(ValueError, match="duplicate request uid 3"):
+        ctl.submit(SLORequest(3, np.zeros(4, np.int32), max_new_tokens=2,
+                              slo_ms=1e6, arrival_t=1.0))
+    assert cfg is setup[0]
+
+
+def test_busy_idle_conserves_clock_across_idle_jumps(setup):
+    """Pin for the idle-jump fix: the old path advanced dt + 1e-12 but
+    credited only dt to idle_s, drifting busy+idle off the clock by one
+    epsilon per idle gap.  Sparse arrivals force many idle jumps."""
+    _, reqs = _scenario_requests(setup, n=16, seed=11)
+    for i, r in enumerate(reqs):  # stretch gaps: guaranteed idle jumps
+        r.arrival_t = i * 7.0
+    ctl = _make(setup)
+    for r in reqs:
+        ctl.submit(r)
+    ctl.run()
+    clock = ctl.sched.clock
+    budget = ctl.stats["busy_s"] + ctl.stats["idle_s"]
+    assert clock > 100.0  # the gaps actually dominated the run
+    assert abs(clock - budget) < 1e-9 * max(1.0, clock)
+
+
+def test_deployment_serve_scenario_end_to_end(tmp_path):
+    import os
+    from repro.deploy import (DeploymentSpec, ModelSpec, RuntimeSpec,
+                              ServingSpec, build)
+    from repro.workload import ScenarioSpec
+    dep = build(DeploymentSpec(
+        name="scen",
+        model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=64,
+                        max_experts=8),
+        runtime=RuntimeSpec(use_runtime=True, prefetch=False),
+        serving=ServingSpec(slots=2, max_len=128, online_train=False)))
+    scen = dataclasses.replace(
+        ScenarioSpec.load(os.path.join(
+            os.path.dirname(__file__), os.pardir, "examples", "scenarios",
+            "flash_crowd.json")),
+        n_requests=6)
+    dep.serve(scenario=scen)
+    books = dep.controller.completed + dep.controller.rejected
+    assert len(books) == 6
+    assert {r.tenant for r in books} <= {"chat", "code"}
+    tr = dep.controller.tenant_report()
+    assert set(tr) <= {"chat", "code"}
+
+    # spec path (not just the object) works too, and repeated serve()
+    # calls draw fresh uids from the deployment's sequence — no
+    # duplicate-uid rejection on the second batch
+    p = tmp_path / "scen.json"
+    p.write_text(dataclasses.replace(scen, seed=scen.seed + 1).to_json())
+    dep.serve(scenario=str(p))
+    dep.serve(n_requests=2)  # synthesized path shares the sequence
+    books = dep.controller.completed + dep.controller.rejected
+    uids = [r.uid for r in books]
+    assert len(set(uids)) == len(uids) == 14
+
+    with pytest.raises(SpecError, match="not both"):
+        dep.serve(requests=[], scenario=scen)
+
+
+@pytest.mark.slow
+def test_fleetscale_10k_conservation_and_subquadratic_intake():
+    """The ISSUE's fleet-scale acceptance: 2 models x 2 devices x 10k
+    scenario requests complete, with the stall-conservation row True
+    and sub-quadratic intake demonstrated (runs the nightly bench
+    suite in-process and asserts on its acceptance rows)."""
+    from benchmarks import bench_fleetscale
+    from repro import obs
+    rows: list = []
+    collector = obs.MetricsCollector()
+    with obs.consumer(collector):
+        bench_fleetscale.run(rows)
+    byname = {r[0]: r for r in rows}
+    for model in "ab":
+        derived = byname[f"fleetscale/model={model}"][2]
+        assert "n=5000" in derived, derived
+    sub = byname["fleetscale/submit_subquadratic"][2]
+    assert sub.startswith("True"), sub
+    reg = collector.registry.snapshot()
+    assert reg.get("events_total", 0) > 0
+    assert int(reg.get("stall.conservation_violations", 0)) == 0
