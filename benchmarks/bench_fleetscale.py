@@ -1,43 +1,59 @@
-"""Fleet-scale serving benchmark: 2 models x 2 devices x 10k requests.
+"""Fleet-scale serving benchmark: 4 models x 4 devices x 10k requests.
 
 The nightly-only scale lane (registered in ``run.py`` but not in the
-push/PR bench loop): a two-member fleet over one shared host tier, each
-member a 2-device cluster with its own SLO control plane, served from a
-single overloaded ``repro.workload`` scenario (diurnal + flash-crowd
-arrivals, drifting router bias, 5 000 requests per model).  Tight SLOs
-mean the EDF feasibility gate rejects most of the queue — the point is
-the CONTROL PLANE at scale, not 10k full decodes.
+push/PR bench loop): a four-member fleet over one shared host tier,
+each member a 4-device cluster with its own SLO control plane, served
+from a single overloaded ``repro.workload`` scenario (diurnal +
+flash-crowd arrivals, drifting router bias, 2 500 requests per model).
+Tight SLOs mean the EDF feasibility gate rejects most of the queue —
+the point is the CONTROL PLANE at scale, not 10k full decodes.
+
+One member (model ``d``) gets a drift-heavy scenario (fast strong
+rotation) AND a live re-planner: its drift triggers re-run the cluster
+planner mid-serve, every re-plan is debited against the fleet's
+admission ledger (``Fleet.recommit`` — a denial aborts that re-plan),
+and the migrations ride the shared-tier transfer timelines while the
+other three members keep serving.  Re-planning under fleet contention,
+pinned as "the loop ran and the run completed", not as a perf claim.
 
 Pins:
 
-* ``submit_subquadratic`` — per-submit cost of the second 2 500
-  requests vs the first 2 500.  The heap intake is O(log n) per
+* ``submit_subquadratic`` — per-submit cost of the second 1 250
+  requests vs the first 1 250.  The heap intake is O(log n) per
   submit, so the ratio stays ~1; the old sort-on-every-submit intake
   was O(n log n) per call and blows past the 2.5x acceptance bar.
 * per-model completion rows (completed / rejected / attainment) — the
   run must COMPLETE, exercising heap intake, uid uniqueness, bounded
   metrics reservoirs, and busy+idle clock conservation at 10k scale.
+* ``fleetscale/replan/model=d`` — the fleet-contended replan loop:
+  drift checks ran, ledger recommits were attempted, and the member
+  still completed its stream.
 * ``fleetscale/stall_conservation`` (appended by ``run.py``) — every
   stall event's cause segments still sum back to its stalled seconds.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
-from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
-                          RuntimeSpec, ServingSpec, build_fleet)
+from repro.deploy import (DeploymentSpec, ModelSpec, ReplanSpec,
+                          ResourceSpec, RuntimeSpec, ServingSpec,
+                          build_fleet)
 from repro.store import floor_bytes
 from repro.workload import (ArrivalSpec, BurstSpec, DriftSpec, ScenarioSpec,
                             TenantSpec, generate_requests)
 
-N_PER_MODEL = 5000
-DEVICES = 2
-SEEDS = (0, 1)
+N_PER_MODEL = 2500
+DEVICES = 4
+MODELS = "abcd"
+SEEDS = (0, 1, 2, 3)
+#: model ``d`` serves the drift-heavy scenario with this replan section
+REPLAN = ReplanSpec(window=16, threshold=0.15, cooldown_s=4.0,
+                    check_every=4, bandwidth_share=0.25)
 _CACHE: dict = {}
 
 
-def _scenario(seed: int) -> ScenarioSpec:
+def _scenario(seed: int, *, drift_strength: float = 0.5,
+              drift_period_s: float = 30.0) -> ScenarioSpec:
     """Overloaded production mix: diurnal base traffic, one flash
     crowd, drifting router bias, two tenants with tight SLOs."""
     return ScenarioSpec(
@@ -58,7 +74,8 @@ def _scenario(seed: int) -> ScenarioSpec:
                        session_len=1, think_time_s=0.05,
                        router_bias=0.8, bias_seed=2),
         ),
-        drift=DriftSpec(kind="rotate", period_s=30.0, strength=0.5))
+        drift=DriftSpec(kind="rotate", period_s=drift_period_s,
+                        strength=drift_strength))
 
 
 def _spec(name: str, seed: int, vram_gb: float, host_gb: float
@@ -72,7 +89,8 @@ def _spec(name: str, seed: int, vram_gb: float, host_gb: float
                                progressive=False),
         runtime=RuntimeSpec(use_runtime=True, prefetch=False),
         serving=ServingSpec(slots=2, max_len=64, policy="slo",
-                            online_train=False))
+                            online_train=False),
+        replan=REPLAN if name == "d" else None)
 
 
 def _setup():
@@ -88,21 +106,27 @@ def _setup():
 def run(csv_rows: list):
     cfg, vram_gb = _setup()
     host_gb = 0.05
+    # per-device budget holds ~1.25x the four members' committed
+    # footprints: enough to admit everyone at build, tight enough that
+    # model d's re-plans contend for real headroom at recommit time
     fleet = build_fleet(
-        [_spec(name, seed, vram_gb, host_gb / 2)
-         for name, seed in zip("ab", SEEDS)],
-        vram_gb_per_device=2.5 * vram_gb * DEVICES, host_gb=host_gb)
+        [_spec(name, seed, vram_gb, host_gb / len(MODELS))
+         for name, seed in zip(MODELS, SEEDS)],
+        vram_gb_per_device=1.25 * vram_gb * len(MODELS), host_gb=host_gb)
 
     uid_base = 0
     streams = {}
-    for name, seed in zip("ab", SEEDS):
-        streams[name] = generate_requests(_scenario(101 + seed),
-                                          cfg.vocab_size, uid_base=uid_base)
+    for name, seed in zip(MODELS, SEEDS):
+        scen = (_scenario(101 + seed) if name != "d" else
+                _scenario(101 + seed, drift_strength=0.9,
+                          drift_period_s=15.0))
+        streams[name] = generate_requests(scen, cfg.vocab_size,
+                                          uid_base=uid_base)
         uid_base += len(streams[name])
 
     import gc
     submit_us = {}
-    for name in "ab":
+    for name in MODELS:
         reqs = streams[name]
         ctl = fleet[name].deployment.controller
         # the fleet clock is lockstep: rebase this member's arrivals to
@@ -113,7 +137,7 @@ def run(csv_rows: list):
             r.arrival_t += t_base
 
         # intake timing: per-submit cost of the second half vs the
-        # first (the heap holds 2.5k entries when the second half
+        # first (the heap holds 1.25k entries when the second half
         # starts — sub-quadratic intake keeps the ratio ~1, the old
         # sort-on-every-submit blew it up).  GC is paused around the
         # timed loops so a collection pause on one half doesn't
@@ -146,7 +170,20 @@ def run(csv_rows: list):
             f" rejected={rep['rejected']} slo={rep['slo_attainment']:.0%} "
             f"per_tenant=[{per_tenant}] wall={wall_s:.1f}s"))
 
-    for name in "ab":
+    # the drift-heavy member's replan loop under fleet contention
+    rp = fleet["d"].deployment._replanner
+    rr = rp.report() if rp is not None else {}
+    ran = bool(rr) and rr.get("checks", 0) > 0
+    csv_rows.append((
+        "fleetscale/replan/model=d", 0.0,
+        f"{ran} (checks={rr.get('checks', 0)} "
+        f"triggers={rr.get('drift_triggers', 0)} "
+        f"replans={rr.get('replans', 0)} denied={rr.get('denied', 0)} "
+        f"migrate_transfers={rr.get('migrate_transfers', 0)} "
+        f"rehomes={rr.get('migrate_rehomes', 0)}; acceptance: the "
+        f"fleet-ledgered replan loop ran and the stream completed)"))
+
+    for name in MODELS:
         first, second = submit_us[name]
         csv_rows.append((
             f"fleetscale/submit_us/model={name}/half=1", first, ""))
@@ -156,7 +193,8 @@ def run(csv_rows: list):
     # any decode has touched the process; later members time under
     # allocator/dispatch noise from the previous run).  A quadratic
     # intake shows ratio ~3 on every model, so min() still refutes it.
-    ratios = [submit_us[n][1] / max(submit_us[n][0], 1e-9) for n in "ab"]
+    ratios = [submit_us[n][1] / max(submit_us[n][0], 1e-9)
+              for n in MODELS]
     best = min(ratios)
     csv_rows.append((
         "fleetscale/submit_subquadratic", 0.0,

@@ -20,15 +20,22 @@ across PRs.
   cluster -> bench_cluster         (multi-GPU placement: stall/token +
                                     link utilization vs device count,
                                     replication sweep)
+  replan  -> bench_replan          (live re-planning: drift recovery on
+                                    the rotate scenario — replan-on
+                                    strictly lower stall AND higher
+                                    attainment post-drift; migration
+                                    decode parity; diff idempotence)
   multimodel -> bench_multimodel   (fleet: two models over one shared
                                     host/disk tier vs isolation — stall
                                     no worse, host bytes strictly lower,
                                     footprint-aware admission; scenario-
                                     driven fleet serving)
-  fleetscale -> bench_fleetscale   (nightly scale lane: 2 models x
-                                    2 devices x 10k scenario requests —
-                                    sub-quadratic intake, conservation
-                                    at scale; NOT in the push/PR loop)
+  fleetscale -> bench_fleetscale   (nightly scale lane: 4 models x
+                                    4 devices x 10k scenario requests,
+                                    one drift-heavy member replanning
+                                    against the fleet ledger — sub-
+                                    quadratic intake, conservation at
+                                    scale; NOT in the push/PR loop)
   roofline-> roofline              (dry-run derived terms, if present)
 
 ``derived`` is recorded in the JSON as a NUMBER whenever it parses as
@@ -117,8 +124,9 @@ def main() -> None:
                             bench_e2e_decode, bench_fleetscale,
                             bench_memory, bench_multimodel,
                             bench_predictor, bench_prefetch,
-                            bench_sensitivity, bench_serving,
-                            bench_sparse_kernel, bench_transfer, roofline)
+                            bench_replan, bench_sensitivity,
+                            bench_serving, bench_sparse_kernel,
+                            bench_transfer, roofline)
 
     suites = [
         ("headline", bench_compression.run),
@@ -131,6 +139,7 @@ def main() -> None:
         ("serving", bench_serving.run),
         ("memory", bench_memory.run),
         ("cluster", bench_cluster.run),
+        ("replan", bench_replan.run),
         ("multimodel", bench_multimodel.run),
         ("fleetscale", bench_fleetscale.run),
         ("roofline", roofline.run),

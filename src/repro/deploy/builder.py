@@ -204,6 +204,8 @@ class Deployment:
     plan: object  # StorePlan | ClusterPlan | None
     pipeline: object  # FloEPipeline
     controller: object = None  # ServingController | None
+    _replanner: object = None  # repro.replan.Replanner once attached
+    _replan_ledger: object = None  # fleet hook: (new_plan) -> None | raise
 
     @property
     def name(self) -> str:
@@ -249,9 +251,53 @@ class Deployment:
     # ----------------------------------------------------------- serving --
     _uid_seq: int = 0  # next uid for synthesized/scenario requests
 
+    # ------------------------------------------------------------ replan --
+    def _plan_fn(self):
+        """Planner re-run closure with this spec's own resource knobs
+        (what a drift trigger feeds the live frequency window to)."""
+        from repro.cluster import ClusterPlan, plan_cluster
+        from repro.store import plan_store
+        r, cfg = self.spec.resources, self.cfg
+        if isinstance(self.plan, ClusterPlan):
+            return lambda freqs: plan_cluster(
+                cfg, freqs, n_devices=r.devices,
+                vram_gb_per_device=r.vram_gb, host_gb=r.host_gb,
+                replicate=r.replicate, max_slots=r.max_slots,
+                max_pinned_per_device=r.max_pinned, ladder=r.ladder,
+                progressive=r.progressive)
+        return lambda freqs: plan_store(
+            cfg, freqs, vram_gb=r.vram_gb, host_gb=r.host_gb,
+            max_slots=r.max_slots, max_pinned=r.max_pinned,
+            ladder=r.ladder, progressive=r.progressive)
+
+    def _attach_replan(self, rp) -> object:
+        """Build (once) and attach the live re-planner to the serving
+        controller.  ``rp`` is a validated ``ReplanSpec``."""
+        if self.plan is None or self.spec.resources.vram_gb <= 0:
+            raise SpecError("replan",
+                            "live re-planning needs a planner-solved "
+                            "deployment (resources.vram_gb > 0)")
+        if self._replanner is None:
+            from repro.replan import Replanner
+            reference = self.freqs
+            if reference is None:  # injected plan without measured freqs
+                reference = np.full(
+                    (self.cfg.num_layers, self.cfg.num_experts),
+                    1.0 / max(self.cfg.num_experts, 1))
+            self._replanner = Replanner(
+                self.controller.pipe.sched, self.plan, reference,
+                self._plan_fn(), window=rp.window,
+                threshold=rp.threshold, hysteresis=rp.hysteresis,
+                cooldown_s=rp.cooldown_s, check_every=rp.check_every,
+                bandwidth_share=rp.bandwidth_share,
+                ledger=self._replan_ledger)
+        self.controller.replan = self._replanner
+        return self._replanner
+
     def serve(self, requests: Optional[list] = None, *,
               scenario=None, n_requests: int = 4, rate: float = 2.0,
-              max_new: int = 16, prompt_len: int = 8, seed: int = 0) -> list:
+              max_new: int = 16, prompt_len: int = 8, seed: int = 0,
+              replan=None) -> list:
         """Run the SLO control plane over one of three request sources:
         explicit ``SLORequest``s, a ``repro.workload`` scenario (a
         :class:`~repro.workload.ScenarioSpec` or a path to its JSON),
@@ -267,6 +313,21 @@ class Deployment:
         if self.controller is None:
             raise SpecError("serving",
                             f"deployment {self.name!r} has no ServingSpec")
+        # ``replan`` resolves: None -> the spec's section; True -> the
+        # spec's section or all-defaults; False -> off for this call;
+        # a ReplanSpec instance -> exactly those knobs.
+        from repro.deploy.spec import ReplanSpec
+        rp = replan
+        if rp is None:
+            rp = self.spec.replan
+        elif rp is True:
+            rp = self.spec.replan or ReplanSpec()
+        elif rp is False:
+            rp = None
+        if rp is not None and rp.enabled:
+            self._attach_replan(rp)
+        else:
+            self.controller.replan = None
         if scenario is not None and requests is not None:
             raise SpecError("serving",
                             "pass either requests or scenario, not both")
@@ -337,6 +398,8 @@ class Deployment:
                 replica_routed=pipe.sched.selector.replica_choices)
         if self.controller is not None:
             rep["serving"] = self.controller.report()
+        if self._replanner is not None:
+            rep["replan"] = self._replanner.report()
         rep["metrics"] = self.metrics_snapshot()
         return rep
 

@@ -154,6 +154,35 @@ class Fleet:
         self._sync_clocks()
         return out
 
+    def recommit(self, name: str, new_plan) -> None:
+        """Move a member's ledger commitment to a re-planned footprint.
+
+        The live re-planner calls this before migrating: each device's
+        delta (new footprint minus the member's current commitment) must
+        fit that device's headroom or the whole re-plan is denied with a
+        typed :class:`AdmissionError` — the ledger either moves atomically
+        or not at all, so a denied re-plan leaves the fleet untouched."""
+        m = self.members[name]
+        deltas = [new_plan.footprint_bytes(d) - m.device_bytes[d]
+                  for d in range(self.n_devices)]
+        for d, delta in enumerate(deltas):
+            if delta > self.headroom_bytes(d):
+                raise AdmissionError(
+                    f"fleet.{name}",
+                    f"re-plan needs {delta / 2 ** 30:+.4f}GiB on device "
+                    f"{d}, only {self.headroom_bytes(d) / 2 ** 30:.4f}GiB "
+                    f"headroom left (committed by: {self.admitted})")
+        for d, delta in enumerate(deltas):
+            self.committed[d] += delta
+            m.device_bytes[d] += delta
+        m.plan = new_plan
+        if obs.enabled():
+            sched = m.deployment.pipeline.sched
+            obs.emit("fleet.recommit", sched.clock if sched else 0.0,
+                     cat="fleet",
+                     args={"model": name,
+                           "delta_bytes_per_device": deltas})
+
     # ------------------------------------------- idle pinned-set eviction --
     def suspend(self, name: str) -> int:
         """Evict an idle model's pinned staged slices and credit the
@@ -337,6 +366,10 @@ def build_fleet(specs: Sequence[DeploymentSpec], *,
         dep = build(spec, params=p, thresholds=thr, freqs=fq,
                     device=device, link=link, engine=engine,
                     layer_stores=(stores, host), plan=plan)
+        # re-plans debit/credit the shared admission ledger: a re-plan
+        # whose footprint delta does not fit is denied, not migrated
+        dep._replan_ledger = (
+            lambda nm: lambda new_plan: fleet.recommit(nm, new_plan))(name)
         fleet.members[name] = FleetMember(
             name=name, spec=spec, deployment=dep, plan=plan,
             device_bytes=[plan.footprint_bytes(d)

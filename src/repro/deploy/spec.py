@@ -117,6 +117,20 @@ class ServingSpec:
     cross_token: bool = True  # controller-side cross-token speculation
 
 
+# ----------------------------------------------------------------- replan --
+@dataclasses.dataclass(frozen=True)
+class ReplanSpec:
+    """Live re-planning knobs (:class:`~repro.replan.Replanner`)."""
+
+    enabled: bool = True
+    window: int = 64  # min demand events before drift evaluates
+    threshold: float = 0.25  # mean per-layer TV distance that triggers
+    hysteresis: float = 0.5  # re-arm when dist <= hysteresis * threshold
+    cooldown_s: float = 0.25  # min modeled seconds between re-plans
+    check_every: int = 8  # controller steps between drift checks
+    bandwidth_share: float = 0.5  # migration's cap on link seconds
+
+
 # ------------------------------------------------------------- deployment --
 _MODES = ("floe", "naive", "resident")
 _POLICIES = ("slo", "static")
@@ -136,6 +150,7 @@ class DeploymentSpec:
     resources: ResourceSpec = dataclasses.field(default_factory=ResourceSpec)
     runtime: RuntimeSpec = dataclasses.field(default_factory=RuntimeSpec)
     serving: Optional[ServingSpec] = None
+    replan: Optional[ReplanSpec] = None
     name: str = ""
 
     def __post_init__(self):
@@ -222,6 +237,29 @@ class DeploymentSpec:
             if sv.max_preemptions < 0:
                 raise SpecError("serving.max_preemptions",
                                 f"need >= 0, got {sv.max_preemptions}")
+        rp = self.replan
+        if rp is not None:
+            if rp.window < 1:
+                raise SpecError("replan.window",
+                                f"need >= 1, got {rp.window}")
+            if not 0.0 < rp.threshold <= 1.0:
+                raise SpecError("replan.threshold",
+                                f"need 0 < threshold <= 1 (TV distance), "
+                                f"got {rp.threshold}")
+            if not 0.0 <= rp.hysteresis <= 1.0:
+                raise SpecError("replan.hysteresis",
+                                f"need 0 <= hysteresis <= 1, "
+                                f"got {rp.hysteresis}")
+            if rp.cooldown_s < 0:
+                raise SpecError("replan.cooldown_s",
+                                f"need >= 0, got {rp.cooldown_s}")
+            if rp.check_every < 1:
+                raise SpecError("replan.check_every",
+                                f"need >= 1, got {rp.check_every}")
+            if not 0.0 < rp.bandwidth_share <= 1.0:
+                raise SpecError("replan.bandwidth_share",
+                                f"need 0 < share <= 1, "
+                                f"got {rp.bandwidth_share}")
 
         # ---- cross-field ----------------------------------------------
         offloaded = rt.mode == "floe" and rt.use_runtime
@@ -243,6 +281,15 @@ class DeploymentSpec:
             raise SpecError("runtime.use_runtime",
                             "the serving controller requires the runtime "
                             "scheduler (use_runtime=True)")
+        if rp is not None and rp.enabled:
+            if r.vram_gb <= 0:
+                raise SpecError("replan.enabled",
+                                "live re-planning needs a tiered store "
+                                "plan (resources.vram_gb > 0)")
+            if sv is None:
+                raise SpecError("replan.enabled",
+                                "live re-planning runs inside the serving "
+                                "controller (serving must be set)")
 
         # ---- config-anchored (expert counts, feasibility floor) --------
         cfg = self.resolve_config()
@@ -290,6 +337,8 @@ class DeploymentSpec:
             d["resources"]["ladder"] = list(self.resources.ladder)
         if self.serving is not None:
             d["serving"] = dataclasses.asdict(self.serving)
+        if self.replan is not None:
+            d["replan"] = dataclasses.asdict(self.replan)
         return d
 
     def to_json(self, indent: int = 1) -> str:
@@ -298,7 +347,7 @@ class DeploymentSpec:
     @classmethod
     def from_dict(cls, d: dict) -> "DeploymentSpec":
         known_sections = ("name", "model", "resources", "runtime",
-                          "serving")
+                          "serving", "replan")
         bad_sections = sorted(set(d) - set(known_sections))
         if bad_sections:  # a typo'd section must not load as all-defaults
             raise SpecError(bad_sections[0],
@@ -324,6 +373,8 @@ class DeploymentSpec:
             # an explicit "serving": null means NO serving plane
             serving=(sub(ServingSpec, "serving")
                      if d.get("serving") is not None else None),
+            replan=(sub(ReplanSpec, "replan")
+                    if d.get("replan") is not None else None),
             name=d.get("name", ""),
         )
 

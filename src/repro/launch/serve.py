@@ -34,15 +34,18 @@ import sys
 
 def spec_from_args(args) -> "DeploymentSpec":
     """Flags -> typed spec (the validation lives in the spec, not here)."""
-    from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
-                              RuntimeSpec, ServingSpec)
+    from repro.deploy import (DeploymentSpec, ModelSpec, ReplanSpec,
+                              ResourceSpec, RuntimeSpec, ServingSpec)
     offloaded = args.mode in ("floe", "naive")
     serving = None
+    replan = None
     if args.mode == "floe-serve":
         serving = ServingSpec(
             slots=args.slots, max_len=256, policy=args.policy,
             slo_ms=args.slo_ms, online_train=True, train_every_tokens=16,
             train_window=64, min_train_rows=32, train_steps=40)
+        if args.replan:
+            replan = ReplanSpec()
     return DeploymentSpec(
         model=ModelSpec(arch=args.arch, reduced=args.reduced,
                         layers=args.layers, d_model=args.d_model,
@@ -57,7 +60,7 @@ def spec_from_args(args) -> "DeploymentSpec":
             use_runtime=(args.vram_gb > 0 or args.devices > 1 or
                          args.replicate > 0 or args.mode == "floe-serve"),
             cache_slots=args.cache_slots),
-        serving=serving)
+        serving=serving, replan=replan)
 
 
 def print_plan(dep) -> None:
@@ -147,6 +150,10 @@ def main():
                     help="floe-serve: drive the run from a repro.workload "
                          "ScenarioSpec JSON (see examples/scenarios/; "
                          "overrides --requests/--rate)")
+    ap.add_argument("--replan", action="store_true",
+                    help="floe-serve: live re-planning — watch routing "
+                         "drift and migrate expert placement while "
+                         "serving (needs --vram-gb)")
     ap.add_argument("--slo_ms", type=float, default=3000.0,
                     help="floe-serve: per-request latency SLO")
     ap.add_argument("--policy", choices=["slo", "static"], default="slo")
@@ -235,11 +242,14 @@ def run_offloaded(args, spec):
     print_plan(dep)
 
     if dep.controller is not None:  # floe-serve
+        # --replan with --spec turns re-planning on even when the spec
+        # file carries no replan section (serve resolves True -> defaults)
+        rp = True if getattr(args, "replan", False) else None
         if getattr(args, "scenario", ""):
-            dep.serve(scenario=args.scenario)
+            dep.serve(scenario=args.scenario, replan=rp)
         else:
             dep.serve(n_requests=args.requests, rate=args.rate,
-                      max_new=args.max_new)
+                      max_new=args.max_new, replan=rp)
         ctl = dep.controller
         rep = ctl.report()
         for r in sorted(ctl.completed, key=lambda r: r.uid):
@@ -267,6 +277,14 @@ def run_offloaded(args, spec):
                       f"completed={t['completed']} "
                       f"rejected={t['rejected']} "
                       f"ttft={t['ttft_ms_mean']:.1f}ms")
+        if dep._replanner is not None:
+            rr = dep._replanner.report()
+            print(f"replan: triggers={rr['drift_triggers']} "
+                  f"replans={rr['replans']} denied={rr['denied']} "
+                  f"migrated={rr['migrate_transfers']} transfers "
+                  f"({rr['migrate_bytes'] / 2 ** 20:.2f}MiB, "
+                  f"pins={rr['migrate_pins']} unpins={rr['migrate_unpins']} "
+                  f"rehomes={rr['migrate_rehomes']})")
         return dep
 
     metrics = dep.generate(args.max_new)

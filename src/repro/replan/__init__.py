@@ -1,0 +1,29 @@
+"""Live re-planning: drift detection -> plan diff -> expert migration.
+
+The closed loop from measured routing statistics back into placement
+while serving (FluxMoE's continuously-redistributed residency, EPLB):
+
+  * :mod:`repro.replan.drift`   — windowed TV-distance drift detector
+    with hysteresis + cooldown over live ``activation_freqs``.
+  * :mod:`repro.replan.diff`    — re-planned ``StorePlan``/``ClusterPlan``
+    diffed into a typed, deterministic :class:`MigrationDelta`.
+  * :mod:`repro.replan.migrate` — :class:`MigrationExecutor` issuing the
+    delta as demand-preemptible ``kind="migrate"`` transfers, and
+    :class:`Replanner`, the controller-facing loop.
+"""
+from repro.replan.diff import MigrationDelta, MigrationStep, diff
+from repro.replan.drift import DriftDetector, DriftReading, freqs_to_array
+from repro.replan.migrate import (MigrationExecutor, MigrationStats,
+                                  Replanner)
+
+__all__ = [
+    "DriftDetector",
+    "DriftReading",
+    "MigrationDelta",
+    "MigrationExecutor",
+    "MigrationStats",
+    "MigrationStep",
+    "Replanner",
+    "diff",
+    "freqs_to_array",
+]

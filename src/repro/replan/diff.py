@@ -1,0 +1,150 @@
+"""Plan diffing: old placement -> new placement as a typed migration.
+
+``diff(old, new)`` turns two planner solutions (:class:`StorePlan` or
+:class:`ClusterPlan`) into a :class:`MigrationDelta` — the exact, typed
+list of steps that takes the serving state from the old plan to the new
+one.  Ops, in the fixed order they appear in a delta (capacity is freed
+before it is refilled):
+
+  * ``unpin`` / ``replica_drop`` / ``downgrade`` — release VRAM,
+  * ``upgrade`` / ``pin`` / ``replica_add`` / ``rehome`` — claim it.
+
+Within an op group steps are sorted by ``(key, device)``, so the delta
+is a pure deterministic function of its two inputs: equal plans diff to
+the empty delta (idempotence, pinned by tests) and equal plan pairs
+always diff to byte-identical deltas (determinism, property-tested).
+
+Format changes compare ladder richness ``(keep_ratio, bits)``: a step is
+an ``upgrade`` when the new format materializes more of the expert.  The
+executor treats format steps as advisory — the host-tier records are
+immutable after build — but the delta records them so telemetry shows
+what a rebuild would change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple, Union
+
+from repro.cluster.placement import ClusterPlan
+from repro.store import formats as F
+from repro.store.planner import StorePlan
+
+Key = Tuple[int, int]
+Plan = Union[StorePlan, ClusterPlan]
+
+#: fixed op emission order: free capacity first, then claim it
+OPS: Tuple[str, ...] = ("unpin", "replica_drop", "downgrade",
+                        "upgrade", "pin", "replica_add", "rehome")
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationStep:
+    """One typed placement change for ``(layer, expert)``."""
+
+    op: str  # one of OPS
+    key: Key
+    device: int = 0  # device the step applies to (target for rehome)
+    fmt_from: str = ""
+    fmt_to: str = ""
+    src_device: int = -1  # rehome only: a device losing the expert
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown migration op {self.op!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationDelta:
+    """Deterministically-ordered tuple of migration steps."""
+
+    steps: Tuple[MigrationStep, ...] = ()
+
+    @property
+    def empty(self) -> bool:
+        return not self.steps
+
+    def __bool__(self) -> bool:
+        return bool(self.steps)
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def count(self, op: str) -> int:
+        return sum(1 for s in self.steps if s.op == op)
+
+    def summary(self) -> str:
+        parts = [f"{op}={n}" for op in OPS if (n := self.count(op))]
+        return " ".join(parts) if parts else "empty"
+
+
+def _richness(fmt: str) -> Tuple[float, int]:
+    f = F.get_format(fmt)
+    return (f.keep_ratio, f.bits)
+
+
+def _format_steps(old_formats, new_formats) -> List[MigrationStep]:
+    steps = []
+    for k in sorted(set(old_formats) | set(new_formats)):
+        a, b = old_formats.get(k), new_formats.get(k)
+        if a is None or b is None or a == b:
+            continue  # coverage changes surface as pin/slot steps instead
+        op = "upgrade" if _richness(b) > _richness(a) else "downgrade"
+        steps.append(MigrationStep(op=op, key=k, fmt_from=a, fmt_to=b))
+    return steps
+
+
+def _diff_store(old: StorePlan, new: StorePlan) -> List[MigrationStep]:
+    steps: List[MigrationStep] = []
+    old_p, new_p = set(old.pinned), set(new.pinned)
+    steps += [MigrationStep(op="unpin", key=k)
+              for k in sorted(old_p - new_p)]
+    steps += _format_steps(old.formats, new.formats)
+    steps += [MigrationStep(op="pin", key=k)
+              for k in sorted(new_p - old_p)]
+    return steps
+
+
+def _diff_cluster(old: ClusterPlan, new: ClusterPlan) -> List[MigrationStep]:
+    if old.n_devices != new.n_devices:
+        raise ValueError(f"cannot diff cluster plans across device counts "
+                         f"({old.n_devices} vs {new.n_devices})")
+    steps: List[MigrationStep] = []
+    for d in range(old.n_devices):
+        old_p = set(old.pinned_per_device[d])
+        new_p = set(new.pinned_per_device[d])
+        steps += [MigrationStep(op="unpin", key=k, device=d)
+                  for k in sorted(old_p - new_p)]
+        steps += [MigrationStep(op="pin", key=k, device=d)
+                  for k in sorted(new_p - old_p)]
+    steps += _format_steps(old.store_plan.formats, new.store_plan.formats)
+    for k in sorted(set(old.device_of) | set(new.device_of)):
+        homes_a = set(old.devices_of(*k))
+        homes_b = set(new.devices_of(*k))
+        if homes_a == homes_b:
+            continue
+        if homes_a.isdisjoint(homes_b):
+            src = min(homes_a)
+            steps += [MigrationStep(op="rehome", key=k, device=d,
+                                    src_device=src)
+                      for d in sorted(homes_b)]
+        else:  # replica-set change around a surviving home
+            steps += [MigrationStep(op="replica_drop", key=k, device=d)
+                      for d in sorted(homes_a - homes_b)]
+            steps += [MigrationStep(op="replica_add", key=k, device=d)
+                      for d in sorted(homes_b - homes_a)]
+    return steps
+
+
+def diff(old: Plan, new: Plan) -> MigrationDelta:
+    """Typed, deterministically-ordered migration taking ``old`` to
+    ``new``.  ``diff(plan, plan)`` is always empty."""
+    if isinstance(old, ClusterPlan) and isinstance(new, ClusterPlan):
+        steps = _diff_cluster(old, new)
+    elif isinstance(old, StorePlan) and isinstance(new, StorePlan):
+        steps = _diff_store(old, new)
+    else:
+        raise TypeError(f"cannot diff {type(old).__name__} against "
+                        f"{type(new).__name__}")
+    order = {op: i for i, op in enumerate(OPS)}
+    steps.sort(key=lambda s: (order[s.op], s.key, s.device))
+    return MigrationDelta(steps=tuple(steps))

@@ -1,0 +1,150 @@
+"""Windowed drift detection over live routing statistics.
+
+The planner solves placement once from offline activation frequencies;
+this module watches the frequencies the runtime *actually* accumulates
+(``ExpertScheduler.activation_freqs`` / the merged ``ClusterScheduler``
+view) and decides when the plan has gone stale.  The signal is the mean
+per-layer total-variation distance between the normalized live window
+and the plan's reference distribution:
+
+    TV(layer) = 0.5 * sum_e | live[layer, e] - ref[layer, e] |
+
+averaged over layers that have live observations.  A trigger needs all
+of: the detector armed, at least ``window`` demand events in the live
+window, ``cooldown_s`` of modeled time since the last trigger, and
+distance above ``threshold``.  Triggering disarms the detector; it
+re-arms when the distance falls back under ``hysteresis * threshold``
+(burst decayed, no re-plan needed) or when :meth:`rearm` is called after
+a re-plan lands (the live window becomes the new reference).  Hysteresis
+plus cooldown is what keeps a flash crowd from thrashing the planner.
+
+Every observation emits a ``replan.drift`` obs event, so the trace shows
+the distance series alongside the transfers it eventually causes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+
+Key = Tuple[int, int]
+
+
+def freqs_to_array(freqs: Mapping[Key, int], num_layers: int,
+                   num_experts: int) -> np.ndarray:
+    """``{(layer, expert): count}`` -> row-normalized ``(L, E)`` array.
+
+    Rows with no observations stay all-zero (callers treat them as
+    "no evidence", not "uniform")."""
+    out = np.zeros((num_layers, num_experts), dtype=np.float64)
+    for (li, e), c in freqs.items():
+        if 0 <= li < num_layers and 0 <= e < num_experts:
+            out[li, e] += float(c)
+    sums = out.sum(axis=1, keepdims=True)
+    np.divide(out, np.where(sums > 0, sums, 1.0), out=out)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftReading:
+    """One detector observation on the modeled timeline."""
+
+    t: float
+    distance: float  # mean per-layer TV distance, live window vs reference
+    n_events: int  # demand events inside the live window
+    triggered: bool
+    armed: bool  # state AFTER this observation
+
+
+class DriftDetector:
+    """Hysteresis + cooldown drift detector over windowed demand counts."""
+
+    def __init__(self, reference: np.ndarray, *, window: int = 64,
+                 threshold: float = 0.25, cooldown_s: float = 0.25,
+                 hysteresis: float = 0.5, device: int = 0):
+        assert window >= 1 and 0.0 < threshold <= 1.0
+        assert cooldown_s >= 0.0 and 0.0 <= hysteresis <= 1.0
+        self.reference = self._normalize(reference)
+        self.window = int(window)
+        self.threshold = float(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.hysteresis = float(hysteresis)
+        self._device = device
+        self._base: Dict[Key, int] = {}  # counts snapshot; window = live-base
+        self._armed = True
+        self._last_trigger = -math.inf
+        self.readings = 0
+        self.triggers = 0
+
+    @staticmethod
+    def _normalize(reference: np.ndarray) -> np.ndarray:
+        ref = np.asarray(reference, dtype=np.float64).copy()
+        sums = ref.sum(axis=1, keepdims=True)
+        np.divide(ref, np.where(sums > 0, sums, 1.0), out=ref)
+        return ref
+
+    @property
+    def armed(self) -> bool:
+        return self._armed
+
+    def snapshot(self, freqs: Mapping[Key, int]) -> None:
+        """Start a fresh window at the current cumulative counts."""
+        self._base = dict(freqs)
+
+    def window_counts(self, freqs: Mapping[Key, int]) -> Dict[Key, int]:
+        """Demand counts accumulated since the last snapshot."""
+        out: Dict[Key, int] = {}
+        for k, v in freqs.items():
+            d = int(v) - int(self._base.get(k, 0))
+            if d > 0:
+                out[k] = d
+        return out
+
+    def distance(self, freqs: Mapping[Key, int]) -> Tuple[float, int]:
+        """(mean per-layer TV distance, events in window)."""
+        counts = self.window_counts(freqs)
+        n = sum(counts.values())
+        if n == 0:
+            return 0.0, 0
+        live = freqs_to_array(counts, *self.reference.shape)
+        tvs = []
+        for li in range(self.reference.shape[0]):
+            if live[li].sum() <= 0.0 or self.reference[li].sum() <= 0.0:
+                continue  # dense layer or no live evidence: no opinion
+            tvs.append(0.5 * float(np.abs(live[li]
+                                          - self.reference[li]).sum()))
+        return (float(np.mean(tvs)) if tvs else 0.0), n
+
+    def observe(self, freqs: Mapping[Key, int], now: float) -> DriftReading:
+        """Evaluate the live window at modeled time ``now``."""
+        dist, n = self.distance(freqs)
+        triggered = (self._armed and n >= self.window
+                     and now - self._last_trigger >= self.cooldown_s
+                     and dist > self.threshold)
+        if triggered:
+            self._armed = False
+            self._last_trigger = now
+            self.triggers += 1
+        elif not self._armed and dist <= self.hysteresis * self.threshold:
+            self._armed = True  # burst decayed on its own
+        self.readings += 1
+        if obs.enabled():
+            obs.emit("replan.drift", now, cat="replan", device=self._device,
+                     args={"distance": round(dist, 4), "n_events": n,
+                           "triggered": triggered, "armed": self._armed})
+        return DriftReading(t=now, distance=dist, n_events=n,
+                            triggered=triggered, armed=self._armed)
+
+    def rearm(self, *, reference: Optional[np.ndarray] = None,
+              freqs: Optional[Mapping[Key, int]] = None) -> None:
+        """Re-arm after a re-plan landed: the live window becomes the new
+        reference and the count window restarts."""
+        if reference is not None:
+            self.reference = self._normalize(reference)
+        if freqs is not None:
+            self.snapshot(freqs)
+        self._armed = True

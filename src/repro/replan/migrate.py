@@ -1,0 +1,316 @@
+"""Migration execution and the closed re-planning loop.
+
+:class:`MigrationExecutor` applies a :class:`~repro.replan.diff.
+MigrationDelta` to the live runtime.  Bookkeeping steps (pin / unpin /
+replica and home flips on the live :class:`ClusterPlan`) apply
+immediately — they are set mutations with no bytes attached — while the
+byte movement (warming newly-pinned / re-homed experts into device
+residency) is queued and issued as ``kind="migrate"`` transfers on the
+existing :class:`~repro.runtime.transfer.TransferEngine` timeline.
+Migrate transfers ride the *speculative* scheduling path: a demand
+fetch preempts them at chunk granularity exactly like a prefetch, so an
+in-progress migration can never pause decode.  Decode outputs stay
+bitwise identical with migration on vs off at fixed routing because a
+migrated payload is the expert's full available slice and the MoE apply
+path selects exactly the channels it needs from any staged superset.
+
+Issue pacing: at most ``bandwidth_share`` of the wall the migration has
+existed may be spent on migrate traffic (modeled link seconds), and a
+transfer is only issued while the engine has a free staging buffer —
+prefetches and migrations share the same buffers, so the cap bounds how
+much speculation the migration can displace.  ``begin`` on an executor
+with work still in flight *supersedes* it: the queue is dropped and
+in-flight migrate transfers are demoted (bytes already scheduled still
+move, telemetry records the waste), so a newer re-plan always wins.
+
+:class:`Replanner` closes the loop: every ``check_every`` controller
+steps it feeds the scheduler's live ``activation_freqs`` to a
+:class:`~repro.replan.drift.DriftDetector`; on a trigger it re-runs the
+planner on the live window (via an injected ``plan_fn``), diffs the
+current plan against the new one, debits the fleet admission ledger
+when one is attached (a denial aborts that re-plan), hands the delta to
+the executor, and re-arms the detector with the live window as the new
+reference.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.replan.diff import MigrationDelta, diff
+from repro.replan.drift import DriftDetector, freqs_to_array
+from repro.store.planner import PlanError
+
+Key = Tuple[int, int]
+
+
+@dataclasses.dataclass
+class MigrationStats:
+    """Rolling telemetry across every migration this executor ran."""
+
+    begun: int = 0
+    superseded: int = 0
+    pins: int = 0
+    unpins: int = 0
+    rehomes: int = 0
+    replica_adds: int = 0
+    replica_drops: int = 0
+    format_changes: int = 0  # advisory: host records immutable post-build
+    transfers: int = 0
+    bytes: int = 0
+    busy_s: float = 0.0  # modeled link seconds spent on migrate traffic
+    deferred: int = 0  # polls that hit the bandwidth/buffer cap
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class MigrationExecutor:
+    """Apply migration deltas as background transfers on the live runtime."""
+
+    def __init__(self, sched, *, bandwidth_share: float = 0.5,
+                 live_plan=None):
+        assert 0.0 < bandwidth_share <= 1.0
+        self.sched = sched  # ExpertScheduler or ClusterScheduler
+        self.bandwidth_share = float(bandwidth_share)
+        # the ClusterPlan the live dispatcher routes by (home flips must
+        # mutate THIS object, not the planner's fresh solution)
+        self.live_plan = live_plan
+        self._queue: collections.deque = collections.deque()  # (key, dev)
+        self._recs: List[tuple] = []  # (dev_idx, engine_key, record)
+        self._seq = itertools.count()
+        self._t0: Optional[float] = None
+        self._rehomed: set = set()  # keys re-homed within current begin()
+        self.stats = MigrationStats()
+
+    # ------------------------------------------------------------ helpers --
+    def _devs(self) -> list:
+        return list(self.sched.devs) if hasattr(self.sched, "devs") \
+            else [self.sched]
+
+    @property
+    def active(self) -> bool:
+        """Work queued or still in flight on the modeled timeline."""
+        return bool(self._queue) or bool(self._recs)
+
+    def _set_homes(self, key: Key, *, add: Optional[int] = None,
+                   remove: Optional[int] = None) -> None:
+        if self.live_plan is None:
+            return
+        cur = set(self.live_plan.devices_of(*key))
+        if add is not None:
+            cur.add(add)
+        if remove is not None:
+            cur.discard(remove)
+        if cur:
+            self.live_plan.device_of[key] = tuple(sorted(cur))
+
+    def _rehome(self, key: Key, dst: int) -> None:
+        if self.live_plan is None:
+            return
+        if key in self._rehomed:  # second target device of the same move
+            self._set_homes(key, add=dst)
+        else:
+            self.live_plan.device_of[key] = (dst,)
+            self._rehomed.add(key)
+
+    # -------------------------------------------------------------- begin --
+    def begin(self, delta: MigrationDelta, now: float) -> None:
+        """Start (or supersede into) executing ``delta`` at time ``now``."""
+        devs = self._devs()
+        if self.active:
+            self._supersede(now, devs)
+        self.stats.begun += 1
+        if self._t0 is None:
+            self._t0 = now
+        self._rehomed = set()
+        for s in delta.steps:
+            li, _ = s.key
+            d = s.device if 0 <= s.device < len(devs) else 0
+            res = devs[d].residency[li] \
+                if 0 <= li < len(devs[d].residency) else None
+            if s.op == "unpin":
+                if res is not None:
+                    res.unpin(s.key)
+                    self.stats.unpins += 1
+            elif s.op in ("upgrade", "downgrade"):
+                self.stats.format_changes += 1
+            elif s.op == "replica_drop":
+                self._set_homes(s.key, remove=d)
+                if res is not None:
+                    res.unpin(s.key)
+                    self.stats.replica_drops += 1
+            elif s.op in ("pin", "replica_add", "rehome"):
+                if s.op == "replica_add":
+                    self._set_homes(s.key, add=d)
+                    self.stats.replica_adds += 1
+                elif s.op == "rehome":
+                    self._rehome(s.key, d)
+                    self.stats.rehomes += 1
+                if res is None:
+                    continue
+                if s.op != "rehome":  # re-homing moves, it does not pin
+                    res.pin(s.key)
+                    if s.op == "pin":
+                        self.stats.pins += 1
+                if s.key not in res:
+                    self._queue.append((s.key, d))
+        self.poll(now)
+
+    def _supersede(self, now: float, devs: list) -> None:
+        self._queue.clear()
+        for d, ekey, rec in self._recs:
+            if rec.complete_t > now:
+                devs[d].engine.demote(ekey)
+        self.stats.superseded += 1
+        if obs.enabled():
+            obs.emit("replan.supersede", now, cat="replan",
+                     args={"dropped_inflight": len(self._recs)})
+
+    # --------------------------------------------------------------- poll --
+    def poll(self, now: float) -> None:
+        """Issue queued warm-ups within the bandwidth/buffer budget."""
+        if self._t0 is None:
+            return
+        self._recs = [t for t in self._recs if t[2].complete_t > now]
+        devs = self._devs()
+        while self._queue:
+            elapsed = max(now - self._t0, 1e-9)
+            if self.stats.busy_s > self.bandwidth_share * elapsed:
+                self.stats.deferred += 1
+                break
+            key, d = self._queue[0]
+            dev = devs[d]
+            if not dev.engine.has_capacity(now):
+                self.stats.deferred += 1
+                break
+            self._queue.popleft()
+            self._stage(dev, d, key, now)
+
+    def _stage(self, dev, d: int, key: Key, now: float) -> None:
+        li, e = key
+        store = dev.stores[li]
+        res = dev.residency[li]
+        if store is None or res is None or key in res:
+            return  # dense layer, or a prefetch/demand beat us to it
+        idx = store.available_channels(e)
+        if idx is None:
+            idx = np.arange(store.d_ff)
+        ekey = (key, "migrate", next(self._seq))
+        payload, rec = dev.engine.issue(store, ekey, e, idx, now,
+                                        kind="migrate")
+        res.put(key, payload, ready_t=rec.complete_t)
+        self._recs.append((d, ekey, rec))
+        self.stats.transfers += 1
+        self.stats.bytes += rec.nbytes
+        self.stats.busy_s += rec.duration
+
+
+class Replanner:
+    """Drift detector + planner re-run + migration, one object.
+
+    The serving controller calls :meth:`on_step` once per decode step;
+    everything else is wiring handed in by the deploy builder:
+    ``plan_fn`` re-runs ``plan_store``/``plan_cluster`` with the
+    deployment's own resource knobs, ``ledger`` (optional) is the fleet
+    admission hook — it either re-commits the member's budget to the new
+    plan or raises, which aborts that re-plan as *denied*.
+    """
+
+    def __init__(self, sched, plan, reference: np.ndarray,
+                 plan_fn: Callable[[np.ndarray], object], *,
+                 window: int = 64, threshold: float = 0.25,
+                 hysteresis: float = 0.5, cooldown_s: float = 0.25,
+                 check_every: int = 8, bandwidth_share: float = 0.5,
+                 ledger: Optional[Callable[[object], None]] = None,
+                 device: int = 0):
+        assert check_every >= 1
+        self.sched = sched
+        self.plan = plan
+        self.plan_fn = plan_fn
+        self.detector = DriftDetector(reference, window=window,
+                                      threshold=threshold,
+                                      cooldown_s=cooldown_s,
+                                      hysteresis=hysteresis, device=device)
+        has_devices = hasattr(sched, "devs")
+        self.executor = MigrationExecutor(
+            sched, bandwidth_share=bandwidth_share,
+            live_plan=plan if has_devices else None)
+        self.check_every = int(check_every)
+        self.ledger = ledger
+        self._device = device
+        self._step_i = 0
+        self.checks = 0
+        self.replans = 0
+        self.denied = 0
+        self.plan_errors = 0
+        self.empty_deltas = 0
+
+    def on_step(self, now: float) -> None:
+        """Controller hook: pump migrations, periodically check drift."""
+        self.executor.poll(now)
+        self._step_i += 1
+        if self._step_i % self.check_every:
+            return
+        self.checks += 1
+        freqs = self.sched.activation_freqs
+        reading = self.detector.observe(freqs, now)
+        if not reading.triggered:
+            return
+        live = self._live_freqs(freqs)
+        try:
+            new_plan = self.plan_fn(live)
+        except PlanError:
+            self.plan_errors += 1
+            return
+        delta = diff(self.plan, new_plan)
+        if delta.empty:
+            self.empty_deltas += 1
+            self.detector.rearm(reference=live, freqs=freqs)
+            return
+        if self.ledger is not None:
+            try:
+                self.ledger(new_plan)
+            except Exception:  # AdmissionError: budget denies this re-plan
+                self.denied += 1
+                return
+        if obs.enabled():
+            obs.emit("replan.plan", now, cat="replan", device=self._device,
+                     args={"steps": len(delta), "summary": delta.summary(),
+                           "distance": round(reading.distance, 4),
+                           "n_events": reading.n_events})
+        self.executor.begin(delta, now)
+        self.plan = new_plan
+        self.replans += 1
+        self.detector.rearm(reference=live, freqs=freqs)
+
+    def _live_freqs(self, freqs) -> np.ndarray:
+        """Live window as a planner-ready array; layers with no live
+        evidence keep the reference row so the planner never starves an
+        unobserved layer."""
+        counts = self.detector.window_counts(freqs)
+        arr = freqs_to_array(counts, *self.detector.reference.shape)
+        for li in range(arr.shape[0]):
+            if arr[li].sum() <= 0.0:
+                arr[li] = self.detector.reference[li]
+        return arr
+
+    def report(self) -> dict:
+        out = {
+            "checks": self.checks,
+            "drift_readings": self.detector.readings,
+            "drift_triggers": self.detector.triggers,
+            "replans": self.replans,
+            "denied": self.denied,
+            "plan_errors": self.plan_errors,
+            "empty_deltas": self.empty_deltas,
+            "migration_active": self.executor.active,
+        }
+        out.update({f"migrate_{k}": v
+                    for k, v in self.executor.stats.as_dict().items()})
+        return out

@@ -54,6 +54,8 @@ class ResidencyStats:
     evictions: int = 0
     insertions: int = 0
     prefetch_hits: int = 0  # first consumption of a prefetched entry
+    arena_overcommit: int = 0  # inserts that grew past capacity/arena
+    #                            because every resident key was pinned
 
     @property
     def hit_rate(self) -> float:
@@ -63,6 +65,7 @@ class ResidencyStats:
     def reset(self) -> None:
         self.hits = self.misses = self.evictions = 0
         self.insertions = self.prefetch_hits = 0
+        self.arena_overcommit = 0
 
 
 @dataclasses.dataclass
@@ -169,10 +172,26 @@ class ResidencyManager:
         while span is None:
             victim = self._victim(exclude=key)
             if victim is None:
+                self._note_overcommit(key, nbytes)
                 return self.pool.alloc_overflow(nbytes, owner=key)
             self._evict(victim)
             span = self.pool.try_alloc(nbytes, owner=key)
         return span
+
+    def _note_overcommit(self, key: Hashable, nbytes: int) -> None:
+        """An insert is about to grow past the arena/slot budget because
+        everything resident is pinned.  Migration's pin/unpin churn must
+        never hit this silently: count it and emit an obs event so the
+        trace shows which key forced the overflow."""
+        self.stats.arena_overcommit += 1
+        if obs.enabled():
+            t = self._clock_fn() if self._clock_fn is not None else 0.0
+            obs.emit("residency.overcommit", t, cat="residency",
+                     device=self._obs_device,
+                     args={"key": repr(key), "nbytes": int(nbytes),
+                           "resident": len(self._slots),
+                           "pinned": len(self.pinned),
+                           "capacity": self.capacity})
 
     def update_payload(self, key: Hashable, payload: Any) -> bool:
         """Swap an entry's payload in place (top-up merge / progressive
@@ -207,6 +226,7 @@ class ResidencyManager:
         while len(self._slots) >= self.capacity:
             victim = self._victim()
             if victim is None:  # everything pinned: grow past capacity
+                self._note_overcommit(key, payload_nbytes(payload))
                 break
             self._evict(victim)
         ent = Entry(payload, ready_t=ready_t, score=score,

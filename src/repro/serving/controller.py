@@ -341,6 +341,9 @@ class ServingController:
         self.pred_stats = {"xl_hit": 0, "xl_true": 0,
                            "ct_hit": 0, "ct_true": 0}
         self.metrics: List[StepMetrics] = []
+        # live re-planner hook (repro.replan.Replanner); attached by
+        # Deployment.serve(replan=...), polled once per step
+        self.replan = None
 
     # ------------------------------------------------------------ intake ---
     def submit(self, req: SLORequest) -> None:
@@ -936,6 +939,8 @@ class ServingController:
     def step(self) -> bool:
         """One control cycle; returns False when there is nothing left."""
         now = self.sched.clock
+        if self.replan is not None:
+            self.replan.on_step(now)
         self._ingest(now)
         self._retire(now)
         self._admission(now)

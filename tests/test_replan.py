@@ -1,0 +1,385 @@
+"""repro.replan — drift detection, plan diffing, live migration.
+
+Property tests run through ``tests._hypothesis_compat`` (real
+hypothesis when installed, a deterministic grid otherwise):
+
+* the drift detector NEVER triggers under stationary traffic (live
+  window sampled exactly from the reference) and ALWAYS triggers under
+  a phase swap (live mass disjoint from the reference support);
+* ``diff`` is a pure function of its two plans — byte-identical deltas
+  on repeated calls, ``diff(plan, plan)`` empty (idempotence, an
+  acceptance criterion), frees-before-claims step order;
+* migration never perturbs serving: identical token streams with a
+  migration executing mid-serve vs none (the decode-parity acceptance
+  criterion);
+* ``arena_overcommit`` surfaces all-pinned residency growth instead of
+  letting migration churn hit it silently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.common.config import reduced
+from repro.configs import get_config
+from repro.replan import (DriftDetector, MigrationDelta, MigrationExecutor,
+                          MigrationStep, diff, freqs_to_array)
+from repro.replan.diff import OPS
+from repro.store import floor_bytes, plan_store
+from tests._hypothesis_compat import given, settings, st
+
+SCENARIO = os.path.join(os.path.dirname(__file__), os.pardir, "examples",
+                        "scenarios", "drift_rotate.json")
+
+
+def _cfg():
+    return reduced(get_config("mixtral_8x7b"), layers=4, d_model=64,
+                   max_experts=8)
+
+
+# ---------------------------------------------------------------- drift ---
+
+
+def test_freqs_to_array_normalizes_and_keeps_zero_rows():
+    arr = freqs_to_array({(0, 1): 3, (0, 3): 1, (2, 0): 8}, 3, 4)
+    assert arr.shape == (3, 4)
+    np.testing.assert_allclose(arr[0], [0, 0.75, 0, 0.25])
+    assert arr[1].sum() == 0.0  # no evidence stays zero, not uniform
+    np.testing.assert_allclose(arr[2], [1, 0, 0, 0])
+    # out-of-range keys are ignored, not crashes
+    assert freqs_to_array({(9, 9): 5}, 2, 2).sum() == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=8),
+       st.integers(min_value=4, max_value=64))
+def test_drift_stationary_never_triggers(num_experts, window):
+    """Live counts exactly proportional to the reference: TV distance is
+    0 forever, so no observation may trigger however long it runs."""
+    ref = np.tile(np.arange(1.0, num_experts + 1.0), (2, 1))
+    det = DriftDetector(ref, window=window, threshold=0.05, cooldown_s=0.0)
+    freqs: dict = {}
+    for step in range(1, 6):
+        for li in range(2):
+            for e in range(num_experts):
+                freqs[(li, e)] = step * (e + 1) * window
+        r = det.observe(freqs, float(step))
+        assert not r.triggered
+        assert r.distance < 1e-9
+        assert r.armed
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=4, max_value=8),
+       st.integers(min_value=4, max_value=32))
+def test_drift_phase_swap_always_triggers(num_experts, window):
+    """Live mass entirely on experts the reference never used: TV
+    distance is exactly 1, so a full window must trigger."""
+    half = num_experts // 2
+    ref = np.zeros((2, num_experts))
+    ref[:, :half] = 1.0 / half
+    det = DriftDetector(ref, window=window, threshold=0.5, cooldown_s=0.0)
+    freqs = {(li, e): 2 * window
+             for li in range(2) for e in range(half, num_experts)}
+    r = det.observe(freqs, 1.0)
+    assert r.triggered
+    assert r.distance == pytest.approx(1.0)
+    assert not r.armed  # a trigger disarms until hysteresis or rearm
+
+
+def test_drift_hysteresis_and_rearm_cycle():
+    num_experts = 4
+    ref = np.zeros((1, num_experts))
+    ref[0, :2] = 0.5
+    det = DriftDetector(ref, window=4, threshold=0.5, cooldown_s=0.0,
+                        hysteresis=0.5)
+    swapped = {(0, 2): 4, (0, 3): 4}
+    assert det.observe(swapped, 1.0).triggered
+    # disarmed: the same drifted window cannot re-trigger
+    r = det.observe(swapped, 2.0)
+    assert not r.triggered and not r.armed
+    # the burst decays on its own (window restarts, counts match ref):
+    # distance falls under hysteresis*threshold and the detector re-arms
+    det.snapshot(swapped)
+    calm = {(0, 0): 10 + 4, (0, 1): 10 + 4, (0, 2): 4, (0, 3): 4}
+    det.snapshot({(0, 0): 10, (0, 1): 10, (0, 2): 4, (0, 3): 4})
+    r = det.observe(calm, 3.0)
+    assert not r.triggered and r.armed and r.distance < 1e-9
+    # armed again: a fresh swap triggers a second time
+    det.snapshot(calm)
+    swapped2 = {k: v + 8 for k, v in calm.items() if k[1] >= 2}
+    assert det.observe({**calm, **swapped2}, 4.0).triggered
+    assert det.triggers == 2
+
+
+def test_drift_window_gate():
+    """No trigger before `window` demand events, however drifted."""
+    ref = np.array([[1.0, 0.0]])
+    det = DriftDetector(ref, window=8, threshold=0.1, cooldown_s=0.0)
+    assert not det.observe({(0, 1): 7}, 1.0).triggered  # 7 < window
+    assert det.observe({(0, 1): 8}, 2.0).triggered
+
+
+# ----------------------------------------------------------------- diff ---
+
+
+def _plans(seed: int):
+    cfg = _cfg()
+    rng = np.random.default_rng(seed)
+    f1 = rng.random((cfg.num_layers, cfg.num_experts))
+    f1 /= f1.sum(axis=1, keepdims=True)
+    f2 = np.roll(f1, 2, axis=1)
+    vram = 1.3 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    mk = lambda f: plan_store(cfg, f, vram_gb=vram, host_gb=0.05,
+                              ladder=("int2",), progressive=False)
+    return mk(f1), mk(f2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=5))
+def test_diff_deterministic_and_idempotent(seed):
+    a, b = _plans(seed)
+    d1, d2 = diff(a, b), diff(a, b)
+    assert d1 == d2  # frozen dataclasses: byte-identical steps
+    assert diff(a, a).empty and diff(b, b).empty
+    # frees-before-claims: op groups appear in fixed OPS order
+    order = [OPS.index(s.op) for s in d1.steps]
+    assert order == sorted(order)
+
+
+def test_diff_cluster_idempotent_and_rehome():
+    from repro.cluster import plan_cluster
+    cfg = _cfg()
+    rng = np.random.default_rng(3)
+    f1 = rng.random((cfg.num_layers, cfg.num_experts))
+    f1 /= f1.sum(axis=1, keepdims=True)
+    vram = 1.2 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    a = plan_cluster(cfg, f1, n_devices=2, vram_gb_per_device=vram,
+                     host_gb=0.05, ladder=("int2",))
+    assert diff(a, a).empty
+    b = plan_cluster(cfg, np.roll(f1, 3, axis=1), n_devices=2,
+                     vram_gb_per_device=vram, host_gb=0.05,
+                     ladder=("int2",))
+    d = diff(a, b)
+    assert diff(a, b) == d
+    for s in d.steps:
+        if s.op == "rehome":
+            assert s.src_device >= 0 and s.device != s.src_device
+    # plans at different device counts cannot be diffed
+    c4 = plan_cluster(cfg, f1, n_devices=4, vram_gb_per_device=vram,
+                      host_gb=0.05, ladder=("int2",))
+    with pytest.raises(ValueError):
+        diff(a, c4)
+
+
+def test_migration_step_rejects_unknown_op():
+    with pytest.raises(ValueError):
+        MigrationStep(op="teleport", key=(0, 0))
+    d = MigrationDelta(steps=(MigrationStep(op="pin", key=(0, 1)),))
+    assert len(d) == 1 and d.count("pin") == 1 and not d.empty
+    assert "pin=1" in d.summary()
+
+
+# ------------------------------------------------------------ residency ---
+
+
+def test_arena_overcommit_counter_and_event():
+    from repro import obs
+    from repro.runtime.residency import ResidencyManager
+    res = ResidencyManager(capacity=1, pinned=[("a",)])
+    collector = obs.MetricsCollector()
+    with obs.consumer(collector):
+        res.put(("a",), (np.zeros(4, np.float32),))
+        assert res.stats.arena_overcommit == 0
+        # capacity full and everything resident is pinned: the insert
+        # must land (migration correctness) but NEVER silently
+        res.put(("b",), (np.zeros(4, np.float32),))
+    assert ("b",) in res and len(res) == 2  # grew past capacity
+    assert res.stats.arena_overcommit == 1
+    reg = collector.registry.snapshot()
+    assert int(reg.get("events_total", 0)) >= 1
+    res.stats.reset()
+    assert res.stats.arena_overcommit == 0
+
+
+# ----------------------------------------------------------------- spec ---
+
+
+def _full_spec(**kw):
+    from repro.deploy import (DeploymentSpec, ModelSpec, ReplanSpec,
+                              ResourceSpec, RuntimeSpec, ServingSpec)
+    cfg = _cfg()
+    vram = 1.2 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    base = dict(
+        model=ModelSpec(arch="mixtral-8x7b", layers=4, d_model=64,
+                        max_experts=8),
+        resources=ResourceSpec(vram_gb=vram, host_gb=0.05,
+                               ladder=("int2",), progressive=False),
+        runtime=RuntimeSpec(use_runtime=True, prefetch=False),
+        serving=ServingSpec(slots=2, max_len=64, policy="slo",
+                            online_train=False),
+        replan=ReplanSpec())
+    base.update(kw)
+    return DeploymentSpec(**base)
+
+
+def test_replan_spec_json_roundtrip():
+    from repro.deploy import DeploymentSpec, ReplanSpec
+    spec = _full_spec(replan=ReplanSpec(window=32, threshold=0.3,
+                                        cooldown_s=1.5, check_every=4,
+                                        bandwidth_share=0.4))
+    again = DeploymentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec
+    assert again.replan.window == 32
+    # a spec without the section round-trips to None
+    bare = _full_spec(replan=None)
+    assert DeploymentSpec.from_dict(bare.to_dict()).replan is None
+
+
+def test_replan_spec_validation_errors():
+    from repro.deploy import ReplanSpec, SpecError
+    for kw, field in [
+        (dict(window=0), "replan.window"),
+        (dict(threshold=0.0), "replan.threshold"),
+        (dict(threshold=1.5), "replan.threshold"),
+        (dict(hysteresis=1.5), "replan.hysteresis"),
+        (dict(cooldown_s=-1.0), "replan.cooldown_s"),
+        (dict(check_every=0), "replan.check_every"),
+        (dict(bandwidth_share=0.0), "replan.bandwidth_share"),
+    ]:
+        with pytest.raises(SpecError) as ei:
+            _full_spec(replan=ReplanSpec(**kw))
+        assert ei.value.field == field
+    # replan needs a serving control plane and a tiered store
+    with pytest.raises(SpecError) as ei:
+        _full_spec(serving=None)
+    assert ei.value.field == "replan.enabled"
+
+
+# ------------------------------------------------- executor + end-to-end --
+
+
+def _tiny_dep(**spec_kw):
+    from repro.deploy import build
+    return build(_full_spec(replan=None, **spec_kw))
+
+
+def test_executor_applies_pins_and_supersedes():
+    dep = _tiny_dep()
+    sched = dep.pipeline.sched
+    pinned = sorted(dep.plan.pinned)
+    moe = [li for li, st_ in enumerate(sched.stores) if st_ is not None]
+    unpinned = [(li, e) for li in moe for e in range(8)
+                if (li, e) not in dep.plan.pinned]
+    ex = MigrationExecutor(sched, bandwidth_share=1.0)
+    d1 = MigrationDelta(steps=tuple(
+        [MigrationStep(op="unpin", key=k) for k in pinned[:2]]
+        + [MigrationStep(op="pin", key=k) for k in unpinned[:3]]))
+    ex.begin(d1, sched.clock)
+    # bookkeeping is eager: pins/unpins land before any bytes move
+    for k in unpinned[:3]:
+        assert k in sched.residency[k[0]].pinned
+    for k in pinned[:2]:
+        assert k not in sched.residency[k[0]].pinned
+    assert ex.stats.begun == 1 and ex.active
+    ex.poll(sched.clock)  # warm-ups issue from the queue under poll()
+    assert ex.stats.transfers >= 1
+    staged = [k for k in unpinned[:3] if k in sched.residency[k[0]]]
+    assert staged  # at least one warm-up staged into residency
+    # a newer re-plan supersedes: queue dropped, in-flight demoted
+    d2 = MigrationDelta(steps=tuple(
+        MigrationStep(op="pin", key=k) for k in unpinned[3:6]))
+    ex.begin(d2, sched.clock)
+    assert ex.stats.begun == 2 and ex.stats.superseded == 1
+    # migrate transfers ride the engine timeline under a distinct kind
+    kinds = {r.kind for r in sched.engine.records}
+    assert "migrate" in kinds
+
+
+def test_migration_decode_parity_serving():
+    """Acceptance: identical serving outputs, migration on vs off."""
+    from repro.serving.controller import SLORequest
+    rng = np.random.default_rng(5)
+    cfg = _cfg()
+    prompts = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+               for _ in range(3)]
+    outs = {}
+    for arm in ("off", "on"):
+        dep = _tiny_dep()
+        ctl = dep.controller
+        ex = None
+        if arm == "on":
+            sched = ctl.pipe.sched
+            pinned = set(dep.plan.pinned)
+            moe = [li for li, st_ in enumerate(sched.stores)
+                   if st_ is not None]
+            steps = tuple(
+                [MigrationStep(op="unpin", key=k) for k in sorted(pinned)]
+                + [MigrationStep(op="pin", key=(li, e))
+                   for li in moe for e in range(cfg.num_experts)
+                   if (li, e) not in pinned][:6])
+            ex = MigrationExecutor(sched, bandwidth_share=1.0)
+            ex.begin(MigrationDelta(steps=steps), ctl.sched.clock)
+        for i, p in enumerate(prompts):
+            ctl.submit(SLORequest(uid=i, prompt=p, max_new_tokens=6,
+                                  slo_ms=1e6))
+        while ctl.step():
+            if ex is not None:
+                ex.poll(ctl.sched.clock)
+        ctl._retire(ctl.sched.clock)
+        outs[arm] = {r.uid: list(r.output) for r in ctl.completed}
+    assert len(outs["off"]) == 3
+    assert outs["off"] == outs["on"]
+
+
+def test_replan_end_to_end_under_drift():
+    """Serving the committed drift scenario with aggressive knobs must
+    re-plan at least once, and the loop's telemetry must surface in the
+    deployment report."""
+    from repro.deploy import ReplanSpec
+    from repro.workload import ScenarioSpec
+    scen = dataclasses.replace(ScenarioSpec.load(SCENARIO), n_requests=12)
+    dep = _tiny_dep()
+    dep.serve(scenario=scen,
+              replan=ReplanSpec(window=8, threshold=0.1, cooldown_s=0.0,
+                                check_every=2, bandwidth_share=1.0))
+    rep = dep.report()["replan"]
+    assert rep["replans"] >= 1
+    assert rep["drift_triggers"] >= rep["replans"]
+    assert rep["checks"] >= 1
+    # serve(replan=False) turns the loop off for that call
+    dep2 = _tiny_dep()
+    dep2.serve(scenario=dataclasses.replace(scen, seed=99), replan=False)
+    assert "replan" not in dep2.report()
+
+
+def test_fleet_replan_ledger():
+    """Re-plans move the admission ledger atomically; a footprint the
+    headroom cannot absorb is denied with a typed AdmissionError."""
+    from repro.cluster import plan_cluster
+    from repro.deploy import AdmissionError, build_fleet
+    cfg = _cfg()
+    vram = 1.1 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    specs = [_full_spec(replan=None, name=n) for n in "ab"]
+    specs = [dataclasses.replace(s, name=n) for s, n in zip(specs, "ab")]
+    fleet = build_fleet(specs, vram_gb_per_device=2.3 * vram,
+                        host_gb=0.05)
+    dep = fleet["a"].deployment
+    assert dep._replan_ledger is not None
+    committed = list(fleet.committed)
+    dep._replan_ledger(fleet["a"].plan)  # same footprint: no-op recommit
+    assert fleet.committed == committed
+    # a re-plan at ~2x the budget cannot fit the leftover headroom
+    rng = np.random.default_rng(0)
+    f = rng.random((cfg.num_layers, cfg.num_experts))
+    f /= f.sum(axis=1, keepdims=True)
+    big = plan_cluster(cfg, f, n_devices=1, vram_gb_per_device=2 * vram,
+                       host_gb=0.05, ladder=("int2",))
+    with pytest.raises(AdmissionError) as ei:
+        dep._replan_ledger(big)
+    assert ei.value.field == "fleet.a"
+    assert fleet.committed == committed  # denied: ledger untouched

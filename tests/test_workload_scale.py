@@ -143,10 +143,11 @@ def test_deployment_serve_scenario_end_to_end(tmp_path):
 
 @pytest.mark.slow
 def test_fleetscale_10k_conservation_and_subquadratic_intake():
-    """The ISSUE's fleet-scale acceptance: 2 models x 2 devices x 10k
-    scenario requests complete, with the stall-conservation row True
-    and sub-quadratic intake demonstrated (runs the nightly bench
-    suite in-process and asserts on its acceptance rows)."""
+    """The fleet-scale acceptance: 4 models x 4 devices x 10k scenario
+    requests complete (one member replanning live against the fleet
+    ledger), with the stall-conservation row True and sub-quadratic
+    intake demonstrated (runs the nightly bench suite in-process and
+    asserts on its acceptance rows)."""
     from benchmarks import bench_fleetscale
     from repro import obs
     rows: list = []
@@ -154,11 +155,13 @@ def test_fleetscale_10k_conservation_and_subquadratic_intake():
     with obs.consumer(collector):
         bench_fleetscale.run(rows)
     byname = {r[0]: r for r in rows}
-    for model in "ab":
+    for model in bench_fleetscale.MODELS:
         derived = byname[f"fleetscale/model={model}"][2]
-        assert "n=5000" in derived, derived
+        assert f"n={bench_fleetscale.N_PER_MODEL}" in derived, derived
     sub = byname["fleetscale/submit_subquadratic"][2]
     assert sub.startswith("True"), sub
+    rp = byname["fleetscale/replan/model=d"][2]
+    assert rp.startswith("True"), rp
     reg = collector.registry.snapshot()
     assert reg.get("events_total", 0) > 0
     assert int(reg.get("stall.conservation_violations", 0)) == 0
