@@ -1,0 +1,253 @@
+"""Live health layer benchmark: burn-rate alerting + incident forensics.
+
+``repro.obs.health`` watches the live event stream — per-tenant SLO
+attainment through multi-window burn-rate alerting, stall-cause
+composition and link health through anomaly detectors — and freezes a
+byte-deterministic incident bundle when an alert fires.  Claims pinned
+here, on the committed scenarios:
+
+* **alert before collapse** — on ``flash_crowd`` (an 8x arrival burst
+  at t=20s), the first burn-rate alert fires STRICTLY BEFORE the
+  trailing-window SLO attainment reaches its minimum: the burn windows
+  see the error budget burning while most of the damage is still
+  queued, which is the entire point of multi-window burn alerting over
+  raw attainment dashboards.  ``detection_latency_s`` records first
+  alert time minus burst onset.
+* **zero false positives** — the stationary ``diurnal_mix`` run (no
+  burst, no drift) fires ZERO alerts under the same health spec: the
+  windows that page within seconds of the burst never cross threshold
+  on load the deployment actually sustains.
+* **bundle determinism** — two identical flash_crowd runs freeze
+  byte-identical incident bundles (Perfetto slice, metrics snapshot,
+  stall attribution, request waterfalls and the replayable scenario
+  slice are all rendered with sorted keys off the simulated clock).
+  Bundles land in ``bench-incidents/`` so CI ships them as artifacts
+  on a failed run.
+* **zero overhead** — the monitor is a pure bus consumer: serving with
+  health ON emits identical decode outputs and an identical event
+  stream (minus its own ``health.*`` events) as serving with health
+  OFF.
+
+Calibration: the reduced deployment (link at 1/2 paper bandwidth,
+2 slots, 1.2x int2 arena) sustains ~0.8 req/s.  flash_crowd's baseline
+rate is exactly that — sustainable until the 8x burst — and is served
+with ``n_requests=48`` so the burst has body (the bench_memory
+``dataclasses.replace`` idiom; the committed file keeps its 24).
+diurnal_mix's committed rate (1.5/s peak 2.4/s) exceeds the reduced
+deployment's capacity outright, so its arrival rate is scaled to 0.2/s
+— same tenants, same diurnal modulation, same seed — putting its peak
+in the sustainable regime a provisioned deployment would actually run
+at.  The anomaly threshold sits above the cold-start composition
+transient (the arena filling up is eviction-heavy on EVERY fresh
+deployment; TV peaks ~0.6 on diurnal_mix) because a burst that merely
+scales every stall cause up is by design not a composition flip.
+
+Micro row times one ``HealthMonitor.on_event`` fold (us_per_call).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+from repro import obs
+from repro.core.offload import LinkModel
+from repro.core.pipeline import paper_scaled_models
+from repro.deploy import (DeploymentSpec, HealthSpec, ModelSpec,
+                          ResourceSpec, RuntimeSpec, ServingSpec, build)
+from repro.store import floor_bytes
+from repro.workload import ScenarioSpec
+
+_SCEN_DIR = os.path.join(os.path.dirname(__file__), os.pardir, "examples",
+                         "scenarios")
+#: where flash_crowd incident bundles land (CI uploads this directory
+#: as the ``incident-bundles`` artifact when the gate fails)
+INCIDENT_DIR = "bench-incidents"
+#: burn windows sized to the flash_crowd burst (10s at 8x): the fast
+#: window reacts within a few finishes, the slow window spans the whole
+#: burst; min_events=8 rides out cold-start misses; queue-delay link
+#: alerting is OFF because the narrowed link legitimately queues
+#: transfers; anomaly threshold above the cold-start transient (see
+#: module docstring)
+HEALTH = HealthSpec(slo_target=0.9, fast_window_s=5.0, slow_window_s=30.0,
+                    page_burn=4.0, ticket_burn=2.0, min_events=8,
+                    anomaly_window=16, anomaly_threshold=0.65,
+                    link_util_threshold=3.0, queue_delay_s=0.0,
+                    cooldown_s=10.0, max_incidents=4)
+#: trailing window for the independent attainment timeline the alert
+#: must beat (seconds of finish/reject outcomes)
+COLLAPSE_WINDOW_S = 15.0
+_CACHE: dict = {}
+
+
+def _setup():
+    if "setup" in _CACHE:
+        return _CACHE["setup"]
+    probe = DeploymentSpec(model=ModelSpec(arch="mixtral-8x7b", layers=4,
+                                           d_model=64, max_experts=8))
+    cfg = probe.resolve_config()
+    device, link0 = paper_scaled_models(cfg)
+    # 1/2 of paper bandwidth: baseline flash_crowd load is sustained,
+    # the 8x burst genuinely overwhelms serving
+    link = LinkModel(peak_bw=link0.peak_bw / 2, launch_us=link0.launch_us,
+                     pack_bw=link0.pack_bw / 2)
+    vram_gb = 1.2 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    flash = dataclasses.replace(
+        ScenarioSpec.load(os.path.join(_SCEN_DIR, "flash_crowd.json")),
+        n_requests=48)
+    d0 = ScenarioSpec.load(os.path.join(_SCEN_DIR, "diurnal_mix.json"))
+    diurnal = dataclasses.replace(
+        d0, n_requests=36, arrival=dataclasses.replace(d0.arrival, rate=0.2))
+    _CACHE["setup"] = (cfg, device, link, vram_gb, flash, diurnal)
+    return _CACHE["setup"]
+
+
+def _spec(vram_gb: float) -> DeploymentSpec:
+    return DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", layers=4, d_model=64,
+                        max_experts=8),
+        resources=ResourceSpec(vram_gb=vram_gb, host_gb=0.05,
+                               ladder=("int2",), progressive=False),
+        runtime=RuntimeSpec(use_runtime=True, prefetch=False),
+        serving=ServingSpec(slots=2, max_len=64, policy="slo",
+                            online_train=False))
+
+
+class _Timeline:
+    """Finish/reject outcome stream — the alert-independent ground truth
+    the 'alert before collapse' pin compares against."""
+
+    def __init__(self):
+        self.events = []  # (t, attained)
+
+    def on_event(self, ev) -> None:
+        if ev.name == "request.finish":
+            a = ev.args or {}
+            self.events.append((ev.t, bool(a.get("attained", True))))
+        elif ev.name == "request.reject":
+            self.events.append((ev.t, False))
+
+
+def _serve(scenario, health, incident_dir: str | None = None):
+    """One fresh deployment served over ``scenario``; returns
+    (deployment, completed requests, outcome timeline)."""
+    cfg, device, link, vram_gb, _, _ = _setup()
+    dep = build(_spec(vram_gb), device=device, link=link)
+    hl = health
+    if hl is not None and incident_dir is not None:
+        hl = dataclasses.replace(hl, incident_dir=incident_dir)
+    tl = _Timeline()
+    with obs.consumer(tl):
+        dep.serve(scenario=scenario,
+                  health=hl if hl is not None else False)
+    return dep, list(dep.controller.completed), tl
+
+
+def _attainment_min_t(timeline: _Timeline,
+                      window_s: float = COLLAPSE_WINDOW_S):
+    """(t_min, att_min): when the trailing-window SLO attainment (over
+    the finish/reject outcomes of the last ``window_s`` seconds) FIRST
+    reaches its minimum — 'collapse' for the acceptance pin."""
+    evs = sorted(timeline.events)
+    t_min, att_min = None, 2.0
+    for t, _ in evs:
+        win = [ok for (tt, ok) in evs if t - window_s < tt <= t]
+        att = sum(win) / len(win)
+        if att < att_min - 1e-12:
+            att_min, t_min = att, t
+    return t_min, att_min
+
+
+def _zero_overhead():
+    """Health ON must not perturb serving: identical decode outputs and
+    an identical event stream once the monitor's own ``health.*``
+    events are filtered out."""
+    _, _, _, _, flash, _ = _setup()
+    outs, streams = {}, {}
+    for arm in ("off", "on"):
+        tracer = obs.Tracer()
+        with obs.consumer(tracer):
+            dep, completed, _ = _serve(flash,
+                                       HEALTH if arm == "on" else None)
+        outs[arm] = {r.uid: list(r.output) for r in completed}
+        streams[arm] = [(e.name, e.t, e.dur, e.device, e.lane, e.model,
+                         e.args) for e in tracer.events if e.cat != "health"]
+    same_out = outs["off"] == outs["on"] and len(outs["off"]) > 0
+    same_stream = streams["off"] == streams["on"]
+    return same_out, same_stream, len(streams["off"])
+
+
+def run(csv_rows: list):
+    _, _, _, _, flash, diurnal = _setup()
+
+    # ---- flash_crowd: burn alert before attainment bottoms out -----------
+    dep, _, tl = _serve(flash, HEALTH, incident_dir=INCIDENT_DIR)
+    mon = dep._health
+    burn = [a for a in mon.alerts if a.signal in ("attainment", "tpot")]
+    alert_t = burn[0].t if burn else None
+    t_min, att_min = _attainment_min_t(tl)
+    before = (alert_t is not None and t_min is not None
+              and alert_t < t_min)
+    rep = mon.report()
+    a_t = alert_t if alert_t is not None else -1.0
+    m_t = t_min if t_min is not None else -1.0
+    csv_rows.append((
+        "health/alert_before_collapse/flash_crowd", 0.0,
+        f"{before} (first burn alert t={a_t:.2f}s, trailing-"
+        f"{COLLAPSE_WINDOW_S:.0f}s attainment bottoms out at {att_min:.2f} "
+        f"at t={m_t:.2f}s; acceptance: alert strictly earlier)"))
+    csv_rows.append((
+        "health/loop/flash_crowd", 0.0,
+        f"alerts={rep['alerts']} pages={rep['pages']} "
+        f"tickets={rep['tickets']} anomalies={rep['anomalies']} "
+        f"incidents={len(rep['incidents'])} events={rep['events']}"))
+    burst_t = flash.arrival.bursts[0].start_t
+    latency = (alert_t - burst_t) if alert_t is not None else -1.0
+    csv_rows.append(("health/detection_latency_s", 0.0, f"{latency:.3f}"))
+
+    # ---- diurnal_mix: stationary load stays alert-free -------------------
+    dep_d, completed_d, _ = _serve(diurnal, HEALTH)
+    rep_d = dep_d._health.report()
+    quiet = rep_d["alerts"] == 0
+    csv_rows.append((
+        "health/false_positives/diurnal_mix", 0.0,
+        f"{quiet} (alerts={rep_d['alerts']} over {rep_d['events']} events, "
+        f"{len(completed_d)} completions; acceptance: stationary run "
+        f"fires zero alerts)"))
+
+    # ---- bundle determinism + size ---------------------------------------
+    dep2, _, _ = _serve(flash, HEALTH)
+    b1, b2 = mon.bundles, dep2._health.bundles
+    deterministic = len(b1) > 0 and b1 == b2
+    csv_rows.append((
+        "health/bundle_deterministic", 0.0,
+        f"{deterministic} (bundles={len(b1)} byte-identical across two "
+        f"identical flash_crowd runs)"))
+    size_kb = (sum(len(b) for b in b1) / len(b1) / 1024.0) if b1 else 0.0
+    csv_rows.append(("health/bundle_size_kb", 0.0, f"{size_kb:.2f}"))
+
+    # ---- zero overhead ---------------------------------------------------
+    same_out, same_stream, n_ev = _zero_overhead()
+    csv_rows.append((
+        "health/zero_overhead", 0.0,
+        f"{same_out and same_stream} (decode outputs identical="
+        f"{same_out}, {n_ev}-event stream identical={same_stream} with "
+        f"the monitor attached vs detached)"))
+
+    # ---- micro: one monitor fold -----------------------------------------
+    from repro.obs.events import Event
+    from repro.obs.health import HealthMonitor
+    m = HealthMonitor(HEALTH)
+    ev = Event(seq=0, t=1.0, name="request.finish", cat="serving", dur=0.0,
+               device=0, model="", lane=None,
+               args={"uid": 0, "tenant": "chat", "attained": True,
+                     "tpot_s": 0.01})
+    n, reps = 1000, 5
+    fold_us = float("inf")
+    for _ in range(reps):  # best-of-reps: the micro row gates CI at 10%
+        t0 = time.perf_counter()
+        for _ in range(n):
+            m.on_event(ev)
+        fold_us = min(fold_us, (time.perf_counter() - t0) / n * 1e6)
+    csv_rows.append(("health/on_event_us_per_call", fold_us,
+                     f"events={m.events_seen}"))

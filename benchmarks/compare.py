@@ -20,7 +20,11 @@ per-suite repro.obs registry), those are diffed too: an increase in
 ``stall.conservation_violations`` is a REGRESSION; any other metric
 moving beyond the threshold is a METRIC change for a human to judge.
 Entries where both values are below 1e-6 in magnitude are exempt
-(sub-microsecond simulated-timer noise).
+(sub-microsecond simulated-timer noise).  Histograms past the
+``hist_bound`` reservoir threshold stamp ``<name>.reservoir: true`` in
+the snapshot; their ``.p50``/``.p99`` are SAMPLED estimates, so those
+keys are exempt from flagging entirely — ``.count``/``.sum``/``.mean``/
+``.max`` stay exact in reservoir mode and stay gated.
 
 Exit status is 1 when any REGRESSION was flagged (CI gate), 0 otherwise.
 Directory arguments compare every ``BENCH_*.json`` present in both.
@@ -58,6 +62,12 @@ def compare_metrics(old_path: Path, new_path: Path,
     regressions, changes = [], []
     for key in sorted(set(old) | set(new)):
         ov, nv = old.get(key, 0), new.get(key, 0)
+        if key.endswith(".reservoir"):
+            continue  # sampling-mode marker, not a metric
+        if key.endswith((".p50", ".p99")):
+            base = key.rsplit(".", 1)[0]
+            if old.get(f"{base}.reservoir") or new.get(f"{base}.reservoir"):
+                continue  # reservoir-sampled percentile: estimate, exempt
         if not (isinstance(ov, (int, float)) and
                 isinstance(nv, (int, float))):
             if ov != nv:

@@ -30,6 +30,11 @@ across PRs.
                                     no worse, host bytes strictly lower,
                                     footprint-aware admission; scenario-
                                     driven fleet serving)
+  health  -> bench_health          (live health layer: flash_crowd pages
+                                    BEFORE attainment bottoms out with a
+                                    byte-deterministic incident bundle,
+                                    stationary diurnal_mix stays alert-
+                                    free, monitor attach is zero-overhead)
   fleetscale -> bench_fleetscale   (nightly scale lane: 4 models x
                                     4 devices x 10k scenario requests,
                                     one drift-heavy member replanning
@@ -118,11 +123,16 @@ def main() -> None:
     ap.add_argument("--trace-dir", default="",
                     help="export a Perfetto trace-event JSON per suite "
                          "into this directory (trace_<suite>.json)")
+    ap.add_argument("--trace-cap", type=int, default=250_000,
+                    help="per-suite span cap on exported traces (most "
+                         "recent events win; the fleetscale lane's 10k-"
+                         "request runs otherwise grow CI artifacts "
+                         "unboundedly); 0 = unbounded")
     args = ap.parse_args()
 
     from benchmarks import (bench_cluster, bench_compression,
                             bench_e2e_decode, bench_fleetscale,
-                            bench_memory, bench_multimodel,
+                            bench_health, bench_memory, bench_multimodel,
                             bench_predictor, bench_prefetch,
                             bench_replan, bench_sensitivity,
                             bench_serving, bench_sparse_kernel,
@@ -141,6 +151,7 @@ def main() -> None:
         ("cluster", bench_cluster.run),
         ("replan", bench_replan.run),
         ("multimodel", bench_multimodel.run),
+        ("health", bench_health.run),
         ("fleetscale", bench_fleetscale.run),
         ("roofline", roofline.run),
     ]
@@ -158,7 +169,8 @@ def main() -> None:
         t0 = time.perf_counter()
         before = len(rows)
         collector = obs.MetricsCollector()
-        tracer = obs.Tracer() if trace_dir is not None else None
+        tracer = obs.Tracer(max_export=args.trace_cap or None) \
+            if trace_dir is not None else None
         consumers = [collector] + ([tracer] if tracer is not None else [])
         try:
             with obs.consumer(*consumers):

@@ -16,9 +16,9 @@ The builder/fleet modules import the pipeline and controller, which in
 turn read ``repro.deploy.spec`` for their kwargs shims — so this package
 re-exports them lazily (PEP 562) to keep the import graph acyclic.
 """
-from repro.deploy.spec import (DeploymentSpec, ModelSpec, ReplanSpec,
-                               ResourceSpec, RuntimeSpec, ServingSpec,
-                               SpecError)
+from repro.deploy.spec import (DeploymentSpec, HealthSpec, ModelSpec,
+                               ReplanSpec, ResourceSpec, RuntimeSpec,
+                               ServingSpec, SpecError)
 
 _LAZY = {
     "build": "builder", "Deployment": "builder",
@@ -28,8 +28,9 @@ _LAZY = {
 }
 
 __all__ = [
-    "DeploymentSpec", "ModelSpec", "ReplanSpec", "ResourceSpec",
-    "RuntimeSpec", "ServingSpec", "SpecError", *sorted(_LAZY),
+    "DeploymentSpec", "HealthSpec", "ModelSpec", "ReplanSpec",
+    "ResourceSpec", "RuntimeSpec", "ServingSpec", "SpecError",
+    *sorted(_LAZY),
 ]
 
 

@@ -206,6 +206,7 @@ class Deployment:
     controller: object = None  # ServingController | None
     _replanner: object = None  # repro.replan.Replanner once attached
     _replan_ledger: object = None  # fleet hook: (new_plan) -> None | raise
+    _health: object = None  # repro.obs.health.HealthMonitor once attached
 
     @property
     def name(self) -> str:
@@ -284,20 +285,39 @@ class Deployment:
                 reference = np.full(
                     (self.cfg.num_layers, self.cfg.num_experts),
                     1.0 / max(self.cfg.num_experts, 1))
+            trigger = getattr(rp, "trigger", "drift")
+            if trigger == "health" and self._health is None:
+                raise SpecError("replan.trigger",
+                                "trigger='health' needs the health layer "
+                                "attached (health section enabled)")
             self._replanner = Replanner(
                 self.controller.pipe.sched, self.plan, reference,
                 self._plan_fn(), window=rp.window,
                 threshold=rp.threshold, hysteresis=rp.hysteresis,
                 cooldown_s=rp.cooldown_s, check_every=rp.check_every,
                 bandwidth_share=rp.bandwidth_share,
-                ledger=self._replan_ledger)
+                ledger=self._replan_ledger, trigger=trigger,
+                health=self._health if trigger == "health" else None)
         self.controller.replan = self._replanner
         return self._replanner
+
+    # ------------------------------------------------------------ health --
+    def _attach_health(self, hs) -> object:
+        """Build (once) the live health monitor for this deployment.
+        ``hs`` is a validated ``HealthSpec``; the monitor is attached to
+        the bus only for the duration of each ``serve()`` call."""
+        if self._health is None:
+            from repro.obs.health import HealthMonitor
+            # filter by this deployment's label so per-member monitors
+            # coexist on the shared bus under fleet scoping (unscoped
+            # standalone events carry model="" and are always accepted)
+            self._health = HealthMonitor(hs, model=self.name)
+        return self._health
 
     def serve(self, requests: Optional[list] = None, *,
               scenario=None, n_requests: int = 4, rate: float = 2.0,
               max_new: int = 16, prompt_len: int = 8, seed: int = 0,
-              replan=None) -> list:
+              replan=None, health=None) -> list:
         """Run the SLO control plane over one of three request sources:
         explicit ``SLORequest``s, a ``repro.workload`` scenario (a
         :class:`~repro.workload.ScenarioSpec` or a path to its JSON),
@@ -313,10 +333,22 @@ class Deployment:
         if self.controller is None:
             raise SpecError("serving",
                             f"deployment {self.name!r} has no ServingSpec")
-        # ``replan`` resolves: None -> the spec's section; True -> the
-        # spec's section or all-defaults; False -> off for this call;
-        # a ReplanSpec instance -> exactly those knobs.
-        from repro.deploy.spec import ReplanSpec
+        # ``replan`` / ``health`` resolve alike: None -> the spec's
+        # section; True -> the spec's section or all-defaults; False ->
+        # off for this call; a spec instance -> exactly those knobs.
+        # Health resolves FIRST so a trigger='health' replanner finds
+        # its monitor.
+        from repro.deploy.spec import HealthSpec, ReplanSpec
+        hl = health
+        if hl is None:
+            hl = self.spec.health
+        elif hl is True:
+            hl = self.spec.health or HealthSpec()
+        elif hl is False:
+            hl = None
+        monitor = None
+        if hl is not None and hl.enabled:
+            monitor = self._attach_health(hl)
         rp = replan
         if rp is None:
             rp = self.spec.replan
@@ -342,6 +374,8 @@ class Deployment:
             self._uid_seq += len(requests)
             for r in requests:
                 r.arrival_t += t0
+            if monitor is not None:  # replayable incident-bundle slice
+                monitor.bind_scenario(scenario, requests)
         elif requests is None:
             rng = np.random.default_rng(seed)
             slo_ms = self.spec.serving.slo_ms
@@ -356,7 +390,11 @@ class Deployment:
                 self._uid_seq += 1
         for r in requests:
             self.controller.submit(r)
-        return self.controller.run()
+        if monitor is None:
+            return self.controller.run()
+        from repro import obs
+        with obs.consumer(monitor):  # live only while this serve runs
+            return self.controller.run()
 
     # --------------------------------------------------------- telemetry --
     def report(self) -> dict:
@@ -400,6 +438,8 @@ class Deployment:
             rep["serving"] = self.controller.report()
         if self._replanner is not None:
             rep["replan"] = self._replanner.report()
+        if self._health is not None:
+            rep["health"] = self._health.report()
         rep["metrics"] = self.metrics_snapshot()
         return rep
 

@@ -129,12 +129,47 @@ class ReplanSpec:
     cooldown_s: float = 0.25  # min modeled seconds between re-plans
     check_every: int = 8  # controller steps between drift checks
     bandwidth_share: float = 0.5  # migration's cap on link seconds
+    trigger: str = "drift"  # "drift" (TV detector) | "health" (page alerts)
+
+
+# ----------------------------------------------------------------- health --
+@dataclasses.dataclass(frozen=True)
+class HealthSpec:
+    """Live health-layer knobs (:class:`~repro.obs.health.HealthMonitor`).
+
+    Burn-rate windows and cooldowns are in MODELED seconds — every
+    detector runs off the simulated clock, so alerting is deterministic
+    for a given scenario + seed.
+    """
+
+    enabled: bool = True
+    # -- multi-window SLO burn-rate alerting --------------------------------
+    slo_target: float = 0.9  # attainment objective; budget = 1 - target
+    fast_window_s: float = 5.0  # fast burn window (page needs BOTH)
+    slow_window_s: float = 30.0  # slow burn window (ticket needs this)
+    page_burn: float = 4.0  # burn rate that pages (fast AND slow exceed)
+    ticket_burn: float = 2.0  # burn rate that tickets (slow window exceeds)
+    tpot_budget_ms: float = 0.0  # per-token latency budget; 0 disables rule
+    min_events: int = 4  # min outcomes in the fast window before evaluating
+    # -- anomaly detection --------------------------------------------------
+    anomaly_window: int = 16  # stall events per live composition window
+    anomaly_threshold: float = 0.3  # TV distance on stall-cause shares
+    link_window_s: float = 5.0  # link utilization / queue-delay window
+    link_util_threshold: float = 1.5  # laid link-seconds per wall-second
+    queue_delay_s: float = 0.5  # max transfer queue delay; 0 disables rule
+    hysteresis: float = 0.5  # re-arm when signal <= hysteresis * threshold
+    cooldown_s: float = 10.0  # min modeled seconds between same-key alerts
+    # -- flight recorder / incident bundles ---------------------------------
+    ring_events: int = 4096  # bounded ring of recent events (per model)
+    max_incidents: int = 8  # incident bundles captured per run
+    incident_dir: str = ""  # write bundles here ("" = in-memory only)
 
 
 # ------------------------------------------------------------- deployment --
 _MODES = ("floe", "naive", "resident")
 _POLICIES = ("slo", "static")
 _RESIDENCY = ("lru", "lfu", "weighted")
+_TRIGGERS = ("drift", "health")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +186,7 @@ class DeploymentSpec:
     runtime: RuntimeSpec = dataclasses.field(default_factory=RuntimeSpec)
     serving: Optional[ServingSpec] = None
     replan: Optional[ReplanSpec] = None
+    health: Optional[HealthSpec] = None
     name: str = ""
 
     def __post_init__(self):
@@ -260,6 +296,67 @@ class DeploymentSpec:
                 raise SpecError("replan.bandwidth_share",
                                 f"need 0 < share <= 1, "
                                 f"got {rp.bandwidth_share}")
+            if rp.trigger not in _TRIGGERS:
+                raise SpecError("replan.trigger",
+                                f"unknown trigger {rp.trigger!r}; choose "
+                                f"from {_TRIGGERS}")
+        hs = self.health
+        if hs is not None:
+            if not 0.0 < hs.slo_target < 1.0:
+                raise SpecError("health.slo_target",
+                                f"need 0 < target < 1, got {hs.slo_target}")
+            if hs.fast_window_s <= 0:
+                raise SpecError("health.fast_window_s",
+                                f"need > 0, got {hs.fast_window_s}")
+            if hs.slow_window_s <= hs.fast_window_s:
+                raise SpecError("health.slow_window_s",
+                                f"slow window must exceed the fast window "
+                                f"({hs.fast_window_s}), got "
+                                f"{hs.slow_window_s}")
+            if hs.page_burn <= 0:
+                raise SpecError("health.page_burn",
+                                f"need > 0, got {hs.page_burn}")
+            if not 0.0 < hs.ticket_burn <= hs.page_burn:
+                raise SpecError("health.ticket_burn",
+                                f"need 0 < ticket_burn <= page_burn "
+                                f"({hs.page_burn}), got {hs.ticket_burn}")
+            if hs.tpot_budget_ms < 0:
+                raise SpecError("health.tpot_budget_ms",
+                                f"need >= 0 (0 disables the TPOT rule), "
+                                f"got {hs.tpot_budget_ms}")
+            if hs.min_events < 1:
+                raise SpecError("health.min_events",
+                                f"need >= 1, got {hs.min_events}")
+            if hs.anomaly_window < 2:
+                raise SpecError("health.anomaly_window",
+                                f"need >= 2, got {hs.anomaly_window}")
+            if not 0.0 < hs.anomaly_threshold <= 1.0:
+                raise SpecError("health.anomaly_threshold",
+                                f"need 0 < threshold <= 1 (TV distance), "
+                                f"got {hs.anomaly_threshold}")
+            if hs.link_window_s <= 0:
+                raise SpecError("health.link_window_s",
+                                f"need > 0, got {hs.link_window_s}")
+            if hs.link_util_threshold <= 0:
+                raise SpecError("health.link_util_threshold",
+                                f"need > 0, got {hs.link_util_threshold}")
+            if hs.queue_delay_s < 0:
+                raise SpecError("health.queue_delay_s",
+                                f"need >= 0 (0 disables the rule), "
+                                f"got {hs.queue_delay_s}")
+            if not 0.0 <= hs.hysteresis <= 1.0:
+                raise SpecError("health.hysteresis",
+                                f"need 0 <= hysteresis <= 1, "
+                                f"got {hs.hysteresis}")
+            if hs.cooldown_s < 0:
+                raise SpecError("health.cooldown_s",
+                                f"need >= 0, got {hs.cooldown_s}")
+            if hs.ring_events < 1:
+                raise SpecError("health.ring_events",
+                                f"need >= 1, got {hs.ring_events}")
+            if hs.max_incidents < 0:
+                raise SpecError("health.max_incidents",
+                                f"need >= 0, got {hs.max_incidents}")
 
         # ---- cross-field ----------------------------------------------
         offloaded = rt.mode == "floe" and rt.use_runtime
@@ -290,6 +387,14 @@ class DeploymentSpec:
                 raise SpecError("replan.enabled",
                                 "live re-planning runs inside the serving "
                                 "controller (serving must be set)")
+            if rp.trigger == "health" and not (hs is not None and hs.enabled):
+                raise SpecError("replan.trigger",
+                                "trigger='health' needs an enabled health "
+                                "section to raise the page alerts")
+        if hs is not None and hs.enabled and sv is None:
+            raise SpecError("health.enabled",
+                            "the health layer watches serving-plane events "
+                            "(serving must be set)")
 
         # ---- config-anchored (expert counts, feasibility floor) --------
         cfg = self.resolve_config()
@@ -339,6 +444,8 @@ class DeploymentSpec:
             d["serving"] = dataclasses.asdict(self.serving)
         if self.replan is not None:
             d["replan"] = dataclasses.asdict(self.replan)
+        if self.health is not None:
+            d["health"] = dataclasses.asdict(self.health)
         return d
 
     def to_json(self, indent: int = 1) -> str:
@@ -347,7 +454,7 @@ class DeploymentSpec:
     @classmethod
     def from_dict(cls, d: dict) -> "DeploymentSpec":
         known_sections = ("name", "model", "resources", "runtime",
-                          "serving", "replan")
+                          "serving", "replan", "health")
         bad_sections = sorted(set(d) - set(known_sections))
         if bad_sections:  # a typo'd section must not load as all-defaults
             raise SpecError(bad_sections[0],
@@ -375,6 +482,8 @@ class DeploymentSpec:
                      if d.get("serving") is not None else None),
             replan=(sub(ReplanSpec, "replan")
                     if d.get("replan") is not None else None),
+            health=(sub(HealthSpec, "health")
+                    if d.get("health") is not None else None),
             name=d.get("name", ""),
         )
 

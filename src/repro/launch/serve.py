@@ -34,11 +34,13 @@ import sys
 
 def spec_from_args(args) -> "DeploymentSpec":
     """Flags -> typed spec (the validation lives in the spec, not here)."""
-    from repro.deploy import (DeploymentSpec, ModelSpec, ReplanSpec,
-                              ResourceSpec, RuntimeSpec, ServingSpec)
+    from repro.deploy import (DeploymentSpec, HealthSpec, ModelSpec,
+                              ReplanSpec, ResourceSpec, RuntimeSpec,
+                              ServingSpec)
     offloaded = args.mode in ("floe", "naive")
     serving = None
     replan = None
+    health = None
     if args.mode == "floe-serve":
         serving = ServingSpec(
             slots=args.slots, max_len=256, policy=args.policy,
@@ -46,6 +48,8 @@ def spec_from_args(args) -> "DeploymentSpec":
             train_window=64, min_train_rows=32, train_steps=40)
         if args.replan:
             replan = ReplanSpec()
+        if args.health:
+            health = HealthSpec(incident_dir=args.incident_dir)
     return DeploymentSpec(
         model=ModelSpec(arch=args.arch, reduced=args.reduced,
                         layers=args.layers, d_model=args.d_model,
@@ -60,7 +64,7 @@ def spec_from_args(args) -> "DeploymentSpec":
             use_runtime=(args.vram_gb > 0 or args.devices > 1 or
                          args.replicate > 0 or args.mode == "floe-serve"),
             cache_slots=args.cache_slots),
-        serving=serving, replan=replan)
+        serving=serving, replan=replan, health=health)
 
 
 def print_plan(dep) -> None:
@@ -154,6 +158,13 @@ def main():
                     help="floe-serve: live re-planning — watch routing "
                          "drift and migrate expert placement while "
                          "serving (needs --vram-gb)")
+    ap.add_argument("--health", action="store_true",
+                    help="floe-serve: live health layer — SLO burn-rate "
+                         "alerting, stall-composition/link anomaly "
+                         "detection, incident bundles")
+    ap.add_argument("--incident-dir", dest="incident_dir", default="",
+                    help="write incident bundles (JSON) here when an "
+                         "alert fires (implies nothing without --health)")
     ap.add_argument("--slo_ms", type=float, default=3000.0,
                     help="floe-serve: per-request latency SLO")
     ap.add_argument("--policy", choices=["slo", "static"], default="slo")
@@ -242,14 +253,22 @@ def run_offloaded(args, spec):
     print_plan(dep)
 
     if dep.controller is not None:  # floe-serve
-        # --replan with --spec turns re-planning on even when the spec
-        # file carries no replan section (serve resolves True -> defaults)
+        # --replan / --health with --spec turn the subsystem on even when
+        # the spec file carries no section (serve resolves True ->
+        # defaults); --incident-dir overrides the spec's bundle sink
         rp = True if getattr(args, "replan", False) else None
+        hl = None
+        if getattr(args, "health", False):
+            from repro.deploy import HealthSpec
+            import dataclasses as _dc
+            hl = spec.health or HealthSpec()
+            if getattr(args, "incident_dir", ""):
+                hl = _dc.replace(hl, incident_dir=args.incident_dir)
         if getattr(args, "scenario", ""):
-            dep.serve(scenario=args.scenario, replan=rp)
+            dep.serve(scenario=args.scenario, replan=rp, health=hl)
         else:
             dep.serve(n_requests=args.requests, rate=args.rate,
-                      max_new=args.max_new, replan=rp)
+                      max_new=args.max_new, replan=rp, health=hl)
         ctl = dep.controller
         rep = ctl.report()
         for r in sorted(ctl.completed, key=lambda r: r.uid):
@@ -285,6 +304,18 @@ def run_offloaded(args, spec):
                   f"({rr['migrate_bytes'] / 2 ** 20:.2f}MiB, "
                   f"pins={rr['migrate_pins']} unpins={rr['migrate_unpins']} "
                   f"rehomes={rr['migrate_rehomes']})")
+        if dep._health is not None:
+            hr = dep._health.report()
+            print(f"health: alerts={hr['alerts']} (pages={hr['pages']} "
+                  f"tickets={hr['tickets']} anomalies={hr['anomalies']})"
+                  f"  incidents={len(hr['incidents'])}")
+            for a in hr["alerts_detail"][:8]:
+                print(f"  [{a['severity']}] t={a['t']:.2f}s "
+                      f"{a['signal']}({a['key']}) value={a['value']:.2f} "
+                      f"> {a['threshold']:.2f}")
+            for inc in hr["incidents"]:
+                where = inc["path"] or "(in memory)"
+                print(f"  bundle {inc['name']}: {inc['bytes']}B -> {where}")
         return dep
 
     metrics = dep.generate(args.max_new)

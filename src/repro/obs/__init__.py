@@ -13,6 +13,12 @@ Three consumers over one typed event bus on the simulated clock:
 
 Emit sites live in the subsystems; they guard with :func:`enabled` so a
 run with no consumer attached pays nothing and changes nothing.
+
+The LIVE complement is :mod:`repro.obs.health` (PR 9): multi-window SLO
+burn-rate alerting, stall-composition / link anomaly detection, and a
+flight recorder emitting byte-deterministic incident bundles —
+re-exported lazily here (``obs.HealthMonitor``) to keep ``import
+repro.obs`` free of the deploy-spec dependency.
 """
 from repro.obs.events import (  # noqa: F401
     BUS,
@@ -39,10 +45,25 @@ from repro.obs.metrics import (  # noqa: F401
 from repro.obs.stall import CAUSES, StallAttribution  # noqa: F401
 from repro.obs.trace import Tracer  # noqa: F401
 
+_LAZY = {  # health pulls in repro.deploy.spec; resolve on first touch
+    "Alert": "health", "BurnRateAlerter": "health",
+    "CompositionDetector": "health", "FlightRecorder": "health",
+    "HealthMonitor": "health", "LinkHealthDetector": "health",
+}
+
 __all__ = [
     "BUS", "Event", "EventBus", "attach", "consumer", "detach", "emit",
     "enabled", "scope", "subscribe", "use_bus",
     "Counter", "Gauge", "Histogram", "MetricsCollector", "MetricsRegistry",
     "request_metrics", "scheduler_metrics",
-    "CAUSES", "StallAttribution", "Tracer",
+    "CAUSES", "StallAttribution", "Tracer", *sorted(_LAZY),
 ]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.obs.{mod}"), name)

@@ -1,0 +1,40 @@
+"""repro.obs.health — live health layer on the observability bus.
+
+PR 6's ``repro.obs`` explains every stalled second after the fact; this
+package watches the serving stack WHILE it serves.  Everything is a pure
+:class:`~repro.obs.events.EventBus` consumer — nothing here touches the
+modeled timeline, so a run with the monitor attached is bitwise
+identical to one without (the zero-overhead invariant of
+``obs.enabled()`` extends to health unchanged).
+
+    BurnRateAlerter (burn.py)      multi-window SLO burn-rate alerting:
+                                   fast/slow window pairs over per-tenant
+                                   attainment (and optionally TPOT),
+                                   page/ticket severities, deterministic
+                                   on the simulated clock
+    CompositionDetector,           anomaly detection: windowed TV
+    LinkHealthDetector             distance over stall-cause shares
+    (anomaly.py)                   (DriftDetector's arming discipline)
+                                   and link utilization / queue delay
+    FlightRecorder (recorder.py)   bounded ring of recent events per
+                                   model scope; on any alert, a
+                                   byte-deterministic INCIDENT BUNDLE:
+                                   Perfetto slice of the alert window,
+                                   metrics snapshot, per-cause stall
+                                   attribution, offending-request
+                                   waterfalls, replayable scenario slice
+    HealthMonitor (monitor.py)     the bus consumer wiring it together;
+                                   ``Deployment.report()["health"]``,
+                                   ``launch/serve.py --health``, and the
+                                   Replanner's ``trigger="health"`` path
+"""
+from repro.obs.health.alerts import Alert, TriggerState
+from repro.obs.health.anomaly import CompositionDetector, LinkHealthDetector
+from repro.obs.health.burn import BurnRateAlerter
+from repro.obs.health.monitor import HealthMonitor
+from repro.obs.health.recorder import FlightRecorder, build_bundle
+
+__all__ = [
+    "Alert", "BurnRateAlerter", "CompositionDetector", "FlightRecorder",
+    "HealthMonitor", "LinkHealthDetector", "TriggerState", "build_bundle",
+]

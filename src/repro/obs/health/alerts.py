@@ -1,0 +1,80 @@
+"""Alert record + the shared arming discipline for every health detector.
+
+:class:`TriggerState` is :class:`~repro.replan.drift.DriftDetector`'s
+trigger/hysteresis/cooldown state machine factored out so the burn-rate
+alerter and both anomaly detectors behave identically: a trigger
+requires ARMED + value over threshold + cooldown elapsed; triggering
+disarms the channel; the channel re-arms only once the signal recedes
+to ``hysteresis * threshold`` (or on explicit :meth:`rearm`).  One
+sustained excursion therefore raises ONE alert per cooldown, not one
+per event.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Alert:
+    """One health alert, fully described by value/threshold at trigger.
+
+    ``signal`` names the detector (``attainment`` / ``tpot`` /
+    ``stall_composition`` / ``link_util`` / ``queue_delay``);
+    ``severity`` is ``page`` or ``ticket`` for burn-rate alerts and
+    ``anomaly`` for the composition/link detectors; ``key`` scopes the
+    alert (tenant, ``device:<d>``, or the dominant stall cause).
+    """
+
+    t: float
+    signal: str
+    severity: str
+    key: str
+    value: float
+    threshold: float
+    detail: Optional[dict] = None
+
+    def to_dict(self) -> dict:
+        d = {
+            "t": self.t,
+            "signal": self.signal,
+            "severity": self.severity,
+            "key": self.key,
+            "value": self.value,
+            "threshold": self.threshold,
+        }
+        if self.detail:
+            d["detail"] = {k: self.detail[k] for k in sorted(self.detail)}
+        return d
+
+
+class TriggerState:
+    """Armed/cooldown/hysteresis state for one alert channel."""
+
+    __slots__ = ("armed", "last_trigger_t")
+
+    def __init__(self):
+        self.armed = True
+        self.last_trigger_t = -math.inf
+
+    def update(self, now: float, value: float, threshold: float, *,
+               hysteresis: float, cooldown_s: float,
+               eligible: bool = True) -> bool:
+        """Advance the channel; True iff an alert fires at ``now``.
+
+        ``eligible`` gates triggering only (window fill, min events) —
+        re-arming still happens while ineligible so a drained window
+        re-arms the channel.
+        """
+        if (self.armed and eligible and value > threshold
+                and now - self.last_trigger_t >= cooldown_s):
+            self.armed = False
+            self.last_trigger_t = now
+            return True
+        if not self.armed and value <= hysteresis * threshold:
+            self.armed = True
+        return False
+
+    def rearm(self) -> None:
+        self.armed = True

@@ -1,0 +1,153 @@
+"""Anomaly detectors: stall-cause composition shift and link health.
+
+:class:`CompositionDetector` watches WHAT the stack stalls on, not how
+much: the live window is the last ``window`` ``demand.stall`` events'
+cause segments normalized to shares, the reference is everything that
+has aged OUT of the live window (so the detector self-calibrates to the
+run's own steady state and needs no prior), and the statistic is total
+variation distance between the two — the same statistic, and the same
+arming discipline, as ``replan.DriftDetector``.  A burst that merely
+scales every cause up stays silent; a composition FLIP (e.g. prefetch
+misses giving way to link contention when a hot link saturates) fires.
+
+:class:`LinkHealthDetector` watches each device's transfer link from
+``transfer.start`` events: windowed utilization (link-seconds laid down
+per wall-second — sustained > 1 means the schedule is being pushed into
+the future, i.e. the queue grows) and per-transfer queue delay
+(``start_t`` minus enqueue time).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional
+
+from repro.obs.health.alerts import Alert, TriggerState
+from repro.obs.stall import CAUSES
+
+
+class CompositionDetector:
+    """Windowed TV distance of stall-cause shares vs the aged reference."""
+
+    def __init__(self, *, window: int = 16, threshold: float = 0.3,
+                 hysteresis: float = 0.5, cooldown_s: float = 10.0,
+                 causes=CAUSES):
+        self.window = int(window)
+        self.threshold = threshold
+        self.hysteresis = hysteresis
+        self.cooldown_s = cooldown_s
+        self.causes = tuple(causes)
+        self._live = collections.deque()  # (t, {cause: seconds})
+        self._ref: Dict[str, float] = {c: 0.0 for c in self.causes}
+        self._ref_total = 0.0
+        self._ref_n = 0  # stalls aged into the reference
+        self._state = TriggerState()
+        self.observations = 0
+        self.last_distance = 0.0
+
+    def _shares(self, totals: Dict[str, float], total: float):
+        return {c: totals.get(c, 0.0) / total for c in self.causes}
+
+    def observe(self, t: float, segs: Dict[str, float]) -> Optional[Alert]:
+        """Fold one stall's cause segments; an Alert when composition
+        shifted past the threshold (None otherwise)."""
+        self.observations += 1
+        self._live.append((t, dict(segs)))
+        while len(self._live) > self.window:  # age into the reference
+            _, old = self._live.popleft()
+            self._ref_n += 1
+            for c, v in old.items():
+                self._ref[c] = self._ref.get(c, 0.0) + v
+                self._ref_total += v
+        live_totals: Dict[str, float] = {}
+        live_total = 0.0
+        for _, s in self._live:
+            for c, v in s.items():
+                live_totals[c] = live_totals.get(c, 0.0) + v
+                live_total += v
+        if (len(self._live) < self.window or self._ref_n < self.window
+                or self._ref_total <= 0.0 or live_total <= 0.0):
+            # warming up: judge only against a FULL reference window —
+            # a handful of just-aged cold-start stalls is not a steady
+            # state to deviate from (cold caches are eviction/miss heavy
+            # by nature and would page every fresh deployment)
+            return None
+        live = self._shares(live_totals, live_total)
+        ref = self._shares(self._ref, self._ref_total)
+        dist = 0.5 * sum(abs(live[c] - ref[c]) for c in self.causes)
+        self.last_distance = dist
+        if not self._state.update(t, dist, self.threshold,
+                                  hysteresis=self.hysteresis,
+                                  cooldown_s=self.cooldown_s):
+            return None
+        top = max(self.causes, key=lambda c: live[c] - ref[c])
+        return Alert(t=t, signal="stall_composition", severity="anomaly",
+                     key=f"cause:{top}", value=dist,
+                     threshold=self.threshold,
+                     detail={"live_shares": live, "ref_shares": ref,
+                             "window": self.window})
+
+    @property
+    def armed(self) -> bool:
+        return self._state.armed
+
+    def report(self) -> dict:
+        return {"observations": self.observations,
+                "last_distance": self.last_distance,
+                "armed": self._state.armed}
+
+
+class LinkHealthDetector:
+    """Per-device windowed link utilization and transfer queue delay."""
+
+    def __init__(self, *, window_s: float = 5.0, util_threshold: float = 1.5,
+                 queue_delay_s: float = 0.5, hysteresis: float = 0.5,
+                 cooldown_s: float = 10.0):
+        self.window_s = float(window_s)
+        self.util_threshold = util_threshold
+        self.queue_delay_s = queue_delay_s
+        self.hysteresis = hysteresis
+        self.cooldown_s = cooldown_s
+        self._windows: Dict[int, collections.deque] = {}
+        self._util: Dict[int, TriggerState] = {}
+        self._queue: Dict[int, TriggerState] = {}
+        self.observations = 0
+        self.last_util: Dict[int, float] = {}
+
+    def observe(self, t: float, device: int, dur: float,
+                queue_delay: float) -> List[Alert]:
+        """Fold one ``transfer.start``; fire due utilization/queue alerts."""
+        self.observations += 1
+        q = self._windows.setdefault(device, collections.deque())
+        q.append((t, max(dur, 0.0), max(queue_delay, 0.0)))
+        horizon = t - self.window_s
+        while q and q[0][0] < horizon:
+            q.popleft()
+        util = sum(d for _, d, _ in q) / self.window_s
+        qmax = max(qd for _, _, qd in q)
+        self.last_util[device] = util
+        fired: List[Alert] = []
+        st = self._util.setdefault(device, TriggerState())
+        if st.update(t, util, self.util_threshold,
+                     hysteresis=self.hysteresis, cooldown_s=self.cooldown_s):
+            fired.append(Alert(t=t, signal="link_util", severity="anomaly",
+                               key=f"device:{device}", value=util,
+                               threshold=self.util_threshold,
+                               detail={"transfers": len(q),
+                                       "window_s": self.window_s}))
+        if self.queue_delay_s > 0.0:
+            st = self._queue.setdefault(device, TriggerState())
+            if st.update(t, qmax, self.queue_delay_s,
+                         hysteresis=self.hysteresis,
+                         cooldown_s=self.cooldown_s):
+                fired.append(Alert(t=t, signal="queue_delay",
+                                   severity="anomaly",
+                                   key=f"device:{device}", value=qmax,
+                                   threshold=self.queue_delay_s,
+                                   detail={"transfers": len(q),
+                                           "window_s": self.window_s}))
+        return fired
+
+    def report(self) -> dict:
+        return {"observations": self.observations,
+                "last_util": {str(d): v
+                              for d, v in sorted(self.last_util.items())}}

@@ -1,0 +1,153 @@
+"""Multi-window SLO burn-rate alerting on the simulated clock.
+
+The SRE-style multiwindow rule, deterministic because every timestamp is
+modeled time: each request outcome is an SLI sample (error = SLO missed
+or rejected), the error budget is ``1 - slo_target``, and the burn rate
+of a window is ``error_fraction / budget`` — burn 1.0 spends the budget
+exactly at the sustainable rate, burn N spends it N times too fast.
+
+Two windows per tenant gate two severities:
+
+``page``
+    ``burn > page_burn`` in BOTH the fast and the slow window — the
+    fast window gives low detection latency, the slow window keeps a
+    momentary blip from paging.
+``ticket``
+    ``burn > ticket_burn`` in the slow window — sustained but slower
+    budget spend.
+
+Each (tenant, severity) channel carries its own
+:class:`~repro.obs.health.alerts.TriggerState`, so one sustained burn
+raises one page per cooldown instead of one per finished request.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Tuple
+
+from repro.obs.health.alerts import Alert, TriggerState
+
+
+class _Window:
+    """Sliding window of (t, error) outcomes over ``span_s`` modeled s."""
+
+    __slots__ = ("span_s", "_q", "errors")
+
+    def __init__(self, span_s: float):
+        self.span_s = float(span_s)
+        self._q = collections.deque()
+        self.errors = 0
+
+    def add(self, t: float, is_error: bool) -> None:
+        self._q.append((t, is_error))
+        if is_error:
+            self.errors += 1
+
+    def roll(self, now: float) -> None:
+        horizon = now - self.span_s
+        q = self._q
+        while q and q[0][0] < horizon:
+            _, err = q.popleft()
+            if err:
+                self.errors -= 1
+
+    @property
+    def n(self) -> int:
+        return len(self._q)
+
+    @property
+    def error_fraction(self) -> float:
+        return self.errors / len(self._q) if self._q else 0.0
+
+
+class BurnRateAlerter:
+    """Per-tenant fast/slow burn-rate windows over one SLI signal."""
+
+    def __init__(self, *, signal: str = "attainment", slo_target: float = 0.9,
+                 fast_window_s: float = 5.0, slow_window_s: float = 30.0,
+                 page_burn: float = 4.0, ticket_burn: float = 2.0,
+                 min_events: int = 4, hysteresis: float = 0.5,
+                 cooldown_s: float = 10.0):
+        self.signal = signal
+        self.budget = max(1.0 - slo_target, 1e-9)
+        self.fast_window_s = fast_window_s
+        self.slow_window_s = slow_window_s
+        self.page_burn = page_burn
+        self.ticket_burn = ticket_burn
+        self.min_events = min_events
+        self.hysteresis = hysteresis
+        self.cooldown_s = cooldown_s
+        self._windows: Dict[str, Tuple[_Window, _Window]] = {}
+        self._states: Dict[Tuple[str, str], TriggerState] = {}
+        self.outcomes = 0
+        self.errors = 0
+
+    # ------------------------------------------------------------ recording --
+    def _tenant(self, tenant: str) -> Tuple[_Window, _Window]:
+        w = self._windows.get(tenant)
+        if w is None:
+            w = (_Window(self.fast_window_s), _Window(self.slow_window_s))
+            self._windows[tenant] = w
+        return w
+
+    def record(self, t: float, tenant: str, is_error: bool) -> None:
+        fast, slow = self._tenant(tenant)
+        fast.add(t, is_error)
+        slow.add(t, is_error)
+        self.outcomes += 1
+        if is_error:
+            self.errors += 1
+
+    # ----------------------------------------------------------- evaluation --
+    def burn_rates(self, now: float, tenant: str) -> Tuple[float, float]:
+        """(fast, slow) burn rates for ``tenant`` at ``now``."""
+        fast, slow = self._tenant(tenant)
+        fast.roll(now)
+        slow.roll(now)
+        return (fast.error_fraction / self.budget,
+                slow.error_fraction / self.budget)
+
+    def evaluate(self, now: float) -> List[Alert]:
+        """Roll every tenant's windows and fire due page/ticket alerts."""
+        fired: List[Alert] = []
+        for tenant in sorted(self._windows):
+            fast, slow = self._windows[tenant]
+            fast.roll(now)
+            slow.roll(now)
+            burn_fast = fast.error_fraction / self.budget
+            burn_slow = slow.error_fraction / self.budget
+            detail = {"burn_fast": burn_fast, "burn_slow": burn_slow,
+                      "n_fast": fast.n, "n_slow": slow.n,
+                      "window_fast_s": self.fast_window_s,
+                      "window_slow_s": self.slow_window_s}
+            # page: BOTH windows over page_burn -> the condition value is
+            # the min of the two, which also drives hysteresis re-arm
+            page = self._states.setdefault((tenant, "page"), TriggerState())
+            if page.update(now, min(burn_fast, burn_slow), self.page_burn,
+                           hysteresis=self.hysteresis,
+                           cooldown_s=self.cooldown_s,
+                           eligible=fast.n >= self.min_events):
+                fired.append(Alert(t=now, signal=self.signal,
+                                   severity="page", key=tenant,
+                                   value=min(burn_fast, burn_slow),
+                                   threshold=self.page_burn, detail=detail))
+            ticket = self._states.setdefault((tenant, "ticket"),
+                                             TriggerState())
+            if ticket.update(now, burn_slow, self.ticket_burn,
+                             hysteresis=self.hysteresis,
+                             cooldown_s=self.cooldown_s,
+                             eligible=slow.n >= self.min_events):
+                fired.append(Alert(t=now, signal=self.signal,
+                                   severity="ticket", key=tenant,
+                                   value=burn_slow,
+                                   threshold=self.ticket_burn,
+                                   detail=detail))
+        return fired
+
+    def report(self) -> dict:
+        return {
+            "signal": self.signal,
+            "outcomes": self.outcomes,
+            "errors": self.errors,
+            "tenants": sorted(self._windows),
+        }

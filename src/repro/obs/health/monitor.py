@@ -1,0 +1,213 @@
+"""HealthMonitor — the bus consumer wiring burn-rate alerting, anomaly
+detection, and the flight recorder into one live health layer.
+
+Attach it like any other consumer (``obs.attach(monitor)``); it never
+emits into the modeled timeline, only observes it.  Routing:
+
+* ``request.finish`` / ``request.reject`` feed the per-tenant
+  attainment burn windows (and the TPOT windows when a budget is set),
+* ``demand.stall`` feeds the stall-composition detector,
+* ``transfer.start`` feeds the link utilization / queue-delay detector,
+* everything (post model-scope filter) lands in the flight recorder and
+  the monitor's own metrics registry.
+
+On any alert the monitor appends an :class:`Alert`, bumps a
+``health.alerts.<severity>`` counter, emits a ``health.alert`` bus
+event (so tracers see it; the monitor ignores the ``health`` category
+to avoid consuming its own output), and — up to ``max_incidents`` —
+freezes a byte-deterministic incident bundle of the alert window,
+written to ``incident_dir`` when one is configured.
+
+Fleet scoping: a monitor constructed with ``model="llama-a"`` folds
+only events stamped with that model label (plus unscoped fleet-level
+events), so per-member monitors coexist on the shared bus.
+
+``consume_replan_trigger()`` is the Replanner's ``trigger="health"``
+hook: it drains the count of page/anomaly alerts raised since the last
+call.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional
+
+from repro.deploy.spec import HealthSpec
+from repro.obs.events import Event, emit, enabled
+from repro.obs.health.alerts import Alert
+from repro.obs.health.anomaly import CompositionDetector, LinkHealthDetector
+from repro.obs.health.burn import BurnRateAlerter
+from repro.obs.health.recorder import FlightRecorder, build_bundle
+
+
+class HealthMonitor:
+    """Live SLO/anomaly watchdog + incident forensics over the bus."""
+
+    def __init__(self, spec: Optional[HealthSpec] = None, *,
+                 model: str = "", incident_dir: Optional[str] = None):
+        s = spec if spec is not None else HealthSpec()
+        self.spec = s
+        self.model = model
+        self.incident_dir = (incident_dir if incident_dir is not None
+                             else (s.incident_dir or None))
+        burn_kw = dict(slo_target=s.slo_target,
+                       fast_window_s=s.fast_window_s,
+                       slow_window_s=s.slow_window_s,
+                       page_burn=s.page_burn, ticket_burn=s.ticket_burn,
+                       min_events=s.min_events, hysteresis=s.hysteresis,
+                       cooldown_s=s.cooldown_s)
+        self.attainment = BurnRateAlerter(signal="attainment", **burn_kw)
+        self.tpot = (BurnRateAlerter(signal="tpot", **burn_kw)
+                     if s.tpot_budget_ms > 0 else None)
+        self.composition = CompositionDetector(
+            window=s.anomaly_window, threshold=s.anomaly_threshold,
+            hysteresis=s.hysteresis, cooldown_s=s.cooldown_s)
+        self.link = LinkHealthDetector(
+            window_s=s.link_window_s, util_threshold=s.link_util_threshold,
+            queue_delay_s=s.queue_delay_s, hysteresis=s.hysteresis,
+            cooldown_s=s.cooldown_s)
+        self.recorder = FlightRecorder(maxlen=s.ring_events)
+        from repro.obs.metrics import MetricsRegistry
+        self.registry = MetricsRegistry()
+        self.alerts: List[Alert] = []
+        self.incidents: List[dict] = []  # {"name", "bytes", "path"|None}
+        self._bundles: List[str] = []  # serialized docs, capped
+        self._unconsumed = 0  # page/anomaly alerts the Replanner can drain
+        self._scenario = None
+        self._requests = None
+        self.events_seen = 0
+        self.last_t = 0.0
+
+    # -------------------------------------------------------------- wiring --
+    def bind_scenario(self, scenario, requests) -> None:
+        """Attach the driving scenario so incident bundles can carry the
+        replayable slice (spec + requests preceding the window)."""
+        self._scenario = scenario
+        self._requests = list(requests) if requests is not None else None
+
+    # ------------------------------------------------------------- consume --
+    def on_event(self, ev: Event) -> None:
+        if ev.cat == "health":  # never consume our own alerts
+            return
+        if self.model and ev.model not in ("", self.model):
+            return  # another fleet member's scope
+        self.events_seen += 1
+        now = ev.t + max(ev.dur, 0.0)
+        self.last_t = max(self.last_t, now)
+        self.recorder.record(ev)
+        if ev.name == "request.finish":
+            a = ev.args or {}
+            tenant = a.get("tenant", "")
+            self.attainment.record(now, tenant,
+                                   not bool(a.get("attained", True)))
+            if self.tpot is not None and a.get("tpot_s") is not None:
+                self.tpot.record(
+                    now, tenant,
+                    a["tpot_s"] * 1e3 > self.spec.tpot_budget_ms)
+            self._evaluate(now)
+        elif ev.name == "request.reject":
+            a = ev.args or {}
+            self.attainment.record(now, a.get("tenant", ""), True)
+            self._evaluate(now)
+        elif ev.name == "demand.stall":
+            a = ev.args or {}
+            alert = self.composition.observe(ev.t, a.get("causes") or {})
+            if alert is not None:
+                self._fire(alert)
+        elif ev.name == "transfer.start":
+            a = ev.args or {}
+            start_t = a.get("start_t", ev.t)
+            complete_t = a.get("complete_t", start_t)
+            for alert in self.link.observe(ev.t, ev.device,
+                                           complete_t - start_t,
+                                           start_t - ev.t):
+                self._fire(alert)
+        elif ev.name == "serving.step":
+            self._evaluate(now)
+
+    def _evaluate(self, now: float) -> None:
+        for alert in self.attainment.evaluate(now):
+            self._fire(alert)
+        if self.tpot is not None:
+            for alert in self.tpot.evaluate(now):
+                self._fire(alert)
+
+    # --------------------------------------------------------------- alerts --
+    def _fire(self, alert: Alert) -> None:
+        self.alerts.append(alert)
+        self.registry.counter(f"health.alerts.{alert.severity}").inc()
+        self.registry.counter(f"health.signal.{alert.signal}").inc()
+        if alert.severity in ("page", "anomaly"):
+            self._unconsumed += 1
+        if enabled():
+            emit("health.alert", alert.t, cat="health",
+                 args={"signal": alert.signal, "severity": alert.severity,
+                       "key": alert.key, "value": alert.value,
+                       "threshold": alert.threshold})
+        if len(self._bundles) < self.spec.max_incidents:
+            self._capture(alert)
+
+    def _capture(self, alert: Alert) -> None:
+        window = self.spec.slow_window_s
+        events = self.recorder.window(max(alert.t - window, 0.0), alert.t,
+                                      model=self.model or None)
+        seq = len(self._bundles)
+        text = build_bundle(alert=alert, events=events,
+                            metrics=self.registry.snapshot(),
+                            window=window, seq=seq,
+                            scenario=self._scenario,
+                            requests=self._requests)
+        self._bundles.append(text)
+        self.registry.counter("health.incidents").inc()
+        name = f"incident_{seq:03d}_{alert.signal}.json"
+        path = None
+        if self.incident_dir:
+            os.makedirs(self.incident_dir, exist_ok=True)
+            path = os.path.join(self.incident_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+        self.incidents.append({"name": name, "bytes": len(text),
+                               "path": path})
+
+    # ------------------------------------------------------------ replanner --
+    def consume_replan_trigger(self) -> int:
+        """Drain page/anomaly alerts raised since the last call — the
+        Replanner's ``trigger='health'`` condition."""
+        n, self._unconsumed = self._unconsumed, 0
+        return n
+
+    # ------------------------------------------------------------ reporting --
+    @property
+    def bundles(self) -> List[str]:
+        return list(self._bundles)
+
+    def count(self, severity: str) -> int:
+        return sum(1 for a in self.alerts if a.severity == severity)
+
+    def first_alert_t(self) -> Optional[float]:
+        return self.alerts[0].t if self.alerts else None
+
+    def report(self) -> dict:
+        by_signal: dict = {}
+        for a in self.alerts:
+            by_signal[a.signal] = by_signal.get(a.signal, 0) + 1
+        return {
+            "model": self.model,
+            "events": self.events_seen,
+            "alerts": len(self.alerts),
+            "pages": self.count("page"),
+            "tickets": self.count("ticket"),
+            "anomalies": self.count("anomaly"),
+            "by_signal": dict(sorted(by_signal.items())),
+            "first_alert_t": self.first_alert_t(),
+            "last_alert_t": self.alerts[-1].t if self.alerts else None,
+            "alerts_detail": [a.to_dict() for a in self.alerts[:32]],
+            "attainment": self.attainment.report(),
+            "tpot": self.tpot.report() if self.tpot is not None else None,
+            "composition": self.composition.report(),
+            "link": self.link.report(),
+            "recorder": {"recorded": self.recorder.recorded,
+                         "dropped": self.recorder.dropped,
+                         "ring": len(self.recorder)},
+            "incidents": [dict(i) for i in self.incidents],
+            "metrics": self.registry.snapshot(),
+        }

@@ -1,0 +1,144 @@
+"""Flight recorder + byte-deterministic incident bundles.
+
+:class:`FlightRecorder` keeps a bounded ring of recent bus events per
+model scope — cheap enough to run for the whole serve.  When an alert
+fires, :func:`build_bundle` freezes the alert window into one
+self-contained JSON document:
+
+* ``trace`` — a Perfetto/Chrome trace-event slice of the window
+  (rendered by a fresh :class:`~repro.obs.trace.Tracer`, loadable in
+  ui.perfetto.dev as-is),
+* ``metrics`` — the monitor's registry snapshot at alert time,
+* ``stall_attribution`` — per-cause stalled seconds inside the window
+  (every cause, zeros included),
+* ``requests`` — the window's finished requests with their
+  queue/stall/compute waterfalls, offenders (SLO-missed) called out,
+* ``scenario`` — when the serve was scenario-driven, the spec plus the
+  request slice needed to replay the window
+  (``repro.workload.trace`` format, so ``load_trace`` reads it back).
+
+Serialization is ``json.dumps(..., indent=1, sort_keys=True)`` over
+values that are themselves deterministic on the simulated clock, so two
+identical runs produce byte-identical bundles (a bench acceptance row).
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.events import Event
+from repro.obs.health.alerts import Alert
+from repro.obs.stall import CAUSES
+from repro.obs.trace import Tracer
+
+BUNDLE_SCHEMA = "repro.obs.health/incident-v1"
+
+
+class FlightRecorder:
+    """Bounded ring of recent events, one ring per model scope."""
+
+    def __init__(self, maxlen: int = 4096):
+        self.maxlen = int(maxlen)
+        self._rings: Dict[str, collections.deque] = {}
+        self.recorded = 0
+        self.dropped = 0
+
+    def record(self, ev: Event) -> None:
+        ring = self._rings.get(ev.model)
+        if ring is None:
+            ring = collections.deque(maxlen=self.maxlen)
+            self._rings[ev.model] = ring
+        if len(ring) == self.maxlen:
+            self.dropped += 1
+        ring.append(ev)
+        self.recorded += 1
+
+    def window(self, t0: float, t1: float,
+               model: Optional[str] = None) -> List[Event]:
+        """Events overlapping ``[t0, t1]`` (span-aware), in emission
+        order, merged across rings unless ``model`` pins one scope."""
+        rings = ([self._rings[model]] if model is not None
+                 and model in self._rings else self._rings.values())
+        out = [ev for ring in rings for ev in ring
+               if ev.t <= t1 and ev.t + max(ev.dur, 0.0) >= t0]
+        out.sort(key=lambda ev: ev.seq)
+        return out
+
+    def __len__(self) -> int:
+        return sum(len(r) for r in self._rings.values())
+
+
+def _waterfalls(events: List[Event]) -> dict:
+    """Finished requests in the window as queue/stall/compute waterfalls."""
+    rows = []
+    offenders = []
+    for ev in events:
+        if ev.name != "request.finish":
+            continue
+        a = ev.args or {}
+        row = {"uid": a.get("uid"), "t": ev.t,
+               "attained": bool(a.get("attained", True))}
+        for field in ("tenant", "tokens", "queue_s", "stall_s",
+                      "compute_s", "ttft_s", "tpot_s"):
+            if field in a:
+                row[field] = a[field]
+        rows.append(row)
+        if not row["attained"]:
+            offenders.append(row["uid"])
+    rows.sort(key=lambda r: (r["uid"] is None, r["uid"]))
+    return {"finished": rows, "offenders": sorted(
+        (u for u in offenders if u is not None))}
+
+
+def _stall_shares(events: List[Event]) -> dict:
+    totals = {c: 0.0 for c in CAUSES}
+    stall_s = 0.0
+    n = 0
+    for ev in events:
+        if ev.name != "demand.stall":
+            continue
+        a = ev.args or {}
+        stall_s += a.get("stall_s", ev.dur)
+        n += 1
+        for cause, v in (a.get("causes") or {}).items():
+            if cause in totals:
+                totals[cause] += v
+    return {"events": n, "stall_s": stall_s, "causes": totals}
+
+
+def _scenario_slice(scenario, requests, t1: float) -> Optional[dict]:
+    """The replayable slice: scenario spec + every request whose arrival
+    precedes the window's end (in-flight work included by construction).
+    ``repro.workload.trace`` format so ``load_trace`` reads it back."""
+    if scenario is None or requests is None:
+        return None
+    from repro.workload.trace import _request_dict  # lazy: avoids a cycle
+    spec_dict = scenario.to_dict() if hasattr(scenario, "to_dict") \
+        else dict(scenario)
+    return {"scenario": spec_dict,
+            "requests": [_request_dict(r) for r in requests
+                         if r.arrival_t <= t1]}
+
+
+def build_bundle(*, alert: Alert, events: List[Event], metrics: dict,
+                 window: float, seq: int, scenario=None,
+                 requests=None) -> str:
+    """Serialize one incident window as a byte-deterministic JSON doc."""
+    t1 = alert.t
+    t0 = max(t1 - window, 0.0)
+    tracer = Tracer()
+    for ev in events:
+        tracer.on_event(ev)
+    doc = {
+        "schema": BUNDLE_SCHEMA,
+        "incident": seq,
+        "alert": alert.to_dict(),
+        "window": {"t0": t0, "t1": t1, "events": len(events)},
+        "trace": tracer.to_chrome(),
+        "metrics": dict(metrics),
+        "stall_attribution": _stall_shares(events),
+        "requests": _waterfalls(events),
+        "scenario": _scenario_slice(scenario, requests, t1),
+    }
+    return json.dumps(doc, indent=1, sort_keys=True) + "\n"

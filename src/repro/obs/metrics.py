@@ -171,6 +171,11 @@ class MetricsRegistry:
         for name, h in self._histograms.items():
             for stat, v in h.summary().items():
                 out[f"{name}.{stat}"] = v
+            if h.bound is not None and h._seen > h.bound:
+                # percentiles are reservoir estimates past the bound;
+                # stamp it so compare.py exempts p50/p99 from the
+                # regression rule (count/sum/mean/max stay exact+gated)
+                out[f"{name}.reservoir"] = True
         return dict(sorted(out.items()))
 
     def reset(self) -> None:
@@ -276,3 +281,7 @@ class MetricsCollector:
                         m.histogram(f"request.{field}").observe(a[field])
         elif ev.name.startswith("swap."):
             m.counter(f"serving.{ev.name.partition('.')[2]}s").inc()
+        elif ev.name == "health.alert":
+            a = ev.args or {}
+            m.counter(f"health.alerts.{a.get('severity', 'page')}").inc()
+            m.counter(f"health.signal.{a.get('signal', 'unknown')}").inc()

@@ -21,6 +21,7 @@ byte-identical files (pinned by ``tests/test_obs.py``).
 from __future__ import annotations
 
 import json
+import sys
 from typing import Dict, List
 
 from repro.obs.events import Event
@@ -34,11 +35,23 @@ def _us(t: float) -> float:
 
 
 class Tracer:
-    """Bus consumer that buffers events and renders trace-event JSON."""
+    """Bus consumer that buffers events and renders trace-event JSON.
 
-    def __init__(self):
+    ``max_export`` bounds how many events one export renders (the
+    MOST RECENT ones win — the tail is where an investigation starts).
+    When the cap drops events the trace gains a ``metadata`` block with
+    the dropped/total counts and :meth:`export` warns on stderr, so a
+    truncated artifact is never mistaken for a complete one.  Unbounded
+    by default: existing exports stay byte-identical.
+    """
+
+    def __init__(self, max_export: int | None = None):
+        if max_export is not None and max_export < 1:
+            raise ValueError(f"max_export must be >= 1, got {max_export}")
         self.events: List[Event] = []
         self._models: Dict[str, int] = {}
+        self.max_export = max_export
+        self.dropped_last_export = 0
 
     # ------------------------------------------------------------ consume --
     def on_event(self, ev: Event) -> None:
@@ -59,13 +72,19 @@ class Tracer:
 
     def to_chrome(self) -> dict:
         """Render the buffered events as a trace-event JSON object."""
+        events = self.events
+        dropped = 0
+        if self.max_export is not None and len(events) > self.max_export:
+            dropped = len(events) - self.max_export
+            events = events[-self.max_export:]
+        self.dropped_last_export = dropped
         out: List[dict] = []
         seen_threads = set()
         for model, pid in sorted(self._models.items(), key=lambda kv: kv[1]):
             out.append({"ph": "M", "pid": pid, "tid": 0,
                         "name": "process_name",
                         "args": {"name": model or "repro"}})
-        for ev in self.events:
+        for ev in events:
             pid = self._pid(ev.model)
             if ev.lane is not None:
                 tid = _REQ_LANE + ev.lane
@@ -89,14 +108,24 @@ class Tracer:
             if ev.args:
                 rec["args"] = dict(ev.args)
             out.append(rec)
-        return {"traceEvents": out, "displayTimeUnit": "ms"}
+        doc = {"traceEvents": out, "displayTimeUnit": "ms"}
+        if dropped:  # only a truncated export carries the metadata block
+            doc["metadata"] = {"dropped_events": dropped,
+                               "total_events": len(self.events),
+                               "max_export": self.max_export}
+        return doc
 
     def export_str(self) -> str:
         return json.dumps(self.to_chrome(), sort_keys=True,
                           separators=(",", ":")) + "\n"
 
     def export(self, path) -> int:
-        """Write the trace to ``path``; returns the event count."""
+        """Write the trace to ``path``; returns the exported event count."""
+        text = self.export_str()
         with open(path, "w") as f:
-            f.write(self.export_str())
-        return len(self.events)
+            f.write(text)
+        if self.dropped_last_export:
+            print(f"[obs.trace] span cap {self.max_export}: dropped "
+                  f"{self.dropped_last_export}/{len(self.events)} oldest "
+                  f"events from {path}", file=sys.stderr)
+        return len(self.events) - self.dropped_last_export

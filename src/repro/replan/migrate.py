@@ -228,11 +228,16 @@ class Replanner:
                  hysteresis: float = 0.5, cooldown_s: float = 0.25,
                  check_every: int = 8, bandwidth_share: float = 0.5,
                  ledger: Optional[Callable[[object], None]] = None,
-                 device: int = 0):
+                 device: int = 0, trigger: str = "drift", health=None):
         assert check_every >= 1
+        assert trigger in ("drift", "health"), trigger
+        assert trigger != "health" or health is not None, \
+            "trigger='health' needs a HealthMonitor"
         self.sched = sched
         self.plan = plan
         self.plan_fn = plan_fn
+        self.trigger = trigger
+        self.health = health  # HealthMonitor (consume_replan_trigger)
         self.detector = DriftDetector(reference, window=window,
                                       threshold=threshold,
                                       cooldown_s=cooldown_s,
@@ -250,6 +255,7 @@ class Replanner:
         self.denied = 0
         self.plan_errors = 0
         self.empty_deltas = 0
+        self.health_triggers = 0
 
     def on_step(self, now: float) -> None:
         """Controller hook: pump migrations, periodically check drift."""
@@ -259,8 +265,17 @@ class Replanner:
             return
         self.checks += 1
         freqs = self.sched.activation_freqs
+        # the detector always observes: its window IS the live evidence a
+        # health-triggered re-plan feeds the planner, and its readings
+        # stay comparable across trigger modes
         reading = self.detector.observe(freqs, now)
-        if not reading.triggered:
+        if self.trigger == "health":
+            pending = self.health.consume_replan_trigger()
+            # no live routing evidence yet -> nothing to re-plan FROM
+            if not pending or reading.n_events < 1:
+                return
+            self.health_triggers += 1
+        elif not reading.triggered:
             return
         live = self._live_freqs(freqs)
         try:
@@ -303,6 +318,8 @@ class Replanner:
     def report(self) -> dict:
         out = {
             "checks": self.checks,
+            "trigger": self.trigger,
+            "health_triggers": self.health_triggers,
             "drift_readings": self.detector.readings,
             "drift_triggers": self.detector.triggers,
             "replans": self.replans,

@@ -455,10 +455,11 @@ class ServingController:
                 self.stats["rejections"] += 1
                 self.tracker.remove(r.uid)
                 if obs.enabled():
+                    rej_args = {"uid": r.uid, "deadline_t": r.deadline_t}
+                    if r.tenant:
+                        rej_args["tenant"] = r.tenant
                     obs.emit("request.reject", now, cat="serving",
-                             lane=r.uid,
-                             args={"uid": r.uid,
-                                   "deadline_t": r.deadline_t})
+                             lane=r.uid, args=rej_args)
             else:
                 keep.append(r)
         self.queue = keep
@@ -536,6 +537,8 @@ class ServingController:
                     "stall_s": req.stall_share_s,
                     "compute_s": req.compute_share_s,
                     "attained": req.attained}
+            if req.tenant:  # only when set: keeps tenant-less traces stable
+                args["tenant"] = req.tenant
             if req.ttft is not None:
                 args["ttft_s"] = req.ttft
             if req.tpot is not None:

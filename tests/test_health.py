@@ -1,0 +1,483 @@
+"""repro.obs.health — burn-rate alerting, anomaly detection, forensics.
+
+Covers the health-layer acceptance criteria:
+
+* ``HealthSpec`` validation names the offending field and the section
+  survives the JSON round-trip; ``replan.trigger="health"`` requires an
+  enabled health section,
+* multi-window burn-rate alerting: stationary error rates inside the
+  budget stay silent, a burst pages on BOTH windows, per-tenant
+  channels are independent, cooldown/hysteresis follow the
+  ``TriggerState`` discipline,
+* the composition detector judges only against a FULL aged reference
+  (cold-start transients stay silent) and fires on a genuine flip,
+* the flight recorder stays bounded and window extraction is
+  span-overlap aware,
+* incident bundles are byte-deterministic and carry the replayable
+  pieces,
+* the monitor scopes per model on a shared bus (fleet discipline),
+* ``Deployment.serve(health=...)`` wires the monitor for exactly the
+  duration of the call and ``report()["health"]`` summarizes it.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.deploy import (DeploymentSpec, HealthSpec, ModelSpec, ReplanSpec,
+                          ResourceSpec, RuntimeSpec, ServingSpec, SpecError)
+from repro.obs.events import Event
+from repro.obs.health import (Alert, BurnRateAlerter, CompositionDetector,
+                              FlightRecorder, HealthMonitor,
+                              LinkHealthDetector, TriggerState)
+from repro.obs.health.recorder import BUNDLE_SCHEMA, build_bundle
+
+
+def _served_spec(**hkw):
+    return DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=128),
+        serving=ServingSpec(slots=2, max_len=32, online_train=False),
+        health=HealthSpec(**hkw))
+
+
+# -------------------------------------------------------------- spec layer --
+def test_health_spec_defaults_validate():
+    _served_spec().validate()
+
+
+@pytest.mark.parametrize("field,kw", [
+    ("health.slo_target", dict(slo_target=0.0)),
+    ("health.slo_target", dict(slo_target=1.0)),
+    ("health.fast_window_s", dict(fast_window_s=0.0)),
+    ("health.slow_window_s", dict(slow_window_s=5.0, fast_window_s=5.0)),
+    ("health.page_burn", dict(page_burn=0.0)),
+    ("health.ticket_burn", dict(ticket_burn=0.0)),
+    ("health.ticket_burn", dict(ticket_burn=9.0, page_burn=4.0)),
+    ("health.tpot_budget_ms", dict(tpot_budget_ms=-1.0)),
+    ("health.min_events", dict(min_events=0)),
+    ("health.anomaly_window", dict(anomaly_window=1)),
+    ("health.anomaly_threshold", dict(anomaly_threshold=0.0)),
+    ("health.anomaly_threshold", dict(anomaly_threshold=1.5)),
+    ("health.link_window_s", dict(link_window_s=0.0)),
+    ("health.link_util_threshold", dict(link_util_threshold=0.0)),
+    ("health.queue_delay_s", dict(queue_delay_s=-0.1)),
+    ("health.hysteresis", dict(hysteresis=1.5)),
+    ("health.cooldown_s", dict(cooldown_s=-1.0)),
+    ("health.ring_events", dict(ring_events=0)),
+    ("health.max_incidents", dict(max_incidents=-1)),
+])
+def test_invalid_health_spec_names_field(field, kw):
+    with pytest.raises(SpecError) as ei:
+        _served_spec(**kw).validate()
+    assert ei.value.field == field
+
+
+def test_health_requires_serving_section():
+    with pytest.raises(SpecError) as ei:
+        DeploymentSpec(
+            model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=128),
+            health=HealthSpec())
+    assert ei.value.field == "health.enabled"
+
+
+def test_replan_health_trigger_requires_health_section():
+    with pytest.raises(SpecError) as ei:
+        DeploymentSpec(
+            model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=128),
+            resources=ResourceSpec(vram_gb=1.0),
+            serving=ServingSpec(slots=2, online_train=False),
+            replan=ReplanSpec(trigger="health"))
+    assert ei.value.field == "replan.trigger"
+    # disabled health does not satisfy the trigger either
+    with pytest.raises(SpecError):
+        DeploymentSpec(
+            model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=128),
+            resources=ResourceSpec(vram_gb=1.0),
+            serving=ServingSpec(slots=2, online_train=False),
+            replan=ReplanSpec(trigger="health"),
+            health=HealthSpec(enabled=False)).validate()
+
+
+def test_replan_trigger_must_be_known():
+    with pytest.raises(SpecError) as ei:
+        DeploymentSpec(
+            model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=128),
+            resources=ResourceSpec(vram_gb=1.0),
+            serving=ServingSpec(slots=2, online_train=False),
+            replan=ReplanSpec(trigger="vibes"))
+    assert ei.value.field == "replan.trigger"
+
+
+def test_health_spec_json_round_trip():
+    spec = _served_spec(slo_target=0.95, fast_window_s=2.0,
+                        tpot_budget_ms=80.0, incident_dir="/tmp/x")
+    again = DeploymentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.health.tpot_budget_ms == 80.0
+
+
+def test_health_spec_round_trip_none_and_unknown_field():
+    spec = DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=128))
+    assert DeploymentSpec.from_json(spec.to_json()).health is None
+    d = json.loads(_served_spec().to_json())
+    d["health"]["page_rate"] = 3.0
+    with pytest.raises(SpecError):
+        DeploymentSpec.from_dict(d)
+    d2 = json.loads(_served_spec().to_json())
+    d2["health"] = None  # explicit null: no health layer
+    assert DeploymentSpec.from_dict(d2).health is None
+
+
+# ------------------------------------------------------------ trigger state --
+def test_trigger_state_fire_disarm_rearm_cooldown():
+    st = TriggerState()
+    assert st.update(0.0, 2.0, 1.0, hysteresis=0.5, cooldown_s=10.0)
+    # disarmed until the value sinks to hysteresis * threshold
+    assert not st.update(1.0, 2.0, 1.0, hysteresis=0.5, cooldown_s=10.0)
+    assert not st.update(2.0, 0.4, 1.0, hysteresis=0.5, cooldown_s=10.0)
+    # re-armed now, but cooldown still holds fire
+    assert not st.update(5.0, 2.0, 1.0, hysteresis=0.5, cooldown_s=10.0)
+    assert st.update(11.0, 2.0, 1.0, hysteresis=0.5, cooldown_s=10.0)
+
+
+def test_trigger_state_eligible_gates_firing_only():
+    st = TriggerState()
+    assert not st.update(0.0, 9.0, 1.0, hysteresis=0.5, cooldown_s=0.0,
+                         eligible=False)
+    assert st.update(1.0, 9.0, 1.0, hysteresis=0.5, cooldown_s=0.0)
+
+
+# ---------------------------------------------------------------- burn rate --
+def _burn(**kw):
+    base = dict(slo_target=0.9, fast_window_s=5.0, slow_window_s=30.0,
+                page_burn=4.0, ticket_burn=2.0, min_events=4,
+                hysteresis=0.5, cooldown_s=10.0)
+    base.update(kw)
+    return BurnRateAlerter(**base)
+
+
+def test_burn_stationary_inside_budget_is_silent():
+    b = _burn()
+    alerts = []
+    for i in range(200):  # 5% errors against a 10% budget
+        b.record(i * 0.5, "chat", i % 20 == 19)
+        alerts += b.evaluate(i * 0.5)
+    assert alerts == []
+
+
+def test_burn_burst_pages_on_both_windows():
+    b = _burn()
+    for i in range(40):  # healthy preamble
+        b.record(i * 0.5, "chat", False)
+    alerts = []
+    for i in range(30):  # dense failures: fast AND slow windows burn
+        t = 20.0 + i * 0.3
+        b.record(t, "chat", True)
+        alerts += b.evaluate(t)
+    severities = [a.severity for a in alerts]
+    assert "page" in severities
+    page = next(a for a in alerts if a.severity == "page")
+    assert page.signal == "attainment" and page.key == "chat"
+    assert page.detail["burn_fast"] > 4.0 and page.detail["burn_slow"] > 4.0
+
+
+def test_burn_slow_only_raises_ticket_not_page():
+    b = _burn()
+    alerts = []
+    # 30% errors, spread: slow burn ~3 (> ticket 2, < page 4); the fast
+    # 5s window holds ~2 events so the page channel never has both
+    for i in range(60):
+        t = i * 2.0
+        b.record(t, "chat", i % 10 < 3)
+        alerts += b.evaluate(t)
+    assert any(a.severity == "ticket" for a in alerts)
+    assert not any(a.severity == "page" for a in alerts)
+
+
+def test_burn_tenants_are_independent_channels():
+    b = _burn(min_events=2, cooldown_s=0.0)
+    for i in range(20):
+        b.record(i * 0.2, "chat", True)   # chat on fire
+        b.record(i * 0.2, "code", False)  # code healthy
+    alerts = b.evaluate(4.0)
+    assert alerts and all(a.key == "chat" for a in alerts)
+
+
+def test_burn_hysteresis_and_cooldown_limit_page_rate():
+    b = _burn(min_events=2)
+    pages = []
+
+    def drive(t0, n, dt, err):
+        got = []
+        for i in range(n):
+            t = t0 + i * dt
+            b.record(t, "chat", err)
+            got += [a for a in b.evaluate(t) if a.severity == "page"]
+        return got
+
+    # one sustained incident = ONE page: the channel disarms after
+    # firing and the burn never sinks to the hysteresis re-arm level
+    pages += drive(0.0, 40, 0.25, True)
+    assert len(pages) == 1
+    # recovery drains the windows, the channel re-arms silently
+    pages += drive(10.0, 200, 0.5, False)
+    assert len(pages) == 1
+    # a second incident pages again, past the cooldown
+    pages += drive(110.0, 40, 0.25, True)
+    assert len(pages) == 2
+    assert pages[1].t - pages[0].t >= 10.0
+
+
+# -------------------------------------------------------------- composition --
+def test_composition_warms_up_against_full_reference():
+    det = CompositionDetector(window=4, threshold=0.2, cooldown_s=0.0)
+    # 4 live + 4 aged are needed before any judgement: the first 7
+    # observations must stay silent no matter how different they look
+    segs = [{"eviction": 1.0}, {"eviction": 1.0}, {"link_contention": 1.0},
+            {"predictor_miss": 1.0}, {"eviction": 1.0},
+            {"disk_tier_miss": 1.0}, {"draft_residual": 1.0}]
+    assert all(det.observe(float(i), s) is None
+               for i, s in enumerate(segs))
+
+
+def test_composition_flip_fires_with_top_cause_key():
+    det = CompositionDetector(window=4, threshold=0.3, cooldown_s=0.0)
+    alerts = []
+    for i in range(8):
+        alerts.append(det.observe(float(i), {"predictor_miss": 1.0}))
+    assert alerts == [None] * 8  # stable composition: silent
+    for i in range(8, 14):
+        alerts.append(det.observe(float(i), {"link_contention": 1.0}))
+    fired = [a for a in alerts if a is not None]
+    assert fired and fired[0].key == "cause:link_contention"
+    assert fired[0].severity == "anomaly"
+    assert fired[0].value > 0.3
+
+
+def test_composition_scaling_burst_stays_silent():
+    det = CompositionDetector(window=4, threshold=0.3, cooldown_s=0.0)
+    for i in range(8):
+        det.observe(float(i), {"eviction": 0.1, "link_contention": 0.05})
+    for i in range(8, 16):  # 10x the volume, same shares
+        a = det.observe(float(i), {"eviction": 1.0, "link_contention": 0.5})
+        assert a is None
+
+
+# --------------------------------------------------------------- link health --
+def test_link_util_alert_per_device():
+    det = LinkHealthDetector(window_s=5.0, util_threshold=1.5,
+                             queue_delay_s=0.0, cooldown_s=0.0)
+    fired = []
+    for i in range(10):  # 2.0s of link time laid down per 1s on dev 1
+        fired += det.observe(i * 0.5, 1, 1.0, 0.0)
+        fired += det.observe(i * 0.5, 0, 0.01, 0.0)  # dev 0 idle
+    assert fired and all(a.key == "device:1" for a in fired)
+    assert all(a.signal == "link_util" for a in fired)
+    assert det.last_util[1] > 1.5 > det.last_util[0]
+
+
+def test_queue_delay_rule_disabled_at_zero():
+    det = LinkHealthDetector(window_s=5.0, util_threshold=100.0,
+                             queue_delay_s=0.0, cooldown_s=0.0)
+    assert det.observe(0.0, 0, 0.1, queue_delay=99.0) == []
+    det2 = LinkHealthDetector(window_s=5.0, util_threshold=100.0,
+                              queue_delay_s=0.5, cooldown_s=0.0)
+    fired = det2.observe(0.0, 0, 0.1, queue_delay=99.0)
+    assert [a.signal for a in fired] == ["queue_delay"]
+
+
+# ----------------------------------------------------------- flight recorder --
+def _ev(seq, t, name="serving.step", dur=0.0, model="", args=None):
+    return Event(seq=seq, t=t, name=name, cat="serving", dur=dur,
+                 device=0, model=model, lane=None, args=args)
+
+
+def test_recorder_bounded_ring_and_drop_count():
+    rec = FlightRecorder(maxlen=8)
+    for i in range(20):
+        rec.record(_ev(i, float(i)))
+    assert len(rec) == 8
+    assert rec.recorded == 20 and rec.dropped == 12
+    assert [e.seq for e in rec.window(0.0, 100.0)] == list(range(12, 20))
+
+
+def test_recorder_window_is_span_overlap_aware():
+    rec = FlightRecorder()
+    rec.record(_ev(0, 1.0, dur=0.0))          # instant before window
+    rec.record(_ev(1, 2.0, dur=5.0))          # span overlapping into it
+    rec.record(_ev(2, 6.0))                   # inside
+    rec.record(_ev(3, 11.0))                  # after
+    got = [e.seq for e in rec.window(5.0, 10.0)]
+    assert got == [1, 2]
+
+
+def test_recorder_scopes_per_model():
+    rec = FlightRecorder()
+    rec.record(_ev(0, 1.0, model="a"))
+    rec.record(_ev(1, 1.5, model="b"))
+    rec.record(_ev(2, 2.0, model=""))
+    assert [e.seq for e in rec.window(0.0, 9.0, model="a")] == [0]
+    assert [e.seq for e in rec.window(0.0, 9.0)] == [0, 1, 2]
+
+
+# --------------------------------------------------------------- bundles --
+def _alert(t=5.0):
+    return Alert(t=t, signal="attainment", severity="page", key="chat",
+                 value=6.0, threshold=4.0, detail={"burn_fast": 6.0})
+
+
+def test_bundle_is_byte_deterministic_and_schema_tagged():
+    evs = [_ev(0, 1.0, name="request.finish",
+               args={"uid": 0, "attained": False, "tenant": "chat",
+                     "stall_s": 0.2, "tokens": 4}),
+           _ev(1, 2.0, name="demand.stall", dur=0.1,
+               args={"stall_s": 0.1, "causes": {"eviction": 0.1}})]
+    kw = dict(alert=_alert(), events=evs, metrics={"m": 1}, window=30.0,
+              seq=0)
+    a, b = build_bundle(**kw), build_bundle(**kw)
+    assert a == b
+    doc = json.loads(a)
+    assert doc["schema"] == BUNDLE_SCHEMA
+    assert set(doc) >= {"schema", "incident", "alert", "window", "trace",
+                        "metrics", "stall_attribution", "requests"}
+    assert doc["requests"]["offenders"] == [0]
+    assert doc["stall_attribution"]["causes"]["eviction"] == 0.1
+    assert doc["trace"]["traceEvents"]  # renders as a Perfetto slice
+
+
+# ---------------------------------------------------------------- monitor --
+def _spec_small(**kw):
+    base = dict(slo_target=0.9, fast_window_s=5.0, slow_window_s=30.0,
+                page_burn=4.0, ticket_burn=2.0, min_events=2,
+                cooldown_s=0.0, max_incidents=2)
+    base.update(kw)
+    return HealthSpec(**base)
+
+
+def _finish(seq, t, ok, tenant="chat", model=""):
+    return _ev(seq, t, name="request.finish", model=model,
+               args={"uid": seq, "attained": ok, "tenant": tenant})
+
+
+def test_monitor_pages_on_failure_burst_and_caps_incidents():
+    m = HealthMonitor(_spec_small(max_incidents=1))
+    for i in range(10):
+        m.on_event(_finish(i, i * 0.5, True))
+    for i in range(10, 22):
+        m.on_event(_finish(i, 5.0 + (i - 10) * 0.2, False))
+    assert m.count("page") >= 1
+    assert m.first_alert_t() is not None
+    assert len(m.alerts) >= 2  # ticket + page at least
+    assert len(m.bundles) == 1  # max_incidents caps capture, not alerts
+    rep = m.report()
+    assert rep["pages"] == m.count("page")
+    assert rep["metrics"]["health.alerts.page"] == rep["pages"]
+    assert rep["recorder"]["recorded"] == 22
+
+
+def test_monitor_emits_health_alert_event_but_ignores_own():
+    m = HealthMonitor(_spec_small())
+    seen = []
+
+    class Spy:
+        def on_event(self, ev):
+            seen.append(ev)
+
+    with obs.use_bus(obs.EventBus()), obs.consumer(m, Spy()):
+        for i in range(10):
+            obs.emit("request.finish", i * 0.2, cat="serving",
+                     args={"uid": i, "attained": False, "tenant": "t"})
+    alerts = [e for e in seen if e.name == "health.alert"]
+    assert alerts and alerts[0].cat == "health"
+    assert alerts[0].args["severity"] in ("page", "ticket")
+    # its own health.alert events are not folded back in
+    assert m.events_seen == 10
+
+
+def test_monitor_scopes_by_model_label():
+    m = HealthMonitor(_spec_small(), model="a")
+    m.on_event(_finish(0, 1.0, False, model="a"))
+    m.on_event(_finish(1, 1.1, False, model="b"))  # other member
+    m.on_event(_finish(2, 1.2, False, model=""))   # unscoped: accepted
+    assert m.events_seen == 2
+
+
+def test_monitor_writes_incident_files(tmp_path):
+    m = HealthMonitor(_spec_small(max_incidents=1),
+                      incident_dir=str(tmp_path))
+    for i in range(12):
+        m.on_event(_finish(i, i * 0.3, False))
+    assert m.incidents and m.incidents[0]["path"] is not None
+    text = (tmp_path / m.incidents[0]["name"]).read_text()
+    assert text == m.bundles[0]
+    assert json.loads(text)["schema"] == BUNDLE_SCHEMA
+
+
+def test_monitor_consume_replan_trigger_drains():
+    m = HealthMonitor(_spec_small())
+    assert m.consume_replan_trigger() == 0
+    for i in range(12):
+        m.on_event(_finish(i, i * 0.3, False))
+    n = m.consume_replan_trigger()
+    assert n == m.count("page") + m.count("anomaly") > 0
+    assert m.consume_replan_trigger() == 0
+
+
+def test_monitor_tpot_channel_only_when_budgeted():
+    assert HealthMonitor(_spec_small()).tpot is None
+    m = HealthMonitor(_spec_small(tpot_budget_ms=10.0, min_events=2))
+    for i in range(10):
+        m.on_event(_ev(i, i * 0.3, name="request.finish",
+                       args={"uid": i, "attained": True, "tenant": "c",
+                             "tpot_s": 0.5}))  # 500ms >> 10ms budget
+    assert any(a.signal == "tpot" for a in m.alerts)
+
+
+# ------------------------------------------------------------- deployment --
+@pytest.fixture(scope="module")
+def served_dep():
+    from repro.deploy import build
+    spec = DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=64,
+                        max_experts=8),
+        runtime=RuntimeSpec(use_runtime=True, prefetch=False),
+        serving=ServingSpec(slots=2, max_len=32, online_train=False),
+        health=HealthSpec(min_events=1, cooldown_s=0.0))
+    return build(spec)
+
+
+def test_serve_with_health_reports_and_detaches(served_dep):
+    dep = served_dep
+    dep.serve(n_requests=3, rate=4.0, max_new=4)
+    rep = dep.report()
+    assert "health" in rep
+    assert rep["health"]["events"] > 0
+    # the monitor lives only inside serve(): nothing stays on the bus
+    assert not obs.BUS.enabled()
+
+
+def test_serve_health_false_disables_layer():
+    from repro.deploy import build
+    spec = DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=64,
+                        max_experts=8),
+        runtime=RuntimeSpec(use_runtime=True, prefetch=False),
+        serving=ServingSpec(slots=2, max_len=32, online_train=False))
+    dep = build(spec)
+    dep.serve(n_requests=2, rate=4.0, max_new=4, health=False)
+    assert dep._health is None
+    assert "health" not in dep.report()
+
+
+def test_replanner_accepts_health_trigger():
+    from repro.replan import Replanner
+    m = HealthMonitor(_spec_small())
+    # trigger="health" without a monitor is a hard error
+    with pytest.raises(AssertionError):
+        Replanner(object(), None, np.ones((1, 1)), lambda f: None,
+                  trigger="health", health=None)
+    rp = Replanner(object(), None, np.ones((1, 1)), lambda f: None,
+                   trigger="health", health=m)
+    assert rp.trigger == "health" and rp.report()["trigger"] == "health"

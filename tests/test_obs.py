@@ -37,11 +37,13 @@ def _store(e=4, d=16, f=32, seed=0):
     return build_expert_store(moe, thr, bits=2, group=16)
 
 
-def _drive(seed=7, n_ops=60, tracer=None):
+def _drive(seed=7, n_ops=60, tracer=None, ring_maxlen=None):
     """Random but reproducible schedule with optional consumers."""
     store = _store(seed=1)
     res = [ResidencyManager(3, policy="weighted")]
     eng = TransferEngine(LinkModel(), num_buffers=2, chunk_channels=8)
+    if ring_maxlen is not None:  # observation-only: a tiny record ring
+        eng.records = RecordLog(maxlen=ring_maxlen)
     sched = ExpertScheduler([store], res, eng, lookahead=2)
     rng = np.random.default_rng(seed)
     f = store.d_ff
@@ -292,3 +294,128 @@ def test_registry_default_bound_engages_only_at_scale():
         h.observe(float(i))
     assert h.values == [float(i) for i in range(200)]
     assert reg.snapshot()["small.p50"] == 99.0
+
+
+# ------------------------------------------------ ring wraparound edges --
+def _rec(i):
+    return TransferRecord(key=(0, i), kind="prefetch", nbytes=1, chunks=1,
+                          strategy="packed", enqueue_t=0.0, start_t=0.0,
+                          complete_t=1.0)
+
+
+def test_record_log_since_after_wraparound():
+    log = RecordLog(maxlen=4)
+    for i in range(10):
+        log.append(_rec(i))
+    assert log.dropped == 6
+    # a seq that has aged out returns only what the ring still holds
+    assert [r.seq for r in log.since(0)] == [6, 7, 8, 9]
+    assert [r.seq for r in log.since(6)] == [6, 7, 8, 9]
+    # the wrap boundary itself
+    assert [r.seq for r in log.since(9)] == [9]
+    # a future seq is empty, not an error
+    assert log.since(10) == []
+    assert log.since(999) == []
+
+
+def test_record_log_since_without_wraparound_matches_slicing():
+    log = RecordLog(maxlen=64)
+    for i in range(10):
+        log.append(_rec(i))
+    assert log.dropped == 0
+    for s in range(12):
+        assert [r.seq for r in log.since(s)] == list(range(s, 10))
+
+
+from tests._hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=40, max_value=90))
+def test_aggregates_survive_wraparound_under_preemption(seed, n_ops):
+    """Demand preemption mutates IN-FLIGHT records (``_preempt_schedule``
+    pushes prefetch completion out and applies ``busy_s`` deltas through
+    the ``inflight`` references) — the rolling aggregates must therefore
+    be identical whether the mutated record is still in the ring or has
+    already wrapped out of a tiny one."""
+    _, big = _drive(seed=seed, n_ops=n_ops)
+    _, small = _drive(seed=seed, n_ops=n_ops, ring_maxlen=4)
+    assert big.records.dropped == 0  # default ring: full ground truth
+    assert small.records.dropped == max(0, small.records.total - 4)
+    want = _agg_from_log(big.records)
+    for eng in (big, small):
+        assert eng.agg.transfers == want["transfers"]
+        assert eng.agg.bytes == want["bytes"]
+        assert eng.agg.demoted == want["demoted"]
+        assert eng.agg.wasted_bytes == want["wasted_bytes"]
+        assert abs(eng.agg.busy_s - want["busy_s"]) <= \
+            1e-9 * max(1.0, want["busy_s"])
+        assert abs(eng.agg.disk_s - want["disk_s"]) <= 1e-9
+    assert len(small.records) <= 4
+    assert small.records.total == big.records.total
+
+
+def test_aggregates_after_actual_wraparound():
+    """Pinned companion to the property test: this drive is KNOWN to
+    wrap the tiny ring, so the preemption-past-the-boundary path is
+    exercised every run, not only when the grid lands on it."""
+    _, big = _drive(seed=23, n_ops=120)
+    _, small = _drive(seed=23, n_ops=120, ring_maxlen=4)
+    assert small.records.dropped > 0
+    assert small.agg.transfers == big.agg.transfers
+    assert small.agg.bytes == big.agg.bytes
+    assert abs(small.agg.busy_s - big.agg.busy_s) <= \
+        1e-9 * max(1.0, big.agg.busy_s)
+
+
+# ----------------------------------------------------- tracer span cap --
+def test_tracer_rejects_bad_cap():
+    import pytest
+    with pytest.raises(ValueError):
+        obs.Tracer(max_export=0)
+
+
+def test_tracer_cap_keeps_most_recent_and_stamps_metadata(tmp_path,
+                                                          capsys):
+    capped = obs.Tracer(max_export=10)
+    full = obs.Tracer()
+    _drive(seed=31, tracer=capped)
+    _drive(seed=31, tracer=full)
+    assert len(capped) == len(full) > 10  # buffering is unbounded
+    doc = capped.to_chrome()
+    assert doc["metadata"] == {"dropped_events": len(full) - 10,
+                               "total_events": len(full),
+                               "max_export": 10}
+    body = [r for r in doc["traceEvents"] if r["ph"] != "M"]
+    tail = [r for r in full.to_chrome()["traceEvents"]
+            if r["ph"] != "M"][-10:]
+    assert body == tail  # the most recent events win
+    n = capped.export(tmp_path / "t.json")
+    assert n == 10
+    assert "dropped" in capsys.readouterr().err
+
+
+def test_tracer_uncapped_export_unchanged(tmp_path, capsys):
+    tracer = obs.Tracer()
+    _drive(seed=31, tracer=tracer)
+    n = tracer.export(tmp_path / "t.json")
+    assert n == len(tracer)
+    assert tracer.dropped_last_export == 0
+    doc = json.loads((tmp_path / "t.json").read_text())
+    assert "metadata" not in doc  # only truncated exports are stamped
+    assert capsys.readouterr().err == ""
+
+
+# ------------------------------------------------- reservoir stamping --
+def test_snapshot_stamps_reservoir_flag_past_bound():
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry(hist_bound=32, seed=1)
+    for i in range(31):
+        reg.histogram("lat").observe(float(i))
+    assert "lat.reservoir" not in reg.snapshot()  # exact mode: no stamp
+    for i in range(100):
+        reg.histogram("lat").observe(float(i))
+    snap = reg.snapshot()
+    assert snap["lat.reservoir"] is True
+    assert snap["lat.count"] == 131  # running stats stay exact
