@@ -1,20 +1,29 @@
-"""Fleet-scale serving benchmark: 4 models x 4 devices x 10k requests.
+"""Fleet-scale serving benchmark: 8 models x 4 devices x 20k requests.
 
 The nightly-only scale lane (registered in ``run.py`` but not in the
-push/PR bench loop): a four-member fleet over one shared host tier,
+push/PR bench loop): an eight-member fleet over one shared host tier,
 each member a 4-device cluster with its own SLO control plane, served
 from a single overloaded ``repro.workload`` scenario (diurnal +
 flash-crowd arrivals, drifting router bias, 2 500 requests per model).
 Tight SLOs mean the EDF feasibility gate rejects most of the queue —
-the point is the CONTROL PLANE at scale, not 10k full decodes.
+the point is the CONTROL PLANE at scale, not 20k full decodes.
 
 One member (model ``d``) gets a drift-heavy scenario (fast strong
 rotation) AND a live re-planner: its drift triggers re-run the cluster
 planner mid-serve, every re-plan is debited against the fleet's
 admission ledger (``Fleet.recommit`` — a denial aborts that re-plan),
 and the migrations ride the shared-tier transfer timelines while the
-other three members keep serving.  Re-planning under fleet contention,
+other members keep serving.  Re-planning under fleet contention,
 pinned as "the loop ran and the run completed", not as a perf claim.
+
+One member (model ``e``) serves with big-little SPECULATION on: its
+cluster plan prices an always-resident shadow bank, demand misses are
+answered from the shadows and verified-or-rolled-back when the big
+expert lands — all while seven non-speculating siblings contend for
+the same host tier.  The global ``fleetscale/stall_conservation`` row
+(appended by ``run.py``) now also covers the ``speculative_fallback``
+cause: every declined or rolled-back speculation's stalled seconds
+must still sum back bitwise.
 
 Pins:
 
@@ -37,18 +46,20 @@ import time
 
 from repro.deploy import (DeploymentSpec, ModelSpec, ReplanSpec,
                           ResourceSpec, RuntimeSpec, ServingSpec,
-                          build_fleet)
+                          SpeculationSpec, build_fleet)
 from repro.store import floor_bytes
 from repro.workload import (ArrivalSpec, BurstSpec, DriftSpec, ScenarioSpec,
                             TenantSpec, generate_requests)
 
 N_PER_MODEL = 2500
 DEVICES = 4
-MODELS = "abcd"
-SEEDS = (0, 1, 2, 3)
+MODELS = "abcdefgh"
+SEEDS = tuple(range(len(MODELS)))
 #: model ``d`` serves the drift-heavy scenario with this replan section
 REPLAN = ReplanSpec(window=16, threshold=0.15, cooldown_s=4.0,
                     check_every=4, bandwidth_share=0.25)
+#: model ``e`` serves with the big-little speculative executor attached
+SPECULATE_MODEL = "e"
 _CACHE: dict = {}
 
 
@@ -90,7 +101,9 @@ def _spec(name: str, seed: int, vram_gb: float, host_gb: float
         runtime=RuntimeSpec(use_runtime=True, prefetch=False),
         serving=ServingSpec(slots=2, max_len=64, policy="slo",
                             online_train=False),
-        replan=REPLAN if name == "d" else None)
+        replan=REPLAN if name == "d" else None,
+        speculation=(SpeculationSpec() if name == SPECULATE_MODEL
+                     else None))
 
 
 def _setup():
@@ -109,10 +122,15 @@ def run(csv_rows: list):
     # per-device budget holds ~1.25x the four members' committed
     # footprints: enough to admit everyone at build, tight enough that
     # model d's re-plans contend for real headroom at recommit time
+    # the speculating member gets 1.4x the floor so the planner's shadow
+    # stage actually funds a bank after slots + pins (at 1.05x it cannot);
+    # the fleet admission budget covers the sum of the members' asks
+    vram_of = {name: (1.4 * vram_gb if name == SPECULATE_MODEL
+                      else vram_gb) for name in MODELS}
     fleet = build_fleet(
-        [_spec(name, seed, vram_gb, host_gb / len(MODELS))
+        [_spec(name, seed, vram_of[name], host_gb / len(MODELS))
          for name, seed in zip(MODELS, SEEDS)],
-        vram_gb_per_device=1.25 * vram_gb * len(MODELS), host_gb=host_gb)
+        vram_gb_per_device=1.25 * sum(vram_of.values()), host_gb=host_gb)
 
     uid_base = 0
     streams = {}
@@ -182,6 +200,25 @@ def run(csv_rows: list):
         f"migrate_transfers={rr.get('migrate_transfers', 0)} "
         f"rehomes={rr.get('migrate_rehomes', 0)}; acceptance: the "
         f"fleet-ledgered replan loop ran and the stream completed)"))
+
+    # the speculating member: shadow bank planned, executor attached,
+    # stream completed under fleet contention (the stall_conservation
+    # row below then covers its speculative_fallback attributions)
+    dep_e = fleet[SPECULATE_MODEL].deployment
+    sp = dep_e._speculator
+    sr = sp.report() if sp is not None else {}
+    shadows = len(dep_e.plan.store_plan.shadows
+                  if hasattr(dep_e.plan, "store_plan")
+                  else dep_e.plan.shadows)
+    spec_ok = sp is not None and shadows > 0
+    csv_rows.append((
+        f"fleetscale/speculate/model={SPECULATE_MODEL}", 0.0,
+        f"{spec_ok} (shadows={shadows} served={sr.get('spec_served', 0)} "
+        f"accepts={sr.get('spec_accepts', 0)} "
+        f"rollbacks={sr.get('spec_rollbacks', 0)} "
+        f"declined={sr.get('spec_declined', 0)}; acceptance: the "
+        f"speculating member planned a shadow bank and completed its "
+        f"stream alongside seven non-speculating siblings)"))
 
     for name in MODELS:
         first, second = submit_us[name]

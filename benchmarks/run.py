@@ -35,6 +35,12 @@ across PRs.
                                     byte-deterministic incident bundle,
                                     stationary diurnal_mix stays alert-
                                     free, monitor attach is zero-overhead)
+  speculate -> bench_speculate    (big-little speculation: stall/token
+                                    strictly below non-speculative at
+                                    the tight Mixtral budget, accepted
+                                    divergence bounded, speculation-off
+                                    a bitwise noop, rollback re-decodes
+                                    bitwise equal to never-speculated)
   fleetscale -> bench_fleetscale   (nightly scale lane: 4 models x
                                     4 devices x 10k scenario requests,
                                     one drift-heavy member replanning
@@ -136,7 +142,7 @@ def main() -> None:
                             bench_predictor, bench_prefetch,
                             bench_replan, bench_sensitivity,
                             bench_serving, bench_sparse_kernel,
-                            bench_transfer, roofline)
+                            bench_speculate, bench_transfer, roofline)
 
     suites = [
         ("headline", bench_compression.run),
@@ -152,6 +158,7 @@ def main() -> None:
         ("replan", bench_replan.run),
         ("multimodel", bench_multimodel.run),
         ("health", bench_health.run),
+        ("speculate", bench_speculate.run),
         ("fleetscale", bench_fleetscale.run),
         ("roofline", roofline.run),
     ]

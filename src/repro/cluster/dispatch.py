@@ -203,6 +203,20 @@ class ClusterScheduler:
         return self.devs[self._sticky(layer, expert)].staged_payload(
             layer, expert)
 
+    def stall_estimate(self, layer: int, expert: int) -> float:
+        return self.devs[self._sticky(layer, expert)].stall_estimate(
+            layer, expert)
+
+    def hint_cause(self, layer: int, expert: int, cause: str) -> None:
+        self.devs[self._sticky(layer, expert)].hint_cause(
+            layer, expert, cause)
+
+    def bump_stat(self, name: str, layer: int = 0, expert: int = 0) -> None:
+        """Counter increments must land on a DEVICE scheduler: the merged
+        ``stats`` property returns a fresh summed object every read, so
+        ``sched.stats.x += 1`` through this interface would be dropped."""
+        self.devs[self._sticky(layer, expert)].bump_stat(name)
+
     # ---------------------------------------------------------- telemetry --
     def overlap_efficiency(self) -> float:
         busy = self.engines.busy_seconds()

@@ -159,7 +159,8 @@ def plan_cluster(cfg: ModelConfig, freqs: np.ndarray, *,
                  max_slots: Optional[int] = None,
                  max_pinned_per_device: Optional[int] = None,
                  ladder: Optional[Tuple[str, ...]] = None,
-                 progressive: bool = True) -> ClusterPlan:
+                 progressive: bool = True,
+                 shadows: Optional[str] = None) -> ClusterPlan:
     """Solve placement + per-device store configuration for a cluster.
 
     The same deterministic greedy spend as ``store.plan_store``, run
@@ -167,9 +168,11 @@ def plan_cluster(cfg: ModelConfig, freqs: np.ndarray, *,
     non-expert weights, holds resident up projections only for ITS
     experts, and carves its own slab arena.  Stages (stall-first order,
     identical to the single-device planner): residency slots to k+1 →
-    pin hottest experts on their home devices → format upgrades hottest
-    first (an upgrade must fit on EVERY home device) → remaining slots.
-    Raises :class:`~repro.store.planner.PlanError` if any device cannot
+    pin hottest experts on their home devices → little shadows for
+    speculation when ``shadows`` names a shadow format → format upgrades
+    hottest first (an upgrade must fit on EVERY home device) →
+    remaining slots.  Raises
+    :class:`~repro.store.planner.PlanError` if any device cannot
     hold the leanest configuration.
     """
     assert n_devices >= 1
@@ -211,16 +214,24 @@ def plan_cluster(cfg: ModelConfig, freqs: np.ndarray, *,
         [k for k in sorted(device_of) if d in device_of[k]]
         for d in range(n_devices)]
     slots = 1
+    shadow_fmt = F.get_shadow_format(shadows) if shadows else None
+    shadow_cost = (F.shadow_bytes(shadow_fmt, d_model, d_ff)
+                   if shadow_fmt is not None else 0)
+    shadow_map: Dict[Key, str] = {}
 
     def up_cost(d: int) -> int:
         return sum(F.expert_vram_bytes(F.get_format(fmt[k]), d_model, d_ff,
                                        group) for k in home_keys[d])
 
+    def shadow_bytes_on(d: int) -> int:
+        return sum(shadow_cost for k in home_keys[d] if k in shadow_map)
+
     def arena_slabs(d: int, n_slots: int) -> int:
         return len(moe) * n_slots + len(pinned[d]) * pin_span
 
     def total(d: int, n_slots: int) -> int:
-        return base + up_cost(d) + arena_slabs(d, n_slots) * slab
+        return (base + up_cost(d) + shadow_bytes_on(d)
+                + arena_slabs(d, n_slots) * slab)
 
     for d in range(n_devices):
         if total(d, 1) > budget:
@@ -270,6 +281,26 @@ def plan_cluster(cfg: ModelConfig, freqs: np.ndarray, *,
             # replicated pin failing on one tight device must not stop
             # single-home pinning on devices that still have headroom
 
+    # 3b. little shadows for speculative execution — hottest first,
+    # skipping pinned experts (they never miss); a shadow lands on every
+    # home device or none (mirrors the single-device stage order, so
+    # ``n_devices=1`` stays plan_store-identical)
+    if shadow_fmt is not None:
+        sh_full: set = set()
+        for k in order:
+            if len(sh_full) == n_devices:
+                break
+            homes = device_of[k]
+            if any(k in pinned[d] for d in homes):
+                continue
+            if any(d in sh_full for d in homes):
+                continue
+            shadow_map[k] = shadow_fmt.name
+            failed = [d for d in homes if total(d, slots) > budget]
+            if failed:
+                del shadow_map[k]
+                sh_full.update(failed)
+
     # 4. per-expert format upgrades (quality/coverage), one rung per pass,
     # hottest first; an upgrade must fit on every home device
     for rung in range(1, len(ladder)):
@@ -298,6 +329,9 @@ def plan_cluster(cfg: ModelConfig, freqs: np.ndarray, *,
     breakdown = [{"non_expert": base, "resident_up": up_cost(d),
                   "residency_arena": num_slabs[d] * slab}
                  for d in range(n_devices)]
+    if shadow_fmt is not None:
+        for d in range(n_devices):
+            breakdown[d]["shadows"] = shadow_bytes_on(d)
     # global store plan: formats + shared host budget; ``pinned`` is the
     # de-duplicated union (replicated pins appear once) for telemetry
     seen: set = set()
@@ -307,14 +341,19 @@ def plan_cluster(cfg: ModelConfig, freqs: np.ndarray, *,
             if k not in seen:
                 seen.add(k)
                 pinned_union.append(k)
+    global_breakdown = {
+        "non_expert": base * n_devices,
+        "resident_up": sum(up_cost(d) for d in range(n_devices)),
+        "residency_arena": sum(num_slabs) * slab}
+    if shadow_fmt is not None:
+        global_breakdown["shadows"] = sum(shadow_bytes_on(d)
+                                          for d in range(n_devices))
     store_plan = StorePlan(
         vram_budget=budget * n_devices, host_budget=host_budget,
         formats=fmt, pinned=pinned_union, slots_per_layer=slots,
         slab_bytes=slab, num_slabs=sum(num_slabs),
-        breakdown={"non_expert": base * n_devices,
-                   "resident_up": sum(up_cost(d) for d in range(n_devices)),
-                   "residency_arena": sum(num_slabs) * slab},
-        progressive=progressive)
+        breakdown=global_breakdown,
+        progressive=progressive, shadows=shadow_map)
     plan = ClusterPlan(
         n_devices=n_devices, device_of=device_of, pinned_per_device=pinned,
         slots_per_layer=slots, slab_bytes=slab, num_slabs=num_slabs,

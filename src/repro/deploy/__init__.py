@@ -18,7 +18,7 @@ re-exports them lazily (PEP 562) to keep the import graph acyclic.
 """
 from repro.deploy.spec import (DeploymentSpec, HealthSpec, ModelSpec,
                                ReplanSpec, ResourceSpec, RuntimeSpec,
-                               ServingSpec, SpecError)
+                               ServingSpec, SpecError, SpeculationSpec)
 
 _LAZY = {
     "build": "builder", "Deployment": "builder",
@@ -30,6 +30,7 @@ _LAZY = {
 __all__ = [
     "DeploymentSpec", "HealthSpec", "ModelSpec", "ReplanSpec",
     "ResourceSpec", "RuntimeSpec", "ServingSpec", "SpecError",
+    "SpeculationSpec",
     *sorted(_LAZY),
 ]
 

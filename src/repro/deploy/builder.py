@@ -79,6 +79,9 @@ def plan_resources(spec: DeploymentSpec, cfg, layers: List[dict], *,
     clustered = r.devices > 1 or r.replicate > 0
     if not clustered and r.vram_gb <= 0:
         return None, freqs
+    # speculation prices always-resident shadows into the planner spend
+    sp = spec.speculation
+    shadows = sp.shadow_format if sp is not None and sp.enabled else None
     from repro.store import measure_frequencies
     if freqs is None:
         freqs = measure_frequencies(layers, cfg)
@@ -91,7 +94,7 @@ def plan_resources(spec: DeploymentSpec, cfg, layers: List[dict], *,
                     vram_gb_per_device=r.vram_gb, host_gb=r.host_gb,
                     replicate=r.replicate, max_slots=r.max_slots,
                     max_pinned_per_device=r.max_pinned, ladder=r.ladder,
-                    progressive=r.progressive)
+                    progressive=r.progressive, shadows=shadows)
             else:
                 plan = uniform_cluster_plan(cfg, r.devices, freqs=freqs,
                                             replicate=r.replicate)
@@ -100,7 +103,7 @@ def plan_resources(spec: DeploymentSpec, cfg, layers: List[dict], *,
             plan = plan_store(cfg, freqs, vram_gb=r.vram_gb,
                               host_gb=r.host_gb, max_slots=r.max_slots,
                               max_pinned=r.max_pinned, ladder=r.ladder,
-                              progressive=r.progressive)
+                              progressive=r.progressive, shadows=shadows)
     except Exception as e:
         from repro.store import PlanError
         if isinstance(e, PlanError):
@@ -207,6 +210,7 @@ class Deployment:
     _replanner: object = None  # repro.replan.Replanner once attached
     _replan_ledger: object = None  # fleet hook: (new_plan) -> None | raise
     _health: object = None  # repro.obs.health.HealthMonitor once attached
+    _speculator: object = None  # repro.spec_exec.SpeculativeExecutor
 
     @property
     def name(self) -> str:
@@ -259,17 +263,20 @@ class Deployment:
         from repro.cluster import ClusterPlan, plan_cluster
         from repro.store import plan_store
         r, cfg = self.spec.resources, self.cfg
+        sp = self.spec.speculation
+        shadows = (sp.shadow_format
+                   if sp is not None and sp.enabled else None)
         if isinstance(self.plan, ClusterPlan):
             return lambda freqs: plan_cluster(
                 cfg, freqs, n_devices=r.devices,
                 vram_gb_per_device=r.vram_gb, host_gb=r.host_gb,
                 replicate=r.replicate, max_slots=r.max_slots,
                 max_pinned_per_device=r.max_pinned, ladder=r.ladder,
-                progressive=r.progressive)
+                progressive=r.progressive, shadows=shadows)
         return lambda freqs: plan_store(
             cfg, freqs, vram_gb=r.vram_gb, host_gb=r.host_gb,
             max_slots=r.max_slots, max_pinned=r.max_pinned,
-            ladder=r.ladder, progressive=r.progressive)
+            ladder=r.ladder, progressive=r.progressive, shadows=shadows)
 
     def _attach_replan(self, rp) -> object:
         """Build (once) and attach the live re-planner to the serving
@@ -301,6 +308,43 @@ class Deployment:
         self.controller.replan = self._replanner
         return self._replanner
 
+    # ------------------------------------------------------- speculation --
+    def _attach_speculate(self, sp) -> object:
+        """Build (once) and attach the speculative big-little executor.
+        ``sp`` is a validated ``SpeculationSpec``; shadows must have been
+        priced into the plan at BUILD time (the bank decodes
+        ``plan.shadows``), so only divergence knobs can change here."""
+        base = self.spec.speculation
+        if base is None:
+            raise SpecError(
+                "speculation",
+                "shadows are priced at plan time: build the deployment "
+                "with a speculation section before serve(speculate=...)")
+        if sp.shadow_format != base.shadow_format:
+            raise SpecError(
+                "speculation.shadow_format",
+                f"built with {base.shadow_format!r}; the resident shadow "
+                f"bank cannot switch to {sp.shadow_format!r} at serve "
+                f"time")
+        if self._speculator is None:
+            from repro.cluster import ClusterPlan
+            from repro.core.pipeline import _unstack_layers
+            from repro.spec_exec import (SpeculativeExecutor,
+                                         build_shadow_bank)
+            plan = self.plan
+            if isinstance(plan, ClusterPlan):
+                plan = plan.store_plan
+            layers = _unstack_layers(self.params, self.cfg)
+            bank = build_shadow_bank(layers, plan)
+            self._speculator = SpeculativeExecutor(
+                bank, max_divergence=sp.max_divergence, beta=sp.beta,
+                min_samples=sp.min_samples)
+        else:
+            self._speculator.reconfigure(max_divergence=sp.max_divergence)
+        self._speculator.enabled = True
+        self._speculator.attach(self.controller)
+        return self._speculator
+
     # ------------------------------------------------------------ health --
     def _attach_health(self, hs) -> object:
         """Build (once) the live health monitor for this deployment.
@@ -317,7 +361,7 @@ class Deployment:
     def serve(self, requests: Optional[list] = None, *,
               scenario=None, n_requests: int = 4, rate: float = 2.0,
               max_new: int = 16, prompt_len: int = 8, seed: int = 0,
-              replan=None, health=None) -> list:
+              replan=None, health=None, speculate=None) -> list:
         """Run the SLO control plane over one of three request sources:
         explicit ``SLORequest``s, a ``repro.workload`` scenario (a
         :class:`~repro.workload.ScenarioSpec` or a path to its JSON),
@@ -338,7 +382,8 @@ class Deployment:
         # off for this call; a spec instance -> exactly those knobs.
         # Health resolves FIRST so a trigger='health' replanner finds
         # its monitor.
-        from repro.deploy.spec import HealthSpec, ReplanSpec
+        from repro.deploy.spec import (HealthSpec, ReplanSpec,
+                                       SpeculationSpec)
         hl = health
         if hl is None:
             hl = self.spec.health
@@ -360,6 +405,19 @@ class Deployment:
             self._attach_replan(rp)
         else:
             self.controller.replan = None
+        # ``speculate`` resolves the same way; the shadow bank itself is
+        # immutable after build (planner-priced), only on/off + knobs
+        sp = speculate
+        if sp is None:
+            sp = self.spec.speculation
+        elif sp is True:
+            sp = self.spec.speculation or SpeculationSpec()
+        elif sp is False:
+            sp = None
+        if sp is not None and sp.enabled:
+            self._attach_speculate(sp)
+        else:
+            self.controller.speculator = None
         if scenario is not None and requests is not None:
             raise SpecError("serving",
                             "pass either requests or scenario, not both")
@@ -440,6 +498,10 @@ class Deployment:
             rep["replan"] = self._replanner.report()
         if self._health is not None:
             rep["health"] = self._health.report()
+        if self._speculator is not None:
+            rep["speculation"] = {
+                **self._speculator.report(),
+                "divergence": self._speculator.divergence.snapshot()}
         rep["metrics"] = self.metrics_snapshot()
         return rep
 

@@ -320,13 +320,16 @@ def build_fleet(specs: Sequence[DeploymentSpec], *,
         fq = (freqs[i] if freqs is not None
               else measure_frequencies(layers, cfg))
         r = spec.resources
+        sp = spec.speculation
         try:
             plan = plan_cluster(
                 cfg, fq, n_devices=n_devices,
                 vram_gb_per_device=r.vram_gb, host_gb=r.host_gb,
                 replicate=r.replicate, max_slots=r.max_slots,
                 max_pinned_per_device=r.max_pinned, ladder=r.ladder,
-                progressive=r.progressive)
+                progressive=r.progressive,
+                shadows=(sp.shadow_format
+                         if sp is not None and sp.enabled else None))
         except Exception as e:
             from repro.store import PlanError
             if isinstance(e, PlanError):

@@ -165,6 +165,25 @@ class HealthSpec:
     incident_dir: str = ""  # write bundles here ("" = in-memory only)
 
 
+# ------------------------------------------------------------ speculation --
+@dataclasses.dataclass(frozen=True)
+class SpeculationSpec:
+    """Speculative big-little execution knobs (``repro.spec_exec``).
+
+    When set (and enabled), the store planner prices an always-resident
+    ``shadow_format`` little copy per affordable expert into the VRAM
+    spend, and the serving controller serves demand misses from those
+    shadows under a verify-or-rollback loop gated at ``max_divergence``
+    (relative-L2, measured at big-expert arrival).
+    """
+
+    enabled: bool = True
+    shadow_format: str = "draft-int8"  # repro.store.formats.SHADOW_FORMATS
+    max_divergence: float = 0.05  # accept bound; predictor gate threshold
+    beta: float = 0.9  # divergence-EMA smoothing
+    min_samples: int = 2  # per-expert evidence before its EMA speaks
+
+
 # ------------------------------------------------------------- deployment --
 _MODES = ("floe", "naive", "resident")
 _POLICIES = ("slo", "static")
@@ -187,6 +206,7 @@ class DeploymentSpec:
     serving: Optional[ServingSpec] = None
     replan: Optional[ReplanSpec] = None
     health: Optional[HealthSpec] = None
+    speculation: Optional[SpeculationSpec] = None
     name: str = ""
 
     def __post_init__(self):
@@ -357,6 +377,23 @@ class DeploymentSpec:
             if hs.max_incidents < 0:
                 raise SpecError("health.max_incidents",
                                 f"need >= 0, got {hs.max_incidents}")
+        sp = self.speculation
+        if sp is not None:
+            from repro.store.formats import SHADOW_FORMATS
+            if sp.shadow_format not in SHADOW_FORMATS:
+                raise SpecError(
+                    "speculation.shadow_format",
+                    f"unknown shadow format {sp.shadow_format!r}; choose "
+                    f"from {tuple(SHADOW_FORMATS)}")
+            if sp.max_divergence <= 0:
+                raise SpecError("speculation.max_divergence",
+                                f"need > 0, got {sp.max_divergence}")
+            if not 0.0 < sp.beta < 1.0:
+                raise SpecError("speculation.beta",
+                                f"need 0 < beta < 1, got {sp.beta}")
+            if sp.min_samples < 1:
+                raise SpecError("speculation.min_samples",
+                                f"need >= 1, got {sp.min_samples}")
 
         # ---- cross-field ----------------------------------------------
         offloaded = rt.mode == "floe" and rt.use_runtime
@@ -395,6 +432,16 @@ class DeploymentSpec:
             raise SpecError("health.enabled",
                             "the health layer watches serving-plane events "
                             "(serving must be set)")
+        if sp is not None and sp.enabled:
+            if r.vram_gb <= 0:
+                raise SpecError("speculation.enabled",
+                                "speculative execution needs a tiered store "
+                                "plan to price shadows (resources.vram_gb "
+                                "> 0)")
+            if sv is None:
+                raise SpecError("speculation.enabled",
+                                "speculative execution runs inside the "
+                                "serving controller (serving must be set)")
 
         # ---- config-anchored (expert counts, feasibility floor) --------
         cfg = self.resolve_config()
@@ -446,6 +493,8 @@ class DeploymentSpec:
             d["replan"] = dataclasses.asdict(self.replan)
         if self.health is not None:
             d["health"] = dataclasses.asdict(self.health)
+        if self.speculation is not None:
+            d["speculation"] = dataclasses.asdict(self.speculation)
         return d
 
     def to_json(self, indent: int = 1) -> str:
@@ -454,7 +503,7 @@ class DeploymentSpec:
     @classmethod
     def from_dict(cls, d: dict) -> "DeploymentSpec":
         known_sections = ("name", "model", "resources", "runtime",
-                          "serving", "replan", "health")
+                          "serving", "replan", "health", "speculation")
         bad_sections = sorted(set(d) - set(known_sections))
         if bad_sections:  # a typo'd section must not load as all-defaults
             raise SpecError(bad_sections[0],
@@ -484,6 +533,8 @@ class DeploymentSpec:
                     if d.get("replan") is not None else None),
             health=(sub(HealthSpec, "health")
                     if d.get("health") is not None else None),
+            speculation=(sub(SpeculationSpec, "speculation")
+                         if d.get("speculation") is not None else None),
             name=d.get("name", ""),
         )
 

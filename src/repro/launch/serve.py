@@ -36,11 +36,12 @@ def spec_from_args(args) -> "DeploymentSpec":
     """Flags -> typed spec (the validation lives in the spec, not here)."""
     from repro.deploy import (DeploymentSpec, HealthSpec, ModelSpec,
                               ReplanSpec, ResourceSpec, RuntimeSpec,
-                              ServingSpec)
+                              ServingSpec, SpeculationSpec)
     offloaded = args.mode in ("floe", "naive")
     serving = None
     replan = None
     health = None
+    speculation = None
     if args.mode == "floe-serve":
         serving = ServingSpec(
             slots=args.slots, max_len=256, policy=args.policy,
@@ -50,6 +51,8 @@ def spec_from_args(args) -> "DeploymentSpec":
             replan = ReplanSpec()
         if args.health:
             health = HealthSpec(incident_dir=args.incident_dir)
+        if args.speculate:
+            speculation = SpeculationSpec()
     return DeploymentSpec(
         model=ModelSpec(arch=args.arch, reduced=args.reduced,
                         layers=args.layers, d_model=args.d_model,
@@ -64,7 +67,8 @@ def spec_from_args(args) -> "DeploymentSpec":
             use_runtime=(args.vram_gb > 0 or args.devices > 1 or
                          args.replicate > 0 or args.mode == "floe-serve"),
             cache_slots=args.cache_slots),
-        serving=serving, replan=replan, health=health)
+        serving=serving, replan=replan, health=health,
+        speculation=speculation)
 
 
 def print_plan(dep) -> None:
@@ -165,6 +169,12 @@ def main():
     ap.add_argument("--incident-dir", dest="incident_dir", default="",
                     help="write incident bundles (JSON) here when an "
                          "alert fires (implies nothing without --health)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="floe-serve: speculative big-little execution — "
+                         "serve demand misses from always-resident "
+                         "low-bit shadow experts under verify-or-"
+                         "rollback (needs --vram-gb; shadows are priced "
+                         "by the planner)")
     ap.add_argument("--slo_ms", type=float, default=3000.0,
                     help="floe-serve: per-request latency SLO")
     ap.add_argument("--policy", choices=["slo", "static"], default="slo")
@@ -264,11 +274,14 @@ def run_offloaded(args, spec):
             hl = spec.health or HealthSpec()
             if getattr(args, "incident_dir", ""):
                 hl = _dc.replace(hl, incident_dir=args.incident_dir)
+        sp = True if getattr(args, "speculate", False) else None
         if getattr(args, "scenario", ""):
-            dep.serve(scenario=args.scenario, replan=rp, health=hl)
+            dep.serve(scenario=args.scenario, replan=rp, health=hl,
+                      speculate=sp)
         else:
             dep.serve(n_requests=args.requests, rate=args.rate,
-                      max_new=args.max_new, replan=rp, health=hl)
+                      max_new=args.max_new, replan=rp, health=hl,
+                      speculate=sp)
         ctl = dep.controller
         rep = ctl.report()
         for r in sorted(ctl.completed, key=lambda r: r.uid):
@@ -296,6 +309,13 @@ def run_offloaded(args, spec):
                       f"completed={t['completed']} "
                       f"rejected={t['rejected']} "
                       f"ttft={t['ttft_ms_mean']:.1f}ms")
+        if dep._speculator is not None:
+            sr = dep._speculator.report()
+            print(f"speculate: served={sr['spec_served']} "
+                  f"accepts={sr['spec_accepts']} "
+                  f"rollbacks={sr['spec_rollbacks']} "
+                  f"declined={sr['spec_declined']} "
+                  f"accept_rate={sr['spec_accept_rate']:.2f}")
         if dep._replanner is not None:
             rr = dep._replanner.report()
             print(f"replan: triggers={rr['drift_triggers']} "

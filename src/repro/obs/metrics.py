@@ -281,6 +281,18 @@ class MetricsCollector:
                         m.histogram(f"request.{field}").observe(a[field])
         elif ev.name.startswith("swap."):
             m.counter(f"serving.{ev.name.partition('.')[2]}s").inc()
+        elif ev.name == "spec.divergence":
+            a = ev.args or {}
+            m.histogram("spec.divergence").observe(
+                a.get("divergence", 0.0))
+        elif ev.name in ("spec.serve", "spec.accept", "spec.rollback"):
+            a = ev.args or {}
+            what = ev.name.partition(".")[2]
+            m.counter(f"spec.{what}").inc()
+            # per-expert acceptance bookkeeping for health surfacing
+            if ev.name != "spec.serve":
+                key = f"L{a.get('layer', '?')}.E{a.get('expert', '?')}"
+                m.counter(f"spec.{what}.{key}").inc()
         elif ev.name == "health.alert":
             a = ev.args or {}
             m.counter(f"health.alerts.{a.get('severity', 'page')}").inc()

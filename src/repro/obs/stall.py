@@ -25,6 +25,10 @@ wait is computed — by splitting each stall into segments:
     A healthy, undemoted prefetch simply had not finished in time.
 ``predictor_miss``
     Cold demand with no mitigating story — the predictor never asked.
+``speculative_fallback``
+    Speculative execution fell back to waiting on the big expert: the
+    divergence predictor declined to speculate, a rollback replay
+    re-waited, or a settle forced the wait at request finish.
 
 Conservation is the invariant the whole design hangs on: the attributor
 accumulates ``total_s += stall`` in lockstep with the scheduler's
@@ -48,6 +52,7 @@ CAUSES = (
     "disk_tier_miss",
     "draft_residual",
     "prefetch_late",
+    "speculative_fallback",
 )
 
 _REL_TOL = 1e-9  # float associativity headroom for per-cause sums

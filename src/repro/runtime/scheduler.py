@@ -64,6 +64,10 @@ class SchedulerStats:
     draft_served: int = 0  # consumptions that computed on a draft payload
     refines_applied: int = 0  # background full-precision upgrades landed
     refines_dropped: int = 0  # refine stale (slice changed under it)
+    spec_served: int = 0  # shadow results served in place of a wait
+    spec_accepts: int = 0  # verifications that kept the shadow output
+    spec_rollbacks: int = 0  # verifications that forced a recompute
+    spec_declined: int = 0  # divergence gate said wait instead
     stall_s: float = 0.0
 
     def reset(self) -> None:
@@ -412,6 +416,42 @@ class ExpertScheduler:
                          args={"key": repr(k)})
         else:
             self.stats.draft_served += 1
+
+    def stall_estimate(self, layer: int, expert: int) -> float:
+        """The stall ``wait_for`` WOULD charge right now, with no side
+        effects — the same ready-time fold (inflight record, entry
+        ``ready_t``, pending top-ups) without moving the clock, popping
+        context, or touching stats.  The speculative executor consults
+        this to decide shadow-compute vs wait."""
+        k = self.key(layer, expert)
+        ent = self._res(layer).peek(k)
+        rec = self.engine.inflight.get(k)
+        if rec is not None:
+            ready = rec.complete_t
+            if ent is not None:
+                ready = max(ready, ent.ready_t)
+        else:
+            ready = ent.ready_t if ent is not None else self.clock
+        topup = self._topup_ready.get(k)
+        if topup is not None:
+            ready = max(ready, topup)
+        return max(0.0, ready - self.clock)
+
+    def hint_cause(self, layer: int, expert: int, cause: str) -> None:
+        """Override the root-cause context for the next ``wait_for`` on
+        this key (the speculative executor marks fallback waits so their
+        stall lands under ``speculative_fallback``)."""
+        self._attr_ctx[self.key(layer, expert)] = cause
+
+    def bump_stat(self, name: str, layer: int = 0, expert: int = 0) -> None:
+        """Increment a stats counter through the scheduler interface.
+
+        On a single device this is ``stats.<name> += 1``; the cluster
+        dispatcher overrides it to land the count on the device that
+        owns (layer, expert) — its merged ``stats`` property returns a
+        FRESH summed object, so mutating that directly would silently
+        drop the count."""
+        setattr(self.stats, name, getattr(self.stats, name) + 1)
 
     def staged_payload(self, layer: int, expert: int) -> Optional[tuple]:
         """The CURRENT staged payload (post-refine / post-top-up); callers

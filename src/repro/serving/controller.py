@@ -344,6 +344,10 @@ class ServingController:
         # live re-planner hook (repro.replan.Replanner); attached by
         # Deployment.serve(replan=...), polled once per step
         self.replan = None
+        # speculative big-little executor (repro.spec_exec); attached by
+        # Deployment.serve(speculate=...) / SpeculativeExecutor.attach().
+        # None (the default) leaves every decode path bitwise untouched.
+        self.speculator = None
 
     # ------------------------------------------------------------ intake ---
     def submit(self, req: SLORequest) -> None:
@@ -572,6 +576,13 @@ class ServingController:
         n = len(reqs)
         metrics = StepMetrics()
         t0 = sched.clock
+        spec = self.speculator
+        if spec is not None and spec.enabled:
+            # verify every speculation whose big expert has arrived;
+            # rollbacks rewind their requests BEFORE this step reads
+            # r.cur / r.states, so the re-decode starts here
+            spec.settle(metrics)
+            spec.begin_step(reqs)
         cur = np.array([r.cur for r in reqs], np.int32)
         h = tf._embed_inputs(self.params,
                              {"tokens": jnp.asarray(cur[:, None])}, cfg)
@@ -629,9 +640,10 @@ class ServingController:
         sched.advance(t_head)
         logits = np.asarray(tf._head(self.params, h, cfg))[:, 0]
 
-        now = sched.clock
         live = 0
         for i, r in enumerate(reqs):
+            if spec is not None and r.uid in spec.rolled_uids:
+                continue  # rolled back mid-step: state already rewound
             r.prev_entry = h_entry[i]
             tok = self._sample_one(r, logits[i])
             r.cur = tok
@@ -644,11 +656,19 @@ class ServingController:
             r.compute_share_s += metrics.compute_s
             r.output.append(tok)
             if tok == self.eos or len(r.output) >= r.max_new_tokens:
+                if spec is not None and spec.enabled:
+                    # a request may not finish with unverified
+                    # speculative tokens: force-verify (waiting under
+                    # speculative_fallback if the big is still late)
+                    spec.flush_uid(r.uid, metrics)
+                    if r.uid in spec.rolled_uids:
+                        continue  # rewound: re-decodes in a later step
                 self._finish(r)
 
         metrics.coverage = float(np.mean(covs)) if covs else 1.0
         self.metrics.append(metrics)
         pipe.metrics.append(metrics)
+        now = sched.clock
         dt = now - t0
         if obs.enabled():
             obs.emit("serving.step", t0, cat="serving", dur=dt,
@@ -707,8 +727,20 @@ class ServingController:
             else:
                 metrics.expert_hits += 1
             issued[e] = (rows, v, row_mask, served_mask, payload, was_miss)
+        spec = self.speculator
         for e in experts:
             rows, v, row_mask, served_mask, payload, was_miss = issued[e]
+            if spec is not None and spec.enabled:
+                # demand miss with a resident shadow: compute from the
+                # little expert NOW and skip the wait — the big transfer
+                # keeps streaming and settles verify-or-rollback later
+                res = spec.try_speculate(
+                    hn2, li, int(e), rows, row_mask, served_mask, v,
+                    (gates * (eids == e)).sum(axis=1), self.running,
+                    metrics, covs)
+                if res is not None:
+                    y = y + res.contribution
+                    continue
             metrics.stall_s += sched.wait_for(li, int(e), was_miss=was_miss)
             # pick up an applied progressive refine (same slice, full
             # precision); an evicted entry keeps the original payload
@@ -1064,6 +1096,8 @@ class ServingController:
             "refines_applied": self.sched.stats.refines_applied,
             "train_rounds": self.train_rounds,
             "calibration_scale": self.calibrator.scale,
+            **(self.speculator.report()
+               if self.speculator is not None else {}),
         }
 
     def metrics_snapshot(self) -> dict:
@@ -1082,4 +1116,11 @@ class ServingController:
         reg.counter("serving.rejected_total").inc(len(self.rejected))
         reg.gauge("serving.slo_attainment").set(self.slo_attainment())
         reg.gauge("serving.prediction_recall").set(self.prediction_recall())
+        if self.speculator is not None:
+            for k, val in self.speculator.report().items():
+                if k == "spec_accept_rate":
+                    reg.gauge("spec.accept_rate").set(val)
+                else:
+                    reg.counter(f"spec.{k[5:] if k.startswith('spec_') else k}"
+                                ).inc(val)
         return reg.snapshot()

@@ -1,0 +1,25 @@
+"""repro.spec_exec — speculative big-little expert execution.
+
+A demand miss no longer has to stall: every shadowed expert keeps an
+always-resident low-bit "little" copy (``StorePlan.shadows``, priced by
+the planner), the token computes from it while the big transfer keeps
+streaming, and the big expert's arrival triggers verify-or-rollback
+under a learned per-expert divergence gate.
+
+    plan_store(shadows=...) ──▶ ShadowBank (resident little experts)
+                                    │ try_speculate (skip wait_for)
+    ServingController ──────▶ SpeculativeExecutor ──▶ settle/verify
+                                    │ accept            │ rollback
+                              token stands        restore snapshot,
+                                                  re-decode bitwise
+
+See ROADMAP.md §spec_exec for the architecture notes.
+"""
+from repro.spec_exec.executor import (DivergencePredictor, ShadowBank,
+                                      SpeculativeExecutor,
+                                      SpeculativeResult, build_shadow_bank)
+
+__all__ = [
+    "ShadowBank", "build_shadow_bank", "DivergencePredictor",
+    "SpeculativeExecutor", "SpeculativeResult",
+]

@@ -1,0 +1,509 @@
+"""Speculative big-little expert execution with verify-or-rollback.
+
+FloE removes stall by *predicting* transfers; this module removes the
+residual demand-miss stall by *speculating through it* (MoBiLE's
+big-little experts, MELINOE's proxy experts): every expert keeps an
+always-resident low-bit "little" shadow (priced by the store planner —
+``StorePlan.shadows``), and when a routed expert's slice is still in
+flight the scheduler's wait is skipped entirely — the token computes
+from the shadow, the big transfer keeps streaming in the background,
+and its arrival triggers **verify-or-rollback**:
+
+* **verify** — recompute the speculated rows' contributions from the
+  arrived full-precision slice and measure the relative-L2 divergence
+  against the shadow outputs.  A learned per-expert
+  :class:`DivergencePredictor` (EMA, validation-gated like the serving
+  controller's probe adoption) is trained online from these
+  measurements and gates *future* speculation.
+* **accept** — divergence within the configured bound: the speculative
+  token stands (bounded-quality fast path), ``spec.accept`` emitted.
+* **rollback** — divergence too large: the affected *requests* (KV
+  state is per-request, batch dim 1, functionally updated) restore to
+  their pre-speculation snapshot and re-decode; recomputed tokens are
+  bitwise equal to a never-speculated decode (union-demand coverage +
+  per-(uid, position) sampling keys make outputs batch-independent).
+
+Accounting contract: a skipped wait charges **no** stall (that is the
+win); every path that does end up waiting — the divergence gate
+declining, a settle forced at request finish, an evicted slice
+re-demanded at verify time — routes through ``ExpertScheduler.wait_for``
+with the ``speculative_fallback`` cause hint, so stall attribution's
+bitwise conservation (Σ causes == stats.stall_s) is preserved with
+speculation on, off, or mid-rollback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import floe_layer
+from repro.store import formats as F
+
+
+# -------------------------------------------------------------- shadows ----
+def _qdq_int8(rec: np.ndarray) -> np.ndarray:
+    """Per-record symmetric INT8 quantize-dequantize (the draft codec)."""
+    rec32 = rec.astype(np.float32)
+    scale = np.maximum(np.abs(rec32).max(axis=1, keepdims=True),
+                       1e-8) / 127.0
+    codes = np.clip(np.round(rec32 / scale), -127, 127)
+    return (codes * scale).astype(np.float16)
+
+
+def _qdq_int2(rec: np.ndarray) -> np.ndarray:
+    """Per-record symmetric 2-bit quantize-dequantize: codes in
+    {-1, 0, 1} against the record's absmax (the leanest shadow)."""
+    rec32 = rec.astype(np.float32)
+    scale = np.maximum(np.abs(rec32).max(axis=1, keepdims=True), 1e-8)
+    codes = np.clip(np.round(rec32 / scale * 1.5), -1, 1)
+    return (codes * scale / 1.5).astype(np.float16)
+
+
+_CODECS = {8: _qdq_int8, 2: _qdq_int2}
+
+
+class ShadowBank:
+    """Always-resident little copies of the planner's shadowed experts.
+
+    Built once at deployment-build time directly from the model params
+    (shadows ship with the non-expert weights at load): no TransferEngine
+    traffic, no host/disk-tier mutation, no obs events — so a bank that
+    exists but is never *used* leaves the event timeline bitwise
+    identical to a shadow-free build (the speculation-off noop pin).
+    """
+
+    def __init__(self):
+        self._shadows: Dict[Tuple[int, int],
+                            Tuple[np.ndarray, jax.Array, jax.Array]] = {}
+
+    def add(self, layer: int, expert: int, chan_idx: np.ndarray,
+            gate_cols: jax.Array, down_rows: jax.Array) -> None:
+        self._shadows[(layer, expert)] = (
+            np.asarray(chan_idx, np.int32), gate_cols, down_rows)
+
+    def has(self, layer: int, expert: int) -> bool:
+        return (layer, expert) in self._shadows
+
+    def get(self, layer: int, expert: int
+            ) -> Optional[Tuple[np.ndarray, jax.Array, jax.Array]]:
+        return self._shadows.get((layer, expert))
+
+    def __len__(self) -> int:
+        return len(self._shadows)
+
+
+def build_shadow_bank(layers: Sequence[dict], plan) -> ShadowBank:
+    """Decode every ``plan.shadows`` entry into a resident
+    :class:`ShadowBank` (compact record layout, quantize-dequantized at
+    the shadow format's bit width, top channels by up-projection norm)."""
+    bank = ShadowBank()
+    for (li, e), name in sorted(plan.shadows.items()):
+        fmt = F.get_shadow_format(name)
+        moe = layers[li]["moe"]
+        we_gate = np.asarray(moe["we_gate"][e], np.float16)
+        we_down = np.asarray(moe["we_down"][e], np.float16)
+        f = we_gate.shape[1]
+        rank = F.rank_channels_by_upnorm(moe["we_up"][e])
+        kept = np.sort(rank[:F.kept_channels(f, fmt.keep_ratio)])
+        kept = kept.astype(np.int32)
+        rec = np.concatenate([we_gate.T[kept], we_down[kept]], axis=-1)
+        rec = _CODECS[fmt.bits](np.ascontiguousarray(rec))
+        d = we_gate.shape[0]
+        dev = jnp.asarray(rec)
+        bank.add(li, e, kept, dev[:, :d], dev[:, d:])
+    return bank
+
+
+# ------------------------------------------------------------- predictor ---
+class DivergencePredictor:
+    """Online per-expert divergence estimate gating future speculation.
+
+    Each verify feeds ``update`` with the measured shadow-vs-big
+    relative-L2 divergence.  The estimate is validation-gated the same
+    way the controller adopts trained probes: a per-expert EMA only
+    speaks for itself after ``min_samples`` observations; below that the
+    *global* EMA substitutes, and with no evidence at all the prior is
+    optimistic (0.0 — speculate, measure, learn)."""
+
+    def __init__(self, beta: float = 0.9, min_samples: int = 2):
+        assert 0.0 < beta < 1.0, beta
+        assert min_samples >= 1, min_samples
+        self.beta = beta
+        self.min_samples = min_samples
+        self._ema: Dict[Tuple[int, int], float] = {}
+        self._n: Dict[Tuple[int, int], int] = {}
+        self._global = 0.0
+        self._gn = 0
+
+    def update(self, layer: int, expert: int, divergence: float) -> None:
+        k = (layer, expert)
+        d = float(divergence)
+        prev = self._ema.get(k)
+        self._ema[k] = d if prev is None else \
+            self.beta * prev + (1.0 - self.beta) * d
+        self._n[k] = self._n.get(k, 0) + 1
+        self._global = d if self._gn == 0 else \
+            self.beta * self._global + (1.0 - self.beta) * d
+        self._gn += 1
+
+    def predicted(self, layer: int, expert: int) -> float:
+        k = (layer, expert)
+        if self._n.get(k, 0) >= self.min_samples:
+            return self._ema[k]
+        if self._gn >= self.min_samples:
+            return self._global
+        return 0.0  # optimistic prior: speculate until measured
+
+    def gate(self, layer: int, expert: int, max_divergence: float) -> bool:
+        return self.predicted(layer, expert) <= max_divergence
+
+    def snapshot(self) -> dict:
+        return {"samples": self._gn, "global_ema": self._global,
+                "experts": {f"{li}/{e}": self._ema[(li, e)]
+                            for li, e in sorted(self._ema)}}
+
+
+# --------------------------------------------------------------- results ---
+@dataclasses.dataclass
+class SpeculativeResult:
+    """What the executor hands back in place of a ``wait_for`` stall."""
+
+    layer: int
+    expert: int
+    contribution: jax.Array  # (B, d_model) f32, weighted, batch-aligned
+    n_channels: int  # shadow channels actually applied
+    stall_avoided_s: float  # the wait the shadow sidestepped
+
+
+@dataclasses.dataclass
+class _PendingRow:
+    uid: int
+    batch_row: int
+    hb: np.ndarray  # (d,) the row's MoE input
+    own: np.ndarray  # (n_own,) the row's servable channel set
+    v_own: np.ndarray  # (n_own,) up activations on ``own``
+    weight: float
+    spec_out: np.ndarray  # (d,) f32 weighted shadow contribution
+
+
+@dataclasses.dataclass
+class _Pending:
+    layer: int
+    expert: int
+    step: int
+    rows: List[_PendingRow]
+
+
+@dataclasses.dataclass
+class _Snapshot:
+    step: int
+    cur: Optional[int]
+    out_len: int
+    states: list
+    prev_entry: Optional[np.ndarray]
+    stall_share_s: float
+    compute_share_s: float
+
+
+# -------------------------------------------------------------- executor ---
+class SpeculativeExecutor:
+    """The big-little control loop, attached to a ServingController.
+
+    Lifecycle per decode step (driven by the controller):
+
+    1. ``settle``      — verify every pending whose big expert arrived.
+    2. ``begin_step``  — snapshot per-request restore points.
+    3. ``try_speculate`` (from ``_moe_apply_union`` phase B) — serve a
+       demand miss from the shadow instead of ``wait_for``.
+    4. ``flush_uid``   — before a request finishes: force-verify its
+       pendings (waiting under ``speculative_fallback`` if needed).
+    """
+
+    def __init__(self, bank: ShadowBank, *, max_divergence: float = 0.05,
+                 beta: float = 0.9, min_samples: int = 2):
+        assert max_divergence >= 0.0, max_divergence
+        self.bank = bank
+        self.max_divergence = float(max_divergence)
+        self.divergence = DivergencePredictor(beta=beta,
+                                              min_samples=min_samples)
+        self.enabled = True
+        self.ctrl = None  # ServingController, set by attach()
+        self.pending: List[_Pending] = []
+        self.rolled_uids: set = set()
+        self._snaps: Dict[int, _Snapshot] = {}
+        self._req_by_uid: Dict[int, object] = {}
+        self._step = 0
+        # local mirrors of the SchedulerStats spec_* counters so a
+        # detached executor (unit tests) still reports
+        self.served = 0
+        self.accepts = 0
+        self.rollbacks = 0
+        self.declined = 0
+
+    # ------------------------------------------------------------ wiring ---
+    def attach(self, ctrl) -> None:
+        self.ctrl = ctrl
+        ctrl.speculator = self
+
+    def reconfigure(self, *, max_divergence: Optional[float] = None) -> None:
+        if max_divergence is not None:
+            self.max_divergence = float(max_divergence)
+
+    @property
+    def sched(self):
+        return self.ctrl.sched
+
+    def accept_rate(self) -> float:
+        settled = self.accepts + self.rollbacks
+        return self.accepts / settled if settled else 1.0
+
+    def report(self) -> dict:
+        return {"spec_served": self.served, "spec_accepts": self.accepts,
+                "spec_rollbacks": self.rollbacks,
+                "spec_declined": self.declined,
+                "spec_accept_rate": self.accept_rate(),
+                "spec_pending": len(self.pending),
+                "divergence_samples": self.divergence._gn}
+
+    # ----------------------------------------------------------- stepping --
+    def begin_step(self, reqs) -> None:
+        """Snapshot restore points for this step's batch.  A request with
+        live pendings keeps its EARLIEST snapshot (rollback must land
+        before the first unverified token)."""
+        self.rolled_uids.clear()
+        live = {row.uid for p in self.pending for row in p.rows}
+        for r in reqs:
+            self._req_by_uid[r.uid] = r
+            if r.uid not in live:
+                self._snaps[r.uid] = _Snapshot(
+                    step=self._step, cur=r.cur, out_len=len(r.output),
+                    states=list(r.states) if r.states is not None else None,
+                    prev_entry=r.prev_entry,
+                    stall_share_s=r.stall_share_s,
+                    compute_share_s=r.compute_share_s)
+        self._step += 1
+
+    def _device_id(self, li: int, e: int) -> int:
+        """Emit-site device id: the single device, or — under the
+        cluster dispatcher — the sticky home of (layer, expert)."""
+        s = self.sched
+        eng = getattr(s, "engine", None)
+        if eng is not None:
+            return eng.device_id
+        return s.devs[s._sticky(li, e)].engine.device_id
+
+    # --------------------------------------------------------- speculation -
+    def try_speculate(self, hn2: jax.Array, li: int, e: int,
+                      rows: np.ndarray, row_mask: np.ndarray,
+                      served_mask: np.ndarray, v, weights: np.ndarray,
+                      reqs, metrics, covs
+                      ) -> Optional[SpeculativeResult]:
+        """Serve a demand miss from the shadow, or return None to take
+        the normal ``wait_for`` path.
+
+        Declines (no shadow / no stall to hide / divergence gate) return
+        None; a gate decline additionally hints ``speculative_fallback``
+        so the wait the caller then pays is attributed to speculation."""
+        if not self.enabled or not self.bank.has(li, e):
+            return None
+        stall_est = self.sched.stall_estimate(li, e)
+        if stall_est <= 0.0:
+            return None  # staged already: the normal path is free
+        if not self.divergence.gate(li, e, self.max_divergence):
+            self.declined += 1
+            self.sched.bump_stat("spec_declined", li, e)
+            self.sched.hint_cause(li, e, "speculative_fallback")
+            return None
+
+        sh_idx, sh_gate, sh_down = self.bank.get(li, e)
+        d = int(sh_gate.shape[1])
+        contrib = jnp.zeros((hn2.shape[0], d), jnp.float32)
+        v_np = np.asarray(v)
+        hn2_np = np.asarray(hn2)
+        pend_rows: List[_PendingRow] = []
+        n_act = 0
+        for j, b in enumerate(rows.tolist()):
+            own = np.nonzero(served_mask[j])[0]
+            use = np.intersect1d(own, sh_idx)
+            sel = np.searchsorted(sh_idx, use)
+            covs.append(float(use.size) /
+                        max(int(np.count_nonzero(row_mask[j])), 1)
+                        if row_mask[j].any() else 1.0)
+            ye = floe_layer.sparse_expert_apply(
+                hn2[b:b + 1], sh_gate[sel], sh_down[sel],
+                v[j:j + 1, use])
+            wgt = float(weights[b])
+            out = np.asarray(ye[0], np.float32) * wgt
+            contrib = contrib.at[b].add(jnp.asarray(out))
+            n_act += int(use.size)
+            req = reqs[b] if b < len(reqs) else None
+            if req is not None and not req.done:
+                pend_rows.append(_PendingRow(
+                    uid=req.uid, batch_row=b,
+                    hb=hn2_np[b].copy(), own=own,
+                    v_own=v_np[j, own].copy(),
+                    weight=wgt, spec_out=out))
+        t_sh = self.ctrl.pipe.device.matmul_time(4 * d * n_act,
+                                                 4 * d * n_act)
+        metrics.compute_s += t_sh
+        self.sched.advance(t_sh)
+        self.served += 1
+        self.sched.bump_stat("spec_served", li, e)
+        if pend_rows:
+            self.pending.append(_Pending(layer=li, expert=e,
+                                         step=self._step - 1,
+                                         rows=pend_rows))
+        if obs.enabled():
+            obs.emit("spec.serve", self.sched.clock, cat="spec",
+                     device=self._device_id(li, e),
+                     args={"layer": li, "expert": e,
+                           "stall_avoided_s": stall_est,
+                           "rows": len(pend_rows)})
+        return SpeculativeResult(layer=li, expert=e, contribution=contrib,
+                                 n_channels=n_act,
+                                 stall_avoided_s=stall_est)
+
+    # ------------------------------------------------------------- settle --
+    def settle(self, metrics, *, flush: bool = False,
+               only_uid: Optional[int] = None) -> set:
+        """Verify pendings: arrived ones always; the rest only when
+        ``flush`` forces a wait (attributed ``speculative_fallback``).
+        Returns the set of uids rolled back."""
+        rolled: set = set()
+        progress = True
+        while progress:
+            progress = False
+            for p in list(self.pending):
+                if p not in self.pending:
+                    continue  # emptied by a rollback row-purge
+                if only_uid is not None and \
+                        not any(r.uid == only_uid for r in p.rows):
+                    continue
+                arrived = self.sched.stall_estimate(p.layer,
+                                                    p.expert) <= 0.0
+                if not arrived and not flush:
+                    continue
+                self._verify(p, metrics, rolled, wait=not arrived)
+                if p in self.pending:
+                    self.pending.remove(p)
+                progress = True
+                break  # restart: _verify may purge other pendings
+        self.rolled_uids |= rolled
+        return rolled
+
+    def flush_uid(self, uid: int, metrics) -> set:
+        return self.settle(metrics, flush=True, only_uid=uid)
+
+    def _staged_covering(self, li: int, e: int, need: np.ndarray):
+        payload = self.sched.staged_payload(li, e)
+        if payload is None:
+            return None
+        idx = np.asarray(payload[0])
+        if need.size and not np.all(np.isin(need, idx)):
+            return None
+        return payload
+
+    def _verify(self, p: _Pending, metrics, rolled: set,
+                *, wait: bool) -> None:
+        sched = self.sched
+        li, e = p.layer, p.expert
+        need = np.unique(np.concatenate([r.own for r in p.rows])
+                         if p.rows else np.empty(0, np.int64))
+        payload = self._staged_covering(li, e, need)
+        if wait or payload is None:
+            # the big slice is late or got evicted: this wait is the
+            # price of speculation — attribute it as such
+            if payload is None:
+                payload, was_miss = sched.demand_union(li, e, need)
+            else:
+                was_miss = False
+            # hint AFTER the demand so the demand path's own cause
+            # bookkeeping cannot override the speculation attribution
+            sched.hint_cause(li, e, "speculative_fallback")
+            stall = sched.wait_for(li, e, was_miss=was_miss)
+            metrics.stall_s += stall
+            cur = self._staged_covering(li, e, need)
+            if cur is not None:
+                payload = cur
+        idx, gate_cols, down_rows = payload
+        idx = np.asarray(idx)
+        # recompute the speculated rows against the arrived big slice
+        num = 0.0
+        den = 0.0
+        n_act = 0
+        for r in p.rows:
+            sel = np.searchsorted(idx, r.own)
+            assert sel.size == 0 or (int(sel[-1]) < idx.size and
+                                     np.array_equal(idx[sel], r.own)), \
+                "speculative verify: big slice misses needed channels"
+            ye = floe_layer.sparse_expert_apply(
+                jnp.asarray(r.hb[None]), gate_cols[sel], down_rows[sel],
+                jnp.asarray(r.v_own[None]))
+            true_out = np.asarray(ye[0], np.float32) * r.weight
+            diff = r.spec_out - true_out
+            num += float(np.dot(diff, diff))
+            den += float(np.dot(true_out, true_out))
+            n_act += int(r.own.size)
+        d = gate_cols.shape[1] if gate_cols.ndim == 2 else 1
+        t_ver = self.ctrl.pipe.device.matmul_time(4 * d * n_act,
+                                                  4 * d * n_act)
+        metrics.compute_s += t_ver
+        sched.advance(t_ver)
+        div = float(np.sqrt(num / max(den, 1e-24)))
+        self.divergence.update(li, e, div)
+        if obs.enabled():
+            obs.emit("spec.divergence", sched.clock, cat="spec",
+                     device=self._device_id(li, e),
+                     args={"layer": li, "expert": e, "divergence": div})
+        if div <= self.max_divergence:
+            self.accepts += 1
+            sched.bump_stat("spec_accepts", li, e)
+            if obs.enabled():
+                obs.emit("spec.accept", sched.clock, cat="spec",
+                         device=self._device_id(li, e),
+                         args={"layer": li, "expert": e,
+                               "divergence": div})
+            return
+        # ---- rollback -----------------------------------------------------
+        self.rollbacks += 1
+        sched.bump_stat("spec_rollbacks", li, e)
+        uids = sorted({r.uid for r in p.rows})
+        dropped = 0
+        for uid in uids:
+            dropped += self._restore(uid)
+            rolled.add(uid)
+        # every other pending row of a rolled-back request is void (its
+        # inputs descend from the rolled-back state)
+        for q in list(self.pending):
+            if q is p:
+                continue
+            q.rows = [r for r in q.rows if r.uid not in rolled]
+            if not q.rows:
+                self.pending.remove(q)
+        if obs.enabled():
+            obs.emit("spec.rollback", sched.clock, cat="spec",
+                     device=self._device_id(li, e),
+                     args={"layer": li, "expert": e, "divergence": div,
+                           "uids": uids, "tokens_dropped": dropped})
+
+    def _restore(self, uid: int) -> int:
+        """Rewind one request to its pre-speculation snapshot; returns
+        the number of tokens dropped."""
+        req = self._req_by_uid.get(uid)
+        snap = self._snaps.get(uid)
+        if req is None or snap is None:
+            return 0
+        dropped = max(len(req.output) - snap.out_len, 0)
+        del req.output[snap.out_len:]
+        req.cur = snap.cur
+        req.prev_entry = snap.prev_entry
+        if snap.states is not None:
+            req.states = list(snap.states)
+        req.stall_share_s = snap.stall_share_s
+        req.compute_share_s = snap.compute_share_s
+        return dropped

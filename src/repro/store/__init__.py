@@ -17,8 +17,10 @@ through the same interface as the flat in-host store.
 
 See ROADMAP.md §store for the architecture notes.
 """
-from repro.store.formats import (FORMATS, LADDER, ExpertFormat, get_format,
-                                 register_format)
+from repro.store.formats import (FORMATS, LADDER, SHADOW_FORMATS,
+                                 ExpertFormat, ShadowFormat, get_format,
+                                 get_shadow_format, register_format,
+                                 shadow_bytes)
 from repro.store.planner import (PlanError, StorePlan, dense_residency_bytes,
                                  floor_bytes, measure_frequencies,
                                  non_expert_bytes, plan_store)
@@ -29,6 +31,7 @@ from repro.store.tiers import (DevicePool, DiskModel, DiskTier, HostTier,
 
 __all__ = [
     "ExpertFormat", "FORMATS", "LADDER", "get_format", "register_format",
+    "ShadowFormat", "SHADOW_FORMATS", "get_shadow_format", "shadow_bytes",
     "StorePlan", "PlanError", "plan_store", "measure_frequencies",
     "non_expert_bytes", "dense_residency_bytes", "floor_bytes",
     "DiskTier", "DiskModel", "HostTier", "DevicePool", "SlabSpan",

@@ -64,6 +64,41 @@ def register_format(fmt: ExpertFormat) -> None:
     FORMATS[fmt.name] = fmt
 
 
+@dataclasses.dataclass(frozen=True)
+class ShadowFormat:
+    """Always-resident "little" copy of an expert for speculative
+    execution (MoBiLE's big-little experts, MELINOE's proxies): a
+    low-bit snapshot of the kept gate/down channel records that lives
+    permanently in device memory, so a demand miss can compute the
+    token NOW from the shadow and verify-or-rollback when the big
+    expert arrives.  Shadows are priced explicitly by the planner
+    (``plan_store(shadows=...)``) against pins and ladder upgrades."""
+
+    name: str
+    bits: int  # record precision: 8 (the INT8 draft codes) | 2
+    keep_ratio: float  # fraction of channel records in the shadow
+
+    def __post_init__(self):
+        assert self.bits in (8, 2), self.bits
+        assert 0.0 < self.keep_ratio <= 1.0, self.keep_ratio
+
+
+#: shadow registry: the INT8 draft records the host tier already builds
+#: for progressive formats (richest little), or a leaner int2 snapshot.
+SHADOW_FORMATS: Dict[str, ShadowFormat] = {
+    "draft-int8": ShadowFormat("draft-int8", 8, 0.3),
+    "shadow-int2": ShadowFormat("shadow-int2", 2, 0.3),
+}
+
+
+def get_shadow_format(name: str) -> ShadowFormat:
+    try:
+        return SHADOW_FORMATS[name]
+    except KeyError:
+        raise KeyError(f"unknown shadow format {name!r}; "
+                       f"registered: {sorted(SHADOW_FORMATS)}") from None
+
+
 # ------------------------------------------------------------- accounting --
 def up_bytes(d_model: int, d_ff: int, bits: int, group: int = 64,
              meta_bytes: int = 2) -> int:
@@ -95,6 +130,14 @@ def slice_bytes(d_model: int, n_channels: int, precision: str = "full") -> int:
     if precision == "draft":
         return n_channels * 2 * d_model + n_channels * 2
     return n_channels * 2 * d_model * 2
+
+
+def shadow_bytes(shadow: ShadowFormat, d_model: int, d_ff: int) -> int:
+    """Device-resident bytes for one expert's always-on shadow copy:
+    low-bit codes for the kept (gate col ‖ down row) records plus one
+    f16 scale per record."""
+    n = kept_channels(d_ff, shadow.keep_ratio)
+    return n * 2 * d_model * shadow.bits // 8 + n * 2
 
 
 def host_bytes(fmt: ExpertFormat, d_model: int, d_ff: int) -> int:

@@ -58,6 +58,10 @@ class StorePlan:
     num_slabs: int  # total arena (shared across layers)
     breakdown: Dict[str, int]  # bytes per component
     progressive: bool = True
+    #: (layer, expert) -> shadow format name: always-resident little
+    #: copies for speculative execution (empty when speculation is off)
+    shadows: Dict[Tuple[int, int], str] = \
+        dataclasses.field(default_factory=dict)
 
     def format_for(self, layer: int, expert: int) -> F.ExpertFormat:
         return F.get_format(self.formats[(layer, expert)])
@@ -154,8 +158,14 @@ def plan_store(cfg: ModelConfig, freqs: np.ndarray, *,
                max_slots: Optional[int] = None,
                max_pinned: Optional[int] = None,
                ladder: Optional[Tuple[str, ...]] = None,
-               progressive: bool = True) -> StorePlan:
-    """Solve the tiered-store configuration for a VRAM budget (GiB)."""
+               progressive: bool = True,
+               shadows: Optional[str] = None) -> StorePlan:
+    """Solve the tiered-store configuration for a VRAM budget (GiB).
+
+    ``shadows`` names a :data:`repro.store.formats.SHADOW_FORMATS` entry
+    to price always-resident little copies of every affordable expert
+    into the spend (speculative execution); ``None`` (the default)
+    leaves the plan bitwise identical to the shadow-free planner."""
     budget = int(vram_gb * 2 ** 30)
     host_budget = int(host_gb * 2 ** 30)
     d, f = cfg.d_model, cfg.moe_d_ff
@@ -181,6 +191,10 @@ def plan_store(cfg: ModelConfig, freqs: np.ndarray, *,
                                        for li in moe for e in range(E)}
     pinned: List[Tuple[int, int]] = []
     slots = 1
+    shadow_fmt = F.get_shadow_format(shadows) if shadows else None
+    shadow_cost = (F.shadow_bytes(shadow_fmt, d, f)
+                   if shadow_fmt is not None else 0)
+    shadow_map: Dict[Tuple[int, int], str] = {}
 
     def up_cost() -> int:
         return sum(F.expert_vram_bytes(F.get_format(n), d, f, group)
@@ -190,7 +204,8 @@ def plan_store(cfg: ModelConfig, freqs: np.ndarray, *,
         return len(moe) * n_slots + len(pinned) * pin_span
 
     def total(n_slots: int) -> int:
-        return base + up_cost() + arena_slabs(n_slots) * slab
+        return (base + up_cost() + len(shadow_map) * shadow_cost
+                + arena_slabs(n_slots) * slab)
 
     if total(1) > budget:
         raise PlanError(
@@ -225,6 +240,20 @@ def plan_store(cfg: ModelConfig, freqs: np.ndarray, *,
             fmt[k] = prev
             break
 
+    # 3b. little shadows: an always-resident low-bit copy per expert so
+    # a demand miss can speculate instead of stalling — hottest first
+    # (hot experts miss most often), skipping pinned experts (they never
+    # miss), priced against the same budget as pins and the upgrades
+    # below: a shadow the pin stage already spent for simply never lands
+    if shadow_fmt is not None:
+        for k in order:
+            if k in pinned:
+                continue
+            shadow_map[k] = shadow_fmt.name
+            if total(slots) > budget:
+                del shadow_map[k]
+                break  # colder experts cost the same: stop the pass
+
     # 4. per-expert upgrades (quality/coverage), one rung per pass,
     # hottest first
     for rung in range(1, len(ladder)):
@@ -240,12 +269,14 @@ def plan_store(cfg: ModelConfig, freqs: np.ndarray, *,
     while slots < max_slots and total(slots + 1) <= budget:
         slots += 1
 
+    breakdown = {"non_expert": base, "resident_up": up_cost(),
+                 "residency_arena": arena_slabs(slots) * slab}
+    if shadow_fmt is not None:
+        breakdown["shadows"] = len(shadow_map) * shadow_cost
     plan = StorePlan(
         vram_budget=budget, host_budget=host_budget, formats=fmt,
         pinned=pinned, slots_per_layer=slots, slab_bytes=slab,
-        num_slabs=arena_slabs(slots),
-        breakdown={"non_expert": base, "resident_up": up_cost(),
-                   "residency_arena": arena_slabs(slots) * slab},
-        progressive=progressive)
+        num_slabs=arena_slabs(slots), breakdown=breakdown,
+        progressive=progressive, shadows=shadow_map)
     assert plan.footprint_bytes() <= budget
     return plan

@@ -419,3 +419,97 @@ def test_snapshot_stamps_reservoir_flag_past_bound():
     snap = reg.snapshot()
     assert snap["lat.reservoir"] is True
     assert snap["lat.count"] == 131  # running stats stay exact
+
+
+# ------------------------------------------------ speculation event stream --
+def _spec_dep(max_divergence=0.5):
+    from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
+                              RuntimeSpec, ServingSpec, SpeculationSpec,
+                              build)
+    spec = DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", reduced=True, layers=2,
+                        d_model=64, max_experts=8, vocab=128),
+        resources=ResourceSpec(vram_gb=0.22, host_gb=2.0, ladder=("int2",),
+                               progressive=False),
+        runtime=RuntimeSpec(mode="floe", use_runtime=True),
+        serving=ServingSpec(slots=2, policy="slo", online_train=False),
+        speculation=SpeculationSpec(max_divergence=max_divergence))
+    return build(spec)
+
+
+def test_speculation_event_stream_well_formed():
+    """The speculative executor's event stream must be audit-grade:
+    every ``spec.serve`` carries its layer/expert/stall_avoided_s, every
+    verification emits ``spec.divergence`` followed by exactly one
+    verdict (``spec.accept`` | ``spec.rollback``) for the same expert,
+    the verdict counts reconcile with the executor's own report, and
+    the ``speculative_fallback`` stall cause still conserves bitwise."""
+    events = []
+
+    class Sink:
+        def on_event(self, ev):
+            if ev.name.startswith("spec."):
+                events.append(ev)
+
+    collector = obs.MetricsCollector()
+    dep = _spec_dep()
+    with obs.consumer(Sink(), collector):
+        dep.serve(n_requests=6, rate=4.0, max_new=6, seed=3)
+
+    serves = [e for e in events if e.name == "spec.serve"]
+    divs = [e for e in events if e.name == "spec.divergence"]
+    verdicts = [e for e in events
+                if e.name in ("spec.accept", "spec.rollback")]
+    rep = dep._speculator.report()
+    assert rep["spec_served"] > 0, "scenario produced no speculation"
+    assert len(serves) == rep["spec_served"]
+    assert len(verdicts) == rep["spec_accepts"] + rep["spec_rollbacks"]
+    assert len(divs) == len(verdicts)
+
+    for ev in serves:
+        assert ev.cat == "spec"
+        assert set(ev.args) >= {"layer", "expert", "stall_avoided_s",
+                                "rows"}
+        assert ev.args["stall_avoided_s"] > 0.0
+    # each divergence is followed by its verdict for the SAME expert
+    pending = {}
+    for ev in events:
+        key = (ev.args.get("layer"), ev.args.get("expert"))
+        if ev.name == "spec.divergence":
+            assert key not in pending
+            pending[key] = float(ev.args["divergence"])
+        elif ev.name in ("spec.accept", "spec.rollback"):
+            div = pending.pop(key)
+            limit = dep.spec.speculation.max_divergence
+            assert (div <= limit) == (ev.name == "spec.accept")
+    assert not pending, "divergence emitted without a verdict"
+
+    # metrics collector mirrors the stream
+    snap = collector.registry.snapshot()
+    assert snap.get("spec.serve", 0) == rep["spec_served"]
+    assert snap.get("spec.accept", 0) == rep["spec_accepts"]
+    assert snap.get("spec.rollback", 0) == rep["spec_rollbacks"]
+    assert snap.get("spec.divergence.count", 0) == len(divs)
+
+    # stall conservation survives the new cause bitwise
+    sched = dep.pipeline.sched
+    assert sched.attribution.check_conservation(sched.stats.stall_s)
+    causes = sched.attribution.snapshot()["causes"]
+    assert "speculative_fallback" in causes
+
+
+def test_speculation_off_emits_no_spec_events():
+    """``serve(speculate=False)`` on a speculation-capable deployment
+    must leave the event stream spec-free — off is a noop."""
+    events = []
+
+    class Sink:
+        def on_event(self, ev):
+            events.append(ev.name)
+
+    dep = _spec_dep()
+    with obs.consumer(Sink()):
+        dep.serve(n_requests=4, rate=4.0, max_new=4, seed=5,
+                  speculate=False)
+    assert dep.controller.speculator is None
+    assert not [n for n in events if n.startswith("spec.")]

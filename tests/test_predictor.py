@@ -73,3 +73,58 @@ def test_cosine_similarity_bounds():
     a = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
     assert abs(float(predictor.cosine_similarity(a, a)) - 1.0) < 1e-6
     assert float(predictor.cosine_similarity(a, -a)) < -0.99
+
+
+# ------------------------------------------------- confidence calibrator ----
+def test_calibrator_empty_bucket_is_identity():
+    """Before any reconciliation sample lands, calibration must be a
+    no-op: precision reads 1.0, scale reads 1.0, and a confidence passes
+    through unchanged (clamped to [0, 1])."""
+    cal = predictor.ConfidenceCalibrator()
+    assert cal.samples == 0
+    assert cal.precision == 1.0
+    assert cal.scale == 1.0
+    for c in (0.0, 0.3, 1.0):
+        assert cal(c) == c
+    assert cal(1.7) == 1.0  # clamp, not amplify
+
+
+def test_calibrator_all_wrong_demotes_to_floor():
+    """A predictor that is confidently wrong every time must be demoted,
+    but only down to the floor — the floor keeps speculative traffic
+    sortable instead of collapsing every priority to exactly zero."""
+    cal = predictor.ConfidenceCalibrator(beta=0.9, floor=0.05)
+    for _ in range(500):
+        cal.update(0.9, False)
+    assert cal.precision < 1e-3
+    assert cal.scale == cal.floor
+    assert cal(0.8) == 0.8 * cal.floor
+    # and the demotion never crosses below the floor with more evidence
+    for _ in range(500):
+        cal.update(0.99, False)
+    assert cal.scale == cal.floor
+
+
+def test_calibrator_deterministic_priorities():
+    """Identical update streams must calibrate identically — prefetch
+    priorities derived through the calibrator are part of the
+    reproducible timeline, so two replicas fed the same reconciliation
+    history must sort speculative traffic in exactly the same order."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    stream = [(float(c), bool(h)) for c, h in
+              zip(rng.random(256), rng.random(256) < 0.5)]
+    a = predictor.ConfidenceCalibrator(beta=0.95)
+    b = predictor.ConfidenceCalibrator(beta=0.95)
+    for c, h in stream:
+        a.update(c, h)
+        b.update(c, h)
+    assert a.scale == b.scale and a.precision == b.precision
+    probes = rng.random(32)
+    assert [a(p) for p in probes] == [b(p) for p in probes]
+    # an overconfident stream demotes strictly (scale < 1), monotonically
+    # preserving the order of calibrated priorities
+    assert a.scale < 1.0
+    lo, hi = a(0.2), a(0.9)
+    assert lo < hi

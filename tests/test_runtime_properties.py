@@ -300,3 +300,49 @@ def test_union_tracker_counts_are_exact():
                                   np.array([True, False, True, False]))
     tr.remove(2)
     assert tr.keys() == []
+
+
+# ------------------------------------------------------------ stats surface -
+def test_stats_reset_zeroes_every_public_field(  # noqa: D103
+        ):
+    """``SchedulerStats.reset()`` must zero EVERY public field — a field
+    added without riding the ``dataclasses.fields`` loop (as the four
+    ``spec_*`` speculation counters do) would survive a reset and leak
+    one serve window's counts into the next report."""
+    import dataclasses
+
+    store = _store(seed=2)
+    sched, _, _ = _sched(store)
+    _drive(sched, store, 11)
+    # guarantee at least one counter and the float accumulator moved
+    idx = np.arange(store.d_ff // 2)
+    payload, miss = sched.demand_async(0, 0, lambda: idx)
+    sched.wait_for(0, 0, was_miss=miss)
+    sched.stats.spec_served += 1  # the executor's counters ride along
+    st_ = sched.stats
+    assert any(getattr(st_, f.name) for f in dataclasses.fields(st_))
+    st_.reset()
+    for name, val in vars(st_).items():
+        if name.startswith("_"):
+            continue
+        assert val == type(val)(), (name, val)
+        assert type(val) in (int, float), (name, type(val))
+
+
+def test_stats_report_surface_covers_every_field():
+    """Every ``SchedulerStats`` field must appear in the metrics report
+    as ``sched.<name>``, and every stall cause (including the
+    speculation-era ``speculative_fallback``) as ``stall.cause.<c>_s``
+    — the reporting surface may never silently lag the stats block."""
+    import dataclasses
+
+    from repro.obs import CAUSES, MetricsRegistry, scheduler_metrics
+
+    store = _store(seed=3)
+    sched, _, _ = _sched(store)
+    _drive(sched, store, 5)
+    snap = scheduler_metrics(MetricsRegistry(), sched).snapshot()
+    for f in dataclasses.fields(sched.stats):
+        assert f"sched.{f.name}" in snap, f.name
+    for cause in CAUSES:
+        assert f"stall.cause.{cause}_s" in snap, cause

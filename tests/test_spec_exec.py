@@ -1,0 +1,287 @@
+"""repro.spec_exec — shadow formats/pricing, the divergence predictor,
+shadow-bank fidelity, and the SpeculationSpec control-plane contract.
+
+The end-to-end safety pins (off-is-noop and rollback-bitwise against a
+never-speculated serve, stall/token win) live in
+``benchmarks/bench_speculate.py``; the event-stream contract lives in
+``tests/test_obs.py``.  This module covers the pieces in isolation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.common.config import reduced
+from repro.configs import get_config
+from repro.cluster import plan_cluster
+from repro.store import (SHADOW_FORMATS, floor_bytes, get_shadow_format,
+                         plan_store, shadow_bytes)
+from repro.spec_exec import (DivergencePredictor, ShadowBank,
+                             build_shadow_bank)
+
+
+def _cfg(layers=2, d_model=64):
+    return reduced(get_config("mixtral_8x7b"), layers=layers,
+                   d_model=d_model, max_experts=8)
+
+
+def _freqs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    f = rng.random((cfg.num_layers, cfg.num_experts)) ** 2
+    return f / f.sum(axis=1, keepdims=True)
+
+
+# ------------------------------------------------------ formats + pricing --
+def test_shadow_formats_registered_and_priced():
+    assert set(SHADOW_FORMATS) == {"draft-int8", "shadow-int2"}
+    f8 = get_shadow_format("draft-int8")
+    f2 = get_shadow_format("shadow-int2")
+    assert f8.bits == 8 and f2.bits == 2
+    # int2 shadows cost strictly less device memory than int8 ones
+    assert shadow_bytes(f2, 64, 256) < shadow_bytes(f8, 64, 256)
+    with pytest.raises(KeyError):
+        get_shadow_format("fp64-shadow")
+
+
+def test_planner_shadows_axis_prices_explicitly():
+    """``plan_store(shadows=...)`` funds shadows from the same budget as
+    pins/upgrades: they appear in the breakdown, the spend stays within
+    budget, and a shadow-free plan at the same budget is unchanged by
+    the axis existing (``shadows=None`` keeps the legacy plan)."""
+    cfg = _cfg(layers=4)
+    freqs = _freqs(cfg, 3)
+    gb = 1.4 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    base = plan_store(cfg, freqs, vram_gb=gb, host_gb=0.05,
+                      ladder=("int2",), progressive=False)
+    shadowed = plan_store(cfg, freqs, vram_gb=gb, host_gb=0.05,
+                          ladder=("int2",), progressive=False,
+                          shadows="draft-int8")
+    assert base.shadows == {} and "shadows" not in base.breakdown
+    assert len(shadowed.shadows) > 0
+    assert all(name == "draft-int8" for name in shadowed.shadows.values())
+    fmt = get_shadow_format("draft-int8")
+    cost = len(shadowed.shadows) * shadow_bytes(fmt, cfg.d_model,
+                                                cfg.moe_d_ff)
+    assert shadowed.breakdown["shadows"] == cost
+    # pinned experts never miss, so they are never shadowed
+    assert not set(shadowed.shadows) & set(shadowed.pinned)
+    assert sum(shadowed.breakdown.values()) <= gb * 2 ** 30
+    # shadows COMPETE: funding them can only shrink the other stages
+    assert len(shadowed.pinned) <= len(base.pinned)
+
+
+def test_planner_shadows_stay_within_budget_and_saturate():
+    """At any budget the shadowed plan's footprint stays within budget
+    (shadows spend leftover after pins, so their count is NOT monotone
+    in the budget); at a generous budget every non-pinned expert is
+    shadowed."""
+    cfg = _cfg(layers=4)
+    freqs = _freqs(cfg, 1)
+    floor = floor_bytes(cfg, ("int2",)) / 2 ** 30
+    for m in (1.02, 1.3, 2.0):
+        plan = plan_store(cfg, freqs, vram_gb=m * floor, host_gb=0.05,
+                          ladder=("int2",), progressive=False,
+                          shadows="shadow-int2")
+        assert plan.footprint_bytes() <= m * floor * 2 ** 30
+        assert not set(plan.shadows) & set(plan.pinned)
+    # generous: shadows + pins tile every MoE expert exactly
+    n_moe = sum(1 for li in range(cfg.num_layers)
+                for _ in range(cfg.num_experts)
+                if (li, 0) in plan.formats)
+    assert len(plan.shadows) + len(plan.pinned) == n_moe
+
+
+def test_cluster_planner_single_device_parity_with_shadows():
+    """n_devices=1 + shadows must reproduce plan_store's spend exactly,
+    shadows included (same greedy, same order, same prices)."""
+    cfg = _cfg(layers=4)
+    freqs = _freqs(cfg, 5)
+    gb = 1.4 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    cp = plan_cluster(cfg, freqs, n_devices=1, vram_gb_per_device=gb,
+                      host_gb=0.01, ladder=("int2",), progressive=False,
+                      shadows="draft-int8")
+    sp = plan_store(cfg, freqs, vram_gb=gb, host_gb=0.01,
+                    ladder=("int2",), progressive=False,
+                    shadows="draft-int8")
+    assert cp.store_plan.shadows == sp.shadows
+    assert cp.store_plan.formats == sp.formats
+    assert cp.pinned_per_device[0] == sp.pinned
+
+
+# -------------------------------------------------------------- the bank --
+def _layers(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    return [{"moe": {
+        "we_gate": rng.normal(size=(e, d, f)).astype(np.float32) * 0.1,
+        "we_up": rng.normal(size=(e, d, f)).astype(np.float32) * 0.1,
+        "we_down": rng.normal(size=(e, f, d)).astype(np.float32) * 0.1,
+    }} for _ in range(cfg.num_layers)]
+
+
+def test_shadow_bank_matches_plan_and_geometry():
+    cfg = _cfg()
+    freqs = _freqs(cfg, 2)
+    gb = 2.0 * floor_bytes(cfg, ("int2",)) / 2 ** 30
+    plan = plan_store(cfg, freqs, vram_gb=gb, host_gb=0.05,
+                      ladder=("int2",), progressive=False,
+                      shadows="draft-int8")
+    layers = _layers(cfg)
+    bank = build_shadow_bank(layers, plan)
+    assert len(bank) == len(plan.shadows) > 0
+    fmt = get_shadow_format("draft-int8")
+    kept = max(1, int(round(cfg.d_ff * fmt.keep_ratio)))
+    for (li, e) in plan.shadows:
+        assert bank.has(li, e)
+        idx, gate_cols, down_rows = bank.get(li, e)
+        assert idx.shape == (kept,)
+        assert np.all(np.diff(idx) > 0)  # sorted unique channel subset
+        assert gate_cols.shape == (kept, cfg.d_model)
+        assert down_rows.shape == (kept, cfg.d_model)
+    assert bank.get(10 ** 6, 0) is None and not bank.has(10 ** 6, 0)
+
+
+def test_shadow_codec_fidelity_orders_by_bits():
+    """The int8 shadow reconstructs its kept records strictly better
+    than the int2 shadow of the same expert (both bounded)."""
+    cfg = _cfg()
+    layers = _layers(cfg, 7)
+    errs = {}
+    for name in ("draft-int8", "shadow-int2"):
+        plan = plan_store(_cfg(), _freqs(cfg, 2),
+                          vram_gb=2.0 * floor_bytes(cfg, ("int2",)) / 2 ** 30,
+                          host_gb=0.05, ladder=("int2",), progressive=False,
+                          shadows=name)
+        (li, e) = sorted(plan.shadows)[0]
+        idx, gate_cols, _ = bank_entry = build_shadow_bank(
+            layers, plan).get(li, e)
+        ref = np.asarray(layers[li]["moe"]["we_gate"][e],
+                         np.float32).T[idx]
+        rel = (np.linalg.norm(np.asarray(gate_cols, np.float32) - ref)
+               / np.linalg.norm(ref))
+        errs[name] = rel
+    assert errs["draft-int8"] < errs["shadow-int2"] < 1.0
+    assert errs["draft-int8"] < 0.05
+
+
+# --------------------------------------------------- divergence predictor --
+def test_divergence_predictor_cold_start_optimistic():
+    p = DivergencePredictor(min_samples=2)
+    assert p.predicted(0, 0) == 0.0
+    assert p.gate(0, 0, 1e-9)  # no evidence -> speculate
+
+
+def test_divergence_predictor_learns_per_expert():
+    p = DivergencePredictor(beta=0.5, min_samples=2)
+    for _ in range(8):
+        p.update(0, 0, 0.5)   # bad expert
+        p.update(0, 1, 0.001)  # good expert
+    assert not p.gate(0, 0, 0.05)
+    assert p.gate(0, 1, 0.05)
+    # an unseen expert falls back to the GLOBAL EMA (which is poisoned
+    # by the bad expert here, so the gate declines)
+    assert p.predicted(1, 7) > 0.0
+    snap = p.snapshot()
+    assert snap["samples"] == 16 and "0/0" in snap["experts"]
+
+
+def test_divergence_predictor_is_deterministic():
+    a, b = DivergencePredictor(), DivergencePredictor()
+    rng = np.random.default_rng(0)
+    for _ in range(64):
+        li, e, d = int(rng.integers(2)), int(rng.integers(8)), \
+            float(rng.random())
+        a.update(li, e, d)
+        b.update(li, e, d)
+    assert a.snapshot() == b.snapshot()
+
+
+# ------------------------------------------------------------ spec plane --
+def test_speculation_spec_validation():
+    from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
+                              ServingSpec, SpecError, SpeculationSpec)
+
+    def dspec(sp, vram_gb=1.0, serving=ServingSpec()):
+        return DeploymentSpec(
+            model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=64,
+                            max_experts=8),
+            resources=ResourceSpec(vram_gb=vram_gb),
+            serving=serving, speculation=sp)
+
+    dspec(SpeculationSpec())  # valid
+    with pytest.raises(SpecError, match="shadow_format"):
+        dspec(SpeculationSpec(shadow_format="fp64-shadow"))
+    with pytest.raises(SpecError, match="max_divergence"):
+        dspec(SpeculationSpec(max_divergence=0.0))
+    with pytest.raises(SpecError, match="beta"):
+        dspec(SpeculationSpec(beta=1.0))
+    with pytest.raises(SpecError, match="min_samples"):
+        dspec(SpeculationSpec(min_samples=0))
+    with pytest.raises(SpecError, match="vram_gb"):
+        dspec(SpeculationSpec(), vram_gb=0.0)
+    with pytest.raises(SpecError, match="serving"):
+        dspec(SpeculationSpec(), serving=None)
+    # disabled sections skip the cross-field requirements
+    dspec(SpeculationSpec(enabled=False), serving=None)
+
+
+def test_speculation_spec_json_round_trip():
+    from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
+                              ServingSpec, SpeculationSpec)
+    spec = DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", layers=2, d_model=64,
+                        max_experts=8),
+        resources=ResourceSpec(vram_gb=1.0),
+        serving=ServingSpec(),
+        speculation=SpeculationSpec(shadow_format="shadow-int2",
+                                    max_divergence=0.1, beta=0.8,
+                                    min_samples=4))
+    assert DeploymentSpec.from_json(spec.to_json()) == spec
+    # None section stays absent from the JSON and survives the trip
+    bare = dataclasses.replace(spec, speculation=None)
+    assert "speculation" not in bare.to_dict()
+    assert DeploymentSpec.from_json(bare.to_json()) == bare
+
+
+def test_serve_time_speculation_contract():
+    """One built deployment exercises every serve-time resolution path:
+    a shadow-format switch is refused (the bank is priced and built at
+    plan time), ``speculate=False`` detaches cleanly, the default
+    attaches the executor, and stripping the section refuses
+    ``speculate=True`` (shadows cannot appear from nothing)."""
+    from repro.deploy import (DeploymentSpec, ModelSpec, ResourceSpec,
+                              RuntimeSpec, ServingSpec, SpecError,
+                              SpeculationSpec, build)
+    spec = DeploymentSpec(
+        model=ModelSpec(arch="mixtral-8x7b", reduced=True, layers=2,
+                        d_model=64, max_experts=8, vocab=128),
+        resources=ResourceSpec(vram_gb=0.22, host_gb=2.0,
+                               ladder=("int2",), progressive=False),
+        runtime=RuntimeSpec(mode="floe", use_runtime=True),
+        serving=ServingSpec(slots=2, policy="slo", online_train=False),
+        speculation=SpeculationSpec())
+    dep = build(spec)
+    assert len(dep.plan.shadows) > 0
+
+    with pytest.raises(SpecError, match="shadow_format"):
+        dep.serve(n_requests=1, max_new=2,
+                  speculate=SpeculationSpec(shadow_format="shadow-int2"))
+
+    dep.serve(n_requests=2, max_new=2, seed=1, speculate=False)
+    assert dep.controller.speculator is None
+
+    dep.serve(n_requests=2, max_new=2, seed=2)
+    assert dep.controller.speculator is dep._speculator
+    rep = dep.report()
+    assert "speculation" in rep
+    assert rep["speculation"]["spec_served"] >= 0
+    for k in ("spec_served", "spec_accepts", "spec_rollbacks",
+              "spec_declined"):
+        assert k in rep["serving"]
+
+    # a deployment whose spec never had the section cannot speculate:
+    # the planner priced no shadows at build time
+    dep.spec = dataclasses.replace(dep.spec, speculation=None)
+    dep._speculator = None
+    with pytest.raises(SpecError, match="speculation"):
+        dep.serve(n_requests=1, max_new=2, speculate=True)
